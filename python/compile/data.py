@@ -1,0 +1,65 @@
+"""Python port of the Rust synthetic dataset (`rust/src/nn/data.rs`).
+
+Bit-exact SplitMix64 reproduction so the build-time-trained model and the
+Rust serving side agree on the data distribution (same seeds => same
+prototypes => same classes).
+"""
+
+MASK64 = (1 << 64) - 1
+
+
+class Rng:
+    """SplitMix64 — mirrors rust/src/util/rng.rs exactly."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return (z ^ (z >> 31)) & MASK64
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+    def f64(self):
+        return (self.next_u64() >> 11) / float(1 << 53)
+
+    def chance(self, p):
+        return self.f64() < p
+
+
+def prototypes(classes, dim, seed):
+    """Per-class blocky patterns — mirrors data::prototypes."""
+    rng = Rng(seed)
+    protos = []
+    for _ in range(classes):
+        row = []
+        for _ in range(dim):
+            if rng.chance(0.3):
+                row.append(0.6 + 0.4 * rng.f64())
+            else:
+                row.append(0.0)
+        protos.append(row)
+    return protos
+
+
+def synthetic(n, classes, dim, noise, seed):
+    """Mirrors data::synthetic: returns (images, labels)."""
+    protos = prototypes(classes, dim, seed)
+    rng = Rng(seed ^ 0x5A5A5A5A)
+    images, labels = [], []
+    for _ in range(n):
+        label = rng.below(classes)
+        img = []
+        for p in protos[label]:
+            jitter = (rng.f64() - 0.5) * 2.0 * noise
+            if rng.chance(0.05):
+                img.append(0.0)
+            else:
+                img.append(min(max(p + jitter, 0.0), 1.0))
+        images.append(img)
+        labels.append(label)
+    return images, labels

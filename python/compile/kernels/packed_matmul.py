@@ -1,0 +1,98 @@
+"""L1 Pallas kernel: INT4-packed quantized matmul.
+
+The paper's compute hot-spot — many low-precision multiplications packed
+into one wide multiplier — re-thought for a vector unit (see DESIGN.md
+SS Hardware-Adaptation): the DSP48E2's 48-bit P word becomes a lane-local
+int64; the B-port packing `a1*2^11 + a0` becomes a vectorized pack over
+row pairs; the DSP array becomes the lane grid; the HBM->VMEM BlockSpec
+tiling plays the role of the FPGA's BRAM->DSP operand feed. Extraction
+(shift/mask sign-extend) and the SS V-A round-half-up correction are
+elementwise lane ops fused into the same kernel.
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, so the kernel lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# Tile sizes: row-pairs per block x K. Chosen so one block's working set
+# (packed A tile + packed W tile + P tile, int64) stays well inside a
+# ~16 MiB VMEM budget; see DESIGN.md SS Perf for the footprint math.
+DEFAULT_BLOCK_M2 = 64  # row pairs (=> 128 output rows per block)
+
+
+def _packed_matmul_kernel(pa_ref, pw_ref, out_ref, *, k_dim, rhu):
+    """One grid step: (BM2, K) packed-A x (K, N2) packed-W -> 4 results.
+
+    Operands arrive pre-packed (the pack is a cheap reshape+shift done in
+    the surrounding jit; keeping it outside the kernel halves the VMEM
+    traffic — packed words are half as many as raw operands).
+    """
+    pa = pa_ref[...]
+    pw = pw_ref[...]
+    bm2, n2 = pa.shape[0], pw.shape[1]
+    acc00 = jnp.zeros((bm2, n2), jnp.int64)
+    acc10 = jnp.zeros((bm2, n2), jnp.int64)
+    acc01 = jnp.zeros((bm2, n2), jnp.int64)
+    acc11 = jnp.zeros((bm2, n2), jnp.int64)
+    # Cascade rhythm: accumulate 2**delta wide products per P word, then
+    # drain (extract + correct) into the four per-result accumulators.
+    for k0 in range(0, k_dim, ref.INT4_DRAIN):
+        k1 = min(k0 + ref.INT4_DRAIN, k_dim)
+        p = jax.lax.dot_general(
+            pa[:, k0:k1],
+            pw[k0:k1, :],
+            (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int64,
+        )
+        r00, r10, r01, r11 = ref.extract_int4(p, rhu=rhu, extra_bits=ref.INT4_DELTA)
+        acc00 += r00
+        acc10 += r10
+        acc01 += r01
+        acc11 += r11
+    # Interleave the four result planes back into (2*BM2, 2*N2).
+    out = jnp.zeros(out_ref.shape, jnp.int64)
+    out = out.at[0::2, 0::2].set(acc00)
+    out = out.at[1::2, 0::2].set(acc10)
+    out = out.at[0::2, 1::2].set(acc01)
+    out = out.at[1::2, 1::2].set(acc11)
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("rhu", "block_m2"))
+def packed_matmul(a, w, rhu=True, block_m2=DEFAULT_BLOCK_M2):
+    """INT4-packed matmul via the Pallas kernel.
+
+    a: (M, K) unsigned 4-bit values (any int dtype); M even.
+    w: (K, N) signed 4-bit values; N even.
+    Returns (M, N) int64 — bit-identical to the DSP cascade with the
+    SS V-A full correction (rhu=True) or the raw Xilinx scheme (rhu=False).
+    """
+    m, k_dim = a.shape
+    _, n = w.shape
+    assert m % 2 == 0 and n % 2 == 0, "row/col pairs required"
+    # Pack outside the kernel (cheap, halves VMEM traffic).
+    packed_a = ref.pack_a_pair(a[0::2, :], a[1::2, :])
+    packed_w = ref.pack_w_pair(w[:, 0::2], w[:, 1::2])
+    m2, n2 = m // 2, n // 2
+    bm2 = min(block_m2, m2)
+    # Grid over row-pair blocks; W is broadcast to every block.
+    grid = (pl.cdiv(m2, bm2),)
+    kernel = functools.partial(_packed_matmul_kernel, k_dim=k_dim, rhu=rhu)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm2, k_dim), lambda i: (i, 0)),
+            pl.BlockSpec((k_dim, n2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((2 * bm2, 2 * n2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int64),
+        interpret=True,
+    )(packed_a, packed_w)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracle for the packed-arithmetic kernels.
+
+Mirrors the bit-level semantics of the Rust substrate
+(`rust/src/packing/`): INT4 packing per Xilinx wp521 / the paper's Eqn. (3),
+plain (floor) extraction, round-half-up full correction (SS V-A), and the
+architecture-independent INT-N product (Eqn. (4)).
+
+Everything operates on int64 (the 48-bit P word and the packed operands
+need up to 45 bits), so callers must enable jax x64 mode — `import
+compile.kernels.ref` does it on import.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+# The INT4 configuration of the paper (SS III/SS IV): delta = 3,
+# a offsets {0, 11}, w offsets {0, 22}, result offsets {0, 11, 22, 33}.
+INT4_A_OFFSETS = (0, 11)
+INT4_W_OFFSETS = (0, 22)
+INT4_R_OFFSETS = (0, 11, 22, 33)
+INT4_R_WIDTH = 8
+INT4_DELTA = 3
+# With delta padding bits, up to 2**delta products accumulate per P word.
+INT4_DRAIN = 1 << INT4_DELTA
+
+
+def exact_matmul(a, w):
+    """Exact integer matmul oracle (int64 accumulation)."""
+    return jnp.matmul(a.astype(jnp.int64), w.astype(jnp.int64))
+
+
+def pack_a_pair(a0, a1):
+    """Pack two unsigned 4-bit activations into one B-port word (Eqn. 3)."""
+    return a0.astype(jnp.int64) + (a1.astype(jnp.int64) << INT4_A_OFFSETS[1])
+
+
+def pack_w_pair(w0, w1):
+    """Pack two signed 4-bit weights into one pre-adder word (Eqn. 3)."""
+    return w0.astype(jnp.int64) + (w1.astype(jnp.int64) << INT4_W_OFFSETS[1])
+
+
+def extract_field(p, offset, width):
+    """Plain shift-and-truncate signed field extraction (floors: SS V)."""
+    u = (p >> offset) & ((1 << width) - 1)
+    sign = 1 << (width - 1)
+    return (u ^ sign) - sign
+
+
+def extract_field_rhu(p, offset, width):
+    """Round-half-up extraction (SS V-A full correction)."""
+    if offset == 0:
+        return extract_field(p, 0, width)
+    rounded = (p >> (offset - 1)) + 1
+    return extract_field(rounded, 1, width)
+
+
+def extract_int4(p, rhu=True, extra_bits=0):
+    """Extract the four INT4 outer-product results from P words.
+
+    `extra_bits` widens each field into the padding (used when draining
+    accumulated P words: after 2**delta cascade steps the per-result sums
+    occupy width + delta bits).
+    Returns (r00, r10, r01, r11) = (a0w0, a1w0, a0w1, a1w1).
+    """
+    width = INT4_R_WIDTH + extra_bits
+    f = extract_field_rhu if rhu else extract_field
+    return tuple(f(p, off, width) for off in INT4_R_OFFSETS)
+
+
+def packed_matmul_reference(a, w, rhu=True):
+    """INT4-packed quantized matmul, pure jnp (the kernel's oracle).
+
+    a: (M, K) int, unsigned 4-bit values; M must be even.
+    w: (K, N) int, signed 4-bit values; N must be even.
+
+    Each (row-pair, col-pair, k) triple is one virtual DSP multiply whose
+    P word carries four products; chunks of 2**delta k-steps accumulate in
+    the P word before draining (the cascade rhythm of SS III).
+    """
+    m, k_dim = a.shape
+    k2, n = w.shape
+    assert k_dim == k2 and m % 2 == 0 and n % 2 == 0
+    a = a.astype(jnp.int64)
+    w = w.astype(jnp.int64)
+
+    packed_a = pack_a_pair(a[0::2, :], a[1::2, :])  # (M/2, K)
+    packed_w = pack_w_pair(w[:, 0::2], w[:, 1::2])  # (K, N/2)
+
+    out = jnp.zeros((m, n), dtype=jnp.int64)
+    for k0 in range(0, k_dim, INT4_DRAIN):
+        chunk = slice(k0, min(k0 + INT4_DRAIN, k_dim))
+        # One packed wide multiply per (m2, k, n2); cascade-accumulate the
+        # chunk inside the P word (a plain matmul in the packed domain).
+        p = jnp.matmul(packed_a[:, chunk], packed_w[chunk, :])  # (M/2, N/2)
+        r00, r10, r01, r11 = extract_int4(p, rhu=rhu, extra_bits=INT4_DELTA)
+        out = out.at[0::2, 0::2].add(r00)
+        out = out.at[1::2, 0::2].add(r10)
+        out = out.at[0::2, 1::2].add(r01)
+        out = out.at[1::2, 1::2].add(r11)
+    return out
+
+
+def intn_product(a_vals, w_vals, a_offsets, w_offsets):
+    """Architecture-independent INT-N packed product (Eqn. (4)) for one
+    operand-vector pair; returns the raw wide product (python int)."""
+    pa = sum(int(v) << o for v, o in zip(a_vals, a_offsets))
+    pw = sum(int(v) << o for v, o in zip(w_vals, w_offsets))
+    return pa * pw

@@ -1,0 +1,123 @@
+"""L2: the quantized MLP whose matmuls run through the L1 packed kernel.
+
+A two-layer MLP classifier over the synthetic 8x8 dataset (matching
+`rust/src/nn/data.rs`):
+
+    x (B, 64) in [0,1]  --quantize u4-->  h = relu(x_q @ W1_q) >> s1
+                        --packed matmul-->  logits = h_q @ W2_q
+
+Both layers' integer matmuls go through `kernels.packed_matmul`, so the
+whole forward pass lowers into the same HLO as the packing arithmetic —
+one artifact, no python on the serving path. Weight training happens at
+build time (plain jax autodiff, `train()`), and the float weights are also
+exported for the Rust-side packed engine to consume.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.packed_matmul import packed_matmul
+
+A_BITS = 4
+W_BITS = 4
+
+
+def quantize_unsigned(x, bits=A_BITS):
+    """[0,1] floats -> unsigned `bits`-bit codes (fixed scale)."""
+    top = (1 << bits) - 1
+    return jnp.clip(jnp.round(x * top), 0, top).astype(jnp.int64)
+
+
+def quantize_signed(w, bits=W_BITS):
+    """floats -> symmetric signed `bits`-bit codes; returns (codes, scale)."""
+    top = (1 << (bits - 1)) - 1
+    scale = top / jnp.maximum(jnp.max(jnp.abs(w)), 1e-6)
+    return jnp.clip(jnp.round(w * scale), -(top + 1), top).astype(jnp.int64), scale
+
+
+def mlp_forward_float(params, x):
+    """Float reference forward (training-time)."""
+    h = jax.nn.relu(x @ params["w1"] + params["b1"])
+    return h @ params["w2"] + params["b2"]
+
+
+def train(params, images, labels, steps=300, lr=0.5):
+    """Full-batch softmax-CE gradient descent (build-time only)."""
+
+    def loss(p):
+        logits = mlp_forward_float(p, images)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+    @jax.jit
+    def step(p):
+        g = jax.grad(loss)(p)
+        return jax.tree_util.tree_map(lambda v, gv: v - lr * gv, p, g)
+
+    for _ in range(steps):
+        params = step(params)
+    return params
+
+
+def init_params(key, dims=(64, 32, 4)):
+    """Small dense-dense MLP parameters."""
+    k1, k2 = jax.random.split(key)
+    d_in, d_h, d_out = dims
+    return {
+        "w1": jax.random.normal(k1, (d_in, d_h)) * 0.2,
+        "b1": jnp.zeros((d_h,)),
+        "w2": jax.random.normal(k2, (d_h, d_out)) * 0.2,
+        "b2": jnp.zeros((d_out,)),
+    }
+
+
+def quantize_params(params, calibration_x=None):
+    """Freeze float weights into integer codes + requantization shift.
+
+    `calibration_x`: float batch used to pick the smallest right-shift
+    that brings the layer-1 accumulators into the activation range
+    (mirrors `rust/src/nn/quantize.rs::calibrate_shift`). Without it, a
+    conservative default is derived from the worst-case accumulator.
+    """
+    w1_q, s1 = quantize_signed(params["w1"])
+    w2_q, s2 = quantize_signed(params["w2"])
+    top = (1 << A_BITS) - 1
+    if calibration_x is not None:
+        x_q = quantize_unsigned(calibration_x)
+        acc1 = ref.exact_matmul(x_q, w1_q)
+        hi = int(jnp.maximum(jnp.max(acc1), 1))
+    else:
+        hi = int(jnp.sum(jnp.maximum(w1_q, 0), axis=0).max()) * top
+    shift1 = 0
+    while (hi >> shift1) > top:
+        shift1 += 1
+    return {
+        "w1_q": w1_q,
+        "w2_q": w2_q,
+        "shift1": shift1,
+        "w1_scale": s1,
+        "w2_scale": s2,
+    }
+
+
+def mlp_forward_packed(qparams, x, use_kernel=True):
+    """Quantized forward pass, matmuls on the packed kernel.
+
+    x: (B, 64) floats in [0,1]. Returns (B, classes) int64 logits.
+    `use_kernel=False` swaps in the pure-jnp packed reference (oracle).
+    """
+    mm = packed_matmul if use_kernel else ref.packed_matmul_reference
+    x_q = quantize_unsigned(x)
+    acc1 = mm(x_q, qparams["w1_q"])  # (B, hidden) int64
+    h_q = jnp.clip(acc1 >> qparams["shift1"], 0, (1 << A_BITS) - 1)
+    return mm(h_q, qparams["w2_q"])  # (B, classes)
+
+
+def mlp_forward_exact_quant(qparams, x):
+    """Same quantized network with exact integer matmuls (the baseline the
+    packed path is validated against — identical when RHU is on)."""
+    x_q = quantize_unsigned(x)
+    acc1 = ref.exact_matmul(x_q, qparams["w1_q"])
+    h_q = jnp.clip(acc1 >> qparams["shift1"], 0, (1 << A_BITS) - 1)
+    return ref.exact_matmul(h_q, qparams["w2_q"])

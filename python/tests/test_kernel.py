@@ -1,0 +1,117 @@
+"""L1 kernel correctness: Pallas packed matmul vs the pure-jnp oracle and
+vs exact integer matmul — the core correctness signal of the build.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.packed_matmul import packed_matmul
+
+rng = np.random.default_rng(7)
+
+
+def random_operands(m, k, n, seed=None):
+    r = np.random.default_rng(seed if seed is not None else rng.integers(1 << 30))
+    a = r.integers(0, 16, size=(m, k), dtype=np.int64)
+    w = r.integers(-8, 8, size=(k, n), dtype=np.int64)
+    return a, w
+
+
+class TestScalarSemantics:
+    """Bit-level pack/extract semantics against hand-computed values."""
+
+    def test_eqn3_packing(self):
+        # (a1*2^11 + a0) * (w1*2^22 + w0)
+        assert int(ref.pack_a_pair(np.int64(3), np.int64(10))) == (10 << 11) + 3
+        assert int(ref.pack_w_pair(np.int64(-7), np.int64(-4))) == -7 + (-4 << 22)
+
+    def test_floor_error_minus_one(self):
+        # a=[3,0], w=[-7,0]: r0 = -21 exact, r1 floors to -1 (SS V).
+        p = ref.intn_product([3, 0], [-7, 0], ref.INT4_A_OFFSETS, ref.INT4_W_OFFSETS)
+        p = np.int64(p)
+        assert int(ref.extract_field(p, 0, 8)) == -21
+        assert int(ref.extract_field(p, 11, 8)) == -1
+        # Round-half-up restores the exact 0.
+        assert int(ref.extract_field_rhu(p, 11, 8)) == 0
+
+    def test_exhaustive_int4_single_product(self):
+        # All 16^2*16^2 combos: RHU extraction is exact, floor is -1-bounded.
+        a0, a1 = np.meshgrid(np.arange(16), np.arange(16), indexing="ij")
+        for w0 in range(-8, 8):
+            for w1 in range(-8, 8):
+                pa = ref.pack_a_pair(np.int64(a0), np.int64(a1))
+                pw = int(ref.pack_w_pair(np.int64(w0), np.int64(w1)))
+                p = pa * pw
+                r00, r10, r01, r11 = ref.extract_int4(p, rhu=True)
+                np.testing.assert_array_equal(np.asarray(r00), a0 * w0)
+                np.testing.assert_array_equal(np.asarray(r10), a1 * w0)
+                np.testing.assert_array_equal(np.asarray(r01), a0 * w1)
+                np.testing.assert_array_equal(np.asarray(r11), a1 * w1)
+                raw = ref.extract_int4(p, rhu=False)
+                for got, exp in zip(raw, (a0 * w0, a1 * w0, a0 * w1, a1 * w1)):
+                    err = np.asarray(got) - exp
+                    assert err.min() >= -1 and err.max() <= 0
+
+
+class TestReferenceMatmul:
+    """Pure-jnp packed reference vs exact matmul."""
+
+    @pytest.mark.parametrize("m,k,n", [(2, 1, 2), (4, 8, 4), (6, 16, 2), (8, 33, 6)])
+    def test_rhu_matches_exact(self, m, k, n):
+        a, w = random_operands(m, k, n, seed=m * 100 + k * 10 + n)
+        got = np.asarray(ref.packed_matmul_reference(a, w, rhu=True))
+        np.testing.assert_array_equal(got, a @ w)
+
+    def test_raw_floor_bias(self):
+        a, w = random_operands(16, 64, 8, seed=3)
+        got = np.asarray(ref.packed_matmul_reference(a, w, rhu=False))
+        err = got - a @ w
+        assert err.max() <= 0, "floor bias is toward -inf"
+        assert err.min() >= -(64 // 8) * 2, "bounded by drains"
+        assert (err != 0).any(), "raw packing does err"
+
+
+class TestPallasKernel:
+    """The Pallas kernel is bit-identical to the oracle."""
+
+    @pytest.mark.parametrize("m,k,n", [(2, 4, 2), (8, 16, 4), (16, 24, 8), (128, 33, 10)])
+    def test_kernel_matches_exact(self, m, k, n):
+        a, w = random_operands(m, k, n, seed=m + k + n)
+        got = np.asarray(packed_matmul(a, w, rhu=True))
+        np.testing.assert_array_equal(got, a @ w)
+
+    def test_kernel_matches_reference_raw(self):
+        a, w = random_operands(8, 40, 6, seed=11)
+        got = np.asarray(packed_matmul(a, w, rhu=False))
+        exp = np.asarray(ref.packed_matmul_reference(a, w, rhu=False))
+        np.testing.assert_array_equal(got, exp)
+
+    def test_kernel_blocks_tile_correctly(self):
+        # Force multiple grid steps with a small block size.
+        a, w = random_operands(32, 16, 4, seed=13)
+        got = np.asarray(packed_matmul(a, w, rhu=True, block_m2=4))
+        np.testing.assert_array_equal(got, a @ w)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m2=st.integers(1, 8),
+        k=st.integers(1, 40),
+        n2=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_kernel_hypothesis_sweep(self, m2, k, n2, seed):
+        a, w = random_operands(2 * m2, k, 2 * n2, seed=seed)
+        got = np.asarray(packed_matmul(a, w, rhu=True))
+        np.testing.assert_array_equal(got, a @ w)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_kernel_dtype_robustness(self, seed):
+        # int32 / int8 inputs upcast identically.
+        r = np.random.default_rng(seed)
+        a = r.integers(0, 16, size=(4, 12), dtype=np.int32)
+        w = r.integers(-8, 8, size=(12, 4), dtype=np.int8)
+        got = np.asarray(packed_matmul(a, w))
+        np.testing.assert_array_equal(got, a.astype(np.int64) @ w.astype(np.int64))

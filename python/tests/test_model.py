@@ -1,0 +1,58 @@
+"""L2 model correctness: packed forward equals exact-quant forward, and
+the model learns the synthetic task at build time."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+
+@pytest.fixture(scope="module")
+def trained():
+    images, labels = data.synthetic(256, 4, 64, 0.15, 7)
+    x = jnp.asarray(images, dtype=jnp.float32)
+    y = jnp.asarray(labels, dtype=jnp.int32)
+    params = model.init_params(jax.random.PRNGKey(0))
+    params = model.train(params, x, y, steps=150)
+    return params, x, y
+
+
+def test_training_learns(trained):
+    params, x, y = trained
+    logits = model.mlp_forward_float(params, x)
+    acc = float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+    assert acc > 0.9, f"float accuracy {acc}"
+
+
+def test_packed_equals_exact_quant(trained):
+    params, x, _ = trained
+    q = model.quantize_params(params)
+    packed = model.mlp_forward_packed(q, x[:16], use_kernel=True)
+    exact = model.mlp_forward_exact_quant(q, x[:16])
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(exact))
+
+
+def test_packed_reference_path_agrees(trained):
+    params, x, _ = trained
+    q = model.quantize_params(params)
+    via_kernel = model.mlp_forward_packed(q, x[:8], use_kernel=True)
+    via_ref = model.mlp_forward_packed(q, x[:8], use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(via_kernel), np.asarray(via_ref))
+
+
+def test_quantized_accuracy_close_to_float(trained):
+    params, x, y = trained
+    q = model.quantize_params(params)
+    logits = model.mlp_forward_packed(q, x, use_kernel=False)
+    acc = float(jnp.mean(jnp.argmax(logits, axis=1) == y))
+    assert acc > 0.8, f"quantized accuracy {acc}"
+
+
+def test_weight_codes_in_packing_range(trained):
+    params, _, _ = trained
+    q = model.quantize_params(params)
+    for k in ("w1_q", "w2_q"):
+        arr = np.asarray(q[k])
+        assert arr.min() >= -8 and arr.max() <= 7, k

@@ -1,0 +1,75 @@
+//! Ablation benches (experiment E11): the design choices DESIGN.md calls
+//! out — padding δ vs error, accumulation depth vs δ headroom, correction
+//! scheme comparison (including the MR+C extension), and the §IX headline
+//! configurations.
+
+use dsp_packing::analysis::{accumulation_sweep, exhaustive};
+use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::correct::Correction;
+use dsp_packing::packing::{PackedMultiplier, PackingConfig};
+
+fn main() {
+    let bench = Bench::from_env();
+
+    println!("=== ablation: padding delta vs error (4-bit operands, MR restore) ===");
+    for delta in [-3, -2, -1] {
+        let cfg = PackingConfig::overpack_int4(delta).unwrap();
+        let mul = PackedMultiplier::new(cfg, Correction::MrRestore).unwrap();
+        let r = exhaustive(&mul);
+        println!("delta={delta}: {}", r.row());
+    }
+    for delta in [0, 1, 2, 3] {
+        let cfg = PackingConfig::generate("d", 2, 4, 2, 4, delta).unwrap();
+        let mul = PackedMultiplier::new(cfg, Correction::None).unwrap();
+        let r = exhaustive(&mul);
+        println!("delta={delta}: {}", r.row());
+    }
+
+    println!("\n=== ablation: correction schemes on INT4 (incl. MR+C extension) ===");
+    for corr in [
+        Correction::None,
+        Correction::FullRoundHalfUp,
+        Correction::ApproxCPort,
+        Correction::ApproxPostSign,
+    ] {
+        let mul = PackedMultiplier::new(PackingConfig::int4(), corr).unwrap();
+        println!("{corr:?}: {}", exhaustive(&mul).row());
+    }
+    for corr in [Correction::MrRestore, Correction::MrRestorePlusCPort] {
+        let cfg = PackingConfig::overpack_int4(-2).unwrap();
+        let mul = PackedMultiplier::new(cfg, corr).unwrap();
+        println!("{corr:?} (d=-2): {}", exhaustive(&mul).row());
+    }
+
+    println!("\n=== ablation: accumulation depth vs the 2^delta headroom (INT4, RHU) ===");
+    let mul =
+        PackedMultiplier::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    for depth in [1usize, 2, 4, 8, 16, 32, 64, 256] {
+        let r = accumulation_sweep(&mul, depth, 1000, 5);
+        println!(
+            "depth={:<4} MAE={:.4}  EP={:.2}%  WCE={}   {}",
+            depth,
+            r.mae_bar(),
+            r.ep_bar_percent(),
+            r.wce_bar(),
+            if depth <= 8 { "(within headroom — exact)" } else { "(beyond 2^3)" }
+        );
+    }
+
+    println!("\n=== §IX headline configurations ===");
+    let six = PackedMultiplier::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
+        .unwrap();
+    println!("6x 4-bit mults, MR d=-1: {}", exhaustive(&six).row());
+    let p6 =
+        PackedMultiplier::new(PackingConfig::precision6(), Correction::MrRestore).unwrap();
+    println!("4x 6-bit mults, MR d=-2: {}", exhaustive(&p6).row());
+
+    println!();
+    bench.run_with_items("ablation/exhaustive_int4", 65536.0, || {
+        let mul = PackedMultiplier::new(PackingConfig::int4(), Correction::None).unwrap();
+        black_box(exhaustive(&mul));
+    });
+    bench.run_with_items("ablation/accumulate_depth8", 8.0 * 1000.0, || {
+        black_box(accumulation_sweep(&mul, 8, 1000, 5));
+    });
+}

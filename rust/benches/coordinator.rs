@@ -1,0 +1,80 @@
+//! Coordinator serving bench: request throughput and latency through the
+//! full L3 path (batcher → worker pool → packed virtual accelerator),
+//! plus the batching-policy ablation.
+
+use dsp_packing::bench::Bench;
+use dsp_packing::coordinator::{
+    BatcherConfig, Coordinator, PackedNnBackend, Request, ServerConfig,
+};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::GemmEngine;
+use dsp_packing::nn::{data, ExecMode, QuantMlp};
+use dsp_packing::packing::PackingConfig;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn run_serving(label: &str, cfg: ServerConfig, n_requests: usize) {
+    let ds = data::synthetic(128, 4, 64, 0.15, 7);
+    let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+    let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    let backend = Arc::new(PackedNnBackend::new(mlp, ExecMode::Packed(engine)));
+    let coord = Coordinator::start(backend, cfg);
+    let handle = coord.handle();
+
+    let start = Instant::now();
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let handle = handle.clone();
+            let imgs = ds.images.clone();
+            std::thread::spawn(move || {
+                for i in 0..n_requests / 4 {
+                    let idx = (c * 31 + i) % imgs.len();
+                    handle
+                        .infer(Request { id: i as u64, image: imgs[idx].clone() })
+                        .unwrap();
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let elapsed = start.elapsed();
+    let m = coord.shutdown();
+    println!(
+        "{label:<34} {:>8.0} req/s   p50={:>6}us p99={:>6}us  mean_batch={:.1}",
+        n_requests as f64 / elapsed.as_secs_f64(),
+        m.p50_latency_us,
+        m.p99_latency_us,
+        m.mean_batch
+    );
+}
+
+fn main() {
+    let _ = Bench::from_env(); // consistent env handling
+    let fast = std::env::var("DSP_PACKING_BENCH_FAST").as_deref() == Ok("1");
+    let n = if fast { 256 } else { 2048 };
+
+    println!("=== serving throughput/latency (packed INT4 backend, 4 clients) ===");
+    for (label, max_batch, wait_us, workers) in [
+        ("batch=1 (no batching)", 1usize, 0u64, 2usize),
+        ("batch=8 wait=500us", 8, 500, 2),
+        ("batch=16 wait=2ms", 16, 2000, 2),
+        ("batch=64 wait=5ms", 64, 5000, 2),
+        ("batch=16 wait=2ms workers=4", 16, 2000, 4),
+    ] {
+        run_serving(
+            label,
+            ServerConfig {
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_micros(wait_us),
+                    queue_cap: 8192,
+                },
+                workers,
+                dsp_budget: 128,
+            },
+            n,
+        );
+    }
+}

@@ -1,0 +1,43 @@
+//! Bench + regeneration of **Fig. 9** (experiment E6): packing densities
+//! of INT8 / INT4 / INT-N / Overpacking, plus the configuration-search
+//! timing that produces the full density landscape.
+
+use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::density::{enumerate, fig9_points, pareto};
+use dsp_packing::dsp48::DspGeometry;
+
+fn main() {
+    let bench = Bench::from_env();
+
+    println!("=== Fig. 9 regeneration (paper: INT8 0.667, INT4 0.667, INT-N 0.875, Overpack 1.125) ===");
+    for p in fig9_points() {
+        println!(
+            "{:<14} mults={}  rho={:.3}{}",
+            p.name,
+            p.mults,
+            p.density,
+            if p.approximate { "  (approximate)" } else { "" }
+        );
+    }
+    let pts = fig9_points();
+    assert!((pts[0].density - 2.0 / 3.0).abs() < 1e-9);
+    assert!((pts[1].density - 2.0 / 3.0).abs() < 1e-9);
+    assert!((pts[2].density - 0.875).abs() < 1e-9);
+    assert!((pts[3].density - 1.125).abs() < 1e-9);
+    println!("all four bars match the paper exactly\n");
+
+    bench.run("fig9/density_points", || {
+        black_box(fig9_points());
+    });
+
+    let g = DspGeometry::DSP48E2;
+    bench.run("fig9/enumerate_delta_-3..3", || {
+        black_box(enumerate(&g, -3..=3));
+    });
+
+    let all = enumerate(&g, -3..=3);
+    println!("\n{} candidate configurations", all.len());
+    bench.run("fig9/pareto_front", || {
+        black_box(pareto(&all));
+    });
+}

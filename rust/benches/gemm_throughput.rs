@@ -1,0 +1,62 @@
+//! GEMM throughput: the packed virtual accelerator vs the exact baseline,
+//! across packing configurations — the utilization story (one DSP does 4
+//! or 6 multiplications per cycle vs 1 for the unpacked baseline).
+
+use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::{GemmEngine, MatI32};
+use dsp_packing::packing::PackingConfig;
+use dsp_packing::util::Rng;
+
+fn mats(m: usize, k: usize, n: usize, seed: u64) -> (MatI32, MatI32) {
+    let mut rng = Rng::new(seed);
+    let a = MatI32::from_fn(m, k, |_, _| rng.range_i64(0, 15) as i32);
+    let w = MatI32::from_fn(k, n, |_, _| rng.range_i64(-8, 7) as i32);
+    (a, w)
+}
+
+fn main() {
+    let bench = Bench::from_env();
+    let sizes = [(32usize, 64usize, 32usize), (64, 128, 64), (128, 256, 128)];
+
+    for (m, k, n) in sizes {
+        let (a, w) = mats(m, k, n, 42);
+        let mults = (m * k * n) as f64;
+
+        bench.run_with_items(&format!("gemm/exact_{m}x{k}x{n}"), mults, || {
+            black_box(a.matmul_exact(&w).unwrap());
+        });
+
+        for (label, engine) in [
+            (
+                "int4_rhu",
+                GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+            ),
+            ("int4_raw", GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap()),
+            (
+                "mr_d2",
+                GemmEngine::new(
+                    PackingConfig::overpack_int4(-2).unwrap(),
+                    Correction::MrRestore,
+                )
+                .unwrap(),
+            ),
+            (
+                "six_mult",
+                GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
+                    .unwrap(),
+            ),
+        ] {
+            let (_, stats) = engine.matmul(&a, &w).unwrap();
+            let r = bench.run_with_items(&format!("gemm/{label}_{m}x{k}x{n}"), mults, || {
+                black_box(engine.matmul(&a, &w).unwrap());
+            });
+            let med_s = r.median_ns() / 1e9;
+            println!(
+                "    -> {label}: utilization {:.2} mults/DSP-cycle, {:.1}M DSP-cycles/s",
+                stats.utilization(),
+                stats.dsp_cycles as f64 / med_s / 1e6
+            );
+        }
+    }
+}

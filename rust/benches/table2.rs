@@ -1,0 +1,50 @@
+//! Bench + regeneration of **Table II** (experiment E4): per-result error
+//! statistics of INT4 packing and MR-Overpacking δ=−2.
+
+use dsp_packing::analysis::exhaustive;
+use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::correct::Correction;
+use dsp_packing::packing::{PackedMultiplier, PackingConfig};
+
+fn main() {
+    let bench = Bench::from_env();
+    // Paper values: (MAE, EP%, WCE) per result, INT4 then MR d=-2.
+    let paper_int4 = [(0.00, 0.00, 0), (0.47, 46.87, 1), (0.50, 49.80, 1), (0.53, 52.73, 1)];
+    let paper_mr = [(0.00, 0.00, 0), (0.60, 52.34, 2), (0.64, 55.41, 2), (0.66, 58.20, 2)];
+    let names = ["a0w0", "a1w0", "a0w1", "a1w1"];
+
+    for (label, cfg, corr, paper) in [
+        ("int4", PackingConfig::int4(), Correction::None, paper_int4),
+        (
+            "mr_overpacking_d2",
+            PackingConfig::overpack_int4(-2).unwrap(),
+            Correction::MrRestore,
+            paper_mr,
+        ),
+    ] {
+        let mul = PackedMultiplier::new(cfg, corr).unwrap();
+        let r = exhaustive(&mul);
+        println!("=== Table II / {label} (paper values in parentheses) ===");
+        for ((name, s), (pm, pe, pw)) in names.iter().zip(&r.per_result).zip(paper) {
+            println!(
+                "{:<6} MAE={:.2} ({:.2})  EP={:.2}% ({:.2}%)  WCE={} ({})",
+                name,
+                s.mae(),
+                pm,
+                s.ep_percent(),
+                pe,
+                s.wce,
+                pw
+            );
+        }
+        println!(
+            "all    MAE={:.2}  EP={:.2}%  WCE={}\n",
+            r.mae_bar(),
+            r.ep_bar_percent(),
+            r.wce_bar()
+        );
+        bench.run_with_items(&format!("table2/{label}"), 65536.0, || {
+            black_box(exhaustive(&mul));
+        });
+    }
+}

@@ -1,0 +1,69 @@
+//! Bench + regeneration of **Table III** (experiment E5): addition
+//! packing. Exhaustive carry-leak analysis of the 9-bit lane boundary,
+//! plus throughput of packed vs SIMD vs scalar adds on the simulated DSP.
+
+use dsp_packing::addpack::{carry_leak_exhaustive, AdditionPacking, PackedAccumulator};
+use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::dsp48::SimdMode;
+use dsp_packing::util::Rng;
+
+fn main() {
+    let bench = Bench::from_env();
+
+    println!("=== Table III regeneration ===");
+    let (stats, p_carry) = carry_leak_exhaustive(9);
+    println!(
+        "Addition Packing   MAE={:.2} (paper 0.51)  EP={:.2}% (paper 51.83%)  WCE={} (paper 1)",
+        stats.mae(),
+        stats.ep_percent(),
+        stats.wce
+    );
+    println!("carry probability = {p_carry:.4}; see EXPERIMENTS.md §Table III for the deviation note\n");
+
+    // Exhaustive sweep timing (2^18 operand pairs).
+    bench.run_with_items("table3/exhaustive_carry_leak", (1u64 << 18) as f64, || {
+        black_box(carry_leak_exhaustive(9));
+    });
+
+    // Packed addition throughput: five 9-bit adds per DSP pass.
+    let packing = AdditionPacking::table3();
+    let mut rng = Rng::new(1);
+    let xs: Vec<Vec<i128>> = (0..256)
+        .map(|_| (0..5).map(|_| rng.range_i128(0, 511)).collect())
+        .collect();
+    let ys = xs.clone();
+    let mut i = 0;
+    bench.run_with_items("table3/packed_add_5x9bit", 5.0, || {
+        let r = packing.add(&xs[i % 256], &ys[(i + 7) % 256]).unwrap();
+        black_box(r);
+        i += 1;
+    });
+
+    // SNN accumulate throughput (the §VII workload).
+    let mut acc = PackedAccumulator::new(AdditionPacking::table3());
+    let mut j = 0;
+    bench.run_with_items("table3/snn_accumulate_5lane", 5.0, || {
+        let inc: Vec<i128> = (0..5).map(|l| ((j + l) % 16) as i128).collect();
+        black_box(acc.accumulate(&inc).unwrap());
+        j += 1;
+        if j % 30 == 0 {
+            acc.reset();
+        }
+    });
+
+    // Native SIMD baseline for comparison (FOUR12: exact, 4 lanes).
+    let simd = AdditionPacking::uniform(4, 12, 0).unwrap();
+    let sx: Vec<i128> = vec![100, 2000, 3000, 4000];
+    use dsp_packing::dsp48::{Dsp48E2, DspInputs, Opmode};
+    let dsp = Dsp48E2::new(Opmode::add_ab(SimdMode::Four12));
+    let xw = simd.pack(&sx).unwrap();
+    bench.run_with_items("table3/simd_four12_baseline", 4.0, || {
+        let out = dsp.eval(&DspInputs {
+            a: xw >> 18,
+            b: xw & ((1 << 18) - 1),
+            c: xw,
+            ..Default::default()
+        });
+        black_box(out);
+    });
+}

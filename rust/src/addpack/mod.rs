@@ -1,0 +1,416 @@
+//! Addition packing (§VII): pack multiple small-bit-width additions into
+//! the DSP48's 48-bit ALU.
+//!
+//! Adjacent adder lanes share the ALU's carry chain: a carry out of lane k
+//! leaks into the LSB of lane k+1 (Fig. 7), corrupting it by +1 (WCE = 1,
+//! and the bottom lane is always exact). A zero **guard bit** between lanes
+//! absorbs the carry and makes the packing exact (Fig. 8) at the cost of
+//! one ALU bit per boundary.
+//!
+//! The module also exposes the DSP48E2's native SIMD ALU modes
+//! (`TWO24`/`FOUR12`) as the built-in baseline: exact, but fixed to 2×24 or
+//! 4×12 lanes — coarser than e.g. the paper's five 9-bit lanes, or its
+//! max-utilization two 9-bit + three 10-bit mix.
+
+use crate::bits::{field_unsigned, mask, wrap_unsigned};
+use crate::dsp48::{Dsp48E2, DspInputs, Opmode, SimdMode};
+use crate::{Error, Result};
+
+/// One adder lane: an unsigned `width`-bit addition placed at `offset`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdderLane {
+    /// Lane width in bits.
+    pub width: u32,
+    /// Bit offset inside the 48-bit ALU word.
+    pub offset: u32,
+}
+
+/// A packing of `k` adder lanes into one 48-bit ALU pass.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AdditionPacking {
+    /// Lanes in offset order.
+    pub lanes: Vec<AdderLane>,
+    /// Guard bits inserted between adjacent lanes (0 = the approximate
+    /// scheme of Table III; 1 = the exact scheme of Fig. 8).
+    pub guard_bits: u32,
+}
+
+impl AdditionPacking {
+    /// `n` uniform `width`-bit lanes with `guard_bits` zeros between them.
+    pub fn uniform(n: usize, width: u32, guard_bits: u32) -> Result<Self> {
+        Self::mixed(&vec![width; n], guard_bits)
+    }
+
+    /// Lanes of the given widths (bottom-up) with uniform guard bits.
+    /// The paper's max-utilization example is `mixed(&[9,9,10,10,10], 0)`.
+    pub fn mixed(widths: &[u32], guard_bits: u32) -> Result<Self> {
+        if widths.is_empty() {
+            return Err(Error::InvalidConfig("no adder lanes".into()));
+        }
+        let mut lanes = Vec::with_capacity(widths.len());
+        let mut offset = 0;
+        for &w in widths {
+            if w == 0 {
+                return Err(Error::InvalidConfig("zero-width adder lane".into()));
+            }
+            lanes.push(AdderLane { width: w, offset });
+            offset += w + guard_bits;
+        }
+        let used = offset - guard_bits;
+        if used > 48 {
+            return Err(Error::GeometryViolation(format!(
+                "{used} bits of adders in a 48-bit ALU"
+            )));
+        }
+        Ok(AdditionPacking { lanes, guard_bits })
+    }
+
+    /// The paper's Table III configuration: five 9-bit adders, no guards.
+    pub fn table3() -> Self {
+        Self::uniform(5, 9, 0).expect("5x9 fits")
+    }
+
+    /// The exact variant of §VII: five 9-bit adders with three guard bits
+    /// available — one guard between each pair would need 4; the paper
+    /// notes only one lane must go unguarded. We model the fully guarded
+    /// four-lane prefix: guards between lanes 0..3, none before lane 4.
+    pub fn table3_guarded() -> Result<Self> {
+        // 5*9 + 3 guards = 48: guards after lanes 0,1,2 (lane 4 unguarded).
+        let mut lanes = Vec::new();
+        let mut offset = 0;
+        for i in 0..5u32 {
+            lanes.push(AdderLane { width: 9, offset });
+            offset += 9 + u32::from(i < 3);
+        }
+        Ok(AdditionPacking { lanes, guard_bits: 1 })
+    }
+
+    /// Number of lanes.
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
+    }
+
+    /// Total ALU bits occupied (lanes + guards).
+    pub fn bits_used(&self) -> u32 {
+        self.lanes.last().map(|l| l.offset + l.width).unwrap_or(0)
+    }
+
+    /// Pack one operand vector (unsigned, per-lane range-checked).
+    pub fn pack(&self, vals: &[i128]) -> Result<i128> {
+        if vals.len() != self.lanes.len() {
+            return Err(Error::OperandRange(format!(
+                "got {} values for {} lanes",
+                vals.len(),
+                self.lanes.len()
+            )));
+        }
+        let mut word = 0i128;
+        for (l, &v) in self.lanes.iter().zip(vals) {
+            if !crate::bits::fits_unsigned(v, l.width) {
+                return Err(Error::OperandRange(format!(
+                    "{v} does not fit unsigned {} bits",
+                    l.width
+                )));
+            }
+            word |= v << l.offset;
+        }
+        Ok(word)
+    }
+
+    /// Extract all lane fields from an ALU word.
+    pub fn extract(&self, word: i128) -> Vec<i128> {
+        self.lanes.iter().map(|l| field_unsigned(word, l.offset, l.width)).collect()
+    }
+
+    /// Run the packed addition through a simulated DSP48E2 in ALU-only
+    /// mode (`P = A:B + C`): `x` rides the A:B concatenation, `y` the C
+    /// port. Returns the extracted per-lane sums (mod lane width).
+    pub fn add(&self, x: &[i128], y: &[i128]) -> Result<Vec<i128>> {
+        let xw = self.pack(x)?;
+        let yw = self.pack(y)?;
+        let dsp = Dsp48E2::new(Opmode::add_ab(SimdMode::One48));
+        let p = dsp.eval(&DspInputs {
+            a: xw >> 18,
+            b: xw & mask(18),
+            c: yw,
+            ..Default::default()
+        });
+        Ok(self.extract(wrap_unsigned(p, 48)))
+    }
+
+    /// Exact per-lane sums wrapped to lane width (the oracle: what a
+    /// dedicated `width`-bit adder per lane would produce).
+    pub fn expected(&self, x: &[i128], y: &[i128]) -> Vec<i128> {
+        self.lanes
+            .iter()
+            .zip(x.iter().zip(y))
+            .map(|(l, (&a, &b))| (a + b) & mask(l.width))
+            .collect()
+    }
+
+    /// Which lanes *can* err: every lane whose predecessor is unguarded
+    /// (distance between lanes equals the predecessor's width).
+    pub fn fallible_lanes(&self) -> Vec<usize> {
+        (1..self.lanes.len())
+            .filter(|&i| {
+                self.lanes[i].offset == self.lanes[i - 1].offset + self.lanes[i - 1].width
+            })
+            .collect()
+    }
+}
+
+/// A packed SNN-style accumulator: `k` independent membrane accumulators
+/// in one DSP48 running `P = A:B + C + P` (the §VII motivation — SNN
+/// accelerators are adder-bound). Increments are packed per cycle;
+/// carry leaks between lanes are the approximation.
+#[derive(Debug, Clone)]
+pub struct PackedAccumulator {
+    packing: AdditionPacking,
+    dsp: Dsp48E2,
+    /// Exact shadow accumulators (oracle).
+    shadow: Vec<i128>,
+}
+
+impl PackedAccumulator {
+    /// New accumulator bank over the given packing.
+    pub fn new(packing: AdditionPacking) -> Self {
+        let shadow = vec![0; packing.num_lanes()];
+        PackedAccumulator {
+            packing,
+            dsp: Dsp48E2::new(Opmode::add_ab_accumulate(SimdMode::One48)),
+            shadow,
+        }
+    }
+
+    /// The lane packing.
+    pub fn packing(&self) -> &AdditionPacking {
+        &self.packing
+    }
+
+    /// Accumulate one packed increment vector. Returns the current
+    /// (approximate) per-lane values.
+    pub fn accumulate(&mut self, inc: &[i128]) -> Result<Vec<i128>> {
+        let w = self.packing.pack(inc)?;
+        self.dsp.eval_update(&DspInputs {
+            a: w >> 18,
+            b: w & mask(18),
+            c: 0,
+            ..Default::default()
+        });
+        for (s, (&v, l)) in self.shadow.iter_mut().zip(inc.iter().zip(&self.packing.lanes)) {
+            *s = (*s + v) & mask(l.width);
+        }
+        Ok(self.values())
+    }
+
+    /// Current (approximate) per-lane values.
+    pub fn values(&self) -> Vec<i128> {
+        self.packing.extract(wrap_unsigned(self.dsp.p(), 48))
+    }
+
+    /// Overwrite one lane (and its trailing guard bits) with `value` —
+    /// a register reload, as a hardware membrane reset would be. Carries
+    /// already leaked into *other* lanes are untouched.
+    pub fn set_lane(&mut self, lane: usize, value: i128) -> Result<()> {
+        let l = self.packing.lanes.get(lane).copied().ok_or_else(|| {
+            Error::OperandRange(format!("lane {lane} of {}", self.packing.num_lanes()))
+        })?;
+        if !crate::bits::fits_unsigned(value, l.width) {
+            return Err(Error::OperandRange(format!(
+                "{value} does not fit unsigned {} bits",
+                l.width
+            )));
+        }
+        // Field span includes the guard bits up to the next lane (they
+        // belong to this lane's overflow room and reset with it).
+        let span_end = self
+            .packing
+            .lanes
+            .get(lane + 1)
+            .map(|n| n.offset)
+            .unwrap_or_else(|| self.packing.bits_used());
+        let span = span_end - l.offset;
+        let p = wrap_unsigned(self.dsp.p(), 48);
+        let cleared = p & !(mask(span) << l.offset);
+        let next_p = cleared | (value << l.offset);
+        // Reload the P register through a reset + replay of the word.
+        self.dsp.reset();
+        self.dsp.eval_update(&DspInputs {
+            a: next_p >> 18,
+            b: next_p & mask(18),
+            c: 0,
+            ..Default::default()
+        });
+        Ok(())
+    }
+
+    /// Exact per-lane values (oracle).
+    pub fn exact(&self) -> &[i128] {
+        &self.shadow
+    }
+
+    /// Reset all lanes.
+    pub fn reset(&mut self) {
+        self.dsp.reset();
+        self.shadow.iter_mut().for_each(|s| *s = 0);
+    }
+}
+
+/// Exhaustive carry-leak analysis for one lane boundary (Table III): sweep
+/// all operand combinations of the lane *below* plus a carry-in bit
+/// context, and record the error the lane *above* observes.
+///
+/// Returns `(stats_for_lane_above, carry_probability)`.
+pub fn carry_leak_exhaustive(width_below: u32) -> (crate::analysis::ErrorStats, f64) {
+    let mut stats = crate::analysis::ErrorStats::default();
+    let mut carries = 0u64;
+    let lim = 1i128 << width_below;
+    for x in 0..lim {
+        for y in 0..lim {
+            let carry = (x + y) >> width_below; // 0 or 1
+            carries += carry as u64;
+            // The lane above reads its own sum plus the leaked carry;
+            // its error is exactly +carry in the LSB (Fig. 7).
+            stats.record(carry, 0);
+        }
+    }
+    let total = (lim * lim) as f64;
+    (stats, carries as f64 / total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fig7_carry_leak() {
+        // Two 8-bit additions in one wide adder: the lower carry corrupts
+        // the upper LSB.
+        let p = AdditionPacking::uniform(2, 8, 0).unwrap();
+        let got = p.add(&[200, 10], &[100, 20]).unwrap();
+        let exp = p.expected(&[200, 10], &[100, 20]);
+        assert_eq!(exp, vec![(200 + 100) & 0xFF, 30]);
+        assert_eq!(got[0], exp[0], "bottom lane never errs");
+        assert_eq!(got[1], exp[1] + 1, "carry leaked into upper LSB");
+    }
+
+    #[test]
+    fn fig8_guard_bit_blocks_carry() {
+        let p = AdditionPacking::uniform(2, 8, 1).unwrap();
+        let got = p.add(&[200, 10], &[100, 20]).unwrap();
+        assert_eq!(got, p.expected(&[200, 10], &[100, 20]));
+    }
+
+    #[test]
+    fn table3_shapes() {
+        let p = AdditionPacking::table3();
+        assert_eq!(p.num_lanes(), 5);
+        assert_eq!(p.bits_used(), 45);
+        assert_eq!(p.fallible_lanes(), vec![1, 2, 3, 4]);
+        let g = AdditionPacking::table3_guarded().unwrap();
+        assert_eq!(g.bits_used(), 48);
+        assert_eq!(g.fallible_lanes(), vec![4], "only the top lane unguarded");
+    }
+
+    #[test]
+    fn max_utilization_mix_fits_exactly() {
+        // §VII: two 9-bit + three 10-bit adders = 48 bits, no guards.
+        let p = AdditionPacking::mixed(&[9, 9, 10, 10, 10], 0).unwrap();
+        assert_eq!(p.bits_used(), 48);
+        assert!(AdditionPacking::mixed(&[10, 10, 10, 10, 9], 0).is_err());
+    }
+
+    #[test]
+    fn carry_probability_for_9bit() {
+        let (stats, p_carry) = carry_leak_exhaustive(9);
+        // Uniform 9-bit operands: P(x+y >= 512) = 511/1024 ≈ 49.90 %.
+        assert!((p_carry - 0.4990).abs() < 0.0002, "p_carry {}", p_carry);
+        assert_eq!(stats.wce, 1);
+    }
+
+    #[test]
+    fn snn_accumulator_tracks_shadow_with_guards() {
+        // Keep lane totals below 2^9 so no lane wraps: guarded lanes then
+        // match the exact shadow bit for bit.
+        let p = AdditionPacking::uniform(4, 9, 1).unwrap();
+        let mut acc = PackedAccumulator::new(p);
+        for step in 0..100 {
+            let inc: Vec<i128> = (0..4).map(|l| ((step * 7 + l * 13) % 6) as i128).collect();
+            acc.accumulate(&inc).unwrap();
+        }
+        assert_eq!(acc.values(), acc.exact().to_vec());
+    }
+
+    #[test]
+    fn snn_accumulator_guard_saturates_after_wrap() {
+        // A single guard bit absorbs exactly one lane wrap; the second
+        // wrap spills +1 into the lane above (documented limitation — in
+        // SNN use the membrane resets on fire, well before 2 wraps).
+        let p = AdditionPacking::uniform(2, 9, 1).unwrap();
+        let mut acc = PackedAccumulator::new(p);
+        for _ in 0..5 {
+            acc.accumulate(&[500, 1]).unwrap();
+        }
+        // Lane 0 wrapped 4 times (2500 = 4*512 + 452): guard overflowed
+        // repeatedly, lane 1 reads its exact value plus floor(4/2)=2.
+        assert_eq!(acc.exact(), &[2500 % 512, 5]);
+        assert_eq!(acc.values()[0], 2500 % 512);
+        assert_eq!(acc.values()[1], 5 + 2);
+    }
+
+    /// Bottom lane of any packing is always exact; unguarded upper lanes
+    /// err by at most +1 in the LSB (the §VII bound).
+    #[test]
+    fn prop_error_bound() {
+        let p = AdditionPacking::table3();
+        let mut rng = Rng::new(0xADD1);
+        for _ in 0..5_000 {
+            let xs: Vec<i128> = (0..5).map(|_| rng.range_i128(0, 511)).collect();
+            let ys: Vec<i128> = (0..5).map(|_| rng.range_i128(0, 511)).collect();
+            let got = p.add(&xs, &ys).unwrap();
+            let exp = p.expected(&xs, &ys);
+            assert_eq!(got[0], exp[0]);
+            for i in 1..5 {
+                let err = got[i] - exp[i];
+                // +1 leak, possibly wrapping the lane to its minimum.
+                assert!(err == 0 || err == 1 || err == 1 - (1 << 9), "lane {i} err {err}");
+            }
+        }
+    }
+
+    /// Guard bits make every lane exact (Fig. 8 claim).
+    #[test]
+    fn prop_guarded_exact() {
+        let p = AdditionPacking::uniform(4, 8, 1).unwrap();
+        let mut rng = Rng::new(0xADD2);
+        for _ in 0..5_000 {
+            let xs: Vec<i128> = (0..4).map(|_| rng.range_i128(0, 255)).collect();
+            let ys: Vec<i128> = (0..4).map(|_| rng.range_i128(0, 255)).collect();
+            assert_eq!(p.add(&xs, &ys).unwrap(), p.expected(&xs, &ys));
+        }
+    }
+
+    /// Native SIMD FOUR12 matches four independent adders exactly — the
+    /// built-in baseline addition packing is compared against.
+    #[test]
+    fn prop_simd_baseline_exact() {
+        let p = AdditionPacking::uniform(4, 12, 0).unwrap();
+        let dsp = Dsp48E2::new(Opmode::add_ab(SimdMode::Four12));
+        let mut rng = Rng::new(0xADD3);
+        for _ in 0..5_000 {
+            let xs: Vec<i128> = (0..4).map(|_| rng.range_i128(0, 4095)).collect();
+            let ys: Vec<i128> = (0..4).map(|_| rng.range_i128(0, 4095)).collect();
+            // Use the SIMD ALU instead of the shared carry chain.
+            let xw = p.pack(&xs).unwrap();
+            let yw = p.pack(&ys).unwrap();
+            let out = dsp.eval(&DspInputs {
+                a: xw >> 18,
+                b: xw & mask(18),
+                c: yw,
+                ..Default::default()
+            });
+            assert_eq!(p.extract(wrap_unsigned(out, 48)), p.expected(&xs, &ys));
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Error-analysis engine behind Tables I–III: EP / MAE / WCE
+//! (Eqns. (10)–(12)), computed exhaustively over all input combinations or
+//! over random samples, per result field and aggregated.
+
+mod stats;
+mod sweep;
+
+pub use stats::{ErrorStats, PackingReport};
+pub use sweep::{accumulation_sweep, exhaustive, sampled, OperandIter};

@@ -1,0 +1,217 @@
+//! Error statistics: EP (error probability), MAE (mean absolute error),
+//! WCE (worst-case error) — Eqns. (10)–(12) of §VIII.
+
+use crate::util::Json;
+
+/// Streaming error statistics for one result field (or one adder).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ErrorStats {
+    /// Number of (actual, expected) pairs observed.
+    pub n: u64,
+    /// Number of pairs with `actual != expected`.
+    pub errors: u64,
+    /// Sum of `|actual − expected|`.
+    pub abs_err_sum: u128,
+    /// Max of `|actual − expected|` (WCE, Eqn. (12)).
+    pub wce: u64,
+    /// Sum of signed errors (exposes the §V bias toward −∞).
+    pub signed_err_sum: i128,
+}
+
+impl ErrorStats {
+    /// Record one observation.
+    #[inline]
+    pub fn record(&mut self, actual: i128, expected: i128) {
+        let err = actual - expected;
+        self.n += 1;
+        if err != 0 {
+            self.errors += 1;
+            let a = err.unsigned_abs() as u128;
+            self.abs_err_sum += a;
+            self.wce = self.wce.max(a as u64);
+            self.signed_err_sum += err;
+        }
+    }
+
+    /// Merge another accumulator into this one (parallel reduction).
+    pub fn merge(&mut self, other: &ErrorStats) {
+        self.n += other.n;
+        self.errors += other.errors;
+        self.abs_err_sum += other.abs_err_sum;
+        self.wce = self.wce.max(other.wce);
+        self.signed_err_sum += other.signed_err_sum;
+    }
+
+    /// Mean absolute error (Eqn. (11)).
+    pub fn mae(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.abs_err_sum as f64 / self.n as f64
+        }
+    }
+
+    /// Error probability in percent (Eqn. (10)).
+    pub fn ep_percent(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.errors as f64 / self.n as f64 * 100.0
+        }
+    }
+
+    /// Mean signed error — negative values expose the floor bias of §V.
+    pub fn bias(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.signed_err_sum as f64 / self.n as f64
+        }
+    }
+}
+
+/// Per-result error statistics for one packing configuration plus the
+/// paper's bar-accented aggregates (mean of per-result MAE/EP, max WCE).
+#[derive(Debug, Clone, Default)]
+pub struct PackingReport {
+    /// Name of the configuration / scheme this report describes.
+    pub name: String,
+    /// Per-result statistics, in result (offset) order.
+    pub per_result: Vec<ErrorStats>,
+}
+
+impl PackingReport {
+    /// New empty report with one accumulator per result.
+    pub fn new(name: impl Into<String>, num_results: usize) -> Self {
+        PackingReport { name: name.into(), per_result: vec![ErrorStats::default(); num_results] }
+    }
+
+    /// Record one outer-product observation.
+    #[inline]
+    pub fn record(&mut self, actual: &[i128], expected: &[i128]) {
+        debug_assert_eq!(actual.len(), self.per_result.len());
+        for ((s, &a), &e) in self.per_result.iter_mut().zip(actual).zip(expected) {
+            s.record(a, e);
+        }
+    }
+
+    /// Merge another report (parallel reduction).
+    pub fn merge(&mut self, other: &PackingReport) {
+        for (s, o) in self.per_result.iter_mut().zip(&other.per_result) {
+            s.merge(o);
+        }
+    }
+
+    /// \overline{MAE}: mean of the per-result MAEs (Table I convention —
+    /// matches the paper's 0.37 = mean(0, 0.47, 0.50, 0.53)).
+    pub fn mae_bar(&self) -> f64 {
+        if self.per_result.is_empty() {
+            return 0.0;
+        }
+        self.per_result.iter().map(|s| s.mae()).sum::<f64>() / self.per_result.len() as f64
+    }
+
+    /// \overline{EP} in percent: mean of the per-result EPs.
+    pub fn ep_bar_percent(&self) -> f64 {
+        if self.per_result.is_empty() {
+            return 0.0;
+        }
+        self.per_result.iter().map(|s| s.ep_percent()).sum::<f64>()
+            / self.per_result.len() as f64
+    }
+
+    /// \overline{WCE}: max over the per-result WCEs.
+    pub fn wce_bar(&self) -> u64 {
+        self.per_result.iter().map(|s| s.wce).max().unwrap_or(0)
+    }
+
+    /// Machine-readable report (for `repro --json` and EXPERIMENTS.md
+    /// regeneration).
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("name", self.name.as_str().into()),
+            ("mae_bar", self.mae_bar().into()),
+            ("ep_bar_percent", self.ep_bar_percent().into()),
+            ("wce_bar", self.wce_bar().into()),
+            (
+                "per_result",
+                Json::Arr(
+                    self.per_result
+                        .iter()
+                        .map(|s| {
+                            Json::obj([
+                                ("n", s.n.into()),
+                                ("mae", s.mae().into()),
+                                ("ep_percent", s.ep_percent().into()),
+                                ("wce", s.wce.into()),
+                                ("bias", s.bias().into()),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Render a Table-I style row: `MAE  EP%  WCE`.
+    pub fn row(&self) -> String {
+        format!(
+            "{:<28} MAE={:>6.2}  EP={:>6.2}%  WCE={:>4}",
+            self.name,
+            self.mae_bar(),
+            self.ep_bar_percent(),
+            self.wce_bar()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basics() {
+        let mut s = ErrorStats::default();
+        s.record(5, 5);
+        s.record(4, 5); // err -1
+        s.record(8, 5); // err +3
+        assert_eq!(s.n, 3);
+        assert_eq!(s.errors, 2);
+        assert_eq!(s.wce, 3);
+        assert!((s.mae() - 4.0 / 3.0).abs() < 1e-12);
+        assert!((s.ep_percent() - 200.0 / 3.0).abs() < 1e-12);
+        assert!((s.bias() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let mut a = ErrorStats::default();
+        let mut b = ErrorStats::default();
+        let mut whole = ErrorStats::default();
+        for i in 0..100i128 {
+            let (act, exp) = (i, i + (i % 3) - 1);
+            whole.record(act, exp);
+            if i < 50 { a.record(act, exp) } else { b.record(act, exp) }
+        }
+        a.merge(&b);
+        assert_eq!(a, whole);
+    }
+
+    #[test]
+    fn bar_aggregates_match_paper_convention() {
+        // mean(0, 0.47, 0.50, 0.53) = 0.375 -> the paper's 0.37 MAE-bar.
+        let mut r = PackingReport::new("t", 4);
+        // Construct stats with exact MAE/EP by hand.
+        let mk = |n: u64, errors: u64| ErrorStats {
+            n,
+            errors,
+            abs_err_sum: errors as u128,
+            wce: if errors > 0 { 1 } else { 0 },
+            signed_err_sum: -(errors as i128),
+        };
+        r.per_result = vec![mk(100, 0), mk(100, 47), mk(100, 50), mk(100, 53)];
+        assert!((r.mae_bar() - 0.375).abs() < 1e-12);
+        assert!((r.ep_bar_percent() - 37.5).abs() < 1e-12);
+        assert_eq!(r.wce_bar(), 1);
+    }
+}

@@ -1,0 +1,174 @@
+//! Minimal benchmarking harness (criterion replacement for the offline
+//! build). Used by every `rust/benches/*.rs` target (`harness = false`).
+//!
+//! Methodology: warm up, then run timed batches until both a minimum
+//! sample count and a minimum measurement time are reached; report
+//! mean / median / p95 per-iteration time and derived throughput.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark's collected samples.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark id.
+    pub name: String,
+    /// Per-iteration wall time of each sample batch.
+    pub samples_ns: Vec<f64>,
+    /// Items processed per iteration (for throughput lines), if set.
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    /// Mean ns/iteration.
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    /// Percentile (0..=100) of ns/iteration.
+    pub fn percentile_ns(&self, p: f64) -> f64 {
+        let mut v = self.samples_ns.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx]
+    }
+
+    /// Median ns/iteration.
+    pub fn median_ns(&self) -> f64 {
+        self.percentile_ns(50.0)
+    }
+
+    /// Render a human-readable ns value.
+    fn fmt_time(ns: f64) -> String {
+        if ns < 1e3 {
+            format!("{ns:.1} ns")
+        } else if ns < 1e6 {
+            format!("{:.2} µs", ns / 1e3)
+        } else if ns < 1e9 {
+            format!("{:.2} ms", ns / 1e6)
+        } else {
+            format!("{:.3} s", ns / 1e9)
+        }
+    }
+
+    /// Print a criterion-style report line.
+    pub fn report(&self) {
+        let med = self.median_ns();
+        print!(
+            "{:<44} time: [{} {} {}]",
+            self.name,
+            Self::fmt_time(self.percentile_ns(5.0)),
+            Self::fmt_time(med),
+            Self::fmt_time(self.percentile_ns(95.0)),
+        );
+        if let Some(items) = self.items_per_iter {
+            let per_sec = items / (med / 1e9);
+            if per_sec > 1e6 {
+                print!("   thrpt: {:.2} Melem/s", per_sec / 1e6);
+            } else {
+                print!("   thrpt: {:.1} Kelem/s", per_sec / 1e3);
+            }
+        }
+        println!();
+    }
+}
+
+/// Benchmark runner.
+pub struct Bench {
+    min_samples: usize,
+    min_time: Duration,
+    warmup: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            min_samples: 20,
+            min_time: Duration::from_millis(500),
+            warmup: Duration::from_millis(100),
+        }
+    }
+}
+
+impl Bench {
+    /// Runner with custom budgets (used by quick CI runs).
+    pub fn new(min_samples: usize, min_time: Duration, warmup: Duration) -> Self {
+        Bench { min_samples, min_time, warmup }
+    }
+
+    /// Fast settings when `DSP_PACKING_BENCH_FAST=1` (CI smoke).
+    pub fn from_env() -> Self {
+        if std::env::var("DSP_PACKING_BENCH_FAST").as_deref() == Ok("1") {
+            Bench::new(5, Duration::from_millis(50), Duration::from_millis(10))
+        } else {
+            Bench::default()
+        }
+    }
+
+    /// Measure `f`, which performs ONE logical iteration per call.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        self.run_items(name, None, &mut f)
+    }
+
+    /// Measure `f` and report throughput as `items` per iteration.
+    pub fn run_with_items<F: FnMut()>(&self, name: &str, items: f64, mut f: F) -> BenchResult {
+        self.run_items(name, Some(items), &mut f)
+    }
+
+    fn run_items(&self, name: &str, items: Option<f64>, f: &mut dyn FnMut()) -> BenchResult {
+        // Warmup + calibration: how many iterations fit in ~10ms?
+        let start = Instant::now();
+        let mut warm_iters = 0u64;
+        while start.elapsed() < self.warmup {
+            f();
+            warm_iters += 1;
+        }
+        let per_iter = self.warmup.as_nanos() as f64 / warm_iters.max(1) as f64;
+        let batch = ((10e6 / per_iter).ceil() as u64).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let measure_start = Instant::now();
+        while samples.len() < self.min_samples || measure_start.elapsed() < self.min_time {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / batch as f64);
+            if samples.len() > 10_000 {
+                break;
+            }
+        }
+        let r = BenchResult { name: name.to_string(), samples_ns: samples, items_per_iter: items };
+        r.report();
+        r
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new(3, Duration::from_millis(5), Duration::from_millis(2));
+        let mut acc = 0u64;
+        let r = b.run("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.mean_ns() > 0.0);
+        assert!(r.samples_ns.len() >= 3);
+        assert!(r.percentile_ns(95.0) >= r.percentile_ns(5.0));
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert_eq!(BenchResult::fmt_time(500.0), "500.0 ns");
+        assert_eq!(BenchResult::fmt_time(2500.0), "2.50 µs");
+        assert_eq!(BenchResult::fmt_time(3.2e6), "3.20 ms");
+    }
+}

@@ -1,0 +1,159 @@
+//! Two's-complement bit-field helpers shared by the whole crate.
+//!
+//! Everything in the paper is plain two's-complement arithmetic on wide
+//! words: packing places small fields at offsets, the DSP multiplies wide
+//! words, extraction slices fields back out. These helpers centralize the
+//! (error-prone) sign-extension and wrap-around semantics. All wide values
+//! are carried as `i128`, which comfortably holds the 48-bit P output and
+//! any intermediate (27 + 18 = 45-bit products).
+
+/// Mask with the low `width` bits set. `width` must be ≤ 127.
+#[inline]
+pub fn mask(width: u32) -> i128 {
+    debug_assert!(width < 128);
+    (1i128 << width) - 1
+}
+
+/// Interpret the low `width` bits of `v` as an unsigned field.
+#[inline]
+pub fn field_unsigned(v: i128, offset: u32, width: u32) -> i128 {
+    (v >> offset) & mask(width)
+}
+
+/// Interpret the low `width` bits of `v >> offset` as a signed
+/// (two's-complement) field. This is the paper's result extraction: a plain
+/// arithmetic right shift followed by truncation, which floors toward −∞ —
+/// the root cause of the §V error.
+#[inline]
+pub fn field_signed(v: i128, offset: u32, width: u32) -> i128 {
+    let u = field_unsigned(v, offset, width);
+    let sign = 1i128 << (width - 1);
+    (u ^ sign) - sign
+}
+
+/// Wrap `v` to a signed `width`-bit value (two's complement overflow
+/// semantics, like hardware register truncation).
+#[inline]
+pub fn wrap_signed(v: i128, width: u32) -> i128 {
+    field_signed(v, 0, width)
+}
+
+/// Wrap `v` to an unsigned `width`-bit value.
+#[inline]
+pub fn wrap_unsigned(v: i128, width: u32) -> i128 {
+    v & mask(width)
+}
+
+/// True iff `v` is representable as a signed `width`-bit integer.
+#[inline]
+pub fn fits_signed(v: i128, width: u32) -> bool {
+    let half = 1i128 << (width - 1);
+    (-half..half).contains(&v)
+}
+
+/// True iff `v` is representable as an unsigned `width`-bit integer.
+#[inline]
+pub fn fits_unsigned(v: i128, width: u32) -> bool {
+    (0..(1i128 << width)).contains(&v)
+}
+
+/// Smallest/largest value of a `width`-bit field with the given signedness.
+#[inline]
+pub fn range(width: u32, signed: bool) -> (i128, i128) {
+    if signed {
+        (-(1i128 << (width - 1)), (1i128 << (width - 1)) - 1)
+    } else {
+        (0, (1i128 << width) - 1)
+    }
+}
+
+/// Bit `i` of `v` as 0/1.
+#[inline]
+pub fn bit(v: i128, i: u32) -> i128 {
+    (v >> i) & 1
+}
+
+/// Number of bits needed to represent `v` as signed two's complement.
+pub fn signed_width(v: i128) -> u32 {
+    if v >= 0 {
+        128 - v.leading_zeros() + 1
+    } else {
+        128 - (!v).leading_zeros() + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn extract_signed_basic() {
+        // -70 in an 8-bit field at offset 0 of a wider word.
+        let p = wrap_unsigned(-70, 16);
+        assert_eq!(field_signed(p, 0, 8), -70);
+        assert_eq!(field_signed(0b1000_0000, 0, 8), -128);
+        assert_eq!(field_signed(0b0111_1111, 0, 8), 127);
+    }
+
+    #[test]
+    fn extract_floor_semantics() {
+        // Extracting above a negative low field loses 1: the floor error of §V.
+        let p: i128 = (5 << 11) + (-3); // r1=5 at offset 11, r0=-3 below
+        assert_eq!(field_signed(p, 11, 8), 4); // floored!
+        assert_eq!(field_signed(p, 0, 8), -3);
+    }
+
+    #[test]
+    fn ranges() {
+        assert_eq!(range(4, true), (-8, 7));
+        assert_eq!(range(4, false), (0, 15));
+        assert!(fits_signed(-8, 4) && !fits_signed(8, 4));
+        assert!(fits_unsigned(15, 4) && !fits_unsigned(16, 4));
+    }
+
+    #[test]
+    fn signed_widths() {
+        assert_eq!(signed_width(0), 1);
+        assert_eq!(signed_width(-1), 1);
+        assert_eq!(signed_width(7), 4);
+        assert_eq!(signed_width(-8), 4);
+        assert_eq!(signed_width(-9), 5);
+        assert_eq!(signed_width(105), 8);
+        assert_eq!(signed_width(-120), 8);
+    }
+
+    #[test]
+    fn prop_roundtrip_signed() {
+        let mut rng = Rng::new(0xB175);
+        for _ in 0..5_000 {
+            let v = rng.range_i128(-128, 127);
+            let off = rng.range_i128(0, 39) as u32;
+            let w = wrap_unsigned(v, 8) << off;
+            assert_eq!(field_signed(w, off, 8), v);
+        }
+    }
+
+    #[test]
+    fn prop_wrap_is_mod() {
+        let mut rng = Rng::new(0xB176);
+        for _ in 0..5_000 {
+            let v = rng.next_u64() as i64 as i128;
+            let width = rng.range_i128(1, 59) as u32;
+            assert_eq!(wrap_unsigned(v, width), v.rem_euclid(1i128 << width));
+        }
+    }
+
+    #[test]
+    fn prop_signed_fits_its_width() {
+        let mut rng = Rng::new(0xB177);
+        for _ in 0..5_000 {
+            let v = rng.next_u64() as u32 as i32 as i128;
+            let w = signed_width(v);
+            assert!(fits_signed(v, w));
+            if w > 1 {
+                assert!(!fits_signed(v, w - 1));
+            }
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Typed application configuration over the TOML-subset parser.
+
+use super::parse::{parse, Sections};
+use crate::coordinator::{BatcherConfig, ServerConfig};
+use crate::correct::Correction;
+use crate::packing::PackingConfig;
+use crate::{Error, Result};
+use std::time::Duration;
+
+/// Which packing configuration to instantiate.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PackingKind {
+    /// Xilinx INT8 (wp486).
+    Int8,
+    /// Xilinx INT4 (wp521).
+    Int4,
+    /// Generated INT-N: (n_a, a_width, n_w, w_width, delta).
+    IntN { n_a: usize, a_width: u32, n_w: usize, w_width: u32, delta: i32 },
+    /// Overpacked INT4 with the given (negative) delta.
+    OverpackInt4(i32),
+    /// Six 4-bit multiplications (§IX headline).
+    Overpack6,
+    /// Four 6-bit multiplications (§IX precision headline).
+    Precision6,
+}
+
+impl PackingKind {
+    /// Instantiate the packing configuration.
+    pub fn build(&self) -> Result<PackingConfig> {
+        Ok(match self {
+            PackingKind::Int8 => PackingConfig::int8(),
+            PackingKind::Int4 => PackingConfig::int4(),
+            PackingKind::IntN { n_a, a_width, n_w, w_width, delta } => {
+                PackingConfig::generate("config-intn", *n_a, *a_width, *n_w, *w_width, *delta)?
+            }
+            PackingKind::OverpackInt4(d) => PackingConfig::overpack_int4(*d)?,
+            PackingKind::Overpack6 => PackingConfig::overpack6_int4(),
+            PackingKind::Precision6 => PackingConfig::precision6(),
+        })
+    }
+
+    fn from_str(s: &str, sections: &Sections) -> Result<Self> {
+        Ok(match s {
+            "int8" => PackingKind::Int8,
+            "int4" => PackingKind::Int4,
+            "overpack6" => PackingKind::Overpack6,
+            "precision6" => PackingKind::Precision6,
+            "overpack-int4" => {
+                let d = sections
+                    .get("packing")
+                    .and_then(|p| p.get("delta"))
+                    .and_then(|v| v.as_int())
+                    .ok_or_else(|| Error::Config("overpack-int4 needs packing.delta".into()))?;
+                PackingKind::OverpackInt4(d as i32)
+            }
+            "intn" => {
+                let p = sections
+                    .get("packing")
+                    .ok_or_else(|| Error::Config("intn needs a [packing] section".into()))?;
+                let get = |k: &str, default: i64| {
+                    p.get(k).and_then(|v| v.as_int()).unwrap_or(default)
+                };
+                PackingKind::IntN {
+                    n_a: get("n_a", 2) as usize,
+                    a_width: get("a_width", 4) as u32,
+                    n_w: get("n_w", 2) as usize,
+                    w_width: get("w_width", 4) as u32,
+                    delta: get("delta", 0) as i32,
+                }
+            }
+            other => return Err(Error::Config(format!("unknown packing kind {other:?}"))),
+        })
+    }
+}
+
+/// Correction scheme selection (string names used in config files / CLI).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CorrectionKind(pub Correction);
+
+impl CorrectionKind {
+    /// Parse a scheme name.
+    pub fn from_str(s: &str) -> Result<Self> {
+        Ok(CorrectionKind(match s {
+            "none" => Correction::None,
+            "full" => Correction::FullRoundHalfUp,
+            "approx" | "c-port" => Correction::ApproxCPort,
+            "approx-post" => Correction::ApproxPostSign,
+            "mr" => Correction::MrRestore,
+            "mr+c" => Correction::MrRestorePlusCPort,
+            other => return Err(Error::Config(format!("unknown correction {other:?}"))),
+        }))
+    }
+}
+
+/// The full application config.
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// Packing selection.
+    pub packing: PackingKind,
+    /// Correction scheme.
+    pub correction: Correction,
+    /// Server settings.
+    pub server: ServerConfig,
+    /// Dataset: number of classes.
+    pub classes: usize,
+    /// Dataset: flattened image dimension.
+    pub dim: usize,
+    /// Dataset seed.
+    pub seed: u64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            packing: PackingKind::Int4,
+            correction: Correction::FullRoundHalfUp,
+            server: ServerConfig::default(),
+            classes: 4,
+            dim: 64,
+            seed: 7,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Parse from a TOML-subset document.
+    pub fn from_str(text: &str) -> Result<Self> {
+        let sections = parse(text)?;
+        let mut cfg = AppConfig::default();
+        if let Some(p) = sections.get("packing") {
+            if let Some(kind) = p.get("kind").and_then(|v| v.as_str()) {
+                cfg.packing = PackingKind::from_str(kind, &sections)?;
+            }
+            if let Some(c) = p.get("correction").and_then(|v| v.as_str()) {
+                cfg.correction = CorrectionKind::from_str(c)?.0;
+            }
+        }
+        if let Some(s) = sections.get("server") {
+            let mut b = BatcherConfig::default();
+            if let Some(v) = s.get("max_batch").and_then(|v| v.as_int()) {
+                b.max_batch = v as usize;
+            }
+            if let Some(v) = s.get("max_wait_ms").and_then(|v| v.as_float()) {
+                b.max_wait = Duration::from_micros((v * 1000.0) as u64);
+            }
+            if let Some(v) = s.get("queue_cap").and_then(|v| v.as_int()) {
+                b.queue_cap = v as usize;
+            }
+            cfg.server.batcher = b;
+            if let Some(v) = s.get("workers").and_then(|v| v.as_int()) {
+                cfg.server.workers = v as usize;
+            }
+            if let Some(v) = s.get("dsp_budget").and_then(|v| v.as_int()) {
+                cfg.server.dsp_budget = v as usize;
+            }
+        }
+        if let Some(d) = sections.get("data") {
+            if let Some(v) = d.get("classes").and_then(|v| v.as_int()) {
+                cfg.classes = v as usize;
+            }
+            if let Some(v) = d.get("dim").and_then(|v| v.as_int()) {
+                cfg.dim = v as usize;
+            }
+            if let Some(v) = d.get("seed").and_then(|v| v.as_int()) {
+                cfg.seed = v as u64;
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file path.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read {path}: {e}")))?;
+        Self::from_str(&text)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = AppConfig::default();
+        assert_eq!(c.packing, PackingKind::Int4);
+        assert_eq!(c.correction, Correction::FullRoundHalfUp);
+        assert!(c.packing.build().is_ok());
+    }
+
+    #[test]
+    fn parses_full_document() {
+        let doc = r#"
+[packing]
+kind = "overpack-int4"
+delta = -2
+correction = "mr"
+
+[server]
+max_batch = 32
+max_wait_ms = 1.5
+workers = 8
+queue_cap = 512
+dsp_budget = 96
+
+[data]
+classes = 10
+dim = 64
+seed = 3
+"#;
+        let c = AppConfig::from_str(doc).unwrap();
+        assert_eq!(c.packing, PackingKind::OverpackInt4(-2));
+        assert_eq!(c.correction, Correction::MrRestore);
+        assert_eq!(c.server.batcher.max_batch, 32);
+        assert_eq!(c.server.batcher.max_wait, Duration::from_micros(1500));
+        assert_eq!(c.server.workers, 8);
+        assert_eq!(c.classes, 10);
+        let built = c.packing.build().unwrap();
+        assert_eq!(built.delta, -2);
+    }
+
+    #[test]
+    fn parses_intn() {
+        let doc = r#"
+[packing]
+kind = "intn"
+n_a = 3
+a_width = 4
+n_w = 2
+w_width = 3
+delta = 0
+"#;
+        let c = AppConfig::from_str(doc).unwrap();
+        let built = c.packing.build().unwrap();
+        assert_eq!(built.num_results(), 6);
+        assert_eq!(built.results.iter().map(|r| r.offset).collect::<Vec<_>>(),
+                   vec![0, 7, 14, 21, 28, 35]);
+    }
+
+    #[test]
+    fn rejects_unknown_names() {
+        assert!(AppConfig::from_str("[packing]\nkind = \"int3\"").is_err());
+        assert!(AppConfig::from_str("[packing]\ncorrection = \"magic\"").is_err());
+    }
+
+    #[test]
+    fn all_correction_names_roundtrip() {
+        for (name, c) in [
+            ("none", Correction::None),
+            ("full", Correction::FullRoundHalfUp),
+            ("approx", Correction::ApproxCPort),
+            ("approx-post", Correction::ApproxPostSign),
+            ("mr", Correction::MrRestore),
+            ("mr+c", Correction::MrRestorePlusCPort),
+        ] {
+            assert_eq!(CorrectionKind::from_str(name).unwrap().0, c);
+        }
+    }
+}

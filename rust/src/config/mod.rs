@@ -1,0 +1,12 @@
+//! Configuration system: a TOML-subset parser (offline build — no `toml`
+//! crate) plus the typed application config used by the CLI, the examples
+//! and the coordinator.
+//!
+//! Supported syntax: `[section]` headers, `key = value` pairs with
+//! integer, float, boolean and quoted-string values, `#` comments.
+
+mod app;
+mod parse;
+
+pub use app::{AppConfig, CorrectionKind, PackingKind};
+pub use parse::{parse, Value};

@@ -1,0 +1,142 @@
+//! The TOML-subset parser.
+
+use crate::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// Quoted string.
+    Str(String),
+}
+
+impl Value {
+    /// As integer (floats with zero fraction coerce).
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            Value::Float(f) if f.fract() == 0.0 => Some(*f as i64),
+            _ => None,
+        }
+    }
+
+    /// As float (ints coerce).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// As string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Sections → key → value. Keys before any `[section]` land in `""`.
+pub type Sections = BTreeMap<String, BTreeMap<String, Value>>;
+
+/// Parse a TOML-subset document.
+pub fn parse(text: &str) -> Result<Sections> {
+    let mut out: Sections = BTreeMap::new();
+    let mut section = String::new();
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            section = name.trim().to_string();
+            out.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((key, val)) = line.split_once('=') else {
+            return Err(Error::Config(format!("line {}: expected key = value", ln + 1)));
+        };
+        let key = key.trim().to_string();
+        let val = parse_value(val.trim())
+            .ok_or_else(|| Error::Config(format!("line {}: bad value {val:?}", ln + 1)))?;
+        out.entry(section.clone()).or_default().insert(key, val);
+    }
+    Ok(out)
+}
+
+fn parse_value(s: &str) -> Option<Value> {
+    if s == "true" {
+        return Some(Value::Bool(true));
+    }
+    if s == "false" {
+        return Some(Value::Bool(false));
+    }
+    if let Some(q) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        return Some(Value::Str(q.to_string()));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Some(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Some(Value::Float(f));
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = r#"
+# top comment
+title = "dsp-packing"
+
+[packing]
+kind = "int4"        # inline comment
+delta = -2
+a_width = 4
+
+[server]
+workers = 4
+max_wait_ms = 2.5
+packed = true
+"#;
+        let s = parse(doc).unwrap();
+        assert_eq!(s[""]["title"].as_str(), Some("dsp-packing"));
+        assert_eq!(s["packing"]["delta"].as_int(), Some(-2));
+        assert_eq!(s["server"]["max_wait_ms"].as_float(), Some(2.5));
+        assert_eq!(s["server"]["packed"].as_bool(), Some(true));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("not a kv line").is_err());
+        assert!(parse("x = @nope").is_err());
+    }
+
+    #[test]
+    fn value_coercions() {
+        assert_eq!(Value::Int(3).as_float(), Some(3.0));
+        assert_eq!(Value::Float(3.0).as_int(), Some(3));
+        assert_eq!(Value::Float(3.5).as_int(), None);
+        assert_eq!(Value::Str("x".into()).as_int(), None);
+    }
+}

@@ -1,0 +1,212 @@
+//! Runtime-adaptive packing — the paper's stated future work (§IX: "we
+//! plan to explore methods to dynamically change the DSP packing during
+//! runtime according to the requirements of the computational task").
+//!
+//! [`AdaptiveBackend`] holds one engine per packing configuration and
+//! routes each request by its **error budget**: requests that tolerate
+//! approximation run on the densest (Overpacking) fabric, requests that
+//! need exactness run on the corrected INT4 fabric. On a real FPGA this
+//! corresponds to partial reconfiguration or multiplexed extraction
+//! logic; here the virtual fabric switches per batch.
+
+use super::server::InferenceBackend;
+use crate::gemm::DspOpStats;
+use crate::nn::{ExecMode, QuantMlp};
+use crate::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Precision demanded by a request class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrecisionClass {
+    /// Bit-exact results required → corrected INT4 packing (4 mults/DSP).
+    Exact,
+    /// Small bounded error acceptable → MR-Overpacking (6 mults/DSP).
+    Approximate,
+}
+
+/// Routing policy: classify a request (here: by an explicit per-image
+/// error-budget channel — the last feature carries the budget in this
+/// demo encoding; a real deployment would use request metadata).
+pub trait PrecisionPolicy: Send + Sync + 'static {
+    /// Decide the class for one image.
+    fn classify(&self, image: &[f32]) -> PrecisionClass;
+}
+
+/// Fixed-threshold policy on a metadata scalar appended to the image.
+pub struct BudgetChannelPolicy {
+    /// Budgets above this route to the approximate fabric.
+    pub threshold: f32,
+}
+
+impl PrecisionPolicy for BudgetChannelPolicy {
+    fn classify(&self, image: &[f32]) -> PrecisionClass {
+        match image.last() {
+            Some(&b) if b > self.threshold => PrecisionClass::Approximate,
+            _ => PrecisionClass::Exact,
+        }
+    }
+}
+
+/// A backend that dispatches between an exact and a dense (approximate)
+/// packed fabric per request.
+pub struct AdaptiveBackend<P: PrecisionPolicy> {
+    model: QuantMlp,
+    exact_mode: ExecMode,
+    dense_mode: ExecMode,
+    policy: P,
+    /// Requests routed to the dense fabric.
+    pub dense_routed: AtomicU64,
+    /// Requests routed to the exact fabric.
+    pub exact_routed: AtomicU64,
+    /// Strip the budget channel before inference?
+    strip_last_feature: bool,
+}
+
+impl<P: PrecisionPolicy> AdaptiveBackend<P> {
+    /// Build from a model plus the two execution modes.
+    pub fn new(
+        model: QuantMlp,
+        exact_mode: ExecMode,
+        dense_mode: ExecMode,
+        policy: P,
+        strip_last_feature: bool,
+    ) -> Self {
+        AdaptiveBackend {
+            model,
+            exact_mode,
+            dense_mode,
+            policy,
+            dense_routed: AtomicU64::new(0),
+            exact_routed: AtomicU64::new(0),
+            strip_last_feature,
+        }
+    }
+
+    fn run(&self, images: &[Vec<f32>], mode: &ExecMode) -> Result<(Vec<usize>, DspOpStats)> {
+        let stripped: Vec<Vec<f32>> = if self.strip_last_feature {
+            images.iter().map(|i| i[..i.len() - 1].to_vec()).collect()
+        } else {
+            images.to_vec()
+        };
+        let x = self.model.quantize_batch(&stripped)?;
+        self.model.classify(&x, mode)
+    }
+}
+
+impl<P: PrecisionPolicy> InferenceBackend for AdaptiveBackend<P> {
+    fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
+        // Split the batch by class, run each sub-batch on its fabric,
+        // merge results in the original order.
+        let classes: Vec<PrecisionClass> =
+            batch.iter().map(|img| self.policy.classify(img)).collect();
+        let mut exact_idx = Vec::new();
+        let mut dense_idx = Vec::new();
+        for (i, c) in classes.iter().enumerate() {
+            match c {
+                PrecisionClass::Exact => exact_idx.push(i),
+                PrecisionClass::Approximate => dense_idx.push(i),
+            }
+        }
+        self.exact_routed.fetch_add(exact_idx.len() as u64, Ordering::Relaxed);
+        self.dense_routed.fetch_add(dense_idx.len() as u64, Ordering::Relaxed);
+
+        let mut preds = vec![0usize; batch.len()];
+        let mut stats = DspOpStats::default();
+        for (idx, mode) in [(&exact_idx, &self.exact_mode), (&dense_idx, &self.dense_mode)] {
+            if idx.is_empty() {
+                continue;
+            }
+            let sub: Vec<Vec<f32>> = idx.iter().map(|&i| batch[i].clone()).collect();
+            let (p, s) = self.run(&sub, mode)?;
+            stats.merge(&s);
+            for (&i, pred) in idx.iter().zip(p) {
+                preds[i] = pred;
+            }
+        }
+        Ok((preds, stats))
+    }
+
+    fn name(&self) -> &str {
+        "adaptive"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Coordinator, Request, ServerConfig};
+    use crate::correct::Correction;
+    use crate::gemm::GemmEngine;
+    use crate::nn::data;
+    use crate::packing::PackingConfig;
+    use std::sync::Arc;
+
+    fn adaptive_backend(ds: &data::Dataset) -> AdaptiveBackend<BudgetChannelPolicy> {
+        let mlp = QuantMlp::centroid_classifier(ds, 4, 4).unwrap();
+        let exact =
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        let dense =
+            GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
+                .unwrap();
+        AdaptiveBackend::new(
+            mlp,
+            ExecMode::Packed(exact),
+            ExecMode::Packed(dense),
+            BudgetChannelPolicy { threshold: 0.5 },
+            true,
+        )
+    }
+
+    fn with_budget(img: &[f32], budget: f32) -> Vec<f32> {
+        let mut v = img.to_vec();
+        v.push(budget);
+        v
+    }
+
+    #[test]
+    fn routes_by_budget_and_classifies() {
+        let ds = data::synthetic(64, 4, 64, 0.15, 7);
+        let backend = adaptive_backend(&ds);
+        let batch: Vec<Vec<f32>> = ds
+            .images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| with_budget(img, if i % 2 == 0 { 0.0 } else { 1.0 }))
+            .collect();
+        let (preds, stats) = backend.infer(&batch).unwrap();
+        // Both fabrics used, half the batch each.
+        assert_eq!(backend.exact_routed.load(Ordering::Relaxed), 32);
+        assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 32);
+        // Mixed utilization: between 4 (int4) and 6 (overpack6).
+        assert!(stats.utilization() > 4.0 && stats.utilization() < 6.0);
+        // Classification still works on both paths.
+        let correct = preds.iter().zip(&ds.labels).filter(|(p, l)| p == l).count();
+        assert!(correct >= 60, "adaptive accuracy {correct}/64");
+    }
+
+    #[test]
+    fn all_exact_when_budget_low() {
+        let ds = data::synthetic(16, 4, 64, 0.15, 7);
+        let backend = adaptive_backend(&ds);
+        let batch: Vec<Vec<f32>> =
+            ds.images.iter().map(|img| with_budget(img, 0.0)).collect();
+        let (_, stats) = backend.infer(&batch).unwrap();
+        assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 0);
+        assert!((stats.utilization() - 4.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn serves_through_coordinator() {
+        let ds = data::synthetic(32, 4, 64, 0.15, 7);
+        let backend = Arc::new(adaptive_backend(&ds));
+        let coord = Coordinator::start(backend, ServerConfig::default());
+        let handle = coord.handle();
+        for (i, img) in ds.images.iter().enumerate() {
+            let req = Request { id: i as u64, image: with_budget(img, (i % 2) as f32) };
+            let p = handle.infer(req).unwrap();
+            assert_eq!(p.id, i as u64);
+        }
+        let m = coord.shutdown();
+        assert_eq!(m.completed, 32);
+    }
+}

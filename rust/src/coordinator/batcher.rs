@@ -1,0 +1,200 @@
+//! Dynamic batching: group queued requests up to a max batch size or a
+//! max queueing delay, whichever comes first (the classic serving
+//! trade-off between throughput and tail latency).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch.
+    pub max_batch: usize,
+    /// Maximum time the oldest request may wait before the batch closes.
+    pub max_wait: Duration,
+    /// Queue capacity; submissions beyond this are rejected (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig {
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+/// A blocking MPMC queue with deadline-driven batch pop.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    cfg: BatcherConfig,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+}
+
+#[derive(Debug)]
+struct Inner<T> {
+    queue: VecDeque<(T, Instant)>,
+    closed: bool,
+}
+
+impl<T> DynamicBatcher<T> {
+    /// New batcher with the given policy.
+    pub fn new(cfg: BatcherConfig) -> Self {
+        DynamicBatcher {
+            cfg,
+            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// The policy in effect.
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Enqueue a request. Returns `false` when the queue is full
+    /// (backpressure) or the batcher is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.closed || inner.queue.len() >= self.cfg.queue_cap {
+            return false;
+        }
+        inner.queue.push_back((item, Instant::now()));
+        self.cv.notify_one();
+        true
+    }
+
+    /// Current queue depth.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Pop the next batch: blocks until at least one request is queued,
+    /// then waits up to `max_wait` (measured from the oldest request) for
+    /// the batch to fill. Returns `None` once closed and drained.
+    pub fn pop_batch(&self) -> Option<Vec<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            if !inner.queue.is_empty() {
+                break;
+            }
+            if inner.closed {
+                return None;
+            }
+            inner = self.cv.wait(inner).unwrap();
+        }
+        // Wait for the batch to fill or the oldest request to expire.
+        let oldest = inner.queue.front().expect("nonempty").1;
+        let deadline = oldest + self.cfg.max_wait;
+        while inner.queue.len() < self.cfg.max_batch && !inner.closed {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, timeout) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+            if timeout.timed_out() {
+                break;
+            }
+        }
+        let n = inner.queue.len().min(self.cfg.max_batch);
+        Some(inner.queue.drain(..n).map(|(t, _)| t).collect())
+    }
+
+    /// Close the batcher: pending items still drain, new pushes fail.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn quick_cfg(max_batch: usize, cap: usize) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(5), queue_cap: cap }
+    }
+
+    #[test]
+    fn batches_up_to_max() {
+        let b = DynamicBatcher::new(quick_cfg(4, 64));
+        for i in 0..10 {
+            assert!(b.push(i));
+        }
+        assert_eq!(b.pop_batch().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(b.pop_batch().unwrap(), vec![4, 5, 6, 7]);
+        assert_eq!(b.pop_batch().unwrap(), vec![8, 9]);
+    }
+
+    #[test]
+    fn deadline_closes_partial_batch() {
+        let b = Arc::new(DynamicBatcher::new(quick_cfg(100, 64)));
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || b2.pop_batch());
+        std::thread::sleep(Duration::from_millis(1));
+        b.push(42u64);
+        // Only one item arrives; the deadline must release the batch.
+        let batch = t.join().unwrap().unwrap();
+        assert_eq!(batch, vec![42]);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let b = DynamicBatcher::new(quick_cfg(4, 2));
+        assert!(b.push(1));
+        assert!(b.push(2));
+        assert!(!b.push(3), "queue at capacity");
+        assert_eq!(b.depth(), 2);
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b = DynamicBatcher::new(quick_cfg(4, 8));
+        b.push(7);
+        b.close();
+        assert!(!b.push(8), "closed rejects");
+        assert_eq!(b.pop_batch().unwrap(), vec![7]);
+        assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let b = Arc::new(DynamicBatcher::new(quick_cfg(8, 4096)));
+        let mut handles = Vec::new();
+        for p in 0..4u64 {
+            let b = b.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..100 {
+                    while !b.push(p * 1000 + i) {
+                        std::thread::yield_now();
+                    }
+                }
+            }));
+        }
+        let consumer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while got.len() < 400 {
+                    if let Some(batch) = b.pop_batch() {
+                        got.extend(batch);
+                    }
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let mut got = consumer.join().unwrap();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 400, "every request delivered exactly once");
+    }
+}

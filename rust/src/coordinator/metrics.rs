@@ -1,0 +1,169 @@
+//! Lock-free serving metrics: counters + a log-bucketed latency histogram.
+
+use crate::util::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Log₂-bucketed latency histogram (1 µs … ~1 s), lock-free.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    /// bucket i counts latencies in [2^i, 2^{i+1}) µs; 30 buckets.
+    buckets: [AtomicU64; 30],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Record one latency.
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(29);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Number of recorded samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency in µs.
+    pub fn mean_us(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum_us.load(Ordering::Relaxed) as f64 / n as f64
+        }
+    }
+
+    /// Approximate percentile (upper bucket bound), p in 0..=100.
+    pub fn percentile_us(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let target = ((p / 100.0) * n as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return 1u64 << (i + 1);
+            }
+        }
+        1 << 30
+    }
+}
+
+/// Serving metrics for one coordinator.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Requests accepted.
+    pub accepted: AtomicU64,
+    /// Requests rejected by backpressure.
+    pub rejected: AtomicU64,
+    /// Requests completed.
+    pub completed: AtomicU64,
+    /// Batches executed.
+    pub batches: AtomicU64,
+    /// Sum of batch sizes (for mean batch size).
+    pub batched_requests: AtomicU64,
+    /// DSP slice-cycles consumed by the packed backend.
+    pub dsp_cycles: AtomicU64,
+    /// Logical multiplications performed.
+    pub multiplications: AtomicU64,
+    /// End-to-end request latency.
+    pub latency: LatencyHistogram,
+}
+
+/// A point-in-time copy of [`Metrics`] for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Requests accepted.
+    pub accepted: u64,
+    /// Requests rejected by backpressure.
+    pub rejected: u64,
+    /// Requests completed.
+    pub completed: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Mean batch size.
+    pub mean_batch: f64,
+    /// Mean request latency (µs).
+    pub mean_latency_us: f64,
+    /// p50 latency (µs, bucket upper bound).
+    pub p50_latency_us: u64,
+    /// p99 latency (µs, bucket upper bound).
+    pub p99_latency_us: u64,
+    /// Packed-backend DSP utilization (mults per DSP cycle).
+    pub dsp_utilization: f64,
+}
+
+impl Metrics {
+    /// Take a snapshot.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let batches = self.batches.load(Ordering::Relaxed);
+        let batched = self.batched_requests.load(Ordering::Relaxed);
+        let cycles = self.dsp_cycles.load(Ordering::Relaxed);
+        let mults = self.multiplications.load(Ordering::Relaxed);
+        MetricsSnapshot {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            batches,
+            mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
+            mean_latency_us: self.latency.mean_us(),
+            p50_latency_us: self.latency.percentile_us(50.0),
+            p99_latency_us: self.latency.percentile_us(99.0),
+            dsp_utilization: if cycles == 0 { 0.0 } else { mults as f64 / cycles as f64 },
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    /// JSON rendering for reports.
+    pub fn to_json(&self) -> Json {
+        Json::obj([
+            ("accepted", self.accepted.into()),
+            ("rejected", self.rejected.into()),
+            ("completed", self.completed.into()),
+            ("batches", self.batches.into()),
+            ("mean_batch", self.mean_batch.into()),
+            ("mean_latency_us", self.mean_latency_us.into()),
+            ("p50_latency_us", self.p50_latency_us.into()),
+            ("p99_latency_us", self.p99_latency_us.into()),
+            ("dsp_utilization", self.dsp_utilization.into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_percentiles_order() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 20, 40, 80, 5000] {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.percentile_us(50.0) <= h.percentile_us(99.0));
+        assert!(h.mean_us() > 0.0);
+    }
+
+    #[test]
+    fn snapshot_math() {
+        let m = Metrics::default();
+        m.accepted.store(10, Ordering::Relaxed);
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_requests.store(10, Ordering::Relaxed);
+        m.dsp_cycles.store(100, Ordering::Relaxed);
+        m.multiplications.store(400, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.mean_batch, 5.0);
+        assert_eq!(s.dsp_utilization, 4.0);
+        assert!(s.to_json().to_string().contains("\"dsp_utilization\":4"));
+    }
+}

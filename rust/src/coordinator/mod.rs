@@ -1,0 +1,27 @@
+//! The serving coordinator (Layer 3): request router, dynamic batcher,
+//! DSP-budget allocator, worker pool and metrics.
+//!
+//! The paper's packing techniques exist to serve quantized inference on a
+//! DSP-limited FPGA; this layer is the deployment shape of that story: a
+//! request loop in front of the virtual accelerator (the packed GEMM
+//! fabric of [`crate::gemm`]) or the AOT-compiled PJRT executable of
+//! [`crate::runtime`]. Rust owns the event loop, the queues, the
+//! backpressure and the metrics; Python never appears on this path.
+//!
+//! Threading model (std only — the build is offline): clients call
+//! [`CoordinatorHandle::submit`], a batcher thread groups requests by
+//! deadline/batch-size, a worker pool executes batches, per-request
+//! channels deliver responses.
+
+mod adaptive;
+mod batcher;
+mod metrics;
+mod server;
+
+pub use adaptive::{AdaptiveBackend, BudgetChannelPolicy, PrecisionClass, PrecisionPolicy};
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
+pub use server::{
+    Coordinator, CoordinatorHandle, InferenceBackend, PackedNnBackend, Prediction, Request,
+    ServerConfig,
+};

@@ -1,0 +1,276 @@
+//! Error-correction schemes for packed multiplication (§V, §VI-B).
+//!
+//! Plain packed extraction floors toward −∞ whenever the bits below a
+//! result field hold a negative partial sum (§V): the extracted value is
+//! `expected − 1` with probability ≈ 37 % for INT4. The paper proposes:
+//!
+//! * **Full correction** (§V-A, Fig. 3): round-half-up on extraction —
+//!   check the first bit below the field and add it. Exact; costs an adder
+//!   per result (LUTs/FFs, estimated by [`crate::synth`]).
+//! * **Approximate correction** (§V-B, Fig. 4): pre-add a correction word
+//!   through the DSP's C port, predicting the borrow from the *sign of the
+//!   `w` operand of the result one field below*. Zero fabric cost.
+//! * **MR-Overpacking** (§VI-B, Fig. 6): with negative padding δ, the low
+//!   |δ| bits of the result one field above contaminate a result's MSBs by
+//!   addition; recompute those LSBs from the raw operands (Eqns. (8), (9) —
+//!   an AND and an AND-XOR) and subtract them after extraction.
+//!
+//! Measured behaviour (exhaustive, see EXPERIMENTS.md): our literal
+//! implementation of the C-port scheme corrects *all* INT4 errors
+//! (EP 0.00 %), slightly better than the 3.13 % the paper reports; the
+//! [`Correction::ApproxPostSign`] variant reproduces the residual-error
+//! class the paper describes ("when one operand is zero").
+
+use crate::bits::{mask, wrap_signed, wrap_unsigned};
+use crate::packing::PackingConfig;
+
+/// Which correction scheme a [`crate::packing::PackedMultiplier`] applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Correction {
+    /// No correction: the raw Xilinx INT4/INT8 behaviour (Table I row 1).
+    #[default]
+    None,
+    /// §V-A round-half-up at extraction. Exact for δ ≥ 0; costs fabric.
+    FullRoundHalfUp,
+    /// §V-B C-port correction word from predecessor `w` sign bits. Free.
+    ApproxCPort,
+    /// Degraded §V-B variant: add the predicted sign *after* extraction
+    /// (no look at the actual P bits). Residual errors when the predicted
+    /// negative product is actually zero — the failure class the paper
+    /// names.
+    ApproxPostSign,
+    /// §VI-B MSB-restoring correction for Overpacking (δ < 0): subtract
+    /// the recomputed LSBs of the neighbour-above from each result.
+    MrRestore,
+    /// MR restoration *plus* a borrow correction — an extension the paper
+    /// hints at (ablation E11). With δ < 0 the C-port round bit at
+    /// `off_n − 1` would land *inside* the overlapped neighbour's field
+    /// and corrupt it (measured: MAE 12!), so the borrow fix is applied
+    /// post-extraction instead: add the predicted sign of the predecessor
+    /// product (one LUT per result) after the MSB restore.
+    MrRestorePlusCPort,
+}
+
+impl Correction {
+    /// All schemes, for sweeps.
+    pub const ALL: [Correction; 6] = [
+        Correction::None,
+        Correction::FullRoundHalfUp,
+        Correction::ApproxCPort,
+        Correction::ApproxPostSign,
+        Correction::MrRestore,
+        Correction::MrRestorePlusCPort,
+    ];
+
+    /// Does this scheme feed a correction word through the C port?
+    pub fn uses_c_port(&self) -> bool {
+        matches!(self, Correction::ApproxCPort)
+    }
+
+    /// Does this scheme require negative padding (Overpacking)?
+    pub fn requires_overpacking(&self) -> bool {
+        matches!(self, Correction::MrRestore | Correction::MrRestorePlusCPort)
+    }
+
+    /// The 48-bit C-port correction word for the given operands (Fig. 4):
+    /// for every result n ≥ 1 at offset `off_n`, add the sign bit of the
+    /// `w` operand of result n−1 at bit `off_n − 1`.
+    pub fn c_word(&self, cfg: &PackingConfig, _a: &[i128], w: &[i128]) -> i128 {
+        if !self.uses_c_port() {
+            return 0;
+        }
+        let mut c = 0i128;
+        for n in 1..cfg.results.len() {
+            let pred = &cfg.results[n - 1];
+            let wv = w[pred.w_idx];
+            let sign = (wv < 0) as i128;
+            let off = cfg.results[n].offset;
+            debug_assert!(off >= 1);
+            c += sign << (off - 1);
+        }
+        c
+    }
+
+    /// Post-extraction fix-up. `raw` are the plainly extracted fields (in
+    /// result order); operand values are available to the correction logic
+    /// (in hardware they are, too — they enter the same slice).
+    pub fn post_extract(
+        &self,
+        cfg: &PackingConfig,
+        raw: &[i128],
+        a: &[i128],
+        w: &[i128],
+    ) -> Vec<i128> {
+        let mut out = raw.to_vec();
+        self.post_extract_in_place(cfg, &mut out, a, w);
+        out
+    }
+
+    /// Allocation-free variant of [`Correction::post_extract`] (hot path):
+    /// corrects the extracted fields in place.
+    #[inline]
+    pub fn post_extract_in_place(
+        &self,
+        cfg: &PackingConfig,
+        out: &mut [i128],
+        a: &[i128],
+        w: &[i128],
+    ) {
+        match self {
+            // Round-half-up is applied *during* extraction by the packer;
+            // the multiplier routes around this method for that scheme.
+            Correction::None | Correction::ApproxCPort | Correction::FullRoundHalfUp => {}
+            Correction::ApproxPostSign => {
+                for n in 1..cfg.results.len() {
+                    let pred = &cfg.results[n - 1];
+                    if w[pred.w_idx] < 0 {
+                        let r = &cfg.results[n];
+                        out[n] = rewrap(out[n] + 1, r.width, r.signed);
+                    }
+                }
+            }
+            Correction::MrRestore | Correction::MrRestorePlusCPort => {
+                let overlap = (-cfg.delta).max(0) as u32;
+                if overlap == 0 {
+                    return;
+                }
+                for n in 0..cfg.results.len() {
+                    // The result one field above (by offset order)
+                    // contaminates result n's top `overlap` bits.
+                    let Some(above) = cfg.results.get(n + 1) else { continue };
+                    let r = &cfg.results[n];
+                    // Only adjacent overlapping fields contaminate.
+                    if above.offset >= r.offset + r.width {
+                        continue;
+                    }
+                    let lsb_count = r.offset + r.width - above.offset;
+                    let lsbs = product_lsbs(a[above.a_idx], w[above.w_idx], lsb_count);
+                    let shift = above.offset - r.offset;
+                    out[n] = rewrap(out[n] - (lsbs << shift), r.width, r.signed);
+                }
+                if *self == Correction::MrRestorePlusCPort {
+                    // Borrow fix on top of the restore: predict the floor
+                    // borrow from the predecessor's w sign (post-extract —
+                    // the C-port variant would corrupt overlapped fields).
+                    for n in 1..cfg.results.len() {
+                        let pred = &cfg.results[n - 1];
+                        if w[pred.w_idx] < 0 {
+                            let r = &cfg.results[n];
+                            out[n] = rewrap(out[n] + 1, r.width, r.signed);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Re-wrap a corrected value to its field width (hardware subtractors and
+/// adders operate modulo the field width).
+#[inline]
+fn rewrap(v: i128, width: u32, signed: bool) -> i128 {
+    if signed {
+        wrap_signed(v, width)
+    } else {
+        wrap_unsigned(v, width)
+    }
+}
+
+/// The low `n` bits of the product `a·w`, as cheap combinational logic
+/// computes them. For n ≤ 2 these are the paper's Eqns. (8), (9):
+///
+/// ```text
+///   (a·w)[0] = a[0] ∧ w[0]
+///   (a·w)[1] = (a[0] ∧ w[1]) ⊕ (a[1] ∧ w[0])
+/// ```
+///
+/// For larger n the partial-product triangle grows (the paper notes the
+/// cost grows quickly); the value is identical to `(a·w) mod 2^n`, which
+/// is what we compute here. [`crate::synth`] builds the actual gate-level
+/// circuits and a test cross-checks them against this function.
+#[inline]
+pub fn product_lsbs(a: i128, w: i128, n: u32) -> i128 {
+    (a * w) & mask(n)
+}
+
+/// Gate-level reference for the first two product LSBs (Eqns. (8), (9)),
+/// used to validate `product_lsbs` and the synthesized circuits.
+pub fn product_lsbs_gates(a: i128, w: i128, n: u32) -> i128 {
+    let ab = |v: i128, i: u32| (v >> i) & 1;
+    let mut out = 0i128;
+    if n >= 1 {
+        out |= ab(a, 0) & ab(w, 0); // Eqn. (8)
+    }
+    if n >= 2 {
+        let b1 = (ab(a, 0) & ab(w, 1)) ^ (ab(a, 1) & ab(w, 0)); // Eqn. (9)
+        out |= b1 << 1;
+    }
+    if n >= 3 {
+        // Third LSB: column sum a0w2 + a1w1 + a2w0 plus the carry of
+        // column 1 (a0w1 · a1w0).
+        let c1 = ab(a, 0) & ab(w, 1) & ab(a, 1) & ab(w, 0);
+        let s = ab(a, 0) & ab(w, 2) ^ ab(a, 1) & ab(w, 1) ^ ab(a, 2) & ab(w, 0) ^ c1;
+        out |= s << 2;
+    }
+    debug_assert!(n <= 3, "gate-level reference implemented up to 3 LSBs");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn eqn_8_9_match_mod() {
+        for a in 0..16i128 {
+            for w in -8..8i128 {
+                for n in 1..=3u32 {
+                    assert_eq!(
+                        product_lsbs_gates(a, w, n),
+                        product_lsbs(a, w, n),
+                        "a={a} w={w} n={n}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paper_vi_b_example() {
+        // §VI-B worked example: a1 = 3, w0 = -7; the two contaminating
+        // LSBs of a1·w0 = -21 are both 1.
+        assert_eq!(product_lsbs(3, -7, 2), 0b11);
+    }
+
+    #[test]
+    fn c_word_for_int4() {
+        // Fig. 4: sign bits of w0, w0, w1 at bits 10, 21, 32.
+        let cfg = crate::packing::PackingConfig::int4();
+        let c = Correction::ApproxCPort.c_word(&cfg, &[1, 1], &[-1, -1]);
+        assert_eq!(c, (1 << 10) + (1 << 21) + (1 << 32));
+        let c = Correction::ApproxCPort.c_word(&cfg, &[1, 1], &[-1, 3]);
+        assert_eq!(c, (1 << 10) + (1 << 21)); // w1 >= 0: bit 32 clear
+        let c = Correction::ApproxCPort.c_word(&cfg, &[1, 1], &[3, -1]);
+        assert_eq!(c, 1 << 32);
+    }
+
+    #[test]
+    fn scheme_properties() {
+        assert!(Correction::ApproxCPort.uses_c_port());
+        assert!(!Correction::FullRoundHalfUp.uses_c_port());
+        assert!(Correction::MrRestore.requires_overpacking());
+        assert!(!Correction::ApproxCPort.requires_overpacking());
+    }
+
+    #[test]
+    fn prop_product_lsbs_is_mod() {
+        let mut rng = Rng::new(0x15B);
+        for _ in 0..20_000 {
+            let a = rng.range_i128(-256, 255);
+            let w = rng.range_i128(-256, 255);
+            let n = rng.range_i128(1, 7) as u32;
+            assert_eq!(product_lsbs(a, w, n), (a * w).rem_euclid(1 << n));
+        }
+    }
+}

@@ -1,0 +1,229 @@
+//! Packing density ρ (Fig. 9) and a packing-configuration search.
+//!
+//! §VIII defines ρ = b_used / b_total: the fraction of the DSP's 48 output
+//! bits occupied by multiplication results. Overpacking pushes ρ past 1.0
+//! because result fields overlap. The search enumerates INT-N
+//! configurations that fit a DSP geometry and reports the Pareto frontier
+//! over (multiplications per DSP, operand precision, density, error mode).
+
+use crate::dsp48::DspGeometry;
+use crate::packing::PackingConfig;
+
+/// Packing density ρ = result bits / P width (§VIII).
+pub fn density(cfg: &PackingConfig, g: &DspGeometry) -> f64 {
+    cfg.result_bits() as f64 / g.p_width as f64
+}
+
+/// One Fig. 9 bar: a named configuration and its density.
+#[derive(Debug, Clone)]
+pub struct DensityPoint {
+    /// Configuration name.
+    pub name: String,
+    /// Multiplications packed per DSP.
+    pub mults: usize,
+    /// ρ = b_used / b_total.
+    pub density: f64,
+    /// Is the configuration approximate (δ < 0)?
+    pub approximate: bool,
+    /// Padding δ.
+    pub delta: i32,
+}
+
+/// The four Fig. 9 bars: INT8, INT4, INT-N (δ=0) and Overpacking (δ=−2).
+pub fn fig9_points() -> Vec<DensityPoint> {
+    let g = DspGeometry::DSP48E2;
+    [
+        PackingConfig::int8(),
+        PackingConfig::int4(),
+        PackingConfig::intn_fig9(),
+        PackingConfig::overpack_fig9(),
+    ]
+    .into_iter()
+    .map(|cfg| DensityPoint {
+        name: cfg.name.clone(),
+        mults: cfg.num_results(),
+        density: density(&cfg, &g),
+        approximate: cfg.delta < 0,
+        delta: cfg.delta,
+    })
+    .collect()
+}
+
+/// A candidate from the configuration search.
+#[derive(Debug, Clone)]
+pub struct SearchResult {
+    /// The generated configuration.
+    pub config: PackingConfig,
+    /// Name (mirrors the config).
+    pub name: String,
+    /// Multiplications per DSP.
+    pub mults: usize,
+    /// a-operand width.
+    pub a_width: u32,
+    /// w-operand width.
+    pub w_width: u32,
+    /// Padding δ.
+    pub delta: i32,
+    /// Density ρ.
+    pub density: f64,
+    /// Accumulation headroom 2^δ.
+    pub max_accumulations: u64,
+}
+
+/// Enumerate all uniform INT-N configurations (n_a × n_w operands of
+/// a_width × w_width bits, padding δ in `delta_range`) that fit `g`.
+pub fn enumerate(g: &DspGeometry, delta_range: std::ops::RangeInclusive<i32>) -> Vec<SearchResult> {
+    let mut out = Vec::new();
+    for n_a in 1..=8 {
+        for n_w in 1..=8 {
+            for a_width in 2..=16 {
+                for w_width in 2..=16 {
+                    for delta in delta_range.clone() {
+                        if (a_width + w_width) as i32 + delta <= 0 {
+                            continue;
+                        }
+                        let Ok(cfg) = PackingConfig::generate(
+                            format!("n{n_a}x{n_w}-u{a_width}s{w_width}-d{delta}"),
+                            n_a,
+                            a_width,
+                            n_w,
+                            w_width,
+                            delta,
+                        ) else {
+                            continue;
+                        };
+                        // The paper's search space is architecture-
+                        // independent (§IV) — use the relaxed fit; strict
+                        // feasibility is a per-candidate property.
+                        if cfg.fit_relaxed(g).is_err() {
+                            continue;
+                        }
+                        out.push(SearchResult {
+                            name: cfg.name.clone(),
+                            mults: cfg.num_results(),
+                            a_width,
+                            w_width,
+                            delta,
+                            density: density(&cfg, g),
+                            max_accumulations: cfg.max_accumulations(),
+                            config: cfg,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Cross-geometry sweep: the best achievable multiplication count and
+/// density per DSP family, at a fixed operand precision and padding —
+/// quantifies how the packing technique scales to DSP48E1 / DSP58.
+pub fn geometry_sweep(
+    a_width: u32,
+    w_width: u32,
+    delta: i32,
+) -> Vec<(&'static str, DspGeometry, Option<SearchResult>)> {
+    [
+        ("DSP48E1", DspGeometry::DSP48E1),
+        ("DSP48E2", DspGeometry::DSP48E2),
+        ("DSP58", DspGeometry::DSP58),
+    ]
+    .into_iter()
+    .map(|(name, g)| {
+        let best = enumerate(&g, delta..=delta)
+            .into_iter()
+            .filter(|s| s.a_width == a_width && s.w_width == w_width)
+            .max_by_key(|s| s.mults);
+        (name, g, best)
+    })
+    .collect()
+}
+
+/// Pareto frontier over (mults ↑, min operand precision ↑, δ ↑): keep the
+/// configurations not dominated on all three axes.
+pub fn pareto(candidates: &[SearchResult]) -> Vec<SearchResult> {
+    let key = |s: &SearchResult| (s.mults, s.a_width.min(s.w_width), s.delta);
+    let dominated = |x: &SearchResult| {
+        candidates.iter().any(|y| {
+            let (ym, yp, yd) = key(y);
+            let (xm, xp, xd) = key(x);
+            (ym >= xm && yp >= xp && yd >= xd) && (ym, yp, yd) != (xm, xp, xd)
+        })
+    };
+    let mut front: Vec<SearchResult> =
+        candidates.iter().filter(|c| !dominated(c)).cloned().collect();
+    front.sort_by(|a, b| b.mults.cmp(&a.mults).then(b.density.total_cmp(&a.density)));
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 9 reproduction: INT8 and INT4 at ρ=2/3, INT-N at 0.875,
+    /// Overpacking at 1.125.
+    #[test]
+    fn fig9_densities() {
+        let pts = fig9_points();
+        let by_name = |n: &str| pts.iter().find(|p| p.name.contains(n)).unwrap();
+        assert!((by_name("int8").density - 32.0 / 48.0).abs() < 1e-12);
+        assert!((by_name("int4").density - 32.0 / 48.0).abs() < 1e-12);
+        assert!((by_name("int-n").density - 42.0 / 48.0).abs() < 1e-12);
+        assert!((by_name("overpack").density - 54.0 / 48.0).abs() < 1e-12);
+        assert_eq!(by_name("overpack").mults, 6);
+        assert!(by_name("overpack").approximate);
+        assert!(!by_name("int-n").approximate);
+    }
+
+    #[test]
+    fn enumeration_contains_known_configs() {
+        let g = DspGeometry::DSP48E2;
+        let all = enumerate(&g, -3..=3);
+        // INT4 (2x2 u4s4 δ3) and the 6-mult overpacking must be present.
+        assert!(all.iter().any(|s| s.mults == 4 && s.a_width == 4 && s.w_width == 4 && s.delta == 3));
+        assert!(all.iter().any(|s| s.mults == 6 && s.a_width == 4 && s.w_width == 4 && s.delta == -1));
+        // Everything enumerated genuinely fits (relaxed, like the paper).
+        for s in &all {
+            s.config.fit_relaxed(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_nondominated() {
+        let g = DspGeometry::DSP48E2;
+        let all = enumerate(&g, -2..=3);
+        let front = pareto(&all);
+        assert!(!front.is_empty());
+        for f in &front {
+            for g2 in &all {
+                let strictly_better = g2.mults >= f.mults
+                    && g2.a_width.min(g2.w_width) >= f.a_width.min(f.w_width)
+                    && g2.delta >= f.delta
+                    && (g2.mults, g2.a_width.min(g2.w_width), g2.delta)
+                        != (f.mults, f.a_width.min(f.w_width), f.delta);
+                assert!(!strictly_better, "{} dominated by {}", f.name, g2.name);
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_sweep_orders_families() {
+        let sweep = geometry_sweep(4, 4, 0);
+        let mults: Vec<usize> =
+            sweep.iter().map(|(_, _, b)| b.as_ref().map(|s| s.mults).unwrap_or(0)).collect();
+        // DSP58's wider ports fit at least as many 4-bit mults as the
+        // E2, which fits at least as many as the E1.
+        assert!(mults[2] >= mults[1] && mults[1] >= mults[0], "{mults:?}");
+        assert!(mults[1] >= 4, "DSP48E2 fits the INT4 scheme");
+    }
+
+    #[test]
+    fn bigger_dsp_packs_more() {
+        // DSP58's wider ports must admit at least as many 4-bit mults.
+        let e2 = enumerate(&DspGeometry::DSP48E2, 0..=0);
+        let d58 = enumerate(&DspGeometry::DSP58, 0..=0);
+        let max_mults = |v: &[SearchResult]| v.iter().map(|s| s.mults).max().unwrap();
+        assert!(max_mults(&d58) >= max_mults(&e2));
+    }
+}

@@ -1,0 +1,109 @@
+//! Bit-accurate simulator of the Xilinx **DSP48E2** slice (UltraScale,
+//! UG579) — the hardware substrate of the paper.
+//!
+//! The paper's packing phenomena (sign-extension aliasing between packed
+//! results, floor errors on extraction, carry leaks between packed adders,
+//! result overlap under Overpacking) are all properties of the DSP's
+//! two's-complement datapath, not of the silicon. This module reproduces
+//! that datapath exactly:
+//!
+//! ```text
+//!   A (30b) ──┬─► A[26:0] ─┐
+//!             │            ├─ preadder (27b) ── AD ─┐
+//!   D (27b) ──┴────────────┘                        ├─ mult 27×18 ── M (45b)
+//!   B (18b) ────────────────────────────────────────┘
+//!   C (48b) ──────────────────────────────┐
+//!   PCIN (48b) ─────────────────────────┐ │
+//!                                       ▼ ▼
+//!                    48-bit ALU:  P = X + Y + Z + CIN   (wraps mod 2^48)
+//! ```
+//!
+//! Supported behaviour (the subset the paper exercises, plus the SIMD ALU
+//! modes used as a native baseline for §VII addition packing):
+//!
+//! * pre-adder `AD = A[26:0] + D` (or A-only / D-only), 27-bit wrap;
+//! * signed 27 × 18 multiply (45-bit product);
+//! * 48-bit ALU with X/Y/Z multiplexers: `P = M + C + {0, PCIN, P}`;
+//! * ALU-only mode `P = (A:B) + C + {0, PCIN, P}` using the 48-bit A:B
+//!   concatenation — this is the mode §VII addition packing runs in;
+//! * SIMD `ONE48 / TWO24 / FOUR12` ALU segmentation (UG579, "SIMD mode"),
+//!   where carries are blocked at segment boundaries;
+//! * P-cascade chaining (`PCIN`/`PCOUT`) and accumulation (`P` feedback);
+//! * optional pipeline registers (A/B/M/P stages) for latency modelling.
+//!
+//! The combinational fast path ([`Dsp48E2::eval`]) is what the analysis and
+//! GEMM engines call; the registered path ([`Dsp48E2::clock`]) models
+//! latency for the coordinator's timing model.
+
+mod slice;
+
+pub use slice::{AluMode, Dsp48E2, DspGeometry, DspInputs, MultMode, Opmode, SimdMode};
+
+/// A chain of DSP slices connected through the P-cascade, as used when
+/// accumulating packed results across slices (§III: with δ padding bits, up
+/// to 2^δ results can be accumulated without error).
+#[derive(Debug, Clone)]
+pub struct DspChain {
+    slices: Vec<Dsp48E2>,
+}
+
+impl DspChain {
+    /// Create a cascade of `n` identically configured slices.
+    pub fn new(n: usize, opmode: Opmode) -> Self {
+        let mut slices = Vec::with_capacity(n);
+        for i in 0..n {
+            let mut op = opmode;
+            // Slice 0 has no cascade input; the rest add PCIN.
+            op.alu = if i == 0 { AluMode::MultAdd } else { AluMode::MultAddCascade };
+            slices.push(Dsp48E2::new(op));
+        }
+        DspChain { slices }
+    }
+
+    /// Number of slices in the chain.
+    pub fn len(&self) -> usize {
+        self.slices.len()
+    }
+
+    /// True iff the chain contains no slices.
+    pub fn is_empty(&self) -> bool {
+        self.slices.is_empty()
+    }
+
+    /// Evaluate the whole cascade combinationally: slice `i` receives
+    /// `PCOUT` of slice `i-1` on its `PCIN`. Returns the final P output.
+    pub fn eval(&self, inputs: &[DspInputs]) -> i128 {
+        assert_eq!(inputs.len(), self.slices.len(), "one input bundle per slice");
+        let mut pcin = 0i128;
+        for (s, inp) in self.slices.iter().zip(inputs) {
+            let mut inp = *inp;
+            inp.pcin = pcin;
+            pcin = s.eval(&inp);
+        }
+        pcin
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mult_inputs(a: i128, b: i128, c: i128) -> DspInputs {
+        DspInputs { a, b, c, d: 0, pcin: 0, carry_in: 0 }
+    }
+
+    #[test]
+    fn chain_accumulates_products() {
+        let chain = DspChain::new(4, Opmode::mult_add());
+        let inputs: Vec<_> = (1..=4).map(|i| mult_inputs(i, i + 10, 0)).collect();
+        // sum of i*(i+10) for i in 1..=4 = 11 + 24 + 39 + 56 = 130
+        assert_eq!(chain.eval(&inputs), 130);
+    }
+
+    #[test]
+    fn chain_length() {
+        let chain = DspChain::new(3, Opmode::mult_add());
+        assert_eq!(chain.len(), 3);
+        assert!(!chain.is_empty());
+    }
+}

@@ -1,0 +1,449 @@
+//! The DSP48E2 slice model: ports, datapath, SIMD ALU, pipeline registers.
+
+use crate::bits::{fits_signed, wrap_signed, wrap_unsigned};
+
+/// Port and datapath widths of a DSP slice family.
+///
+/// The packing algebra ([`crate::packing`]) is written against this
+/// geometry, so alternative slices (DSP48E1: 25×18, DSP58: 27×24) can be
+/// modelled by swapping the geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DspGeometry {
+    /// Width of the A port (multiplicand path, signed).
+    pub a_width: u32,
+    /// Width of the B port (multiplier path, signed).
+    pub b_width: u32,
+    /// Width of the C port / ALU / P output.
+    pub p_width: u32,
+    /// Width of the D port and the pre-adder result.
+    pub d_width: u32,
+}
+
+impl DspGeometry {
+    /// Xilinx DSP48E2 (UltraScale / UltraScale+): 27-bit pre-adder,
+    /// 18 × 27 multiplier, 48-bit ALU.
+    pub const DSP48E2: DspGeometry =
+        DspGeometry { a_width: 30, b_width: 18, p_width: 48, d_width: 27 };
+
+    /// Xilinx DSP48E1 (7-series): 25-bit A path, 18 × 25 multiplier.
+    pub const DSP48E1: DspGeometry =
+        DspGeometry { a_width: 30, b_width: 18, p_width: 48, d_width: 25 };
+
+    /// Versal DSP58: 27 × 24 multiplier, 58-bit ALU.
+    pub const DSP58: DspGeometry =
+        DspGeometry { a_width: 34, b_width: 24, p_width: 58, d_width: 27 };
+
+    /// Width of the multiplier's AD-side input (the pre-adder output).
+    #[inline]
+    pub fn ad_width(&self) -> u32 {
+        self.d_width
+    }
+
+    /// Width of the raw multiplier output `B × AD`.
+    #[inline]
+    pub fn m_width(&self) -> u32 {
+        self.b_width + self.ad_width()
+    }
+}
+
+/// Pre-adder / multiplier input selection (a working subset of INMODE).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum MultMode {
+    /// `M = B × A[26:0]` — pre-adder bypassed (INMODE=00000, D unused).
+    #[default]
+    BxA,
+    /// `M = B × (A[26:0] + D)` — the packing workhorse (Eqn. (1)).
+    BxAD,
+    /// `M = B × D` — A path unused.
+    BxD,
+}
+
+/// ALU (X/Y/Z multiplexer) configuration — a working subset of OPMODE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AluMode {
+    /// `P = M + C` (Z = 0). The paper's single-slice mode.
+    #[default]
+    MultAdd,
+    /// `P = M + C + PCIN` — cascade accumulation across slices.
+    MultAddCascade,
+    /// `P = M + C + P` — accumulate in place (MACC).
+    MultAccumulate,
+    /// `P = A:B + C` — 48-bit ALU-only mode; the multiplier is bypassed and
+    /// the concatenation of A (high 30) and B (low 18) feeds X. This is the
+    /// mode §VII addition packing uses.
+    AddAB,
+    /// `P = A:B + C + P` — ALU-only accumulate (SNN accumulation loop).
+    AddABAccumulate,
+}
+
+/// SIMD segmentation of the 48-bit ALU (UG579). Carries are blocked at
+/// segment boundaries — the native (exact, but coarser) alternative to the
+/// paper's addition packing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SimdMode {
+    /// Single 48-bit ALU (default; carries propagate across all 48 bits).
+    #[default]
+    One48,
+    /// Two independent 24-bit adders.
+    Two24,
+    /// Four independent 12-bit adders.
+    Four12,
+}
+
+impl SimdMode {
+    /// Width of one SIMD segment.
+    pub fn segment_width(&self) -> u32 {
+        match self {
+            SimdMode::One48 => 48,
+            SimdMode::Two24 => 24,
+            SimdMode::Four12 => 12,
+        }
+    }
+
+    /// Number of independent segments.
+    pub fn segments(&self) -> u32 {
+        48 / self.segment_width()
+    }
+}
+
+/// Full operating mode of a slice.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct Opmode {
+    /// Multiplier configuration.
+    pub mult: MultMode,
+    /// ALU configuration.
+    pub alu: AluMode,
+    /// SIMD segmentation (only legal with the ALU-only modes, as in the
+    /// real slice where SIMD requires `USE_MULT=NONE`).
+    pub simd: SimdMode,
+}
+
+impl Opmode {
+    /// `P = B × (A + D) + C` — Eqn. (1) without cascade.
+    pub fn mult_add() -> Self {
+        Opmode { mult: MultMode::BxAD, alu: AluMode::MultAdd, simd: SimdMode::One48 }
+    }
+
+    /// `P = B × (A + D) + C + PCIN`.
+    pub fn mult_add_cascade() -> Self {
+        Opmode { mult: MultMode::BxAD, alu: AluMode::MultAddCascade, simd: SimdMode::One48 }
+    }
+
+    /// `P = B × (A + D) + C + P` (multiply-accumulate).
+    pub fn macc() -> Self {
+        Opmode { mult: MultMode::BxAD, alu: AluMode::MultAccumulate, simd: SimdMode::One48 }
+    }
+
+    /// 48-bit ALU-only add `P = A:B + C`, optionally SIMD-segmented.
+    pub fn add_ab(simd: SimdMode) -> Self {
+        Opmode { mult: MultMode::BxA, alu: AluMode::AddAB, simd }
+    }
+
+    /// ALU-only accumulate `P = A:B + C + P`, optionally SIMD-segmented.
+    pub fn add_ab_accumulate(simd: SimdMode) -> Self {
+        Opmode { mult: MultMode::BxA, alu: AluMode::AddABAccumulate, simd }
+    }
+}
+
+/// One cycle's worth of port values. All values are taken mod the port
+/// width on entry (hardware truncation), so callers may pass any `i128`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DspInputs {
+    /// A port (30-bit; low 27 bits feed the pre-adder, full width feeds A:B).
+    pub a: i128,
+    /// B port (18-bit signed).
+    pub b: i128,
+    /// C port (48-bit).
+    pub c: i128,
+    /// D port (27-bit signed, pre-adder).
+    pub d: i128,
+    /// P-cascade input from the neighbouring slice.
+    pub pcin: i128,
+    /// ALU carry-in (CARRYIN, 1 bit; per-segment in SIMD modes).
+    pub carry_in: i128,
+}
+
+/// A single DSP48E2 slice.
+///
+/// `eval` is the combinational datapath (zero-latency, used by the analysis
+/// and GEMM hot paths); `clock` advances the registered pipeline by one
+/// cycle and is used where latency matters (coordinator timing model).
+#[derive(Debug, Clone)]
+pub struct Dsp48E2 {
+    /// Operating mode.
+    pub opmode: Opmode,
+    /// Port geometry (defaults to [`DspGeometry::DSP48E2`]).
+    pub geometry: DspGeometry,
+    /// Pipeline depth in cycles (0 = combinational; 3 = fully registered
+    /// AREG/BREG + MREG + PREG, the frequency-optimal configuration).
+    pub pipeline_depth: u32,
+    /// P output register (also the accumulator state).
+    p_reg: i128,
+    /// In-flight pipeline stages (oldest first).
+    stages: Vec<DspInputs>,
+}
+
+impl Dsp48E2 {
+    /// New slice with the given opmode, default geometry, combinational.
+    pub fn new(opmode: Opmode) -> Self {
+        Dsp48E2 {
+            opmode,
+            geometry: DspGeometry::DSP48E2,
+            pipeline_depth: 0,
+            p_reg: 0,
+            stages: Vec::new(),
+        }
+    }
+
+    /// New fully registered slice (3-cycle latency), for timing models.
+    pub fn new_pipelined(opmode: Opmode) -> Self {
+        let mut s = Self::new(opmode);
+        s.pipeline_depth = 3;
+        s
+    }
+
+    /// The current P register / accumulator value.
+    #[inline]
+    pub fn p(&self) -> i128 {
+        self.p_reg
+    }
+
+    /// Reset the P register / accumulator and flush the pipeline.
+    pub fn reset(&mut self) {
+        self.p_reg = 0;
+        self.stages.clear();
+    }
+
+    /// Pre-adder: `AD = A[26:0] + D`, wrapped to the 27-bit pre-adder width
+    /// (two's-complement overflow, as in hardware).
+    #[inline]
+    fn preadder(&self, a: i128, d: i128) -> i128 {
+        let adw = self.geometry.ad_width();
+        let a_low = wrap_signed(a, adw);
+        match self.opmode.mult {
+            MultMode::BxA => a_low,
+            MultMode::BxD => wrap_signed(d, adw),
+            MultMode::BxAD => wrap_signed(a_low + wrap_signed(d, adw), adw),
+        }
+    }
+
+    /// Combinationally evaluate the datapath for one input bundle.
+    /// Accumulation modes read the current P register but do **not** write
+    /// it — use [`Dsp48E2::eval_update`] or [`Dsp48E2::clock`] for that.
+    pub fn eval(&self, inp: &DspInputs) -> i128 {
+        let g = &self.geometry;
+        // Port truncation.
+        let a = wrap_signed(inp.a, g.a_width);
+        let b = wrap_signed(inp.b, g.b_width);
+        let c = wrap_signed(inp.c, g.p_width);
+        let d = wrap_signed(inp.d, g.d_width);
+        let pcin = wrap_signed(inp.pcin, g.p_width);
+
+        let m = {
+            let ad = self.preadder(a, d);
+            debug_assert!(fits_signed(b * ad, g.m_width() + 1));
+            b * ad
+        };
+
+        // A:B concatenation for the ALU-only modes: A in the high bits,
+        // B in the low 18 (UG579 §"ALU inputs").
+        let ab = wrap_signed(
+            (wrap_unsigned(a, g.a_width) << g.b_width) | wrap_unsigned(b, g.b_width),
+            g.p_width,
+        );
+
+        let (x, z) = match self.opmode.alu {
+            AluMode::MultAdd => (m, 0),
+            AluMode::MultAddCascade => (m, pcin),
+            AluMode::MultAccumulate => (m, self.p_reg),
+            AluMode::AddAB => (ab, 0),
+            AluMode::AddABAccumulate => (ab, self.p_reg),
+        };
+
+        self.alu_add(x, c, z, inp.carry_in)
+    }
+
+    /// The 48-bit ALU with SIMD segmentation: carries are blocked at
+    /// segment boundaries in `TWO24`/`FOUR12` (UG579).
+    fn alu_add(&self, x: i128, y: i128, z: i128, carry_in: i128) -> i128 {
+        let pw = self.geometry.p_width;
+        match self.opmode.simd {
+            SimdMode::One48 => wrap_signed(x + y + z + carry_in, pw),
+            simd => {
+                let sw = simd.segment_width();
+                let mut out = 0i128;
+                for s in 0..simd.segments() {
+                    let off = s * sw;
+                    let xs = (wrap_unsigned(x, pw) >> off) & crate::bits::mask(sw);
+                    let ys = (wrap_unsigned(y, pw) >> off) & crate::bits::mask(sw);
+                    let zs = (wrap_unsigned(z, pw) >> off) & crate::bits::mask(sw);
+                    // carry_in applies to segment 0 only (CARRYIN pin).
+                    let ci = if s == 0 { carry_in } else { 0 };
+                    let sum = (xs + ys + zs + ci) & crate::bits::mask(sw);
+                    out |= sum << off;
+                }
+                wrap_signed(out, pw)
+            }
+        }
+    }
+
+    /// Combinationally evaluate *and* commit the result to the P register
+    /// (single-cycle accumulator semantics). Returns the new P.
+    pub fn eval_update(&mut self, inp: &DspInputs) -> i128 {
+        let p = self.eval(inp);
+        self.p_reg = p;
+        p
+    }
+
+    /// Advance the registered pipeline by one cycle: accept `inp`, return
+    /// the P value produced this cycle (i.e. the input from
+    /// `pipeline_depth` cycles ago, or `None` while the pipe fills).
+    pub fn clock(&mut self, inp: DspInputs) -> Option<i128> {
+        if self.pipeline_depth == 0 {
+            return Some(self.eval_update(&inp));
+        }
+        self.stages.push(inp);
+        if self.stages.len() as u32 > self.pipeline_depth {
+            let ready = self.stages.remove(0);
+            Some(self.eval_update(&ready))
+        } else {
+            None
+        }
+    }
+
+    /// Latency of this slice configuration in cycles.
+    pub fn latency(&self) -> u32 {
+        self.pipeline_depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn slice(op: Opmode) -> Dsp48E2 {
+        Dsp48E2::new(op)
+    }
+
+    #[test]
+    fn eqn1_mult_add() {
+        // P = B*(A+D) + C  — the paper's Eqn. (1).
+        let s = slice(Opmode::mult_add());
+        let inp = DspInputs { a: 100, b: 7, c: 5, d: -40, pcin: 0, carry_in: 0 };
+        assert_eq!(s.eval(&inp), 7 * (100 - 40) + 5);
+    }
+
+    #[test]
+    fn port_truncation_wraps() {
+        // B is 18 bits: 2^17 wraps to -2^17.
+        let s = slice(Opmode::mult_add());
+        let inp = DspInputs { a: 1, b: 1 << 17, ..Default::default() };
+        assert_eq!(s.eval(&inp), -(1 << 17));
+    }
+
+    #[test]
+    fn preadder_wraps_at_27_bits() {
+        let s = slice(Opmode::mult_add());
+        // A[26:0] + D overflowing 27 bits wraps (hardware behaviour).
+        let big = (1i128 << 26) - 1;
+        let inp = DspInputs { a: big, b: 1, d: 1, ..Default::default() };
+        assert_eq!(s.eval(&inp), -(1 << 26)); // wrapped
+    }
+
+    #[test]
+    fn macc_accumulates() {
+        let mut s = slice(Opmode::macc());
+        for i in 1..=10 {
+            s.eval_update(&DspInputs { a: i, b: 2, ..Default::default() });
+        }
+        assert_eq!(s.p(), 2 * (1..=10).sum::<i128>());
+    }
+
+    #[test]
+    fn add_ab_concatenation() {
+        // ALU-only: P = A:B + C. A=1 in the high bits contributes 2^18.
+        let s = slice(Opmode::add_ab(SimdMode::One48));
+        let inp = DspInputs { a: 1, b: 3, c: 10, ..Default::default() };
+        assert_eq!(s.eval(&inp), (1 << 18) + 3 + 10);
+    }
+
+    #[test]
+    fn simd_four12_blocks_carries() {
+        // Segment 0 overflows; in FOUR12 the carry must NOT reach segment 1.
+        let s = slice(Opmode::add_ab(SimdMode::Four12));
+        let x: i128 = 0xFFF; // segment 0 all-ones via A:B low bits
+        let inp = DspInputs { a: 0, b: x, c: 1, ..Default::default() };
+        // 0xFFF + 1 = 0x1000 -> wraps to 0 in segment 0, segment 1 stays 0.
+        assert_eq!(s.eval(&inp), 0);
+    }
+
+    #[test]
+    fn simd_one48_propagates_carries() {
+        let s = slice(Opmode::add_ab(SimdMode::One48));
+        let inp = DspInputs { a: 0, b: 0xFFF, c: 1, ..Default::default() };
+        assert_eq!(s.eval(&inp), 0x1000);
+    }
+
+    #[test]
+    fn pipeline_latency() {
+        let mut s = Dsp48E2::new_pipelined(Opmode::mult_add());
+        assert_eq!(s.latency(), 3);
+        let mk = |b: i128| DspInputs { a: 1, b, ..Default::default() };
+        assert_eq!(s.clock(mk(1)), None);
+        assert_eq!(s.clock(mk(2)), None);
+        assert_eq!(s.clock(mk(3)), None);
+        assert_eq!(s.clock(mk(4)), Some(1));
+        assert_eq!(s.clock(mk(5)), Some(2));
+    }
+
+    #[test]
+    fn geometry_variants() {
+        assert_eq!(DspGeometry::DSP48E2.m_width(), 45);
+        assert_eq!(DspGeometry::DSP48E1.m_width(), 43);
+        assert_eq!(DspGeometry::DSP58.m_width(), 51);
+    }
+
+    /// The slice in mult_add mode matches the i128 golden model for all
+    /// in-range operands.
+    #[test]
+    fn prop_golden_model_mult_add() {
+        let s = slice(Opmode::mult_add());
+        let mut rng = Rng::new(0xD5B);
+        for _ in 0..20_000 {
+            let a = rng.range_i128(-(1 << 25), (1 << 25) - 1);
+            let b = rng.range_i128(-(1 << 17), (1 << 17) - 1);
+            let c = rng.range_i128(-(1 << 40), (1 << 40) - 1);
+            let d = rng.range_i128(-(1 << 25), (1 << 25) - 1);
+            let expect = b * (a + d) + c;
+            // Pre-adder and P stay in range by construction.
+            assert!(crate::bits::fits_signed(a + d, 27));
+            assert!(crate::bits::fits_signed(expect, 48));
+            assert_eq!(s.eval(&DspInputs { a, b, c, d, pcin: 0, carry_in: 0 }), expect);
+        }
+    }
+
+    /// SIMD FOUR12 equals four independent 12-bit adders.
+    #[test]
+    fn prop_golden_model_four12() {
+        let s = slice(Opmode::add_ab(SimdMode::Four12));
+        let mut rng = Rng::new(0xF412);
+        for _ in 0..20_000 {
+            let xs: Vec<i128> = (0..4).map(|_| rng.range_i128(0, (1 << 12) - 1)).collect();
+            let ys: Vec<i128> = (0..4).map(|_| rng.range_i128(0, (1 << 12) - 1)).collect();
+            let pack = |v: &[i128]| v.iter().rev().fold(0i128, |acc, &f| (acc << 12) | f);
+            let ab = pack(&xs);
+            let inp = DspInputs {
+                a: ab >> 18,
+                b: ab & crate::bits::mask(18),
+                c: pack(&ys),
+                ..Default::default()
+            };
+            let p = crate::bits::wrap_unsigned(s.eval(&inp), 48);
+            for i in 0..4 {
+                let seg = (p >> (12 * i)) & crate::bits::mask(12);
+                assert_eq!(seg, (xs[i] + ys[i]) & crate::bits::mask(12));
+            }
+        }
+    }
+}

@@ -1,0 +1,159 @@
+//! Dense row-major i32 matrix — the tensor type of the GEMM/NN substrate.
+
+use crate::{Error, Result};
+
+/// Dense row-major matrix of `i32` (quantized values and accumulators).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct MatI32 {
+    /// Number of rows.
+    pub rows: usize,
+    /// Number of columns.
+    pub cols: usize,
+    data: Vec<i32>,
+}
+
+impl MatI32 {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        MatI32 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    /// Build from row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Shape(format!(
+                "{}x{} matrix needs {} values, got {}",
+                rows,
+                cols,
+                rows * cols,
+                data.len()
+            )));
+        }
+        Ok(MatI32 { rows, cols, data })
+    }
+
+    /// Build by evaluating `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        MatI32 { rows, cols, data }
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> i32 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    /// Element assignment.
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: i32) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Row slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Raw data (row-major).
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    /// Mutable raw data (row-major).
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+
+    /// Value range over all elements.
+    pub fn min_max(&self) -> (i32, i32) {
+        let mut lo = i32::MAX;
+        let mut hi = i32::MIN;
+        for &v in &self.data {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        if self.data.is_empty() {
+            (0, 0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Exact reference matmul (i64 accumulation, checked to fit i32).
+    pub fn matmul_exact(&self, rhs: &MatI32) -> Result<MatI32> {
+        if self.cols != rhs.rows {
+            return Err(Error::Shape(format!(
+                "matmul {}x{} by {}x{}",
+                self.rows, self.cols, rhs.rows, rhs.cols
+            )));
+        }
+        let mut out = MatI32::zeros(self.rows, rhs.cols);
+        for i in 0..self.rows {
+            for j in 0..rhs.cols {
+                let mut acc: i64 = 0;
+                for k in 0..self.cols {
+                    acc += self.get(i, k) as i64 * rhs.get(k, j) as i64;
+                }
+                out.set(i, j, i32::try_from(acc).map_err(|_| {
+                    Error::Shape(format!("accumulator overflow at ({i},{j}): {acc}"))
+                })?);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mean absolute difference against another matrix of the same shape.
+    pub fn mean_abs_diff(&self, other: &MatI32) -> Result<f64> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::Shape("shape mismatch in mean_abs_diff".into()));
+        }
+        let n = self.data.len().max(1);
+        Ok(self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| (a as i64 - b as i64).unsigned_abs() as f64)
+            .sum::<f64>()
+            / n as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let mut m = MatI32::zeros(2, 3);
+        m.set(1, 2, 7);
+        assert_eq!(m.get(1, 2), 7);
+        assert_eq!(m.row(1), &[0, 0, 7]);
+        assert!(MatI32::from_vec(2, 2, vec![1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn exact_matmul() {
+        let a = MatI32::from_vec(2, 3, vec![1, 2, 3, 4, 5, 6]).unwrap();
+        let b = MatI32::from_vec(3, 2, vec![7, 8, 9, 10, 11, 12]).unwrap();
+        let c = a.matmul_exact(&b).unwrap();
+        assert_eq!(c.data(), &[58, 64, 139, 154]);
+        assert!(a.matmul_exact(&a).is_err(), "shape mismatch rejected");
+    }
+
+    #[test]
+    fn stats() {
+        let m = MatI32::from_vec(1, 4, vec![-3, 0, 5, 2]).unwrap();
+        assert_eq!(m.min_max(), (-3, 5));
+        let n = MatI32::from_vec(1, 4, vec![-3, 1, 4, 2]).unwrap();
+        assert!((m.mean_abs_diff(&n).unwrap() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! A tiled integer GEMM engine over an array of simulated DSP slices —
+//! the compute fabric of the paper's target applications (quantized CNNs,
+//! wp521's motivation).
+//!
+//! For `C = A · W` with unsigned-quantized activations `A` (M×K) and
+//! signed-quantized weights `W` (K×N), a packing configuration with `n_a`
+//! a-operands and `n_w` w-operands maps an `n_a × n_w` tile of outputs to
+//! **one** DSP slice: per step k, the slice receives `n_a` activations from
+//! different output rows and `n_w` weights from different output columns,
+//! and its P word accumulates the full outer-product tile (§III cascade).
+//! Every `2^δ` steps the fields run out of padding headroom, so the engine
+//! drains the accumulator into 32-bit fabric accumulators and restarts the
+//! chain — exactly the drain rhythm a real design would use.
+//!
+//! The engine counts DSP work, so benchmarks can report the utilization
+//! gain over the one-multiply-per-DSP baseline (the paper's raison d'être).
+
+mod engine;
+mod matrix;
+
+pub use engine::{DspOpStats, GemmEngine};
+pub use matrix::MatI32;

@@ -1,0 +1,100 @@
+//! # DSP-Packing
+//!
+//! Reproduction of *"DSP-Packing: Squeezing Low-precision Arithmetic into
+//! FPGA DSP Blocks"* (Sommer, Özkan, Keszocze, Teich — FPL 2022,
+//! DOI 10.1109/FPL57034.2022.00035) as a three-layer Rust + JAX + Pallas
+//! stack.
+//!
+//! The paper packs several low-precision integer multiplications into a
+//! single Xilinx DSP48E2 wide multiplier by placing the operands at
+//! disjoint bit offsets, so that one physical `B × (A + D) + C` operation
+//! computes the full outer product of two small operand vectors. This crate
+//! provides:
+//!
+//! * [`dsp48`] — a bit-accurate simulator of the DSP48E2 slice (the
+//!   hardware substrate the paper evaluates on; see DESIGN.md for the
+//!   hardware-substitution argument).
+//! * [`packing`] — the generalized INT-N packing algebra of §IV:
+//!   [`packing::PackingConfig`], pack/unpack codecs, result extraction.
+//! * [`correct`] — the error-correction schemes of §V and §VI-B: full
+//!   round-half-up correction, approximate C-port correction, and
+//!   MR-Overpacking MSB restoration.
+//! * [`addpack`] — §VII addition packing into the 48-bit ALU, with and
+//!   without guard bits.
+//! * [`analysis`] — the exhaustive / sampled error-analysis engine behind
+//!   Tables I–III (EP / MAE / WCE, Eqns. (10)–(12)).
+//! * [`synth`] — a miniature technology mapper (boolean network → 6-LUT)
+//!   used to estimate the LUT/FF cost columns of Table I.
+//! * [`density`] — packing density ρ (Fig. 9) and a packing-configuration
+//!   search.
+//! * [`gemm`] — a tiled integer GEMM engine that maps matrix multiplies
+//!   onto an array of simulated DSP slices using a chosen packing.
+//! * [`nn`] — quantized NN layers (dense / conv2d / pooling) over the GEMM
+//!   engine plus an SNN integrate-and-fire layer over addition packing.
+//! * [`runtime`] — a PJRT loader (via the `xla` crate) that executes the
+//!   AOT-compiled JAX/Pallas artifacts from `artifacts/*.hlo.txt`.
+//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
+//!   DSP-budget allocator and metrics.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use dsp_packing::packing::{PackingConfig, PackedMultiplier};
+//! use dsp_packing::correct::Correction;
+//!
+//! // The Xilinx INT4 configuration: 2x2 outer product of 4-bit operands.
+//! let cfg = PackingConfig::int4();
+//! let mul = PackedMultiplier::new(cfg, Correction::FullRoundHalfUp).unwrap();
+//! let r = mul.multiply(&[3, 10], &[-7, 5]).unwrap();
+//! assert_eq!(r, vec![-21, -70, 15, 50]); // full outer product, exact
+//! ```
+
+pub mod addpack;
+pub mod analysis;
+pub mod bench;
+pub mod bits;
+pub mod config;
+pub mod coordinator;
+pub mod correct;
+pub mod density;
+pub mod dsp48;
+pub mod gemm;
+pub mod nn;
+pub mod packing;
+pub mod runtime;
+pub mod synth;
+pub mod util;
+
+pub use analysis::ErrorStats;
+pub use correct::Correction;
+pub use packing::{PackedMultiplier, PackingConfig};
+
+/// Crate-wide error type.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// A packing configuration violates a structural invariant (overlapping
+    /// inputs, zero-width operand, ...).
+    #[error("invalid packing configuration: {0}")]
+    InvalidConfig(String),
+    /// A packing configuration does not fit the target DSP geometry.
+    #[error("packing does not fit DSP geometry: {0}")]
+    GeometryViolation(String),
+    /// An operand is out of range for its declared width/signedness.
+    #[error("operand out of range: {0}")]
+    OperandRange(String),
+    /// Shape mismatch in GEMM / NN plumbing.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// Runtime (PJRT / artifact) failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Coordinator failure (queue closed, worker died, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+    /// Configuration file / CLI error.
+    #[error("config error: {0}")]
+    Config(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,126 @@
+//! Deterministic synthetic classification data for the end-to-end
+//! examples: Gaussian-ish clusters around per-class prototype patterns on
+//! an 8×8 "image" grid (a small MNIST stand-in that needs no downloads —
+//! see DESIGN.md §2 on substitutions).
+
+use crate::util::Rng;
+
+/// A labelled dataset of flattened images in `[0, 1]`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    /// Flattened images, row-major `[n][dim]`.
+    pub images: Vec<Vec<f32>>,
+    /// Labels in `0..classes`.
+    pub labels: Vec<usize>,
+    /// Image dimension (e.g. 64 for 8×8).
+    pub dim: usize,
+    /// Number of classes.
+    pub classes: usize,
+    /// Seed the class prototypes were drawn with (so classifiers can
+    /// regenerate them).
+    pub proto_seed: u64,
+}
+
+/// Per-class prototypes: blocky patterns that are linearly separable but
+/// overlap under noise (so quantization/approximation error is visible in
+/// accuracy, not hidden by a trivial margin).
+pub fn prototypes(classes: usize, dim: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..classes)
+        .map(|_| {
+            (0..dim)
+                .map(|_| if rng.chance(0.3) { 0.6 + 0.4 * rng.f64() as f32 } else { 0.0 })
+                .collect()
+        })
+        .collect()
+}
+
+/// Generate `n` samples: pick a class, take its prototype, add noise and
+/// pixel dropout.
+pub fn synthetic(n: usize, classes: usize, dim: usize, noise: f32, seed: u64) -> Dataset {
+    let protos = prototypes(classes, dim, seed);
+    let mut rng = Rng::new(seed ^ 0x5A5A_5A5A);
+    let mut images = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = rng.below(classes as u64) as usize;
+        let img: Vec<f32> = protos[label]
+            .iter()
+            .map(|&p| {
+                let jitter = (rng.f64() as f32 - 0.5) * 2.0 * noise;
+                if rng.chance(0.05) {
+                    0.0 // dropout
+                } else {
+                    (p + jitter).clamp(0.0, 1.0)
+                }
+            })
+            .collect();
+        images.push(img);
+        labels.push(label);
+    }
+    Dataset { images, labels, dim, classes, proto_seed: seed }
+}
+
+/// Binarize images into spike trains for the SNN path: `steps` timesteps
+/// of Bernoulli spikes with rate = pixel intensity.
+pub fn to_spike_trains(ds: &Dataset, steps: usize, seed: u64) -> Vec<Vec<Vec<u8>>> {
+    let mut rng = Rng::new(seed);
+    ds.images
+        .iter()
+        .map(|img| {
+            (0..steps)
+                .map(|_| img.iter().map(|&p| u8::from(rng.chance(p as f64))).collect())
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let a = synthetic(50, 4, 64, 0.2, 7);
+        let b = synthetic(50, 4, 64, 0.2, 7);
+        assert_eq!(a.images, b.images);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn shapes_and_ranges() {
+        let ds = synthetic(100, 10, 64, 0.25, 1);
+        assert_eq!(ds.images.len(), 100);
+        assert!(ds.images.iter().all(|i| i.len() == 64));
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        assert!(ds
+            .images
+            .iter()
+            .flatten()
+            .all(|&v| (0.0..=1.0).contains(&v)));
+        // All classes appear.
+        let mut seen = vec![false; 10];
+        for &l in &ds.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn spike_rate_tracks_intensity() {
+        let ds = synthetic(10, 2, 64, 0.1, 3);
+        let trains = to_spike_trains(&ds, 64, 9);
+        // A bright pixel should spike more often than a dark one.
+        let img = &ds.images[0];
+        let (bright, _) = img
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, v)| (i, *v))
+            .unwrap();
+        let count: u32 = trains[0].iter().map(|t| t[bright] as u32).sum();
+        if img[bright] > 0.6 {
+            assert!(count > 20, "bright pixel spiked {count}/64");
+        }
+    }
+}

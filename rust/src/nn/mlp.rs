@@ -1,0 +1,444 @@
+//! Quantized MLP / CNN models executing on the packed GEMM engine.
+
+use super::data::Dataset;
+use super::quantize;
+use crate::gemm::{DspOpStats, GemmEngine, MatI32};
+use crate::{Error, Result};
+
+/// How a model's matmuls execute.
+#[derive(Debug, Clone)]
+pub enum ExecMode {
+    /// Exact i32 reference (the FP32→INT exact-quantized baseline).
+    Exact,
+    /// On the packed DSP fabric with the engine's packing + correction.
+    Packed(GemmEngine),
+}
+
+/// One quantized dense layer: `y = requant(x · Wᵀ-ish + b)`.
+/// Weights are stored K×N (input-major) so the GEMM is `x(M×K) · w(K×N)`.
+#[derive(Debug, Clone)]
+pub struct DenseLayer {
+    /// Quantized weights, K×N, signed.
+    pub weights: MatI32,
+    /// Bias in accumulator scale (added before requantization).
+    pub bias: Vec<i32>,
+    /// Right-shift applied when requantizing back to activations.
+    pub shift: u32,
+    /// Apply ReLU + clamp into the unsigned activation range (hidden
+    /// layers); the final layer keeps raw accumulators as logits.
+    pub requant: bool,
+}
+
+impl DenseLayer {
+    /// Build a dense layer from float weights/bias, quantizing the weights
+    /// to `w_bits` signed.
+    pub fn from_f32(
+        weights: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        bias: &[f32],
+        w_bits: u32,
+        requant: bool,
+    ) -> Result<(Self, f32)> {
+        if weights.len() != in_dim * out_dim || bias.len() != out_dim {
+            return Err(Error::Shape("dense layer weight/bias shape".into()));
+        }
+        let (wq, scale) = quantize::quantize_signed(weights, in_dim, out_dim, w_bits);
+        // Bias enters at accumulator scale; calibrated later with shift=0.
+        let bq = bias.iter().map(|&b| (b * scale) as i32).collect();
+        Ok((DenseLayer { weights: wq, bias: bq, shift: 0, requant }, scale))
+    }
+
+    /// Forward one batch through this layer.
+    pub fn forward(
+        &self,
+        x: &MatI32,
+        mode: &ExecMode,
+        a_bits: u32,
+        stats: &mut DspOpStats,
+    ) -> Result<MatI32> {
+        let mut acc = match mode {
+            ExecMode::Exact => x.matmul_exact(&self.weights)?,
+            ExecMode::Packed(engine) => {
+                let (out, s) = engine.matmul(x, &self.weights)?;
+                stats.merge(&s);
+                out
+            }
+        };
+        for r in 0..acc.rows {
+            for c in 0..acc.cols {
+                acc.set(r, c, acc.get(r, c) + self.bias[c]);
+            }
+        }
+        Ok(if self.requant {
+            quantize::requantize_relu(&acc, self.shift, a_bits)
+        } else {
+            acc
+        })
+    }
+}
+
+/// A small quantized MLP classifier.
+#[derive(Debug, Clone)]
+pub struct QuantMlp {
+    /// Dense layers, applied in order.
+    pub layers: Vec<DenseLayer>,
+    /// Activation bit width (the packing's a-operand width).
+    pub a_bits: u32,
+}
+
+impl QuantMlp {
+    /// Nearest-centroid classifier as a single dense layer: weights are
+    /// the class prototypes. Deterministic and training-free — accuracy on
+    /// the synthetic clusters is high, and approximation error from the
+    /// packed arithmetic is directly visible in the logits.
+    pub fn centroid_classifier(ds: &Dataset, w_bits: u32, a_bits: u32) -> Result<QuantMlp> {
+        let protos = super::data::prototypes(ds.classes, ds.dim, ds.proto_seed);
+        let mut w = vec![0f32; ds.dim * ds.classes];
+        for (c, p) in protos.iter().enumerate() {
+            // Center the prototype so the dot product discriminates.
+            let mean: f32 = p.iter().sum::<f32>() / ds.dim as f32;
+            for (i, &v) in p.iter().enumerate() {
+                w[i * ds.classes + c] = v - mean;
+            }
+        }
+        let (layer, _) =
+            DenseLayer::from_f32(&w, ds.dim, ds.classes, &vec![0.0; ds.classes], w_bits, false)?;
+        Ok(QuantMlp { layers: vec![layer], a_bits })
+    }
+
+    /// Two-layer MLP with externally supplied float weights (e.g. trained
+    /// by the JAX side and exported with the artifacts).
+    pub fn two_layer(
+        w1: &[f32],
+        b1: &[f32],
+        w2: &[f32],
+        b2: &[f32],
+        dims: (usize, usize, usize),
+        w_bits: u32,
+        a_bits: u32,
+    ) -> Result<QuantMlp> {
+        let (d_in, d_hidden, d_out) = dims;
+        let (l1, _) = DenseLayer::from_f32(w1, d_in, d_hidden, b1, w_bits, true)?;
+        let (l2, _) = DenseLayer::from_f32(w2, d_hidden, d_out, b2, w_bits, false)?;
+        Ok(QuantMlp { layers: vec![l1, l2], a_bits })
+    }
+
+    /// Calibrate per-layer requantization shifts on a sample batch (run
+    /// exactly, pick the smallest shift that fits the activation range).
+    pub fn calibrate(&mut self, sample: &MatI32) -> Result<()> {
+        let mut x = sample.clone();
+        let n_layers = self.layers.len();
+        let mut stats = DspOpStats::default();
+        for li in 0..n_layers {
+            let mut acc = x.matmul_exact(&self.layers[li].weights)?;
+            for r in 0..acc.rows {
+                for c in 0..acc.cols {
+                    acc.set(r, c, acc.get(r, c) + self.layers[li].bias[c]);
+                }
+            }
+            if self.layers[li].requant {
+                self.layers[li].shift = quantize::calibrate_shift(&acc, self.a_bits);
+            }
+            x = self.layers[li].forward(&x, &ExecMode::Exact, self.a_bits, &mut stats)?;
+        }
+        Ok(())
+    }
+
+    /// Forward a quantized batch; returns logits and DSP work stats.
+    pub fn forward(&self, x: &MatI32, mode: &ExecMode) -> Result<(MatI32, DspOpStats)> {
+        let mut stats = DspOpStats::default();
+        let mut cur = x.clone();
+        for layer in &self.layers {
+            cur = layer.forward(&cur, mode, self.a_bits, &mut stats)?;
+        }
+        Ok((cur, stats))
+    }
+
+    /// Quantize a float image batch into the activation range.
+    pub fn quantize_batch(&self, images: &[Vec<f32>]) -> Result<MatI32> {
+        let dim = images.first().map(|i| i.len()).unwrap_or(0);
+        let flat: Vec<f32> = images.iter().flatten().copied().collect();
+        Ok(quantize::quantize_unsigned(&flat, images.len(), dim, self.a_bits).0)
+    }
+
+    /// Classify: argmax over logits.
+    pub fn classify(&self, x: &MatI32, mode: &ExecMode) -> Result<(Vec<usize>, DspOpStats)> {
+        let (logits, stats) = self.forward(x, mode)?;
+        let preds = (0..logits.rows)
+            .map(|r| {
+                let row = logits.row(r);
+                row.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
+            })
+            .collect();
+        Ok((preds, stats))
+    }
+
+    /// Accuracy over a dataset.
+    pub fn accuracy(&self, ds: &Dataset, mode: &ExecMode) -> Result<(f64, DspOpStats)> {
+        let x = self.quantize_batch(&ds.images)?;
+        let (preds, stats) = self.classify(&x, mode)?;
+        let correct = preds.iter().zip(&ds.labels).filter(|(p, l)| p == l).count();
+        Ok((correct as f64 / ds.labels.len().max(1) as f64, stats))
+    }
+}
+
+/// A small quantized CNN: one 3×3 conv (via im2col + GEMM) + 2×2 max-pool
+/// + dense head. Input is a square single-channel image.
+#[derive(Debug, Clone)]
+pub struct QuantCnn {
+    /// Conv filters as an im2col GEMM weight matrix (9 × filters).
+    pub conv: DenseLayer,
+    /// Number of conv filters.
+    pub filters: usize,
+    /// Input image side length.
+    pub side: usize,
+    /// Dense classifier head.
+    pub head: DenseLayer,
+    /// Activation bit width.
+    pub a_bits: u32,
+}
+
+impl QuantCnn {
+    /// Build with deterministic random conv filters (edge/blob detectors
+    /// emerge from the synthetic data statistics) and a centroid head in
+    /// pooled-feature space.
+    pub fn new(ds: &Dataset, filters: usize, w_bits: u32, a_bits: u32, seed: u64) -> Result<Self> {
+        let side = (ds.dim as f64).sqrt() as usize;
+        if side * side != ds.dim {
+            return Err(Error::Shape(format!("dataset dim {} is not square", ds.dim)));
+        }
+        let mut rng = crate::util::Rng::new(seed);
+        let conv_w: Vec<f32> =
+            (0..9 * filters).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
+        let (conv, _) =
+            DenseLayer::from_f32(&conv_w, 9, filters, &vec![0.0; filters], w_bits, true)?;
+        let pooled_side = (side - 2) / 2;
+        let feat_dim = pooled_side * pooled_side * filters;
+        // Head: centroids of pooled features of the prototypes (computed
+        // lazily at calibration); initialize to zeros, fill in calibrate().
+        let (head, _) = DenseLayer::from_f32(
+            &vec![0.0; feat_dim * ds.classes],
+            feat_dim,
+            ds.classes,
+            &vec![0.0; ds.classes],
+            w_bits,
+            false,
+        )?;
+        let mut cnn = QuantCnn { conv, filters, side, head, a_bits };
+        cnn.fit_head(ds, w_bits)?;
+        Ok(cnn)
+    }
+
+    /// im2col over valid 3×3 patches: rows = patches, cols = 9.
+    pub fn im2col(&self, image_q: &[i32]) -> MatI32 {
+        let side = self.side;
+        let out_side = side - 2;
+        MatI32::from_fn(out_side * out_side, 9, |p, k| {
+            let (py, px) = (p / out_side, p % out_side);
+            let (ky, kx) = (k / 3, k % 3);
+            image_q[(py + ky) * side + (px + kx)]
+        })
+    }
+
+    /// Forward features for one quantized image (conv → relu → pool).
+    fn features(&self, image_q: &[i32], mode: &ExecMode, stats: &mut DspOpStats) -> Result<Vec<i32>> {
+        let patches = self.im2col(image_q);
+        let fmap = self.conv.forward(&patches, mode, self.a_bits, stats)?;
+        // fmap: (out_side²) × filters. 2×2 max-pool per filter channel.
+        let out_side = self.side - 2;
+        let pooled_side = out_side / 2;
+        let mut feats = Vec::with_capacity(pooled_side * pooled_side * self.filters);
+        for f in 0..self.filters {
+            for py in 0..pooled_side {
+                for px in 0..pooled_side {
+                    let mut m = i32::MIN;
+                    for dy in 0..2 {
+                        for dx in 0..2 {
+                            let idx = (py * 2 + dy) * out_side + (px * 2 + dx);
+                            m = m.max(fmap.get(idx, f));
+                        }
+                    }
+                    feats.push(m);
+                }
+            }
+        }
+        Ok(feats)
+    }
+
+    /// Fit the dense head as class centroids in (exact) feature space.
+    fn fit_head(&mut self, ds: &Dataset, w_bits: u32) -> Result<()> {
+        let mut stats = DspOpStats::default();
+        let feat_dim = self.head.weights.rows;
+        let mut sums = vec![vec![0f64; feat_dim]; ds.classes];
+        let mut counts = vec![0usize; ds.classes];
+        let x = quantize::quantize_unsigned(
+            &ds.images.iter().flatten().copied().collect::<Vec<_>>(),
+            ds.images.len(),
+            ds.dim,
+            self.a_bits,
+        )
+        .0;
+        for (i, &label) in ds.labels.iter().enumerate() {
+            let f = self.features(x.row(i), &ExecMode::Exact, &mut stats)?;
+            for (s, &v) in sums[label].iter_mut().zip(&f) {
+                *s += v as f64;
+            }
+            counts[label] += 1;
+        }
+        let mut w = vec![0f32; feat_dim * ds.classes];
+        for c in 0..ds.classes {
+            let n = counts[c].max(1) as f64;
+            let mean_all: f64 = sums[c].iter().sum::<f64>() / (feat_dim as f64 * n);
+            for k in 0..feat_dim {
+                w[k * ds.classes + c] = (sums[c][k] / n - mean_all) as f32;
+            }
+        }
+        let (head, _) = DenseLayer::from_f32(
+            &w,
+            feat_dim,
+            ds.classes,
+            &vec![0.0; ds.classes],
+            w_bits,
+            false,
+        )?;
+        self.head = head;
+        Ok(())
+    }
+
+    /// Calibrate the conv requantization shift on a sample of images.
+    pub fn calibrate(&mut self, ds: &Dataset, n: usize) -> Result<()> {
+        let imgs: Vec<f32> =
+            ds.images.iter().take(n).flatten().copied().collect();
+        let x = quantize::quantize_unsigned(&imgs, n.min(ds.images.len()), ds.dim, self.a_bits).0;
+        let mut worst = 0;
+        for i in 0..x.rows {
+            let patches = self.im2col(x.row(i));
+            let acc = patches.matmul_exact(&self.conv.weights)?;
+            worst = worst.max(quantize::calibrate_shift(&acc, self.a_bits));
+        }
+        self.conv.shift = worst;
+        Ok(())
+    }
+
+    /// Classify one quantized image.
+    pub fn classify_one(
+        &self,
+        image_q: &[i32],
+        mode: &ExecMode,
+        stats: &mut DspOpStats,
+    ) -> Result<usize> {
+        let feats = self.features(image_q, mode, stats)?;
+        // Requantize features into the activation range for the head.
+        let top = (1i32 << self.a_bits) - 1;
+        let hi = feats.iter().copied().max().unwrap_or(1).max(1);
+        let mut shift = 0u32;
+        while (hi >> shift) > top {
+            shift += 1;
+        }
+        let fq = MatI32::from_fn(1, feats.len(), |_, c| (feats[c] >> shift).clamp(0, top));
+        let logits = self.head.forward(&fq, mode, self.a_bits, stats)?;
+        Ok(logits
+            .row(0)
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, &v)| v)
+            .map(|(i, _)| i)
+            .unwrap_or(0))
+    }
+
+    /// Accuracy over a dataset.
+    pub fn accuracy(&self, ds: &Dataset, mode: &ExecMode) -> Result<(f64, DspOpStats)> {
+        let mut stats = DspOpStats::default();
+        let x = quantize::quantize_unsigned(
+            &ds.images.iter().flatten().copied().collect::<Vec<_>>(),
+            ds.images.len(),
+            ds.dim,
+            self.a_bits,
+        )
+        .0;
+        let mut correct = 0;
+        for (i, &label) in ds.labels.iter().enumerate() {
+            if self.classify_one(x.row(i), mode, &mut stats)? == label {
+                correct += 1;
+            }
+        }
+        Ok((correct as f64 / ds.labels.len().max(1) as f64, stats))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::correct::Correction;
+    use crate::nn::data;
+    use crate::packing::PackingConfig;
+
+    fn engine() -> GemmEngine {
+        GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap()
+    }
+
+    #[test]
+    fn centroid_mlp_classifies_synthetic_data() {
+        let ds = data::synthetic(200, 4, 64, 0.15, 21);
+        let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+        let (acc_exact, _) = mlp.accuracy(&ds, &ExecMode::Exact).unwrap();
+        assert!(acc_exact > 0.9, "exact accuracy {acc_exact}");
+    }
+
+    #[test]
+    fn packed_mlp_with_full_correction_matches_exact() {
+        let ds = data::synthetic(100, 4, 64, 0.15, 22);
+        let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+        let x = mlp.quantize_batch(&ds.images).unwrap();
+        let (exact, _) = mlp.forward(&x, &ExecMode::Exact).unwrap();
+        let (packed, stats) = mlp.forward(&x, &ExecMode::Packed(engine())).unwrap();
+        assert_eq!(exact, packed, "full correction is bit-exact end to end");
+        assert!(stats.utilization() > 3.9);
+    }
+
+    #[test]
+    fn packed_mlp_raw_int4_accuracy_stays_close() {
+        let ds = data::synthetic(150, 4, 64, 0.15, 23);
+        let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+        let raw = GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap();
+        let (acc_exact, _) = mlp.accuracy(&ds, &ExecMode::Exact).unwrap();
+        let (acc_raw, _) = mlp.accuracy(&ds, &ExecMode::Packed(raw)).unwrap();
+        // The floor bias shifts logits by up to K/8; classification is
+        // robust to it on this margin.
+        assert!((acc_exact - acc_raw).abs() < 0.1, "{acc_exact} vs {acc_raw}");
+    }
+
+    #[test]
+    fn two_layer_mlp_shapes() {
+        let mut mlp = QuantMlp::two_layer(
+            &vec![0.1; 64 * 16],
+            &vec![0.0; 16],
+            &vec![0.1; 16 * 4],
+            &vec![0.0; 4],
+            (64, 16, 4),
+            4,
+            4,
+        )
+        .unwrap();
+        let ds = data::synthetic(10, 4, 64, 0.2, 5);
+        let x = mlp.quantize_batch(&ds.images).unwrap();
+        mlp.calibrate(&x).unwrap();
+        let (logits, _) = mlp.forward(&x, &ExecMode::Exact).unwrap();
+        assert_eq!((logits.rows, logits.cols), (10, 4));
+        // Hidden activations were requantized into range by the shift.
+        assert!(mlp.layers[0].shift > 0);
+    }
+
+    #[test]
+    fn cnn_classifies_and_runs_packed() {
+        let ds = data::synthetic(80, 3, 64, 0.12, 31);
+        let mut cnn = QuantCnn::new(&ds, 4, 4, 4, 17).unwrap();
+        cnn.calibrate(&ds, 16).unwrap();
+        let (acc_exact, _) = cnn.accuracy(&ds, &ExecMode::Exact).unwrap();
+        assert!(acc_exact > 0.7, "exact CNN accuracy {acc_exact}");
+        let (acc_packed, stats) = cnn.accuracy(&ds, &ExecMode::Packed(engine())).unwrap();
+        assert!(stats.utilization() > 3.9);
+        assert!((acc_exact - acc_packed).abs() < 0.1, "{acc_exact} vs {acc_packed}");
+    }
+}

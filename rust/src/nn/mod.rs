@@ -1,0 +1,26 @@
+//! Quantized neural-network layers over the packed GEMM engine, plus a
+//! spiking (SNN) layer over addition packing — the two application
+//! domains the paper motivates (wp521 CNNs in §I–VI, SNN accelerators in
+//! §VII).
+//!
+//! * [`quantize`] — scale-based uniform quantization to the packing
+//!   operand ranges (unsigned activations, signed weights).
+//! * [`QuantMlp`] / [`QuantCnn`] — small quantized models whose matmuls
+//!   run either exactly (reference) or on a [`crate::gemm::GemmEngine`]
+//!   with any packing configuration + correction scheme.
+//! * [`SpikingDense`] — integrate-and-fire layer whose membrane
+//!   accumulators are packed into 48-bit DSP ALUs
+//!   ([`crate::addpack::PackedAccumulator`]); since spikes are binary,
+//!   the weighted sum is a pure addition stream, which is exactly the
+//!   §VII workload.
+//! * [`data`] — deterministic synthetic classification datasets for the
+//!   end-to-end examples and tests.
+
+pub mod data;
+mod mlp;
+pub mod quantize;
+mod snn;
+pub mod weights;
+
+pub use mlp::{DenseLayer, ExecMode, QuantCnn, QuantMlp};
+pub use snn::{SnnStats, SpikingDense};

@@ -1,0 +1,89 @@
+//! Uniform quantization helpers targeting the packing operand ranges.
+
+use crate::gemm::MatI32;
+
+/// Quantize a float matrix to unsigned `bits`-bit integers (activations:
+/// the `a` side of the packing). Values are clipped to `[0, max]` after
+/// scaling; the scale maps `hi` to the top code.
+pub fn quantize_unsigned(data: &[f32], rows: usize, cols: usize, bits: u32) -> (MatI32, f32) {
+    let top = ((1u32 << bits) - 1) as f32;
+    let hi = data.iter().cloned().fold(0.0f32, f32::max).max(1e-6);
+    let scale = top / hi;
+    let m = MatI32::from_fn(rows, cols, |r, c| {
+        let v = (data[r * cols + c].max(0.0) * scale).round();
+        v.clamp(0.0, top) as i32
+    });
+    (m, scale)
+}
+
+/// Quantize a float matrix to signed `bits`-bit integers, symmetric
+/// (weights: the `w` side of the packing).
+pub fn quantize_signed(data: &[f32], rows: usize, cols: usize, bits: u32) -> (MatI32, f32) {
+    let top = ((1i32 << (bits - 1)) - 1) as f32; // e.g. 7 for 4 bits
+    let hi = data.iter().map(|v| v.abs()).fold(0.0f32, f32::max).max(1e-6);
+    let scale = top / hi;
+    let lo = -(1i32 << (bits - 1));
+    let m = MatI32::from_fn(rows, cols, |r, c| {
+        ((data[r * cols + c] * scale).round() as i32).clamp(lo, lo.abs() - 1)
+    });
+    (m, scale)
+}
+
+/// Requantize an i32 accumulator matrix back into the unsigned activation
+/// range via a right shift (hardware-friendly power-of-two rescale) with
+/// ReLU folded in (clamp at 0).
+pub fn requantize_relu(acc: &MatI32, shift: u32, bits: u32) -> MatI32 {
+    let top = ((1i32 << bits) - 1) as i32;
+    MatI32::from_fn(acc.rows, acc.cols, |r, c| (acc.get(r, c) >> shift).clamp(0, top))
+}
+
+/// Choose the smallest shift that brings the matrix maximum into the
+/// unsigned `bits` range (used layer-by-layer at model build time).
+pub fn calibrate_shift(acc: &MatI32, bits: u32) -> u32 {
+    let (_, hi) = acc.min_max();
+    let top = (1i32 << bits) - 1;
+    let mut shift = 0;
+    while (hi >> shift) > top {
+        shift += 1;
+    }
+    shift
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unsigned_roundtrip() {
+        let data = vec![0.0, 0.5, 1.0, 2.0];
+        let (q, scale) = quantize_unsigned(&data, 1, 4, 4);
+        assert_eq!(q.data(), &[0, 4, 8, 15]);
+        assert!((scale - 7.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn signed_symmetric() {
+        let data = vec![-2.0, -1.0, 0.0, 1.0, 2.0, 0.29];
+        let (q, _) = quantize_signed(&data, 1, 6, 4);
+        assert_eq!(q.data(), &[-7, -4, 0, 4, 7, 1]);
+        // Negative clipping respects two's complement floor (-8 exists but
+        // symmetric quantization targets ±7).
+        assert!(q.min_max().0 >= -8);
+    }
+
+    #[test]
+    fn requantize_clamps_and_relus() {
+        let acc = MatI32::from_vec(1, 4, vec![-100, 10, 100, 4000]).unwrap();
+        let out = requantize_relu(&acc, 4, 4);
+        assert_eq!(out.data(), &[0, 0, 6, 15]);
+    }
+
+    #[test]
+    fn calibration_fits_range() {
+        let acc = MatI32::from_vec(1, 3, vec![0, 900, 3000]).unwrap();
+        let s = calibrate_shift(&acc, 4);
+        let out = requantize_relu(&acc, s, 4);
+        assert!(out.min_max().1 <= 15);
+        assert!(s > 0 && (3000 >> (s - 1)) > 15, "smallest sufficient shift");
+    }
+}

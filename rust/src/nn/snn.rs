@@ -1,0 +1,265 @@
+//! Spiking (integrate-and-fire) dense layer over packed addition (§VII).
+//!
+//! SNN accelerators are adder-bound: per timestep each neuron adds the
+//! weights of its spiking inputs to a membrane potential. This layer packs
+//! several neurons' membranes into single 48-bit DSP accumulators via
+//! [`crate::addpack`], with or without guard bits, and tracks an exact
+//! shadow to quantify the carry-leak approximation.
+
+use crate::addpack::{AdditionPacking, PackedAccumulator};
+use crate::{Error, Result};
+
+/// Spike statistics from a run.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SnnStats {
+    /// Spikes emitted by the packed (approximate) membranes.
+    pub packed_spikes: u64,
+    /// Spikes emitted by the exact shadow membranes.
+    pub exact_spikes: u64,
+    /// Timesteps where packed and exact spike vectors disagreed.
+    pub divergent_steps: u64,
+    /// Total timesteps simulated.
+    pub steps: u64,
+}
+
+impl SnnStats {
+    /// Fraction of timesteps with identical spike output.
+    pub fn agreement(&self) -> f64 {
+        if self.steps == 0 {
+            1.0
+        } else {
+            1.0 - self.divergent_steps as f64 / self.steps as f64
+        }
+    }
+}
+
+/// An integrate-and-fire layer of `n` neurons with signed integer weights,
+/// membranes packed `lanes_per_dsp` to a DSP.
+#[derive(Debug)]
+pub struct SpikingDense {
+    /// Weights: `weights[j][i]` = contribution of input i to neuron j.
+    weights: Vec<Vec<i32>>,
+    /// Firing threshold (membrane units).
+    threshold: i64,
+    /// Packed membrane banks (one [`PackedAccumulator`] per DSP).
+    banks: Vec<PackedAccumulator>,
+    /// Exact membranes (oracle).
+    exact: Vec<i64>,
+    /// Membrane lane width in bits.
+    lane_width: u32,
+    /// Lanes per DSP bank.
+    lanes_per_dsp: usize,
+    /// Weight offset: membranes store `m + bias` per step so lanes stay
+    /// unsigned (weights are signed; the offset keeps increments ≥ 0).
+    step_bias: i64,
+}
+
+impl SpikingDense {
+    /// Build a layer. `lane_width` bounds the membrane range; neurons are
+    /// packed `lanes_per_dsp` per 48-bit accumulator with `guard_bits`
+    /// between lanes (0 = the approximate §VII scheme).
+    pub fn new(
+        weights: Vec<Vec<i32>>,
+        threshold: i64,
+        lane_width: u32,
+        lanes_per_dsp: usize,
+        guard_bits: u32,
+    ) -> Result<Self> {
+        if weights.is_empty() {
+            return Err(Error::InvalidConfig("no neurons".into()));
+        }
+        let n = weights.len();
+        // Per-step increment = Σ_i w_ji s_i; bias by the most negative
+        // possible single-step sum so packed lane increments are unsigned.
+        let worst_neg: i64 = weights
+            .iter()
+            .map(|row| row.iter().map(|&w| (w.min(0)) as i64).sum::<i64>())
+            .min()
+            .unwrap_or(0);
+        let step_bias = -worst_neg;
+        let n_banks = n.div_ceil(lanes_per_dsp);
+        let packing = AdditionPacking::uniform(lanes_per_dsp, lane_width, guard_bits)?;
+        let banks = (0..n_banks).map(|_| PackedAccumulator::new(packing.clone())).collect();
+        Ok(SpikingDense {
+            weights,
+            threshold,
+            banks,
+            exact: vec![0; n],
+            lane_width,
+            lanes_per_dsp,
+            step_bias,
+        })
+    }
+
+    /// Number of neurons.
+    pub fn neurons(&self) -> usize {
+        self.weights.len()
+    }
+
+    /// Number of DSP accumulators used (the §VII resource win: ⌈n/lanes⌉
+    /// DSPs instead of n fabric adders).
+    pub fn dsps_used(&self) -> usize {
+        self.banks.len()
+    }
+
+    /// Reset all membranes.
+    pub fn reset(&mut self) {
+        for b in &mut self.banks {
+            b.reset();
+        }
+        self.exact.iter_mut().for_each(|m| *m = 0);
+    }
+
+    /// Advance one timestep with binary input `spikes_in`; returns the
+    /// packed-membrane output spike vector and updates stats.
+    pub fn step(&mut self, spikes_in: &[u8], stats: &mut SnnStats) -> Result<Vec<u8>> {
+        let n = self.neurons();
+        // Per-neuron increment (plus bias to stay unsigned).
+        let mut incs = vec![0i64; n];
+        for (j, row) in self.weights.iter().enumerate() {
+            let mut acc = 0i64;
+            for (i, &s) in spikes_in.iter().enumerate() {
+                if s != 0 {
+                    acc += row[i] as i64;
+                }
+            }
+            incs[j] = acc + self.step_bias;
+            debug_assert!(incs[j] >= 0);
+        }
+        // Packed accumulate per bank.
+        let lane_mask = (1i64 << self.lane_width) - 1;
+        let mut out = vec![0u8; n];
+        let mut exact_out = vec![0u8; n];
+        for (bi, bank) in self.banks.iter_mut().enumerate() {
+            let lo = bi * self.lanes_per_dsp;
+            let hi = ((bi + 1) * self.lanes_per_dsp).min(n);
+            let mut inc_vec = vec![0i128; self.lanes_per_dsp];
+            for (lane, j) in (lo..hi).enumerate() {
+                inc_vec[lane] = (incs[j] & lane_mask) as i128;
+            }
+            let vals = bank.accumulate(&inc_vec)?;
+            for (lane, j) in (lo..hi).enumerate() {
+                if vals[lane] as i64 >= self.threshold {
+                    out[j] = 1;
+                }
+            }
+        }
+        // Exact shadow (unpacked membranes, same wrap semantics).
+        for j in 0..n {
+            self.exact[j] = (self.exact[j] + incs[j]) & lane_mask;
+            if self.exact[j] >= self.threshold {
+                exact_out[j] = 1;
+            }
+        }
+        // Fire-and-reset on both paths. Reset is a membrane-register
+        // reload (subtract the threshold), not an ALU pass — a packed add
+        // of the two's complement would push a carry into the guard bit on
+        // every fire and defeat the guard (see addpack::set_lane).
+        for (bi, bank) in self.banks.iter_mut().enumerate() {
+            let lo = bi * self.lanes_per_dsp;
+            let hi = ((bi + 1) * self.lanes_per_dsp).min(n);
+            let vals = bank.values();
+            for (lane, j) in (lo..hi).enumerate() {
+                if out[j] != 0 {
+                    let m = (vals[lane] as i64 - self.threshold).max(0);
+                    bank.set_lane(lane, m as i128)?;
+                }
+            }
+        }
+        for j in 0..n {
+            if exact_out[j] != 0 {
+                self.exact[j] = (self.exact[j] - self.threshold) & lane_mask;
+            }
+        }
+        stats.steps += 1;
+        stats.packed_spikes += out.iter().map(|&s| s as u64).sum::<u64>();
+        stats.exact_spikes += exact_out.iter().map(|&s| s as u64).sum::<u64>();
+        if out != exact_out {
+            stats.divergent_steps += 1;
+        }
+        Ok(out)
+    }
+
+    /// Run a whole spike train; returns per-neuron packed spike counts.
+    pub fn run(&mut self, train: &[Vec<u8>], stats: &mut SnnStats) -> Result<Vec<u64>> {
+        let mut counts = vec![0u64; self.neurons()];
+        for spikes in train {
+            let out = self.step(spikes, stats)?;
+            for (c, s) in counts.iter_mut().zip(&out) {
+                *c += *s as u64;
+            }
+        }
+        Ok(counts)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn random_weights(n: usize, inputs: usize, seed: u64) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..inputs).map(|_| rng.range_i64(-3, 4) as i32).collect())
+            .collect()
+    }
+
+    fn random_train(steps: usize, inputs: usize, rate: f64, seed: u64) -> Vec<Vec<u8>> {
+        let mut rng = Rng::new(seed);
+        (0..steps)
+            .map(|_| (0..inputs).map(|_| u8::from(rng.chance(rate))).collect())
+            .collect()
+    }
+
+    #[test]
+    fn guarded_snn_matches_exact() {
+        // 4 lanes of 11 bits + guards = 47 bits: exact by Fig. 8.
+        let mut layer =
+            SpikingDense::new(random_weights(8, 16, 3), 900, 11, 4, 1).unwrap();
+        let mut stats = SnnStats::default();
+        let train = random_train(200, 16, 0.3, 5);
+        layer.run(&train, &mut stats).unwrap();
+        assert_eq!(stats.divergent_steps, 0, "guarded lanes must agree");
+        assert_eq!(stats.packed_spikes, stats.exact_spikes);
+        assert!(stats.packed_spikes > 0, "the network should actually spike");
+    }
+
+    #[test]
+    fn unguarded_snn_stays_close() {
+        // 5 lanes of 9 bits, no guards — the Table III configuration.
+        let mut layer =
+            SpikingDense::new(random_weights(10, 16, 7), 220, 9, 5, 0).unwrap();
+        let mut stats = SnnStats::default();
+        let train = random_train(300, 16, 0.3, 11);
+        layer.run(&train, &mut stats).unwrap();
+        assert!(stats.packed_spikes > 0);
+        // Carry leaks perturb the LSB only: spike counts stay within a few
+        // percent of exact.
+        let diff = (stats.packed_spikes as f64 - stats.exact_spikes as f64).abs()
+            / stats.exact_spikes.max(1) as f64;
+        assert!(diff < 0.05, "spike count divergence {diff}");
+        assert!(stats.agreement() > 0.8, "agreement {}", stats.agreement());
+    }
+
+    #[test]
+    fn dsp_budget_is_ceil() {
+        let layer = SpikingDense::new(random_weights(11, 4, 1), 100, 9, 5, 0).unwrap();
+        assert_eq!(layer.dsps_used(), 3);
+        assert_eq!(layer.neurons(), 11);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut layer = SpikingDense::new(random_weights(4, 8, 9), 50, 10, 4, 1).unwrap();
+        let mut stats = SnnStats::default();
+        layer.run(&random_train(50, 8, 0.5, 2), &mut stats).unwrap();
+        layer.reset();
+        let mut s2 = SnnStats::default();
+        let c1 = layer.run(&random_train(50, 8, 0.5, 2), &mut s2).unwrap();
+        layer.reset();
+        let mut s3 = SnnStats::default();
+        let c2 = layer.run(&random_train(50, 8, 0.5, 2), &mut s3).unwrap();
+        assert_eq!(c1, c2, "reset makes runs reproducible");
+    }
+}

@@ -1,0 +1,126 @@
+//! Loader for the build-time weight export (`artifacts/mlp_weights.txt`,
+//! written by `python/compile/aot.py::export_weights`).
+//!
+//! Format: repeated blocks of `name rows cols` followed by `rows` lines of
+//! `cols` whitespace-separated floats.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A named float matrix from the weight file.
+#[derive(Debug, Clone)]
+pub struct WeightMatrix {
+    /// Rows.
+    pub rows: usize,
+    /// Columns.
+    pub cols: usize,
+    /// Row-major data.
+    pub data: Vec<f32>,
+}
+
+/// Parse a weight export file.
+pub fn load_weights(path: impl AsRef<Path>) -> Result<HashMap<String, WeightMatrix>> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .map_err(|e| Error::Config(format!("read {:?}: {e}", path.as_ref())))?;
+    parse_weights(&text)
+}
+
+/// Parse the weight format from a string.
+pub fn parse_weights(text: &str) -> Result<HashMap<String, WeightMatrix>> {
+    let mut out = HashMap::new();
+    let mut lines = text.lines().peekable();
+    while let Some(header) = lines.next() {
+        let header = header.trim();
+        if header.is_empty() {
+            continue;
+        }
+        let parts: Vec<&str> = header.split_whitespace().collect();
+        if parts.len() != 3 {
+            return Err(Error::Config(format!("bad weight header {header:?}")));
+        }
+        let name = parts[0].to_string();
+        let rows: usize =
+            parts[1].parse().map_err(|_| Error::Config(format!("bad rows in {header:?}")))?;
+        let cols: usize =
+            parts[2].parse().map_err(|_| Error::Config(format!("bad cols in {header:?}")))?;
+        let mut data = Vec::with_capacity(rows * cols);
+        for _ in 0..rows {
+            let row = lines
+                .next()
+                .ok_or_else(|| Error::Config(format!("truncated matrix {name}")))?;
+            for tok in row.split_whitespace() {
+                data.push(
+                    tok.parse::<f32>()
+                        .map_err(|_| Error::Config(format!("bad float {tok:?} in {name}")))?,
+                );
+            }
+        }
+        if data.len() != rows * cols {
+            return Err(Error::Config(format!(
+                "{name}: expected {} values, got {}",
+                rows * cols,
+                data.len()
+            )));
+        }
+        out.insert(name, WeightMatrix { rows, cols, data });
+    }
+    Ok(out)
+}
+
+/// Build the two-layer [`super::QuantMlp`] from an exported weight file.
+pub fn mlp_from_export(path: impl AsRef<Path>) -> Result<super::QuantMlp> {
+    let w = load_weights(path)?;
+    let get = |name: &str| {
+        w.get(name).ok_or_else(|| Error::Config(format!("missing matrix {name}")))
+    };
+    let w1 = get("w1")?;
+    let b1 = get("b1")?;
+    let w2 = get("w2")?;
+    let b2 = get("b2")?;
+    let shift1 = get("shift1")?.data[0] as u32;
+    let mut mlp = super::QuantMlp::two_layer(
+        &w1.data,
+        &b1.data,
+        &w2.data,
+        &b2.data,
+        (w1.rows, w1.cols, w2.cols),
+        4,
+        4,
+    )?;
+    mlp.layers[0].shift = shift1;
+    Ok(mlp)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_roundtrip() {
+        let text = "w1 2 3\n1 2 3\n4 5 6\nb1 1 3\n0.5 -0.5 0\n";
+        let w = parse_weights(text).unwrap();
+        assert_eq!(w["w1"].data, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!((w["b1"].rows, w["b1"].cols), (1, 3));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_weights("w1 2\n1 2\n").is_err());
+        assert!(parse_weights("w1 2 2\n1 2\n").is_err());
+        assert!(parse_weights("w1 1 2\n1 x\n").is_err());
+    }
+
+    #[test]
+    fn loads_built_artifact_if_present() {
+        let Some(path) = crate::runtime::PjrtRuntime::artifact_path("mlp_weights.txt") else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let mlp = mlp_from_export(path).unwrap();
+        assert_eq!(mlp.layers.len(), 2);
+        assert_eq!(mlp.layers[0].weights.rows, 64);
+        assert_eq!(mlp.layers[1].weights.cols, 4);
+        assert!(mlp.layers[0].shift > 0);
+    }
+}

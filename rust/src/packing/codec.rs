@@ -1,0 +1,333 @@
+//! Packing and extraction codecs: operands → DSP port words → results.
+
+use super::config::PackingConfig;
+use crate::bits::{field_signed, field_unsigned, wrap_signed};
+use crate::dsp48::DspInputs;
+use crate::{Error, Result};
+
+/// The DSP port words produced by packing one operand-vector pair.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackedOperands {
+    /// B-port word (the packed `a` vector).
+    pub b: i128,
+    /// A-port word (the lowest-offset `w` operand, sign-extended — §III).
+    pub a: i128,
+    /// D-port word (the remaining `w` operands at their offsets).
+    pub d: i128,
+}
+
+impl PackedOperands {
+    /// Assemble the DSP input bundle with an optional C-port word (used by
+    /// the approximate correction scheme) and cascade input.
+    pub fn to_inputs(self, c: i128, pcin: i128) -> DspInputs {
+        DspInputs { a: self.a, b: self.b, c, d: self.d, pcin, carry_in: 0 }
+    }
+}
+
+/// Stateless pack/extract codec for one [`PackingConfig`].
+#[derive(Debug, Clone)]
+pub struct Packer {
+    cfg: PackingConfig,
+}
+
+impl Packer {
+    /// New codec for the given configuration.
+    pub fn new(cfg: PackingConfig) -> Self {
+        Packer { cfg }
+    }
+
+    /// The configuration this codec serves.
+    pub fn config(&self) -> &PackingConfig {
+        &self.cfg
+    }
+
+    /// Range-check one operand vector against its specs.
+    fn check(vals: &[i128], specs: &[super::OperandSpec], label: &str) -> Result<()> {
+        if vals.len() != specs.len() {
+            return Err(Error::OperandRange(format!(
+                "{label}: got {} values for {} fields",
+                vals.len(),
+                specs.len()
+            )));
+        }
+        for (k, (&v, s)) in vals.iter().zip(specs).enumerate() {
+            let (lo, hi) = s.range();
+            if v < lo || v > hi {
+                return Err(Error::OperandRange(format!(
+                    "{label}[{k}] = {v} outside [{lo}, {hi}]"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pack the `a` vector into the B-port word:
+    /// `Σ_i a_i 2^{aoff_i}` (each field zero-extended — `a` is unsigned).
+    pub fn pack_a(&self, a: &[i128]) -> Result<i128> {
+        Self::check(a, &self.cfg.a, "a")?;
+        Ok(self
+            .cfg
+            .a
+            .iter()
+            .zip(a)
+            .map(|(s, &v)| crate::bits::wrap_unsigned(v, s.width) << s.offset)
+            .sum())
+    }
+
+    /// Pack the `w` vector into the (A, D) pre-adder pair. The mathematical
+    /// value fed to the multiplier is `Σ_j w_j 2^{woff_j}`; in hardware the
+    /// lowest-offset (sign-extended) operand rides the A port and the rest
+    /// ride D, the pre-adder summing them (§III).
+    pub fn pack_w(&self, w: &[i128]) -> Result<(i128, i128)> {
+        Self::check(w, &self.cfg.w, "w")?;
+        let mut lowest_idx = 0;
+        for (j, s) in self.cfg.w.iter().enumerate() {
+            if s.offset < self.cfg.w[lowest_idx].offset {
+                lowest_idx = j;
+            }
+        }
+        let a_port = w[lowest_idx] << self.cfg.w[lowest_idx].offset;
+        let d_port: i128 = self
+            .cfg
+            .w
+            .iter()
+            .zip(w)
+            .enumerate()
+            .filter(|(j, _)| *j != lowest_idx)
+            .map(|(_, (s, &v))| v << s.offset)
+            .sum();
+        Ok((a_port, d_port))
+    }
+
+    /// Pack both vectors into the DSP port words.
+    pub fn pack(&self, a: &[i128], w: &[i128]) -> Result<PackedOperands> {
+        let b = self.pack_a(a)?;
+        let (a_port, d) = self.pack_w(w)?;
+        Ok(PackedOperands { b, a: a_port, d })
+    }
+
+    /// The mathematical value of the packed `w` word (what the multiplier
+    /// actually sees after the pre-adder).
+    pub fn packed_w_value(&self, w: &[i128]) -> Result<i128> {
+        let (a, d) = self.pack_w(w)?;
+        Ok(wrap_signed(a + d, 27.max(crate::bits::signed_width(a + d))))
+    }
+
+    /// Extract all result fields from a P word, in result (offset) order.
+    /// This is the paper's plain shift-and-truncate extraction — the one
+    /// that floors toward −∞ and causes the §V error.
+    pub fn extract(&self, p: i128) -> Vec<i128> {
+        self.extract_wide(p, 0)
+    }
+
+    /// Extraction with each field widened by `extra` bits into its padding
+    /// (used when draining accumulated results: after `2^δ` cascade steps
+    /// the per-result sums legitimately occupy `width + δ` bits, §III).
+    pub fn extract_wide(&self, p: i128, extra: u32) -> Vec<i128> {
+        let mut out = vec![0; self.cfg.results.len()];
+        self.extract_wide_into(p, extra, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Packer::extract_wide`] (hot path).
+    #[inline]
+    pub fn extract_wide_into(&self, p: i128, extra: u32, out: &mut [i128]) {
+        for (o, r) in out.iter_mut().zip(&self.cfg.results) {
+            *o = if r.signed {
+                field_signed(p, r.offset, r.width + extra)
+            } else {
+                field_unsigned(p, r.offset, r.width + extra)
+            };
+        }
+    }
+
+    /// Check-free B-port word (hot path; caller guarantees ranges).
+    #[inline]
+    pub fn pack_a_unchecked(&self, a: &[i128]) -> i128 {
+        let mut b = 0i128;
+        for (s, &v) in self.cfg.a.iter().zip(a) {
+            b += crate::bits::wrap_unsigned(v, s.width) << s.offset;
+        }
+        b
+    }
+
+    /// Check-free packed-w value (the multiplier-side sum `Σ w_j 2^off`).
+    #[inline]
+    pub fn pack_w_value_unchecked(&self, w: &[i128]) -> i128 {
+        let mut sum = 0i128;
+        for (s, &v) in self.cfg.w.iter().zip(w) {
+            sum += v << s.offset;
+        }
+        sum
+    }
+
+    /// Allocation-free, check-free packing for callers that guarantee
+    /// operand ranges (the exhaustive/sampled sweeps and the GEMM inner
+    /// loop, which range-check whole matrices up front).
+    #[inline]
+    pub fn pack_unchecked(&self, a: &[i128], w: &[i128]) -> PackedOperands {
+        debug_assert_eq!(a.len(), self.cfg.a.len());
+        debug_assert_eq!(w.len(), self.cfg.w.len());
+        let mut b = 0i128;
+        for (s, &v) in self.cfg.a.iter().zip(a) {
+            debug_assert!({
+                let (lo, hi) = s.range();
+                v >= lo && v <= hi
+            });
+            b += crate::bits::wrap_unsigned(v, s.width) << s.offset;
+        }
+        // All w fields ride the sum A + D; splitting is irrelevant to the
+        // product value, so put everything on D and sign on A = 0 except
+        // the lowest (matches pack_w semantics numerically).
+        let mut wsum = 0i128;
+        for (s, &v) in self.cfg.w.iter().zip(w) {
+            debug_assert!({
+                let (lo, hi) = s.range();
+                v >= lo && v <= hi
+            });
+            wsum += v << s.offset;
+        }
+        PackedOperands { b, a: wsum, d: 0 }
+    }
+
+    /// Extract with **round-half-up** (§V-A full correction): add the bit
+    /// just below each field before truncating. Exact for all valid
+    /// operand values when δ ≥ 0.
+    pub fn extract_round_half_up(&self, p: i128) -> Vec<i128> {
+        self.extract_round_half_up_wide(p, 0)
+    }
+
+    /// Round-half-up extraction with fields widened by `extra` bits (the
+    /// accumulated-drain variant of the full correction).
+    pub fn extract_round_half_up_wide(&self, p: i128, extra: u32) -> Vec<i128> {
+        let mut out = vec![0; self.cfg.results.len()];
+        self.extract_round_half_up_wide_into(p, extra, &mut out);
+        out
+    }
+
+    /// Allocation-free variant of [`Packer::extract_round_half_up_wide`].
+    #[inline]
+    pub fn extract_round_half_up_wide_into(&self, p: i128, extra: u32, out: &mut [i128]) {
+        for (o, r) in out.iter_mut().zip(&self.cfg.results) {
+            let width = r.width + extra;
+            *o = if r.offset == 0 {
+                // No bits below the first result: plain extraction.
+                if r.signed {
+                    field_signed(p, 0, width)
+                } else {
+                    field_unsigned(p, 0, width)
+                }
+            } else {
+                let rounded = (p >> (r.offset - 1)) + 1;
+                if r.signed {
+                    field_signed(rounded, 1, width)
+                } else {
+                    field_unsigned(rounded, 1, width)
+                }
+            };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::PackingConfig;
+    use crate::util::Rng;
+
+    #[test]
+    fn int4_packs_the_paper_example() {
+        // Eqn. (3): (a1·2^11 + a0) · (w1·2^22 + w0).
+        let p = Packer::new(PackingConfig::int4());
+        let packed = p.pack(&[3, 10], &[-7, -4]).unwrap();
+        assert_eq!(packed.b, (10 << 11) + 3);
+        assert_eq!(packed.a, -7);
+        assert_eq!(packed.d, -4i128 << 22);
+    }
+
+    #[test]
+    fn rejects_out_of_range() {
+        let p = Packer::new(PackingConfig::int4());
+        assert!(p.pack(&[16, 0], &[0, 0]).is_err()); // a is u4
+        assert!(p.pack(&[0, 0], &[8, 0]).is_err()); // w is s4
+        assert!(p.pack(&[0, 0], &[-9, 0]).is_err());
+        assert!(p.pack(&[0], &[0, 0]).is_err()); // arity
+    }
+
+    #[test]
+    fn extract_is_floor() {
+        let p = Packer::new(PackingConfig::int4());
+        // P for a=[3,0], w=[-7,0]: r0 = -21, others 0.
+        // r1's field sees the sign extension of r0 -> extracts -1.
+        let packed = p.pack(&[3, 0], &[-7, 0]).unwrap();
+        let prod = packed.b * (packed.a + packed.d);
+        let r = p.extract(prod);
+        assert_eq!(r[0], -21);
+        assert_eq!(r[1], -1); // the §V floor error
+    }
+
+    #[test]
+    fn round_half_up_fixes_floor() {
+        let p = Packer::new(PackingConfig::int4());
+        let packed = p.pack(&[3, 0], &[-7, 0]).unwrap();
+        let prod = packed.b * (packed.a + packed.d);
+        let r = p.extract_round_half_up(prod);
+        assert_eq!(r, vec![-21, 0, 0, 0]);
+    }
+
+    /// pack -> wide multiply -> round-half-up extract is exact for ALL
+    /// valid INT4 operands (the §V-A claim), exhaustively; and plain
+    /// extraction errs by at most 1, always toward −∞ (§V).
+    #[test]
+    fn prop_int4_exhaustive_rhu_and_floor() {
+        let p = Packer::new(PackingConfig::int4());
+        for a0 in 0i128..16 {
+            for a1 in 0i128..16 {
+                for w0 in -8i128..8 {
+                    for w1 in -8i128..8 {
+                        let packed = p.pack(&[a0, a1], &[w0, w1]).unwrap();
+                        let prod = packed.b * (packed.a + packed.d);
+                        let exp = p.config().expected(&[a0, a1], &[w0, w1]);
+                        assert_eq!(p.extract_round_half_up(prod), exp);
+                        for (g, e) in p.extract(prod).iter().zip(&exp) {
+                            let err = g - e;
+                            assert!(err == 0 || err == -1, "err = {err}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The generalized INT-N equation (Eqn. 4) holds for arbitrary
+    /// generated configs with non-negative padding.
+    #[test]
+    fn prop_intn_rhu_exact() {
+        let mut rng = Rng::new(0x1147);
+        for n_a in 1usize..4 {
+            for aw in 2u32..5 {
+                for ww in 2u32..5 {
+                    for delta in 0i32..3 {
+                        let cfg =
+                            PackingConfig::generate("gen", n_a, aw, 2, ww, delta).unwrap();
+                        let p = Packer::new(cfg);
+                        for _ in 0..50 {
+                            let a: Vec<i128> = p.config().a.iter()
+                                .map(|s| rng.range_i128(s.range().0, s.range().1))
+                                .collect();
+                            let w: Vec<i128> = p.config().w.iter()
+                                .map(|s| rng.range_i128(s.range().0, s.range().1))
+                                .collect();
+                            let packed = p.pack(&a, &w).unwrap();
+                            let prod = packed.b * (packed.a + packed.d);
+                            assert_eq!(
+                                p.extract_round_half_up(prod),
+                                p.config().expected(&a, &w)
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,456 @@
+//! Packing configuration records and generators (§IV).
+
+use crate::dsp48::DspGeometry;
+use crate::{Error, Result};
+
+/// One packed operand: a `width`-bit field placed at bit `offset` of its
+/// port word.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OperandSpec {
+    /// Field width in bits.
+    pub width: u32,
+    /// Bit offset inside the packed port word.
+    pub offset: u32,
+    /// Two's-complement (signed) field?
+    pub signed: bool,
+}
+
+impl OperandSpec {
+    /// Unsigned field.
+    pub fn unsigned(width: u32, offset: u32) -> Self {
+        OperandSpec { width, offset, signed: false }
+    }
+
+    /// Signed field.
+    pub fn signed(width: u32, offset: u32) -> Self {
+        OperandSpec { width, offset, signed: true }
+    }
+
+    /// Inclusive value range of this field.
+    pub fn range(&self) -> (i128, i128) {
+        crate::bits::range(self.width, self.signed)
+    }
+}
+
+/// One result field `a_i · w_j` of the outer product.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResultSpec {
+    /// Index into the `a` vector.
+    pub a_idx: usize,
+    /// Index into the `w` vector.
+    pub w_idx: usize,
+    /// Bit offset inside P (`= a_off[i] + w_off[j]`, Eqn. (4)).
+    pub offset: u32,
+    /// Extracted field width (normally `a_width + w_width`).
+    pub width: u32,
+    /// Signed extraction? (true iff either operand is signed).
+    pub signed: bool,
+}
+
+/// A full packing configuration: the paper's
+/// (δ, **a**_wdth, **w**_wdth, **a**_off, **w**_off, **r**_off, **r**_wdth)
+/// tuple.
+///
+/// Invariants enforced by the constructors:
+/// * operand fields within one vector do not overlap;
+/// * result offsets are the pairwise sums of the operand offsets (Eqn. (4));
+/// * results are sorted by offset (the order used for correction schemes).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PackingConfig {
+    /// The `a` operand vector (B-port side; unsigned in the paper).
+    pub a: Vec<OperandSpec>,
+    /// The `w` operand vector (A+D pre-adder side; signed in the paper).
+    pub w: Vec<OperandSpec>,
+    /// The n·m result fields, sorted by offset.
+    pub results: Vec<ResultSpec>,
+    /// Padding bits between adjacent result fields. Negative = Overpacking.
+    pub delta: i32,
+    /// Human-readable name for reports.
+    pub name: String,
+}
+
+impl PackingConfig {
+    /// Build a configuration from explicit operand specs. Result offsets
+    /// and widths are derived via Eqn. (4); `delta` is recorded as given
+    /// (it is also re-derivable from the offsets).
+    pub fn from_specs(
+        name: impl Into<String>,
+        a: Vec<OperandSpec>,
+        w: Vec<OperandSpec>,
+        delta: i32,
+    ) -> Result<Self> {
+        if a.is_empty() || w.is_empty() {
+            return Err(Error::InvalidConfig("empty operand vector".into()));
+        }
+        if a.iter().chain(&w).any(|o| o.width == 0) {
+            return Err(Error::InvalidConfig("zero-width operand".into()));
+        }
+        // Operand fields within a vector must not overlap.
+        for (label, v) in [("a", &a), ("w", &w)] {
+            let mut sorted: Vec<_> = v.iter().collect();
+            sorted.sort_by_key(|o| o.offset);
+            for pair in sorted.windows(2) {
+                if pair[0].offset + pair[0].width > pair[1].offset {
+                    return Err(Error::InvalidConfig(format!(
+                        "overlapping {label} operands at offsets {} and {}",
+                        pair[0].offset, pair[1].offset
+                    )));
+                }
+            }
+        }
+        let mut results = Vec::with_capacity(a.len() * w.len());
+        for (j, wj) in w.iter().enumerate() {
+            for (i, ai) in a.iter().enumerate() {
+                results.push(ResultSpec {
+                    a_idx: i,
+                    w_idx: j,
+                    offset: ai.offset + wj.offset,
+                    width: ai.width + wj.width,
+                    signed: ai.signed || wj.signed,
+                });
+            }
+        }
+        results.sort_by_key(|r| r.offset);
+        // Result offsets must be unique (two products may not land on the
+        // same offset, even under Overpacking).
+        for pair in results.windows(2) {
+            if pair[0].offset == pair[1].offset {
+                return Err(Error::InvalidConfig(format!(
+                    "two results at identical offset {}",
+                    pair[0].offset
+                )));
+            }
+        }
+        Ok(PackingConfig { a, w, results, delta, name: name.into() })
+    }
+
+    /// The architecture-independent **INT-N generator** (§IV): `n_a`
+    /// unsigned a-operands of `a_width` bits times `n_w` signed w-operands
+    /// of `w_width` bits, with `delta` padding bits between adjacent
+    /// results. Result spacing is `a_width + w_width + delta`.
+    pub fn generate(
+        name: impl Into<String>,
+        n_a: usize,
+        a_width: u32,
+        n_w: usize,
+        w_width: u32,
+        delta: i32,
+    ) -> Result<Self> {
+        let r_width = (a_width + w_width) as i32;
+        let spacing = r_width + delta;
+        if spacing <= 0 {
+            return Err(Error::InvalidConfig(format!(
+                "spacing {spacing} must be positive (r_width {r_width}, delta {delta})"
+            )));
+        }
+        let spacing = spacing as u32;
+        let a = (0..n_a)
+            .map(|i| OperandSpec::unsigned(a_width, i as u32 * spacing))
+            .collect();
+        let w = (0..n_w)
+            .map(|j| OperandSpec::signed(w_width, j as u32 * spacing * n_a as u32))
+            .collect();
+        Self::from_specs(name, a, w, delta)
+    }
+
+    /// The Xilinx **INT4** configuration (wp521, §III): δ=3,
+    /// a = {u4@0, u4@11}, w = {s4@0, s4@22}, results 8-bit at {0,11,22,33}.
+    pub fn int4() -> Self {
+        Self::generate("xilinx-int4", 2, 4, 2, 4, 3).expect("int4 is valid")
+    }
+
+    /// The Xilinx **INT8** configuration (wp486, §II): one shared 8-bit
+    /// unsigned activation times two packed signed 8-bit weights,
+    /// results 16-bit at {0,18} (δ=2).
+    pub fn int8() -> Self {
+        Self::generate("xilinx-int8", 1, 8, 2, 8, 2).expect("int8 is valid")
+    }
+
+    /// The INT-N example evaluated in Fig. 9: δ=0, w = {s3@0, s3@21},
+    /// a = {u4@0, u4@7, u4@14}, six 7-bit results at {0,7,14,21,28,35}.
+    pub fn intn_fig9() -> Self {
+        Self::generate("int-n-3x4", 3, 4, 2, 3, 0).expect("intn fig9 is valid")
+    }
+
+    /// The Overpacking example evaluated in Fig. 9: δ=−2, w = {s5@0, s5@21},
+    /// a = {u4@0, u4@7, u4@14}, six 9-bit results at {0,7,14,21,28,35}.
+    pub fn overpack_fig9() -> Self {
+        Self::generate("overpack-3x5", 3, 4, 2, 5, -2).expect("overpack fig9 is valid")
+    }
+
+    /// The Overpacking configuration of Table I / Fig. 6: four 4-bit
+    /// multiplications with negative padding `delta` ∈ {−1,−2,−3}.
+    pub fn overpack_int4(delta: i32) -> Result<Self> {
+        Self::generate(format!("overpack-int4-d{delta}"), 2, 4, 2, 4, delta)
+    }
+
+    /// §IX headline: six 4-bit multiplications on one DSP via
+    /// MR-Overpacking with δ=−1 (3 a-operands × 2 w-operands, spacing 7).
+    pub fn overpack6_int4() -> Self {
+        Self::generate("overpack6-int4", 3, 4, 2, 4, -1).expect("overpack6 is valid")
+    }
+
+    /// §IX headline: four 6-bit multiplications on one DSP with δ=−2
+    /// (50 % more precision than INT4 at the INT4 multiplication count).
+    pub fn precision6() -> Self {
+        Self::generate("precision6", 2, 6, 2, 6, -2).expect("precision6 is valid")
+    }
+
+    /// Number of packed multiplications (results).
+    pub fn num_results(&self) -> usize {
+        self.results.len()
+    }
+
+    /// Width of the packed `a` port word.
+    pub fn a_port_width(&self) -> u32 {
+        self.a.iter().map(|o| o.offset + o.width).max().unwrap_or(0)
+    }
+
+    /// Width of the packed `w` port word (before sign extension).
+    pub fn w_port_width(&self) -> u32 {
+        self.w.iter().map(|o| o.offset + o.width).max().unwrap_or(0)
+    }
+
+    /// Highest P bit occupied by any result field.
+    pub fn p_bits_used(&self) -> u32 {
+        self.results.iter().map(|r| r.offset + r.width).max().unwrap_or(0)
+    }
+
+    /// Total result bits (`b_used` of the packing density ρ, §VIII).
+    pub fn result_bits(&self) -> u32 {
+        self.results.iter().map(|r| r.width).sum()
+    }
+
+    /// Relaxed, **architecture-independent** fit (§IV): field spans must
+    /// stay within the port widths and every result inside P, but the
+    /// signed-port subtlety is ignored — this is the notion of "fits" the
+    /// paper uses for its INT-N and Fig. 9 configurations ("INT-N … does
+    /// not consider the constraints of the target DSP"). Configurations
+    /// that pass only this check must be evaluated with
+    /// [`super::PackedMultiplier::logical`], which skips port truncation.
+    pub fn fit_relaxed(&self, g: &DspGeometry) -> Result<()> {
+        if self.a_port_width() > g.b_width {
+            return Err(Error::GeometryViolation(format!(
+                "packed a word spans {} bits, B port has {}",
+                self.a_port_width(),
+                g.b_width
+            )));
+        }
+        if self.w_port_width() > g.ad_width() {
+            return Err(Error::GeometryViolation(format!(
+                "packed w word spans {} bits, pre-adder has {}",
+                self.w_port_width(),
+                g.ad_width()
+            )));
+        }
+        if self.p_bits_used() > g.p_width {
+            return Err(Error::GeometryViolation(format!(
+                "results need {} P bits, DSP has {}",
+                self.p_bits_used(),
+                g.p_width
+            )));
+        }
+        Ok(())
+    }
+
+    /// Check that this packing fits a DSP geometry **strictly**: the packed
+    /// `a` word in the B port, the packed `w` word in the pre-adder/D
+    /// width, every result inside P, and `2^headroom` accumulations
+    /// available.
+    ///
+    /// The `a` word is unsigned data in a signed port, so it must stay
+    /// below `2^(b_width−1)`; the `w` word is signed and must fit the
+    /// pre-adder width.
+    pub fn fit(&self, g: &DspGeometry) -> Result<()> {
+        // Span checks first (also guards the shifted sums below against
+        // i128 overflow for very wide generated configs).
+        self.fit_relaxed(g)?;
+        // Worst-case packed-a magnitude: all fields at their max.
+        let a_max: i128 = self
+            .a
+            .iter()
+            .map(|o| {
+                let (lo, hi) = o.range();
+                debug_assert!(lo <= hi);
+                hi << o.offset
+            })
+            .sum();
+        if !crate::bits::fits_signed(a_max, g.b_width) {
+            return Err(Error::GeometryViolation(format!(
+                "packed a word needs {} bits, B port has {}",
+                crate::bits::signed_width(a_max),
+                g.b_width
+            )));
+        }
+        // Worst-case packed-w magnitude (both signs).
+        let w_lo: i128 = self.w.iter().map(|o| o.range().0 << o.offset).sum();
+        let w_hi: i128 = self.w.iter().map(|o| o.range().1 << o.offset).sum();
+        let adw = g.ad_width();
+        if !crate::bits::fits_signed(w_lo, adw) || !crate::bits::fits_signed(w_hi, adw) {
+            return Err(Error::GeometryViolation(format!(
+                "packed w word exceeds the {adw}-bit pre-adder"
+            )));
+        }
+        Ok(())
+    }
+
+    /// How many packed products may be accumulated error-free on the
+    /// cascade before result fields overflow into each other: `2^δ` for
+    /// δ ≥ 0 (§III), 1 for δ ≤ 0 — a single product, no accumulation.
+    pub fn max_accumulations(&self) -> u64 {
+        if self.delta <= 0 {
+            1
+        } else {
+            1u64 << self.delta.min(63)
+        }
+    }
+
+    /// Expected (exact) outer product for given operand values, in result
+    /// (offset) order — the oracle used by tests and the analysis engine.
+    pub fn expected(&self, a: &[i128], w: &[i128]) -> Vec<i128> {
+        self.results.iter().map(|r| a[r.a_idx] * w[r.w_idx]).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int4_matches_paper_configuration() {
+        // §IV: δ=3, w_wdth = a_wdth = {4,4}, r_wdth = {8,8,8,8},
+        // w_off = {0,22}, a_off = {0,11}, r_off = {0,11,22,33}.
+        let c = PackingConfig::int4();
+        assert_eq!(c.delta, 3);
+        assert_eq!(c.a.iter().map(|o| o.offset).collect::<Vec<_>>(), vec![0, 11]);
+        assert_eq!(c.w.iter().map(|o| o.offset).collect::<Vec<_>>(), vec![0, 22]);
+        assert_eq!(
+            c.results.iter().map(|r| r.offset).collect::<Vec<_>>(),
+            vec![0, 11, 22, 33]
+        );
+        assert!(c.results.iter().all(|r| r.width == 8 && r.signed));
+        assert!(c.a.iter().all(|o| !o.signed));
+        assert!(c.w.iter().all(|o| o.signed));
+        c.fit(&DspGeometry::DSP48E2).unwrap();
+    }
+
+    #[test]
+    fn fig6_overpack_configuration() {
+        // Fig. 6 caption: w_off = {0,12}, a_off = {0,6}, r_off = {0,6,12,18}.
+        let c = PackingConfig::overpack_int4(-2).unwrap();
+        assert_eq!(c.a.iter().map(|o| o.offset).collect::<Vec<_>>(), vec![0, 6]);
+        assert_eq!(c.w.iter().map(|o| o.offset).collect::<Vec<_>>(), vec![0, 12]);
+        assert_eq!(
+            c.results.iter().map(|r| r.offset).collect::<Vec<_>>(),
+            vec![0, 6, 12, 18]
+        );
+    }
+
+    #[test]
+    fn fig9_configurations() {
+        // §VIII: INT-N δ=0 w{3,3} a{4,4,4} -> r_off {0,7,14,21,28,35}.
+        let c = PackingConfig::intn_fig9();
+        assert_eq!(
+            c.results.iter().map(|r| r.offset).collect::<Vec<_>>(),
+            vec![0, 7, 14, 21, 28, 35]
+        );
+        assert!(c.results.iter().all(|r| r.width == 7));
+        // §IV: INT-N is architecture-independent — the packed a word uses
+        // all 18 B-port bits, so it passes the relaxed fit only.
+        c.fit_relaxed(&DspGeometry::DSP48E2).unwrap();
+        assert!(c.fit(&DspGeometry::DSP48E2).is_err());
+
+        let c = PackingConfig::overpack_fig9();
+        assert_eq!(
+            c.results.iter().map(|r| r.offset).collect::<Vec<_>>(),
+            vec![0, 7, 14, 21, 28, 35]
+        );
+        assert!(c.results.iter().all(|r| r.width == 9));
+        c.fit_relaxed(&DspGeometry::DSP48E2).unwrap();
+    }
+
+    #[test]
+    fn headline_configs_fit() {
+        // The 6-mult config spans the full 18-bit B port (architecture-
+        // independent, like the paper's Fig. 9 configs)…
+        PackingConfig::overpack6_int4().fit_relaxed(&DspGeometry::DSP48E2).unwrap();
+        // …while the 4×6-bit precision config fits strictly.
+        PackingConfig::precision6().fit(&DspGeometry::DSP48E2).unwrap();
+        PackingConfig::int8().fit(&DspGeometry::DSP48E2).unwrap();
+        assert_eq!(PackingConfig::overpack6_int4().num_results(), 6);
+        assert_eq!(PackingConfig::precision6().num_results(), 4);
+    }
+
+    #[test]
+    fn rejects_overlapping_operands() {
+        let a = vec![OperandSpec::unsigned(4, 0), OperandSpec::unsigned(4, 2)];
+        let w = vec![OperandSpec::signed(4, 0)];
+        assert!(PackingConfig::from_specs("bad", a, w, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_and_zero_width() {
+        assert!(PackingConfig::from_specs("e", vec![], vec![OperandSpec::signed(4, 0)], 0)
+            .is_err());
+        let a = vec![OperandSpec::unsigned(0, 0)];
+        let w = vec![OperandSpec::signed(4, 0)];
+        assert!(PackingConfig::from_specs("z", a, w, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_too_wide_for_geometry() {
+        // 3 a-operands of 8 bits can't fit the 18-bit B port.
+        let c = PackingConfig::generate("wide", 3, 8, 1, 8, 0).unwrap();
+        assert!(c.fit(&DspGeometry::DSP48E2).is_err());
+    }
+
+    #[test]
+    fn accumulation_headroom() {
+        assert_eq!(PackingConfig::int4().max_accumulations(), 8);
+        assert_eq!(PackingConfig::intn_fig9().max_accumulations(), 1);
+        assert_eq!(PackingConfig::overpack_fig9().max_accumulations(), 1);
+    }
+
+    #[test]
+    fn density_bits() {
+        assert_eq!(PackingConfig::int4().result_bits(), 32);
+        assert_eq!(PackingConfig::int8().result_bits(), 32);
+        assert_eq!(PackingConfig::intn_fig9().result_bits(), 42);
+        assert_eq!(PackingConfig::overpack_fig9().result_bits(), 54);
+    }
+
+    /// Eqn. (4): every generated result offset is the sum of its operand
+    /// offsets, and result order follows offset order. Exhaustive over
+    /// the small generator space.
+    #[test]
+    fn prop_eqn4_offsets() {
+        for n_a in 1usize..4 {
+            for n_w in 1usize..3 {
+                for aw in 2u32..6 {
+                    for ww in 2u32..6 {
+                        for delta in -3i32..4 {
+                            if (aw + ww) as i32 + delta <= 0 {
+                                continue;
+                            }
+                            let Ok(c) = PackingConfig::generate("gen", n_a, aw, n_w, ww, delta)
+                            else {
+                                continue;
+                            };
+                            for r in &c.results {
+                                assert_eq!(
+                                    r.offset,
+                                    c.a[r.a_idx].offset + c.w[r.w_idx].offset
+                                );
+                                assert_eq!(r.width, aw + ww);
+                            }
+                            let offs: Vec<_> = c.results.iter().map(|r| r.offset).collect();
+                            let mut sorted = offs.clone();
+                            sorted.sort_unstable();
+                            assert_eq!(offs, sorted);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

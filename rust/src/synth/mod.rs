@@ -1,0 +1,20 @@
+//! A miniature logic-synthesis substrate: boolean netlists + a greedy
+//! K-LUT technology mapper.
+//!
+//! The paper's Table I reports Vivado post-synthesis LUT/FF counts for the
+//! correction circuits (Figs. 3 and 6) on an XCZU7EV. We cannot run
+//! Vivado, so this module *builds the actual correction circuits at gate
+//! level* and maps them to 6-input LUTs with a greedy cone-packing
+//! heuristic; outputs are registered, giving the FF count. The absolute
+//! numbers differ from Vivado's (different mapper, no retiming), but the
+//! *ordering and magnitude class* — full correction ≫ MR-δ3 > MR-δ2 >
+//! MR-δ1 ≫ 0 — is preserved, which is what Table I's resource columns
+//! establish. See DESIGN.md §2.
+
+mod circuits;
+mod netlist;
+
+pub use circuits::{
+    full_correction_circuit, lsb_calc_circuit, mr_correction_circuit, table1_resources,
+};
+pub use netlist::{Gate, Net, Netlist, ResourceEstimate};

@@ -1,0 +1,374 @@
+//! Boolean netlist IR, simulation, and greedy K-LUT mapping.
+
+use std::collections::{HashMap, HashSet};
+
+/// A net (wire) — an index into the netlist's gate array.
+pub type Net = usize;
+
+/// One gate. Two-input gates only (richer cells are built from these; the
+/// LUT mapper re-clusters them into ≤K-input cones anyway).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Gate {
+    /// Primary input with a debug name.
+    Input(String),
+    /// Constant 0/1.
+    Const(bool),
+    /// AND.
+    And(Net, Net),
+    /// OR.
+    Or(Net, Net),
+    /// XOR.
+    Xor(Net, Net),
+    /// NOT.
+    Not(Net),
+}
+
+/// A combinational netlist with named outputs. Outputs are assumed to be
+/// registered (one FF per output bit), matching the pipelined correction
+/// circuits of Figs. 3 and 6.
+#[derive(Debug, Clone, Default)]
+pub struct Netlist {
+    gates: Vec<Gate>,
+    outputs: Vec<(String, Net)>,
+    /// Structural-hashing table: gate → existing net.
+    strash: HashMap<Gate, Net>,
+}
+
+/// LUT/FF estimate produced by [`Netlist::estimate`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResourceEstimate {
+    /// K-input LUTs after greedy cone packing.
+    pub luts: usize,
+    /// Flip-flops (registered output bits).
+    pub ffs: usize,
+}
+
+impl Netlist {
+    /// Empty netlist.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a primary input.
+    pub fn input(&mut self, name: impl Into<String>) -> Net {
+        let g = Gate::Input(name.into());
+        self.gates.push(g);
+        self.gates.len() - 1
+    }
+
+    /// Constant net (hashed).
+    pub fn constant(&mut self, v: bool) -> Net {
+        self.intern(Gate::Const(v))
+    }
+
+    fn intern(&mut self, g: Gate) -> Net {
+        if let Some(&n) = self.strash.get(&g) {
+            return n;
+        }
+        self.gates.push(g.clone());
+        let n = self.gates.len() - 1;
+        self.strash.insert(g, n);
+        n
+    }
+
+    /// AND with trivial-case folding and structural hashing.
+    pub fn and(&mut self, a: Net, b: Net) -> Net {
+        match (&self.gates[a], &self.gates[b]) {
+            (Gate::Const(false), _) | (_, Gate::Const(false)) => self.constant(false),
+            (Gate::Const(true), _) => b,
+            (_, Gate::Const(true)) => a,
+            _ => self.intern(Gate::And(a.min(b), a.max(b))),
+        }
+    }
+
+    /// OR with folding.
+    pub fn or(&mut self, a: Net, b: Net) -> Net {
+        match (&self.gates[a], &self.gates[b]) {
+            (Gate::Const(true), _) | (_, Gate::Const(true)) => self.constant(true),
+            (Gate::Const(false), _) => b,
+            (_, Gate::Const(false)) => a,
+            _ => self.intern(Gate::Or(a.min(b), a.max(b))),
+        }
+    }
+
+    /// XOR with folding.
+    pub fn xor(&mut self, a: Net, b: Net) -> Net {
+        match (&self.gates[a], &self.gates[b]) {
+            (Gate::Const(false), _) => b,
+            (_, Gate::Const(false)) => a,
+            (Gate::Const(true), _) => self.not(b),
+            (_, Gate::Const(true)) => self.not(a),
+            _ if a == b => self.constant(false),
+            _ => self.intern(Gate::Xor(a.min(b), a.max(b))),
+        }
+    }
+
+    /// NOT with folding.
+    pub fn not(&mut self, a: Net) -> Net {
+        match &self.gates[a] {
+            Gate::Const(v) => {
+                let v = !v;
+                self.constant(v)
+            }
+            _ => self.intern(Gate::Not(a)),
+        }
+    }
+
+    /// Full adder; returns (sum, carry).
+    pub fn full_adder(&mut self, a: Net, b: Net, c: Net) -> (Net, Net) {
+        let axb = self.xor(a, b);
+        let sum = self.xor(axb, c);
+        let t1 = self.and(a, b);
+        let t2 = self.and(axb, c);
+        let carry = self.or(t1, t2);
+        (sum, carry)
+    }
+
+    /// Ripple-carry add of two equal-width buses; returns (sum bus, carry).
+    pub fn adder(&mut self, a: &[Net], b: &[Net], mut carry: Net) -> (Vec<Net>, Net) {
+        assert_eq!(a.len(), b.len());
+        let mut out = Vec::with_capacity(a.len());
+        for (&x, &y) in a.iter().zip(b) {
+            let (s, c) = self.full_adder(x, y, carry);
+            out.push(s);
+            carry = c;
+        }
+        (out, carry)
+    }
+
+    /// Increment a bus by a single condition bit (the Fig. 3 round-up
+    /// adders); returns the incremented bus.
+    pub fn incrementer(&mut self, a: &[Net], inc: Net) -> Vec<Net> {
+        let mut carry = inc;
+        let mut out = Vec::with_capacity(a.len());
+        for &x in a {
+            out.push(self.xor(x, carry));
+            carry = self.and(x, carry);
+        }
+        out
+    }
+
+    /// Subtract a narrow bus `b` from the top of bus `a` (the Fig. 6 MSB
+    /// restoration): `a - (b << (a.len() - b.len()))`. Only the top
+    /// `b.len()` bits of `a` change.
+    pub fn subtract_msbs(&mut self, a: &[Net], b: &[Net]) -> Vec<Net> {
+        assert!(b.len() <= a.len());
+        let split = a.len() - b.len();
+        let mut out = a[..split].to_vec();
+        // Two's complement subtract on the top slice: top - b.
+        let nb: Vec<Net> = b.iter().map(|&n| self.not(n)).collect();
+        let one = self.constant(true);
+        let (diff, _) = self.adder(&a[split..], &nb, one);
+        out.extend(diff);
+        out
+    }
+
+    /// Register an output bus (one FF per bit).
+    pub fn output_bus(&mut self, name: &str, bus: &[Net]) {
+        for (i, &n) in bus.iter().enumerate() {
+            self.outputs.push((format!("{name}[{i}]"), n));
+        }
+    }
+
+    /// Number of gates (excluding inputs/constants).
+    pub fn gate_count(&self) -> usize {
+        self.gates
+            .iter()
+            .filter(|g| !matches!(g, Gate::Input(_) | Gate::Const(_)))
+            .count()
+    }
+
+    /// Simulate with the given input assignment (by input order).
+    pub fn eval(&self, inputs: &[bool]) -> Vec<bool> {
+        let mut vals = vec![false; self.gates.len()];
+        let mut in_idx = 0;
+        for (i, g) in self.gates.iter().enumerate() {
+            vals[i] = match g {
+                Gate::Input(_) => {
+                    let v = inputs[in_idx];
+                    in_idx += 1;
+                    v
+                }
+                Gate::Const(v) => *v,
+                Gate::And(a, b) => vals[*a] && vals[*b],
+                Gate::Or(a, b) => vals[*a] || vals[*b],
+                Gate::Xor(a, b) => vals[*a] ^ vals[*b],
+                Gate::Not(a) => !vals[*a],
+            };
+        }
+        self.outputs.iter().map(|(_, n)| vals[*n]).collect()
+    }
+
+    /// Greedy K-LUT cone packing:
+    ///
+    /// In topological order, each gate's *cone support* is the union of
+    /// its fanins' supports; if that union exceeds K inputs, the offending
+    /// fanins become LUT roots (their cones harden into LUTs) and the gate
+    /// restarts its support from those roots. Every output net is a root.
+    /// The LUT count is the number of distinct roots. This is a simplified
+    /// FlowMap-style heuristic — deterministic and good to the magnitude
+    /// class (see module docs).
+    pub fn estimate(&self, k: usize) -> ResourceEstimate {
+        let mut support: Vec<HashSet<Net>> = Vec::with_capacity(self.gates.len());
+        let mut roots: HashSet<Net> = HashSet::new();
+
+        for (i, g) in self.gates.iter().enumerate() {
+            let s = match g {
+                Gate::Input(_) => HashSet::from([i]),
+                Gate::Const(_) => HashSet::new(),
+                Gate::Not(a) => support[*a].clone(),
+                Gate::And(a, b) | Gate::Or(a, b) | Gate::Xor(a, b) => {
+                    let mut u: HashSet<Net> = support[*a].union(&support[*b]).copied().collect();
+                    if u.len() > k {
+                        // Harden the fanins into LUT roots.
+                        for &f in &[*a, *b] {
+                            if !matches!(self.gates[f], Gate::Input(_) | Gate::Const(_)) {
+                                roots.insert(f);
+                            }
+                        }
+                        u = [*a, *b]
+                            .iter()
+                            .flat_map(|&f| {
+                                if matches!(self.gates[f], Gate::Input(_)) || roots.contains(&f) {
+                                    vec![f]
+                                } else {
+                                    support[f].iter().copied().collect()
+                                }
+                            })
+                            .collect();
+                    }
+                    u
+                }
+            };
+            support.push(s);
+        }
+        // Outputs are roots too (unless they are inputs/constants passed
+        // through).
+        for (_, n) in &self.outputs {
+            if !matches!(self.gates[*n], Gate::Input(_) | Gate::Const(_)) {
+                roots.insert(*n);
+            }
+        }
+        ResourceEstimate { luts: roots.len(), ffs: self.outputs.len() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bus(nl: &mut Netlist, name: &str, n: usize) -> Vec<Net> {
+        (0..n).map(|i| nl.input(format!("{name}{i}"))).collect()
+    }
+
+    fn to_bits(v: u64, n: usize) -> Vec<bool> {
+        (0..n).map(|i| (v >> i) & 1 == 1).collect()
+    }
+
+    fn from_bits(bits: &[bool]) -> u64 {
+        bits.iter().enumerate().map(|(i, &b)| (b as u64) << i).sum()
+    }
+
+    #[test]
+    fn adder_is_correct() {
+        let mut nl = Netlist::new();
+        let a = bus(&mut nl, "a", 8);
+        let b = bus(&mut nl, "b", 8);
+        let zero = nl.constant(false);
+        let (sum, carry) = nl.adder(&a, &b, zero);
+        let mut out = sum;
+        out.push(carry);
+        nl.output_bus("s", &out);
+        for (x, y) in [(0u64, 0u64), (200, 100), (255, 255), (1, 254), (170, 85)] {
+            let mut inp = to_bits(x, 8);
+            inp.extend(to_bits(y, 8));
+            assert_eq!(from_bits(&nl.eval(&inp)), x + y, "{x}+{y}");
+        }
+    }
+
+    #[test]
+    fn incrementer_is_correct() {
+        let mut nl = Netlist::new();
+        let a = bus(&mut nl, "a", 8);
+        let c = nl.input("c");
+        let out = nl.incrementer(&a, c);
+        nl.output_bus("o", &out);
+        for x in [0u64, 5, 127, 255] {
+            for inc in [0u64, 1] {
+                let mut inp = to_bits(x, 8);
+                inp.push(inc == 1);
+                assert_eq!(from_bits(&nl.eval(&inp)), (x + inc) & 0xFF);
+            }
+        }
+    }
+
+    #[test]
+    fn subtract_msbs_is_correct() {
+        let mut nl = Netlist::new();
+        let a = bus(&mut nl, "a", 8);
+        let b = bus(&mut nl, "b", 2);
+        let out = nl.subtract_msbs(&a, &b);
+        nl.output_bus("o", &out);
+        for x in [0u64, 0x7A, 0xFF, 0xC0] {
+            for y in [0u64, 1, 2, 3] {
+                let mut inp = to_bits(x, 8);
+                inp.extend(to_bits(y, 2));
+                let expect = x.wrapping_sub(y << 6) & 0xFF;
+                assert_eq!(from_bits(&nl.eval(&inp)), expect, "x={x:#x} y={y}");
+            }
+        }
+    }
+
+    #[test]
+    fn strash_dedups() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let b = nl.input("b");
+        let x1 = nl.and(a, b);
+        let x2 = nl.and(b, a); // commuted — must hash to the same net
+        assert_eq!(x1, x2);
+        assert_eq!(nl.gate_count(), 1);
+    }
+
+    #[test]
+    fn folding_removes_constants() {
+        let mut nl = Netlist::new();
+        let a = nl.input("a");
+        let f = nl.constant(false);
+        let t = nl.constant(true);
+        assert_eq!(nl.and(a, f), f);
+        assert_eq!(nl.and(a, t), a);
+        assert_eq!(nl.or(a, f), a);
+        assert_eq!(nl.xor(a, f), a);
+        assert_eq!(nl.xor(a, a), f);
+    }
+
+    #[test]
+    fn lut_mapping_small_cone_is_one_lut() {
+        // 4-input function -> exactly 1 LUT6.
+        let mut nl = Netlist::new();
+        let a = bus(&mut nl, "a", 4);
+        let x = nl.and(a[0], a[1]);
+        let y = nl.xor(a[2], a[3]);
+        let z = nl.or(x, y);
+        nl.output_bus("z", &[z]);
+        let est = nl.estimate(6);
+        assert_eq!(est.luts, 1);
+        assert_eq!(est.ffs, 1);
+    }
+
+    #[test]
+    fn lut_mapping_wide_cone_splits() {
+        // 12-input AND tree needs at least 2 LUT6s (ceil(12-1)/5 = 3 with
+        // this greedy heuristic; exact mappers do 2-3).
+        let mut nl = Netlist::new();
+        let a = bus(&mut nl, "a", 12);
+        let mut acc = a[0];
+        for &n in &a[1..] {
+            acc = nl.and(acc, n);
+        }
+        nl.output_bus("z", &[acc]);
+        let est = nl.estimate(6);
+        assert!(est.luts >= 2 && est.luts <= 4, "got {} LUTs", est.luts);
+    }
+}

@@ -1,0 +1,12 @@
+//! Zero-dependency utilities: deterministic RNG, a scoped thread pool, and
+//! a small JSON writer. The build environment is offline, so the usual
+//! crates (rand, rayon, serde_json) are replaced by these focused
+//! implementations.
+
+mod json;
+mod rng;
+mod threads;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use threads::{parallel_jobs, parallel_map, parallel_reduce};

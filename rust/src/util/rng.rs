@@ -1,0 +1,137 @@
+//! Deterministic RNG: SplitMix64 core with a few convenience samplers.
+//!
+//! Used by the sampled analysis sweeps, the NN weight initialization and
+//! the randomized tests. SplitMix64 passes BigCrush for these purposes and
+//! is trivially reproducible across platforms.
+
+/// SplitMix64 generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    /// Seeded generator.
+    pub fn new(seed: u64) -> Self {
+        Rng { state: seed }
+    }
+
+    /// Next raw 64-bit value.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)` (Lemire's method, unbiased for n << 2^64).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    /// Uniform `i128` in the inclusive range `[lo, hi]`.
+    #[inline]
+    pub fn range_i128(&mut self, lo: i128, hi: i128) -> i128 {
+        debug_assert!(lo <= hi);
+        let span = (hi - lo) as u128 + 1;
+        assert!(span <= u64::MAX as u128, "range too wide for the sampler");
+        lo + self.below(span as u64) as i128
+    }
+
+    /// Uniform `i64` in the inclusive range.
+    #[inline]
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        self.range_i128(lo as i128, hi as i128) as i64
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Bernoulli with probability `p`.
+    #[inline]
+    pub fn chance(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Fork an independent stream (for per-thread RNGs).
+    pub fn fork(&mut self, stream: u64) -> Rng {
+        Rng::new(self.next_u64() ^ stream.wrapping_mul(0xA24B_AED4_963E_E407))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Golden values shared with the Python port
+    /// (python/tests/test_data.py) — cross-language parity.
+    #[test]
+    fn splitmix64_golden_values() {
+        let mut r = Rng::new(42);
+        assert_eq!(r.next_u64(), 0xBDD732262FEB6E95);
+        assert_eq!(r.next_u64(), 0x28EFE333B266F103);
+        assert_eq!(r.next_u64(), 0x47526757130F9F52);
+        assert_eq!(r.next_u64(), 0x581CE1FF0E4AE394);
+        let mut r = Rng::new(7);
+        assert!((r.f64() - 0.3898297483912715).abs() < 1e-15);
+        assert!((r.f64() - 0.01678829452815611).abs() < 1e-15);
+        assert!((r.f64() - 0.9007606806068834).abs() < 1e-15);
+    }
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn range_respects_bounds() {
+        let mut r = Rng::new(7);
+        for _ in 0..10_000 {
+            let v = r.range_i128(-8, 7);
+            assert!((-8..=7).contains(&v));
+        }
+    }
+
+    #[test]
+    fn range_covers_endpoints() {
+        let mut r = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..10_000 {
+            seen.insert(r.range_i128(0, 15));
+        }
+        assert_eq!(seen.len(), 16, "all 16 values of a u4 must appear");
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Rng::new(11);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let v = r.f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+    }
+
+    #[test]
+    fn forked_streams_differ() {
+        let mut base = Rng::new(1);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

@@ -1,0 +1,95 @@
+//! Scoped data-parallel helpers over `std::thread` (rayon replacement for
+//! the exhaustive analysis sweeps).
+
+/// Number of worker threads to use.
+pub fn workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// Map `f` over `items` in parallel, preserving order. Chunked statically:
+/// the sweeps this serves are uniform-cost, so static chunking is optimal
+/// (no work-stealing overhead).
+pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let n_workers = workers().min(items.len().max(1));
+    if n_workers <= 1 || items.len() < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk = items.len().div_ceil(n_workers);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+    let out_chunks: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
+    std::thread::scope(|s| {
+        for (slice_in, slice_out) in items.chunks(chunk).zip(out_chunks) {
+            let f = &f;
+            s.spawn(move || {
+                for (i, item) in slice_in.iter().enumerate() {
+                    slice_out[i] = Some(f(item));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// Parallel map-reduce: map `f` over `items`, fold results with `merge`
+/// starting from `init()`.
+pub fn parallel_reduce<T, R, F, I, M>(items: &[T], init: I, f: F, merge: M) -> R
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    I: Fn() -> R,
+    M: Fn(R, R) -> R,
+{
+    parallel_map(items, f).into_iter().fold(init(), merge)
+}
+
+/// Run `n` indexed jobs in parallel (for sampled sweeps: one RNG stream
+/// per job), merging results.
+pub fn parallel_jobs<R, F, I, M>(n: u64, init: I, f: F, merge: M) -> R
+where
+    R: Send,
+    F: Fn(u64) -> R + Sync,
+    I: Fn() -> R,
+    M: Fn(R, R) -> R,
+{
+    let idx: Vec<u64> = (0..n).collect();
+    parallel_reduce(&idx, init, |&i| f(i), merge)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_handles_small_inputs() {
+        assert_eq!(parallel_map(&[5u64], |&x| x + 1), vec![6]);
+        let empty: Vec<u64> = vec![];
+        assert!(parallel_map(&empty, |&x: &u64| x).is_empty());
+    }
+
+    #[test]
+    fn reduce_matches_sequential() {
+        let items: Vec<u64> = (0..997).collect();
+        let total = parallel_reduce(&items, || 0u64, |&x| x, |a, b| a + b);
+        assert_eq!(total, 997 * 996 / 2);
+    }
+
+    #[test]
+    fn jobs_merge_all() {
+        let total = parallel_jobs(100, || 0u64, |i| i, |a, b| a + b);
+        assert_eq!(total, 99 * 100 / 2);
+    }
+}

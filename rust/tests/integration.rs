@@ -1,0 +1,214 @@
+//! Cross-module integration tests: the full stack wired together —
+//! packing → DSP sim → GEMM → NN → coordinator, plus the paper-value
+//! regression suite that pins every deterministic table cell.
+
+use dsp_packing::analysis::exhaustive;
+use dsp_packing::coordinator::{Coordinator, PackedNnBackend, Request, ServerConfig};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::{GemmEngine, MatI32};
+use dsp_packing::nn::{data, ExecMode, QuantMlp};
+use dsp_packing::packing::{PackedMultiplier, PackingConfig};
+use dsp_packing::util::Rng;
+use std::sync::Arc;
+
+/// Every deterministic Table I error cell, pinned to the paper's values
+/// (MAE/WCE always; EP except the two documented deviations — see
+/// EXPERIMENTS.md).
+#[test]
+fn table1_regression_against_paper() {
+    let cases: Vec<(PackingConfig, Correction, f64, Option<f64>, u64)> = vec![
+        (PackingConfig::int4(), Correction::None, 0.37, Some(37.35), 1),
+        (PackingConfig::int4(), Correction::FullRoundHalfUp, 0.00, Some(0.00), 0),
+        // Paper reports 0.02/3.13%/1; our literal implementation fully
+        // corrects (documented deviation).
+        (PackingConfig::int4(), Correction::ApproxCPort, 0.00, Some(0.00), 0),
+        (PackingConfig::overpack_int4(-1).unwrap(), Correction::None, 24.28, Some(49.85), 129),
+        // Paper EP 58.64% is internally inconsistent (see EXPERIMENTS.md);
+        // MAE and WCE match.
+        (PackingConfig::overpack_int4(-2).unwrap(), Correction::None, 37.96, None, 194),
+        (PackingConfig::overpack_int4(-3).unwrap(), Correction::None, 45.53, Some(78.27), 228),
+        (PackingConfig::overpack_int4(-1).unwrap(), Correction::MrRestore, 0.37, Some(37.35), 1),
+        (PackingConfig::overpack_int4(-2).unwrap(), Correction::MrRestore, 0.48, Some(41.49), 2),
+        (PackingConfig::overpack_int4(-3).unwrap(), Correction::MrRestore, 0.79, Some(49.96), 4),
+    ];
+    for (cfg, corr, mae, ep, wce) in cases {
+        let name = format!("{} + {corr:?}", cfg.name);
+        let mul = PackedMultiplier::new(cfg, corr).unwrap();
+        let r = exhaustive(&mul);
+        assert!((r.mae_bar() - mae).abs() < 0.005, "{name}: MAE {} != {mae}", r.mae_bar());
+        if let Some(ep) = ep {
+            assert!(
+                (r.ep_bar_percent() - ep).abs() < 0.01,
+                "{name}: EP {} != {ep}",
+                r.ep_bar_percent()
+            );
+        }
+        assert_eq!(r.wce_bar(), wce, "{name}: WCE");
+    }
+}
+
+/// Table II, all 16 cells (within print rounding of the paper).
+#[test]
+fn table2_regression_against_paper() {
+    let int4 = PackedMultiplier::new(PackingConfig::int4(), Correction::None).unwrap();
+    let r = exhaustive(&int4);
+    let paper = [(0.00, 0.00, 0), (0.47, 46.87, 1), (0.50, 49.80, 1), (0.53, 52.73, 1)];
+    for (s, (mae, ep, wce)) in r.per_result.iter().zip(paper) {
+        assert!((s.mae() - mae).abs() < 0.005, "int4 mae {} vs {mae}", s.mae());
+        assert!((s.ep_percent() - ep).abs() < 0.01, "int4 ep {} vs {ep}", s.ep_percent());
+        assert_eq!(s.wce, wce);
+    }
+    let mr = PackedMultiplier::new(
+        PackingConfig::overpack_int4(-2).unwrap(),
+        Correction::MrRestore,
+    )
+    .unwrap();
+    let r = exhaustive(&mr);
+    let paper = [(0.00, 0.00, 0), (0.60, 52.34, 2), (0.64, 55.41, 2), (0.66, 58.20, 2)];
+    for (s, (mae, ep, wce)) in r.per_result.iter().zip(paper) {
+        assert!((s.mae() - mae).abs() < 0.01, "mr mae {} vs {mae}", s.mae());
+        assert!((s.ep_percent() - ep).abs() < 0.01, "mr ep {} vs {ep}", s.ep_percent());
+        assert_eq!(s.wce, wce);
+    }
+}
+
+/// INT8 packing (wp486, §II): the floor error generalizes — exhaustive
+/// over the 2^24 space, and full correction eliminates it (no paper table
+/// pins these numbers; this pins OUR claim that §V generalizes).
+#[test]
+fn int8_packing_error_structure() {
+    let raw = PackedMultiplier::new(PackingConfig::int8(), Correction::None).unwrap();
+    let r = exhaustive(&raw);
+    // r0 exact; r1 errs iff a0*w0 < 0: P = (255/256)*(128/256) = 49.8 %.
+    assert_eq!(r.per_result[0].ep_percent(), 0.0);
+    assert!((r.per_result[1].ep_percent() - 49.80).abs() < 0.05);
+    assert_eq!(r.wce_bar(), 1);
+    let fixed =
+        PackedMultiplier::new(PackingConfig::int8(), Correction::FullRoundHalfUp).unwrap();
+    assert_eq!(exhaustive(&fixed).wce_bar(), 0);
+    let cport = PackedMultiplier::new(PackingConfig::int8(), Correction::ApproxCPort).unwrap();
+    assert_eq!(exhaustive(&cport).wce_bar(), 0);
+}
+
+/// Fig. 9 densities, all four bars.
+#[test]
+fn fig9_regression_against_paper() {
+    let pts = dsp_packing::density::fig9_points();
+    let expect = [(2, 2.0 / 3.0), (4, 2.0 / 3.0), (6, 0.875), (6, 1.125)];
+    for (p, (mults, rho)) in pts.iter().zip(expect) {
+        assert_eq!(p.mults, mults, "{}", p.name);
+        assert!((p.density - rho).abs() < 1e-12, "{}", p.name);
+    }
+}
+
+/// GEMM on the virtual DSP fabric == exact matmul under full correction,
+/// across shapes, including via the whole NN layer stack.
+#[test]
+fn full_stack_gemm_nn_coordinator() {
+    let ds = data::synthetic(96, 4, 64, 0.15, 7);
+    let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+    let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+
+    // Direct: packed == exact, bit for bit.
+    let x = mlp.quantize_batch(&ds.images).unwrap();
+    let (exact, _) = mlp.forward(&x, &ExecMode::Exact).unwrap();
+    let (packed, stats) = mlp.forward(&x, &ExecMode::Packed(engine.clone())).unwrap();
+    assert_eq!(exact, packed);
+    assert!((stats.utilization() - 4.0).abs() < 0.01);
+
+    // Served: the coordinator returns the same classes.
+    let backend = Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Packed(engine)));
+    let direct = backend.infer_all(&ds.images);
+    let coord = Coordinator::start(backend, ServerConfig::default());
+    let handle = coord.handle();
+    for (i, img) in ds.images.iter().enumerate() {
+        let p = handle.infer(Request { id: i as u64, image: img.clone() }).unwrap();
+        assert_eq!(p.class, direct[i]);
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 96);
+}
+
+/// Helper: direct inference through the backend trait.
+trait InferAll {
+    fn infer_all(&self, images: &[Vec<f32>]) -> Vec<usize>;
+}
+impl InferAll for PackedNnBackend {
+    fn infer_all(&self, images: &[Vec<f32>]) -> Vec<usize> {
+        use dsp_packing::coordinator::InferenceBackend;
+        self.infer(images).unwrap().0
+    }
+}
+
+/// The PJRT artifact path: load the AOT-compiled JAX model (packed Pallas
+/// kernel inside) and verify it agrees with the Rust exact-quant model on
+/// the shared dataset. Skipped when `make artifacts` hasn't run.
+#[test]
+fn pjrt_artifact_agrees_with_rust_model() {
+    let Some(wpath) = dsp_packing::runtime::PjrtRuntime::artifact_path("mlp_weights.txt") else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let ds = data::synthetic(64, 4, 64, 0.15, 7);
+    let mut mlp = dsp_packing::nn::weights::mlp_from_export(&wpath).unwrap();
+    let cal = mlp.quantize_batch(&ds.images[..16].to_vec()).unwrap();
+    mlp.calibrate(&cal).unwrap();
+    let x = mlp.quantize_batch(&ds.images).unwrap();
+    let (rust_preds, _) = mlp.classify(&x, &ExecMode::Exact).unwrap();
+
+    use dsp_packing::coordinator::InferenceBackend;
+    for artifact in ["mlp_exact.hlo.txt", "mlp_packed.hlo.txt"] {
+        let backend = dsp_packing::runtime::PjrtBackend::load(artifact, 16, 64, 4).unwrap();
+        let (pjrt_preds, _) = backend.infer(&ds.images).unwrap();
+        let agree = rust_preds
+            .iter()
+            .zip(&pjrt_preds)
+            .filter(|(a, b)| a == b)
+            .count();
+        // Quantization scale details differ slightly (dynamic vs fixed
+        // activation scale), so demand strong agreement, not identity.
+        assert!(
+            agree * 100 >= rust_preds.len() * 95,
+            "{artifact}: only {agree}/{} agree",
+            rust_preds.len()
+        );
+    }
+}
+
+/// Randomized cross-check: the Rust packed GEMM and a scalar DSP-by-DSP
+/// evaluation agree (engine correctness does not depend on tiling).
+#[test]
+fn gemm_matches_scalar_dsp_walk() {
+    let mut rng = Rng::new(0xBEEF);
+    let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    for _ in 0..10 {
+        let (m, k, n) = (
+            2 * (1 + rng.below(4) as usize),
+            1 + rng.below(20) as usize,
+            2 * (1 + rng.below(4) as usize),
+        );
+        let a = MatI32::from_fn(m, k, |_, _| rng.range_i64(0, 15) as i32);
+        let w = MatI32::from_fn(k, n, |_, _| rng.range_i64(-8, 7) as i32);
+        let (c, _) = engine.matmul(&a, &w).unwrap();
+        assert_eq!(c, a.matmul_exact(&w).unwrap(), "{m}x{k}x{n}");
+    }
+}
+
+/// Failure injection: a worker panic must not wedge the coordinator
+/// (remaining requests get disconnect errors, shutdown still works).
+#[test]
+fn coordinator_survives_malformed_inputs() {
+    let ds = data::synthetic(16, 4, 64, 0.15, 7);
+    let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+    let backend = Arc::new(PackedNnBackend::new(mlp, ExecMode::Exact));
+    let coord = Coordinator::start(backend, ServerConfig::default());
+    let handle = coord.handle();
+    // Wrong-dimension image: backend rejects the batch; the client sees a
+    // dropped channel rather than a hang.
+    let rx = handle.submit(Request { id: 0, image: vec![0.5; 3] }).unwrap();
+    assert!(rx.recv().is_err(), "malformed request must not produce a prediction");
+    // Well-formed requests continue to be served afterwards.
+    let p = handle.infer(Request { id: 1, image: ds.images[0].clone() }).unwrap();
+    assert_eq!(p.id, 1);
+    coord.shutdown();
+}
