@@ -32,7 +32,7 @@ use std::time::Instant;
 
 const REQUESTS: usize = 512;
 
-fn serve(backend: Arc<dyn InferenceBackend>, ds: &data::Dataset) -> anyhow::Result<()> {
+fn serve(backend: Arc<dyn InferenceBackend>, ds: &data::Dataset) -> dsp_packing::Result<()> {
     let name = backend.name().to_string();
     let coord = Coordinator::start(backend, ServerConfig::default());
     let handle = coord.handle();
@@ -76,13 +76,13 @@ fn serve(backend: Arc<dyn InferenceBackend>, ds: &data::Dataset) -> anyhow::Resu
     Ok(())
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dsp_packing::Result<()> {
     // The dataset both sides agree on (seed 7, bit-identical generators).
     let ds = data::synthetic(256, 4, 64, 0.15, 7);
 
     // The JAX-trained model weights, exported at `make artifacts` time.
     let weights_path = dsp_packing::runtime::PjrtRuntime::artifact_path("mlp_weights.txt")
-        .ok_or_else(|| anyhow::anyhow!("run `make artifacts` first"))?;
+        .ok_or_else(|| dsp_packing::Error::Runtime("run `make artifacts` first".into()))?;
     let mut mlp = weights::mlp_from_export(&weights_path)?;
     let cal = mlp.quantize_batch(&ds.images[..32].to_vec())?;
     mlp.calibrate(&cal)?;

@@ -12,7 +12,7 @@ use dsp_packing::density;
 use dsp_packing::dsp48::DspGeometry;
 use dsp_packing::packing::PackedMultiplier;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dsp_packing::Result<()> {
     let g = DspGeometry::DSP48E2;
 
     println!("== Fig. 9 reference points ==");

@@ -9,7 +9,7 @@ use dsp_packing::analysis::exhaustive;
 use dsp_packing::correct::Correction;
 use dsp_packing::packing::{PackedMultiplier, PackingConfig};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dsp_packing::Result<()> {
     // The Xilinx INT4 configuration (wp521): a = two unsigned 4-bit
     // activations, w = two signed 4-bit weights, four products per DSP.
     let a = [3i128, 10];

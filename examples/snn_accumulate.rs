@@ -9,7 +9,7 @@
 use dsp_packing::nn::{data, SnnStats, SpikingDense};
 use dsp_packing::util::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dsp_packing::Result<()> {
     let neurons = 40;
     let inputs = 64;
     let steps = 64;

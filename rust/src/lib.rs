@@ -28,7 +28,12 @@
 //! * [`density`] — packing density ρ (Fig. 9) and a packing-configuration
 //!   search.
 //! * [`gemm`] — a tiled integer GEMM engine that maps matrix multiplies
-//!   onto an array of simulated DSP slices using a chosen packing.
+//!   onto an array of simulated DSP slices using a chosen packing. The
+//!   engine is two-phase: [`gemm::GemmEngine::plan`] encodes a weight
+//!   matrix once into resident [`gemm::PackedWeights`] operand planes,
+//!   and [`gemm::GemmEngine::execute`] streams activation batches against
+//!   them (bit-identical to the one-shot `matmul`, which now wraps the
+//!   pair) — the weights-resident shape real deployments use.
 //! * [`nn`] — quantized NN layers (dense / conv2d / pooling) over the GEMM
 //!   engine plus an SNN integrate-and-fire layer over addition packing.
 //! * [`runtime`] — a PJRT loader (via the `xla` crate) that executes the
@@ -69,32 +74,44 @@ pub use analysis::ErrorStats;
 pub use correct::Correction;
 pub use packing::{PackedMultiplier, PackingConfig};
 
-/// Crate-wide error type.
-#[derive(Debug, thiserror::Error)]
+/// Crate-wide error type. `Display` and `std::error::Error` are
+/// implemented by hand — the build environment is offline, so derive
+/// crates like `thiserror` are off the table (see [`util`] for the other
+/// dependency stand-ins).
+#[derive(Debug)]
 pub enum Error {
     /// A packing configuration violates a structural invariant (overlapping
     /// inputs, zero-width operand, ...).
-    #[error("invalid packing configuration: {0}")]
     InvalidConfig(String),
     /// A packing configuration does not fit the target DSP geometry.
-    #[error("packing does not fit DSP geometry: {0}")]
     GeometryViolation(String),
     /// An operand is out of range for its declared width/signedness.
-    #[error("operand out of range: {0}")]
     OperandRange(String),
     /// Shape mismatch in GEMM / NN plumbing.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// Runtime (PJRT / artifact) failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Coordinator failure (queue closed, worker died, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
     /// Configuration file / CLI error.
-    #[error("config error: {0}")]
     Config(String),
 }
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::InvalidConfig(m) => write!(f, "invalid packing configuration: {m}"),
+            Error::GeometryViolation(m) => write!(f, "packing does not fit DSP geometry: {m}"),
+            Error::OperandRange(m) => write!(f, "operand out of range: {m}"),
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::Runtime(m) => write!(f, "runtime error: {m}"),
+            Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {}
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;

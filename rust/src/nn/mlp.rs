@@ -1,9 +1,16 @@
 //! Quantized MLP / CNN models executing on the packed GEMM engine.
+//!
+//! Dense layers are **weights-resident**: the first packed forward pass
+//! plans the layer's weight matrix into [`PackedWeights`] (see
+//! [`crate::gemm`]'s plan/execute split) and every later batch executes
+//! against the cached plan. [`QuantMlp::prepare`] builds all plans up
+//! front, which the serving backend does at construction.
 
 use super::data::Dataset;
 use super::quantize;
-use crate::gemm::{DspOpStats, GemmEngine, MatI32};
+use crate::gemm::{DspOpStats, GemmEngine, MatI32, PackedWeights};
 use crate::{Error, Result};
+use std::sync::{Arc, Mutex};
 
 /// How a model's matmuls execute.
 #[derive(Debug, Clone)]
@@ -12,6 +19,42 @@ pub enum ExecMode {
     Exact,
     /// On the packed DSP fabric with the engine's packing + correction.
     Packed(GemmEngine),
+}
+
+/// Cached pre-packed weight planes for one dense layer: built on the
+/// first packed forward (or by [`QuantMlp::prepare`]) and reused for
+/// every batch after. The cache is keyed on both the engine shape and a
+/// snapshot of the weight matrix, so a differently-configured engine —
+/// or a mutation of the layer's (public) weights — rebuilds the plan
+/// instead of silently serving a stale one.
+#[derive(Debug, Default)]
+pub struct PlanCache {
+    slot: Mutex<Option<(Arc<MatI32>, Arc<PackedWeights>)>>,
+}
+
+impl Clone for PlanCache {
+    fn clone(&self) -> Self {
+        PlanCache { slot: Mutex::new(self.slot.lock().expect("plan cache poisoned").clone()) }
+    }
+}
+
+impl PlanCache {
+    /// The plan for `engine` over `weights`: served from the cache when
+    /// the cached plan matches the engine and the snapshot equals the
+    /// current weight contents, (re)built and cached otherwise. The
+    /// equality pass is one exact scan of `weights` — negligible next to
+    /// the GEMM it guards, and collision-free (unlike a hash key).
+    fn plan_for(&self, engine: &GemmEngine, weights: &MatI32) -> Result<Arc<PackedWeights>> {
+        let mut slot = self.slot.lock().expect("plan cache poisoned");
+        if let Some((snapshot, plan)) = slot.as_ref() {
+            if snapshot.as_ref() == weights && plan.compatible_with(engine) {
+                return Ok(plan.clone());
+            }
+        }
+        let plan = Arc::new(engine.plan(weights)?);
+        *slot = Some((Arc::new(weights.clone()), plan.clone()));
+        Ok(plan)
+    }
 }
 
 /// One quantized dense layer: `y = requant(x · Wᵀ-ish + b)`.
@@ -27,6 +70,8 @@ pub struct DenseLayer {
     /// Apply ReLU + clamp into the unsigned activation range (hidden
     /// layers); the final layer keeps raw accumulators as logits.
     pub requant: bool,
+    /// Cached [`PackedWeights`] for the packed execution path.
+    plan_cache: PlanCache,
 }
 
 impl DenseLayer {
@@ -46,7 +91,23 @@ impl DenseLayer {
         let (wq, scale) = quantize::quantize_signed(weights, in_dim, out_dim, w_bits);
         // Bias enters at accumulator scale; calibrated later with shift=0.
         let bq = bias.iter().map(|&b| (b * scale) as i32).collect();
-        Ok((DenseLayer { weights: wq, bias: bq, shift: 0, requant }, scale))
+        Ok((
+            DenseLayer {
+                weights: wq,
+                bias: bq,
+                shift: 0,
+                requant,
+                plan_cache: PlanCache::default(),
+            },
+            scale,
+        ))
+    }
+
+    /// Pre-build (and cache) this layer's packed weight planes for
+    /// `engine`. Forward passes build the plan lazily anyway; this makes
+    /// the cost explicit at model-construction time.
+    pub fn prepare(&self, engine: &GemmEngine) -> Result<()> {
+        self.plan_cache.plan_for(engine, &self.weights).map(|_| ())
     }
 
     /// Forward one batch through this layer.
@@ -60,7 +121,10 @@ impl DenseLayer {
         let mut acc = match mode {
             ExecMode::Exact => x.matmul_exact(&self.weights)?,
             ExecMode::Packed(engine) => {
-                let (out, s) = engine.matmul(x, &self.weights)?;
+                // Weights-resident path: plan once (cached), execute per
+                // batch. Bit-identical to `engine.matmul` on every call.
+                let plan = self.plan_cache.plan_for(engine, &self.weights)?;
+                let (out, s) = engine.execute(&plan, x)?;
                 stats.merge(&s);
                 out
             }
@@ -122,6 +186,19 @@ impl QuantMlp {
         let (l1, _) = DenseLayer::from_f32(w1, d_in, d_hidden, b1, w_bits, true)?;
         let (l2, _) = DenseLayer::from_f32(w2, d_hidden, d_out, b2, w_bits, false)?;
         Ok(QuantMlp { layers: vec![l1, l2], a_bits })
+    }
+
+    /// Pre-build every dense layer's packed weight planes for the given
+    /// execution mode (a no-op for [`ExecMode::Exact`]). Serving backends
+    /// call this at construction so the first request pays no planning
+    /// cost; forward passes would otherwise build the plans lazily.
+    pub fn prepare(&self, mode: &ExecMode) -> Result<()> {
+        if let ExecMode::Packed(engine) = mode {
+            for layer in &self.layers {
+                layer.prepare(engine)?;
+            }
+        }
+        Ok(())
     }
 
     /// Calibrate per-layer requantization shifts on a sample batch (run
@@ -407,6 +484,46 @@ mod tests {
         // The floor bias shifts logits by up to K/8; classification is
         // robust to it on this margin.
         assert!((acc_exact - acc_raw).abs() < 0.1, "{acc_exact} vs {acc_raw}");
+    }
+
+    #[test]
+    fn plan_cache_reuses_across_batches_and_engines() {
+        let ds = data::synthetic(40, 4, 64, 0.15, 29);
+        let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+        let mode = ExecMode::Packed(engine());
+        mlp.prepare(&mode).unwrap();
+        let x = mlp.quantize_batch(&ds.images).unwrap();
+        let (y1, s1) = mlp.forward(&x, &mode).unwrap();
+        let (y2, s2) = mlp.forward(&x, &mode).unwrap();
+        assert_eq!(y1, y2);
+        assert_eq!(s1, s2, "cached plans serve identical batches identically");
+        // A differently-configured engine rebuilds the plan instead of
+        // serving a stale one…
+        let raw = GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap();
+        mlp.forward(&x, &ExecMode::Packed(raw)).unwrap();
+        // …and the original engine still gets correct (rebuilt) plans.
+        let (y3, s3) = mlp.forward(&x, &mode).unwrap();
+        assert_eq!(y1, y3);
+        assert_eq!(s1, s3);
+    }
+
+    #[test]
+    fn mutated_weights_invalidate_cached_plans() {
+        let ds = data::synthetic(24, 4, 64, 0.15, 33);
+        let mut mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+        let mode = ExecMode::Packed(engine());
+        let mut x = mlp.quantize_batch(&ds.images).unwrap();
+        // Pin one activation so the weight flip below is provably visible
+        // in the logits regardless of the synthetic data's sparsity.
+        x.set(0, 0, 15);
+        let (before, _) = mlp.forward(&x, &mode).unwrap();
+        // Mutate the (public) weights in place after a plan was cached.
+        let flip = mlp.layers[0].weights.get(0, 0);
+        mlp.layers[0].weights.set(0, 0, if flip == 7 { -7 } else { 7 });
+        let (exact, _) = mlp.forward(&x, &ExecMode::Exact).unwrap();
+        let (packed, _) = mlp.forward(&x, &mode).unwrap();
+        assert_eq!(packed, exact, "packed path must track the mutated weights");
+        assert_ne!(packed, before, "the mutation must actually change the logits");
     }
 
     #[test]

@@ -114,14 +114,21 @@ impl SpikingDense {
     /// packed-membrane output spike vector and updates stats.
     pub fn step(&mut self, spikes_in: &[u8], stats: &mut SnnStats) -> Result<Vec<u8>> {
         let n = self.neurons();
+        // Plan the step once: the active-input list is shared by every
+        // neuron, so gather it up front instead of scanning the full
+        // (mostly silent) spike vector once per neuron.
+        let active: Vec<usize> = spikes_in
+            .iter()
+            .enumerate()
+            .filter(|(_, &s)| s != 0)
+            .map(|(i, _)| i)
+            .collect();
         // Per-neuron increment (plus bias to stay unsigned).
         let mut incs = vec![0i64; n];
         for (j, row) in self.weights.iter().enumerate() {
             let mut acc = 0i64;
-            for (i, &s) in spikes_in.iter().enumerate() {
-                if s != 0 {
-                    acc += row[i] as i64;
-                }
+            for &i in &active {
+                acc += row[i] as i64;
             }
             incs[j] = acc + self.step_bias;
             debug_assert!(incs[j] >= 0);

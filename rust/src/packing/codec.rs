@@ -190,6 +190,49 @@ impl Packer {
         PackedOperands { b, a: wsum, d: 0 }
     }
 
+    /// Decode a packed `a` word back into its operand values — the inverse
+    /// of [`Packer::pack_a`]. Fields are peeled low-to-high, subtracting
+    /// each decoded term from the word, so the decode is exact for any
+    /// word produced by the packer (operand fields never overlap).
+    ///
+    /// This is the "reusable encoded-operand form" contract the GEMM plan
+    /// layer relies on: a stored plane word can always be decoded back to
+    /// the operands it was built from, so pre-packed weight planes carry
+    /// the full information of the weight tile.
+    pub fn unpack_a(&self, word: i128) -> Vec<i128> {
+        let mut order: Vec<usize> = (0..self.cfg.a.len()).collect();
+        order.sort_by_key(|&i| self.cfg.a[i].offset);
+        let mut out = vec![0i128; self.cfg.a.len()];
+        let mut rem = word;
+        for i in order {
+            let s = self.cfg.a[i];
+            let v = field_unsigned(rem, s.offset, s.width);
+            out[i] = v;
+            rem -= v << s.offset;
+        }
+        out
+    }
+
+    /// Decode a packed multiplier-side `w` value (`Σ_j w_j 2^{woff_j}`, as
+    /// produced by [`Packer::packed_w_value`] /
+    /// [`Packer::pack_w_value_unchecked`]) back into its operand values.
+    /// Peeled low-to-high with signed fields: subtracting each decoded
+    /// term also removes its sign extension from the bits above, so the
+    /// decode is exact.
+    pub fn unpack_w_value(&self, word: i128) -> Vec<i128> {
+        let mut order: Vec<usize> = (0..self.cfg.w.len()).collect();
+        order.sort_by_key(|&i| self.cfg.w[i].offset);
+        let mut out = vec![0i128; self.cfg.w.len()];
+        let mut rem = word;
+        for i in order {
+            let s = self.cfg.w[i];
+            let v = field_signed(rem, s.offset, s.width);
+            out[i] = v;
+            rem -= v << s.offset;
+        }
+        out
+    }
+
     /// Extract with **round-half-up** (§V-A full correction): add the bit
     /// just below each field before truncating. Exact for all valid
     /// operand values when δ ≥ 0.
@@ -252,6 +295,18 @@ mod tests {
         assert!(p.pack(&[0, 0], &[8, 0]).is_err()); // w is s4
         assert!(p.pack(&[0, 0], &[-9, 0]).is_err());
         assert!(p.pack(&[0], &[0, 0]).is_err()); // arity
+    }
+
+    #[test]
+    fn unpack_inverts_pack() {
+        let p = Packer::new(PackingConfig::int4());
+        let a = vec![3i128, 10];
+        let w = vec![-7i128, 5];
+        assert_eq!(p.unpack_a(p.pack_a(&a).unwrap()), a);
+        assert_eq!(p.unpack_w_value(p.pack_w_value_unchecked(&w)), w);
+        // Negative-heavy w words decode exactly despite sign extension.
+        let w = vec![-8i128, -8];
+        assert_eq!(p.unpack_w_value(p.pack_w_value_unchecked(&w)), w);
     }
 
     #[test]

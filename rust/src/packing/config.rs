@@ -121,6 +121,23 @@ impl PackingConfig {
                 )));
             }
         }
+        // Every field — operand or result — must live inside the i128
+        // words the codec shifts through, with headroom for the widened
+        // extraction windows. Reject pathological offsets here instead of
+        // overflowing a shift downstream; any geometry-feasible packing is
+        // orders of magnitude below this bound anyway.
+        let max_bit = a
+            .iter()
+            .chain(&w)
+            .map(|o| o.offset + o.width)
+            .chain(results.iter().map(|r| r.offset + r.width))
+            .max()
+            .unwrap_or(0);
+        if max_bit > 120 {
+            return Err(Error::InvalidConfig(format!(
+                "fields span {max_bit} bits; packed words are limited to 120"
+            )));
+        }
         Ok(PackingConfig { a, w, results, delta, name: name.into() })
     }
 
@@ -395,6 +412,15 @@ mod tests {
         let a = vec![OperandSpec::unsigned(0, 0)];
         let w = vec![OperandSpec::signed(4, 0)];
         assert!(PackingConfig::from_specs("z", a, w, 0).is_err());
+    }
+
+    #[test]
+    fn rejects_fields_past_the_word_limit() {
+        // Offsets past the i128 shift range must fail construction, not
+        // panic in the codec: n_a=4 × spacing 16 puts w2 at bit 128.
+        assert!(PackingConfig::generate("huge", 4, 6, 3, 6, 4).is_err());
+        // The result field is the binding span: a3@48 + w1@64 ends at 124.
+        assert!(PackingConfig::generate("edge", 4, 6, 2, 6, 4).is_err());
     }
 
     #[test]

@@ -142,6 +142,34 @@ impl PackedMultiplier {
         self.finish_into(p, a, w, out);
     }
 
+    /// Packed multiply against a **pre-encoded** `w`-side operand word
+    /// (a plane entry of [`crate::gemm::PackedWeights`]): packs only the
+    /// `a` side, feeds the stored multiplier-side word and pre-computed
+    /// C-port word through the datapath, then extracts and corrects using
+    /// the raw `w` operands stored alongside the plane.
+    ///
+    /// Bit-identical to [`PackedMultiplier::multiply_unchecked_into`] by
+    /// construction: the caller guarantees `w_word = Σ_j w_j 2^{woff_j}`
+    /// and `c = self.correction().c_word(.., w_raw)` — exactly the values
+    /// that method derives from `w_raw` on every call.
+    #[inline]
+    pub fn multiply_prepacked_into(
+        &self,
+        a: &[i128],
+        w_raw: &[i128],
+        w_word: i128,
+        c: i128,
+        out: &mut [i128],
+    ) {
+        let b = self.packer.pack_a_unchecked(a);
+        let p = if self.strict {
+            self.dsp.eval(&DspInputs { a: w_word, b, c, d: 0, pcin: 0, carry_in: 0 })
+        } else {
+            b * w_word + c
+        };
+        self.finish_into(p, a, w_raw, out);
+    }
+
     /// Accumulate `pairs.len()` packed products on a simulated DSP cascade
     /// (P-cascade chaining, §III) and extract the accumulated per-result
     /// sums. Valid error-free only while `pairs.len() ≤ 2^δ`.
@@ -216,6 +244,50 @@ mod tests {
         let mr = PackedMultiplier::new(cfg, Correction::MrRestore).unwrap();
         let r = mr.multiply(&[10, 3], &[-7, -4]).unwrap();
         assert_eq!(r[0], -70);
+    }
+
+    /// The plan-path entry point is bit-identical to the direct packed
+    /// multiply for every correction scheme, strict and logical modes.
+    #[test]
+    fn prepacked_multiply_matches_direct() {
+        let muls = [
+            PackedMultiplier::new(PackingConfig::int4(), Correction::None).unwrap(),
+            PackedMultiplier::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+            PackedMultiplier::new(PackingConfig::int4(), Correction::ApproxCPort).unwrap(),
+            PackedMultiplier::new(PackingConfig::int4(), Correction::ApproxPostSign).unwrap(),
+            PackedMultiplier::new(
+                PackingConfig::overpack_int4(-2).unwrap(),
+                Correction::MrRestore,
+            )
+            .unwrap(),
+            PackedMultiplier::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
+                .unwrap(),
+        ];
+        let mut rng = Rng::new(0x9137);
+        for mul in &muls {
+            let n = mul.config().num_results();
+            let mut direct = vec![0i128; n];
+            let mut pre = vec![0i128; n];
+            for _ in 0..500 {
+                let a: Vec<i128> = mul
+                    .config()
+                    .a
+                    .iter()
+                    .map(|s| rng.range_i128(s.range().0, s.range().1))
+                    .collect();
+                let w: Vec<i128> = mul
+                    .config()
+                    .w
+                    .iter()
+                    .map(|s| rng.range_i128(s.range().0, s.range().1))
+                    .collect();
+                mul.multiply_unchecked_into(&a, &w, &mut direct);
+                let word = mul.packer().pack_w_value_unchecked(&w);
+                let c = mul.correction().c_word(mul.config(), &a, &w);
+                mul.multiply_prepacked_into(&a, &w, word, c, &mut pre);
+                assert_eq!(direct, pre, "{} a={a:?} w={w:?}", mul.config().name);
+            }
+        }
     }
 
     #[test]

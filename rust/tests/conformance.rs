@@ -1,0 +1,202 @@
+//! Differential conformance battery: every layer of the packed-arithmetic
+//! stack checked against an independent oracle.
+//!
+//! * the exhaustive INT4 differential pins §V to the default test run:
+//!   full correction is exact on **every** operand pair, and the
+//!   uncorrected scheme reproduces the paper's Table I/II error figures;
+//! * randomized codec roundtrips pin "packed planes carry the full
+//!   operand information" across generated configurations;
+//! * the plan/execute/matmul triangle is checked on random matrices for
+//!   every preset packing × correction mode: `execute(plan(W), X)` must
+//!   be bit-identical to `matmul(X, W)` always, and both equal the exact
+//!   i32 reference for the schemes the paper proves (or we measured)
+//!   exact.
+
+use dsp_packing::analysis::ErrorStats;
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::{GemmEngine, MatI32};
+use dsp_packing::packing::{PackedMultiplier, Packer, PackingConfig};
+use dsp_packing::util::Rng;
+
+/// §V pinned exhaustively: over all 16·16·16·16 INT4 operand pairs, the
+/// full round-half-up correction reproduces the exact scalar outer
+/// product, and the uncorrected extraction shows the paper's error
+/// structure (Table I row 1 / Table II row 1, EP and MAE within print
+/// tolerance, WCE exactly 1, bias toward −∞).
+#[test]
+fn int4_exhaustive_differential() {
+    let cfg = PackingConfig::int4();
+    let full = PackedMultiplier::new(cfg.clone(), Correction::FullRoundHalfUp).unwrap();
+    let raw = PackedMultiplier::new(cfg.clone(), Correction::None).unwrap();
+    let mut raw_stats = vec![ErrorStats::default(); cfg.num_results()];
+    let mut full_out = vec![0i128; cfg.num_results()];
+    let mut raw_out = vec![0i128; cfg.num_results()];
+    for a0 in 0i128..16 {
+        for a1 in 0i128..16 {
+            for w0 in -8i128..8 {
+                for w1 in -8i128..8 {
+                    let (a, w) = ([a0, a1], [w0, w1]);
+                    let expected = cfg.expected(&a, &w);
+                    full.multiply_unchecked_into(&a, &w, &mut full_out);
+                    assert_eq!(
+                        full_out, expected,
+                        "full correction must be exact at a={a:?} w={w:?}"
+                    );
+                    raw.multiply_unchecked_into(&a, &w, &mut raw_out);
+                    for (s, (&got, &exp)) in
+                        raw_stats.iter_mut().zip(raw_out.iter().zip(&expected))
+                    {
+                        s.record(got, exp);
+                    }
+                }
+            }
+        }
+    }
+    // Table II row 1: per-result EP 0 / 46.87 / 49.80 / 52.73 %, WCE ≤ 1.
+    let paper_ep = [0.0, 46.875, 49.805, 52.734];
+    for (i, (s, ep)) in raw_stats.iter().zip(paper_ep).enumerate() {
+        assert_eq!(s.n, 65536);
+        assert!((s.ep_percent() - ep).abs() < 0.01, "r{i}: EP {}", s.ep_percent());
+        assert!((s.mae() - ep / 100.0).abs() < 0.001, "r{i}: MAE {}", s.mae());
+        assert!(s.wce <= 1, "r{i}: WCE {}", s.wce);
+        if i > 0 {
+            assert!(s.bias() < 0.0, "floor error biases toward -inf");
+        }
+    }
+    // Table I row 1 aggregates: MAE-bar 0.37, EP-bar 37.35 %, WCE-bar 1.
+    let mae_bar = raw_stats.iter().map(ErrorStats::mae).sum::<f64>() / 4.0;
+    let ep_bar = raw_stats.iter().map(ErrorStats::ep_percent).sum::<f64>() / 4.0;
+    let wce_bar = raw_stats.iter().map(|s| s.wce).max().unwrap();
+    assert!((mae_bar - 0.37354).abs() < 0.0001, "MAE-bar {mae_bar}");
+    assert!((ep_bar - 37.35).abs() < 0.01, "EP-bar {ep_bar}");
+    assert_eq!(wce_bar, 1);
+}
+
+/// Codec roundtrip over randomized generated configurations: packed
+/// operand words decode back to the exact operand vectors, on both the
+/// unsigned `a` side and the sign-extended `w` side.
+#[test]
+fn prop_codec_roundtrip_randomized_configs() {
+    let mut rng = Rng::new(0xC0DEC);
+    let mut tested = 0;
+    while tested < 300 {
+        let n_a = rng.range_i64(1, 4) as usize;
+        let n_w = rng.range_i64(1, 3) as usize;
+        let a_width = rng.range_i64(2, 6) as u32;
+        let w_width = rng.range_i64(2, 6) as u32;
+        let delta = rng.range_i64(-3, 4) as i32;
+        if (a_width + w_width) as i32 + delta <= 0 {
+            continue;
+        }
+        let Ok(cfg) = PackingConfig::generate("rt", n_a, a_width, n_w, w_width, delta) else {
+            continue; // overlapping operand fields — rejected by design
+        };
+        let packer = Packer::new(cfg);
+        for _ in 0..20 {
+            let a: Vec<i128> = packer
+                .config()
+                .a
+                .iter()
+                .map(|s| rng.range_i128(s.range().0, s.range().1))
+                .collect();
+            let w: Vec<i128> = packer
+                .config()
+                .w
+                .iter()
+                .map(|s| rng.range_i128(s.range().0, s.range().1))
+                .collect();
+            let word_a = packer.pack_a(&a).unwrap();
+            assert_eq!(packer.unpack_a(word_a), a, "a roundtrip");
+            let word_w = packer.pack_w_value_unchecked(&w);
+            assert_eq!(packer.unpack_w_value(word_w), w, "w roundtrip");
+        }
+        tested += 1;
+    }
+}
+
+/// Whole-matrix roundtrip: a plan decodes back to the weight matrix it
+/// was built from, for strict and logical engines alike.
+#[test]
+fn prop_plan_decode_roundtrip() {
+    let engines = [
+        GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+        GemmEngine::new(PackingConfig::int8(), Correction::None).unwrap(),
+        GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap(),
+    ];
+    let mut rng = Rng::new(0xDEC0DE);
+    for eng in &engines {
+        let (w_lo, w_hi) = eng.config().w[0].range();
+        for _ in 0..10 {
+            let k = 1 + rng.below(20) as usize;
+            let n = 1 + rng.below(12) as usize;
+            let w = MatI32::random_range(k, n, w_lo as i32, w_hi as i32, &mut rng);
+            assert_eq!(eng.plan(&w).unwrap().decode(), w, "{}", eng.config().name);
+        }
+    }
+}
+
+/// Every preset configuration × correction mode that constructs (strict
+/// first, falling back to the architecture-independent mode) must satisfy
+/// `execute(plan(W), X) == matmul(X, W)` bit for bit — outputs and DSP
+/// counters — on random matrices; the schemes that are exact must also
+/// equal the exact i32 reference.
+#[test]
+fn prop_plan_execute_matmul_differential() {
+    let presets: Vec<(&str, PackingConfig)> = vec![
+        ("int4", PackingConfig::int4()),
+        ("int8", PackingConfig::int8()),
+        ("intn_fig9", PackingConfig::intn_fig9()),
+        ("overpack_fig9", PackingConfig::overpack_fig9()),
+        ("overpack_d1", PackingConfig::overpack_int4(-1).unwrap()),
+        ("overpack_d2", PackingConfig::overpack_int4(-2).unwrap()),
+        ("overpack_d3", PackingConfig::overpack_int4(-3).unwrap()),
+        ("overpack6", PackingConfig::overpack6_int4()),
+        ("precision6", PackingConfig::precision6()),
+    ];
+    // The schemes with an exactness guarantee to enforce: full correction
+    // on δ ≥ 0 (§V-A), and the C-port correction on the two Xilinx
+    // configurations (measured exhaustive, see EXPERIMENTS notes).
+    let exact = |name: &str, corr: Correction, delta: i32| match corr {
+        Correction::FullRoundHalfUp => delta >= 0,
+        Correction::ApproxCPort => matches!(name, "int4" | "int8"),
+        _ => false,
+    };
+    let mut rng = Rng::new(0xD1FF);
+    let mut combos = 0;
+    for &(name, ref cfg) in &presets {
+        for corr in Correction::ALL {
+            let engine = match GemmEngine::new(cfg.clone(), corr) {
+                Ok(e) => e,
+                Err(_) => match GemmEngine::logical(cfg.clone(), corr) {
+                    Ok(e) => e,
+                    Err(_) => continue, // invalid combination (e.g. MR on δ ≥ 0)
+                },
+            };
+            combos += 1;
+            let (a_lo, a_hi) = engine.config().a[0].range();
+            let (w_lo, w_hi) = engine.config().w[0].range();
+            for _ in 0..3 {
+                let m = 1 + rng.below(9) as usize;
+                let k = 1 + rng.below(24) as usize;
+                let n = 1 + rng.below(9) as usize;
+                let a = MatI32::random_range(m, k, a_lo as i32, a_hi as i32, &mut rng);
+                let w = MatI32::random_range(k, n, w_lo as i32, w_hi as i32, &mut rng);
+                let plan = engine.plan(&w).unwrap();
+                let (via_plan, plan_stats) = engine.execute(&plan, &a).unwrap();
+                let (one_shot, shot_stats) = engine.matmul(&a, &w).unwrap();
+                assert_eq!(via_plan, one_shot, "{name}+{corr:?} {m}x{k}x{n}");
+                assert_eq!(plan_stats, shot_stats, "{name}+{corr:?} {m}x{k}x{n}");
+                if exact(name, corr, engine.config().delta) {
+                    assert_eq!(
+                        via_plan,
+                        a.matmul_exact(&w).unwrap(),
+                        "{name}+{corr:?} {m}x{k}x{n} must be exact"
+                    );
+                }
+            }
+        }
+    }
+    // 9 presets × 6 schemes minus the invalid combinations; make sure the
+    // loop actually exercised a healthy cross-section.
+    assert!(combos >= 30, "only {combos} engine combinations constructed");
+}

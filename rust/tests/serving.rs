@@ -1,0 +1,123 @@
+//! Coordinator concurrency conformance: many producers, one shared
+//! weights-resident backend — every request answered exactly once, with
+//! the class the exact reference assigns, at reproducible DSP cost.
+
+use dsp_packing::coordinator::{
+    BatcherConfig, Coordinator, InferenceBackend, PackedNnBackend, Request, ServerConfig,
+};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::GemmEngine;
+use dsp_packing::nn::{data, ExecMode, QuantMlp};
+use dsp_packing::packing::PackingConfig;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn packed_backend(ds: &data::Dataset) -> (Arc<PackedNnBackend>, Vec<usize>) {
+    let mlp = QuantMlp::centroid_classifier(ds, 4, 4).unwrap();
+    // The exact reference every served prediction must agree with (full
+    // correction is bit-exact, so agreement is equality, not tolerance).
+    let x = mlp.quantize_batch(&ds.images).unwrap();
+    let (exact, _) = mlp.classify(&x, &ExecMode::Exact).unwrap();
+    let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    (Arc::new(PackedNnBackend::new(mlp, ExecMode::Packed(engine))), exact)
+}
+
+/// N producer threads hammer the batcher concurrently; every request gets
+/// exactly one [`dsp_packing::coordinator::Prediction`], carrying the
+/// same class the exact backend computes for that image.
+#[test]
+fn concurrent_producers_get_exactly_one_exact_class_each() {
+    let ds = data::synthetic(96, 4, 64, 0.15, 7);
+    let (backend, exact) = packed_backend(&ds);
+    let coord = Coordinator::start(
+        backend,
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 4096,
+            },
+            workers: 4,
+            dsp_budget: 64,
+        },
+    );
+    let handle = coord.handle();
+
+    let n_producers = 8u64;
+    let per_producer = 24u64;
+    let mut producers = Vec::new();
+    for p in 0..n_producers {
+        let handle = handle.clone();
+        let images = ds.images.clone();
+        let exact = exact.clone();
+        producers.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for i in 0..per_producer {
+                let id = p * 1000 + i;
+                let idx = ((p * per_producer + i) % images.len() as u64) as usize;
+                let pred = handle
+                    .infer(Request { id, image: images[idx].clone() })
+                    .expect("serving must not drop well-formed requests");
+                assert_eq!(pred.id, id, "response routed to its own request");
+                assert_eq!(
+                    pred.class, exact[idx],
+                    "served class must equal the exact reference for image {idx}"
+                );
+                ids.push(id);
+            }
+            ids
+        }));
+    }
+    let mut all_ids: Vec<u64> = Vec::new();
+    for pr in producers {
+        all_ids.extend(pr.join().unwrap());
+    }
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    assert_eq!(
+        all_ids.len(),
+        (n_producers * per_producer) as usize,
+        "every request answered exactly once"
+    );
+
+    let m = coord.shutdown();
+    assert_eq!(m.completed, n_producers * per_producer);
+    assert_eq!(m.rejected, 0);
+    assert!(m.dsp_utilization > 3.9, "int4 serves 4 mults per DSP cycle");
+}
+
+/// A request's reply channel delivers exactly one prediction — after it,
+/// the channel is closed, not re-sent.
+#[test]
+fn reply_channel_carries_exactly_one_prediction() {
+    let ds = data::synthetic(16, 4, 64, 0.15, 7);
+    let (backend, _) = packed_backend(&ds);
+    let coord = Coordinator::start(backend, ServerConfig::default());
+    let handle = coord.handle();
+    let rx = handle.submit(Request { id: 9, image: ds.images[0].clone() }).unwrap();
+    let first = rx.recv().expect("one prediction arrives");
+    assert_eq!(first.id, 9);
+    assert!(rx.recv().is_err(), "no second prediction on the same channel");
+    coord.shutdown();
+}
+
+/// Planned-weight reuse keeps the DSP work of identical batches
+/// identical: the backend serves every batch from the same resident
+/// [`dsp_packing::gemm::PackedWeights`], so repeated inference over the
+/// same images consumes exactly the same `dsp_cycles` (no per-call
+/// re-planning, no drift).
+#[test]
+fn repeated_identical_batches_consume_identical_dsp_cycles() {
+    let ds = data::synthetic(32, 4, 64, 0.15, 11);
+    let (backend, exact) = packed_backend(&ds);
+    let (classes_1, stats_1) = backend.infer(&ds.images).unwrap();
+    let (classes_2, stats_2) = backend.infer(&ds.images).unwrap();
+    let (classes_3, stats_3) = backend.infer(&ds.images).unwrap();
+    assert_eq!(classes_1, exact);
+    assert_eq!(classes_1, classes_2);
+    assert_eq!(classes_2, classes_3);
+    assert_eq!(stats_1.dsp_cycles, stats_2.dsp_cycles, "resident plans: no cost drift");
+    assert_eq!(stats_2.dsp_cycles, stats_3.dsp_cycles);
+    assert_eq!(stats_1, stats_2, "all DSP counters identical, not just cycles");
+    assert_eq!(stats_2, stats_3);
+}
