@@ -1,22 +1,26 @@
-//! End-to-end driver (experiment E9): serve quantized inference through
-//! the full three-layer stack and compare every backend on the same
-//! workload.
+//! End-to-end driver (experiment E9): serve quantized **CNN** inference
+//! through the full stack — a conv → max-pool → dense-head model lowered
+//! to the packed GEMM via im2col — and compare backends on the same
+//! workload:
 //!
-//! * **pjrt:mlp_exact** — the L2 JAX model with exact integer matmuls,
-//!   AOT-lowered to HLO and executed via PJRT (no Python at runtime).
-//! * **pjrt:mlp_packed** — the same model with every matmul routed
-//!   through the L1 Pallas DSP-packing kernel, in the same artifact.
-//! * **packed:xilinx-int4** — the Rust virtual accelerator: bit-accurate
-//!   DSP48E2 slices running INT4 packing with full correction.
-//! * **exact** — the Rust exact integer reference.
+//! * **cnn:exact** — the quantized CNN on the exact i32 reference path.
+//! * **cnn:packed:xilinx-int4** — the same CNN on the Rust virtual
+//!   accelerator: bit-accurate DSP48E2 slices running INT4 packing with
+//!   full correction (bit-identical logits to `cnn:exact`).
+//! * **cnn:packed:overpack6-int4** — MR-Overpacking, six multiplications
+//!   per DSP, small bounded approximation error.
+//! * **exact / packed:...** — the original MLP backends on the same
+//!   dataset, for cross-model comparison (requires `make artifacts` for
+//!   the JAX-trained weights; skipped otherwise).
+//! * **pjrt:...** — the AOT JAX/Pallas artifacts via PJRT, when built.
 //!
-//! All four serve the identical synthetic dataset (shared SplitMix64
-//! generator, seed 7 — bit-identical between Python and Rust) through the
-//! L3 coordinator with dynamic batching. Reported: accuracy, throughput,
-//! latency percentiles, DSP utilization. Results land in EXPERIMENTS.md.
+//! Every backend serves the identical synthetic dataset (shared SplitMix64
+//! generator, seed 7) through the L3 coordinator with dynamic batching.
+//! Reported: accuracy, throughput, latency percentiles, DSP utilization.
 //!
 //! ```text
-//! make artifacts && cargo run --release --example cnn_inference
+//! cargo run --release --example cnn_inference           # CNN rows always run
+//! make artifacts && cargo run --release --example cnn_inference  # + MLP/PJRT
 //! ```
 
 use dsp_packing::coordinator::{
@@ -24,7 +28,7 @@ use dsp_packing::coordinator::{
 };
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::GemmEngine;
-use dsp_packing::nn::{data, weights, ExecMode};
+use dsp_packing::nn::{data, weights, ExecMode, QuantCnn};
 use dsp_packing::packing::PackingConfig;
 use dsp_packing::runtime::PjrtBackend;
 use std::sync::Arc;
@@ -65,7 +69,7 @@ fn serve(backend: Arc<dyn InferenceBackend>, ds: &data::Dataset) -> dsp_packing:
     let m = coord.shutdown();
 
     println!(
-        "{name:<22} acc={:>5.1}%  thrpt={:>7.0} req/s  p50={:>6}us p99={:>6}us  batch={:.1}  dsp-util={:.2}",
+        "{name:<26} acc={:>5.1}%  thrpt={:>7.0} req/s  p50={:>6}us p99={:>6}us  batch={:.1}  dsp-util={:.2}",
         100.0 * correct as f64 / REQUESTS as f64,
         REQUESTS as f64 / elapsed.as_secs_f64(),
         m.p50_latency_us,
@@ -80,37 +84,50 @@ fn main() -> dsp_packing::Result<()> {
     // The dataset both sides agree on (seed 7, bit-identical generators).
     let ds = data::synthetic(256, 4, 64, 0.15, 7);
 
-    // The JAX-trained model weights, exported at `make artifacts` time.
-    let weights_path = dsp_packing::runtime::PjrtRuntime::artifact_path("mlp_weights.txt")
-        .ok_or_else(|| dsp_packing::Error::Runtime("run `make artifacts` first".into()))?;
-    let mut mlp = weights::mlp_from_export(&weights_path)?;
-    let cal = mlp.quantize_batch(&ds.images[..32].to_vec())?;
-    mlp.calibrate(&cal)?;
-
     println!("end-to-end inference, {REQUESTS} requests, 4 concurrent clients\n");
 
-    // 1. Rust exact reference.
-    serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Exact)), &ds)?;
+    // The quantized CNN: 3×3 conv (8 filters) → 2×2 max-pool → centroid
+    // head, filter bank planned once into resident weight planes. Built
+    // from the synthetic dataset — no artifacts required.
+    let cnn = QuantCnn::new(&ds, 8, 4, 4, 17)?;
 
-    // 2. Rust virtual accelerator: INT4 packing + full correction.
+    // 1. CNN on the exact i32 reference.
+    serve(Arc::new(PackedNnBackend::new(cnn.clone(), ExecMode::Exact)), &ds)?;
+
+    // 2. CNN on the virtual accelerator: INT4 packing + full correction.
     let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp)?;
-    serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Packed(engine))), &ds)?;
+    serve(Arc::new(PackedNnBackend::new(cnn.clone(), ExecMode::Packed(engine.clone()))), &ds)?;
 
-    // 3. Rust virtual accelerator: MR-Overpacking (6 mults per DSP).
+    // 3. CNN on MR-Overpacking (6 mults per DSP, approximate).
     let engine6 = GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)?;
-    serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Packed(engine6))), &ds)?;
+    serve(Arc::new(PackedNnBackend::new(cnn, ExecMode::Packed(engine6.clone()))), &ds)?;
 
-    // 4. PJRT: the AOT JAX artifacts (exact and packed-kernel variants).
+    // 4. The MLP comparison rows (JAX-trained weights, exported at
+    //    `make artifacts` time); skipped gracefully when not built.
+    match dsp_packing::runtime::PjrtRuntime::artifact_path("mlp_weights.txt") {
+        Some(weights_path) => {
+            let mut mlp = weights::mlp_from_export(&weights_path)?;
+            let cal = mlp.quantize_batch(&ds.images[..32].to_vec())?;
+            mlp.calibrate(&cal)?;
+            serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Exact)), &ds)?;
+            serve(Arc::new(PackedNnBackend::new(mlp.clone(), ExecMode::Packed(engine))), &ds)?;
+            serve(Arc::new(PackedNnBackend::new(mlp, ExecMode::Packed(engine6))), &ds)?;
+        }
+        None => println!("mlp backends                skipped: run `make artifacts` first"),
+    }
+
+    // 5. PJRT: the AOT JAX artifacts (exact and packed-kernel variants).
     for name in ["mlp_exact.hlo.txt", "mlp_packed.hlo.txt"] {
         match PjrtBackend::load(name, 16, 64, 4) {
             Ok(b) => serve(Arc::new(b), &ds)?,
-            Err(e) => println!("pjrt:{name:<15} skipped: {e}"),
+            Err(e) => println!("pjrt:{name:<21} skipped: {e}"),
         }
     }
 
-    println!("\nreading: the packed virtual accelerator matches exact accuracy (full");
-    println!("correction is bit-exact) at 4x DSP utilization; MR-Overpacking trades");
-    println!("~0 accuracy on this model for 6x; the PJRT rows prove the same");
-    println!("arithmetic lowered from JAX/Pallas runs on the rust serving path.");
+    println!("\nreading: the packed CNN matches exact accuracy (full correction is");
+    println!("bit-exact through conv, pool and head) at 4x DSP utilization, with the");
+    println!("filter bank planned once and resident across all {REQUESTS} requests;");
+    println!("MR-Overpacking trades ~0 accuracy on this model for 6x. The MLP and");
+    println!("PJRT rows put the original dense stack on the same workload.");
     Ok(())
 }

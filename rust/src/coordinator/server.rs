@@ -3,7 +3,7 @@
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::{Metrics, MetricsSnapshot};
 use crate::gemm::DspOpStats;
-use crate::nn::{ExecMode, QuantMlp};
+use crate::nn::{ExecMode, NnModel, QuantMlp};
 use crate::{Error, Result};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -40,37 +40,39 @@ pub trait InferenceBackend: Send + Sync + 'static {
     fn name(&self) -> &str;
 }
 
-/// The packed-GEMM virtual accelerator backend. Weights-resident: the
-/// model's packed weight planes are planned once at construction
-/// ([`QuantMlp::prepare`]) and every served batch executes against the
-/// cached plans.
-pub struct PackedNnBackend {
+/// The packed-GEMM virtual accelerator backend, generic over the model
+/// it serves (any [`NnModel`]: the MLP, the im2col-lowered CNN, ...).
+/// Weights-resident: the model's packed weight planes are planned once at
+/// construction ([`NnModel::prepare`]) and every served batch executes
+/// against the cached plans. Defaults to [`QuantMlp`] so existing callers
+/// can keep naming the type without parameters.
+pub struct PackedNnBackend<M: NnModel = QuantMlp> {
     /// Model to serve.
-    pub model: QuantMlp,
+    pub model: M,
     /// Execution mode (packed engine or exact reference).
     pub mode: ExecMode,
     label: String,
 }
 
-impl PackedNnBackend {
+impl<M: NnModel> PackedNnBackend<M> {
     /// Wrap a model + execution mode, pre-planning the packed weight
     /// planes so the first request pays no build cost. A planning failure
     /// (weights outside the packing's operand range) is deferred: the
     /// first `infer` surfaces it through the same path.
-    pub fn new(model: QuantMlp, mode: ExecMode) -> Self {
-        let label = match &mode {
+    pub fn new(model: M, mode: ExecMode) -> Self {
+        let fabric = match &mode {
             ExecMode::Exact => "exact".to_string(),
             ExecMode::Packed(e) => format!("packed:{}", e.config().name),
         };
+        let label = model.label(&fabric);
         let _ = model.prepare(&mode);
         PackedNnBackend { model, mode, label }
     }
 }
 
-impl InferenceBackend for PackedNnBackend {
+impl<M: NnModel> InferenceBackend for PackedNnBackend<M> {
     fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
-        let x = self.model.quantize_batch(batch)?;
-        self.model.classify(&x, &self.mode)
+        self.model.classify_images(batch, &self.mode)
     }
 
     fn name(&self) -> &str {

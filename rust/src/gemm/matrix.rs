@@ -1,6 +1,93 @@
-//! Dense row-major i32 matrix — the tensor type of the GEMM/NN substrate.
+//! Dense row-major i32 matrix — the tensor type of the GEMM/NN substrate —
+//! plus the [`Im2col`] lowering that turns batched convolution into the
+//! GEMM shape the packed engine consumes.
 
 use crate::{Error, Result};
+
+/// Geometry of an **im2col** lowering: how a batch of `channels`-deep
+/// `height`×`width` images, convolved by a square `kernel` with `stride`
+/// and zero `padding`, unrolls into a patch matrix.
+///
+/// Layout conventions (shared by [`MatI32::im2col`], [`MatI32::col2im`]
+/// and the conv layers in [`crate::nn`]):
+///
+/// * an image batch is a [`MatI32`] with one image per row, pixels
+///   channel-major: column `c·H·W + y·W + x`;
+/// * the patch matrix has one patch per row, image-major then row-major
+///   over output positions (`b·OH·OW + oy·OW + ox`), and one kernel tap
+///   per column, channel-major: `c·K² + ky·K + kx`.
+///
+/// A conv filter bank stored as a `(channels·K²) × filters` weight matrix
+/// in the same column order then turns `conv2d` into
+/// `patches · weights` — one GEMM per batch, which is exactly the shape
+/// [`crate::gemm::GemmEngine`] plans and executes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Im2col {
+    /// Input channels.
+    pub channels: usize,
+    /// Input image height.
+    pub height: usize,
+    /// Input image width.
+    pub width: usize,
+    /// Square kernel side length.
+    pub kernel: usize,
+    /// Stride in both spatial dimensions.
+    pub stride: usize,
+    /// Zero padding on every image edge.
+    pub padding: usize,
+}
+
+impl Im2col {
+    /// Validated lowering geometry. The kernel must be non-empty, the
+    /// stride positive, and the padded image at least one kernel wide in
+    /// both dimensions (so the output is non-empty).
+    pub fn new(
+        channels: usize,
+        height: usize,
+        width: usize,
+        kernel: usize,
+        stride: usize,
+        padding: usize,
+    ) -> Result<Self> {
+        if channels == 0 || height == 0 || width == 0 || kernel == 0 || stride == 0 {
+            return Err(Error::Shape(format!(
+                "im2col with zero extent: {channels}x{height}x{width}, k={kernel}, s={stride}"
+            )));
+        }
+        if height + 2 * padding < kernel || width + 2 * padding < kernel {
+            return Err(Error::Shape(format!(
+                "kernel {kernel} exceeds padded image {}x{}",
+                height + 2 * padding,
+                width + 2 * padding
+            )));
+        }
+        Ok(Im2col { channels, height, width, kernel, stride, padding })
+    }
+
+    /// Output feature-map dimensions `(out_height, out_width)`.
+    pub fn out_dims(&self) -> (usize, usize) {
+        (
+            (self.height + 2 * self.padding - self.kernel) / self.stride + 1,
+            (self.width + 2 * self.padding - self.kernel) / self.stride + 1,
+        )
+    }
+
+    /// Columns of the patch matrix: `channels · kernel²`.
+    pub fn patch_len(&self) -> usize {
+        self.channels * self.kernel * self.kernel
+    }
+
+    /// Patch rows produced per image: `out_height · out_width`.
+    pub fn patches_per_image(&self) -> usize {
+        let (oh, ow) = self.out_dims();
+        oh * ow
+    }
+
+    /// Pixels per image: `channels · height · width`.
+    pub fn image_len(&self) -> usize {
+        self.channels * self.height * self.width
+    }
+}
 
 /// Dense row-major matrix of `i32` (quantized values and accumulators).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -124,6 +211,82 @@ impl MatI32 {
         Ok(out)
     }
 
+    /// Unroll a batch of images (one per row, channel-major pixels) into
+    /// the patch matrix of `spec` — see [`Im2col`] for the layout. Pixels
+    /// read from the zero-padding border contribute 0, which is also the
+    /// quantized value of a 0.0 activation.
+    pub fn im2col(&self, spec: &Im2col) -> Result<MatI32> {
+        if self.cols != spec.image_len() {
+            return Err(Error::Shape(format!(
+                "im2col over {}x{} images needs {} columns, matrix has {}",
+                spec.height,
+                spec.width,
+                spec.image_len(),
+                self.cols
+            )));
+        }
+        let (oh, ow) = spec.out_dims();
+        let span = oh * ow;
+        let (k, hw) = (spec.kernel, spec.height * spec.width);
+        Ok(MatI32::from_fn(self.rows * span, spec.patch_len(), |p, t| {
+            let (b, pos) = (p / span, p % span);
+            let (oy, ox) = (pos / ow, pos % ow);
+            let (c, tap) = (t / (k * k), t % (k * k));
+            let (ky, kx) = (tap / k, tap % k);
+            // Signed source coordinates: negative or past-the-edge taps
+            // read the zero padding.
+            let iy = (oy * spec.stride + ky) as isize - spec.padding as isize;
+            let ix = (ox * spec.stride + kx) as isize - spec.padding as isize;
+            if iy < 0 || ix < 0 || iy >= spec.height as isize || ix >= spec.width as isize {
+                0
+            } else {
+                self.get(b, c * hw + iy as usize * spec.width + ix as usize)
+            }
+        }))
+    }
+
+    /// Scatter a patch matrix (the [`MatI32::im2col`] layout) back into
+    /// image form. Each patch element overwrites its source pixel;
+    /// padding taps are dropped, and pixels no patch reads (possible
+    /// when the strided patch grid stops short of an edge, e.g. a 5×5
+    /// image with `kernel = stride = 2`) are left zero. It therefore
+    /// inverts `im2col` exactly iff the patches cover every pixel — a
+    /// sufficient condition is `stride ≤ kernel` with
+    /// `(dim + 2·padding − kernel)` divisible by `stride` in both
+    /// dimensions, though coverage can also hold without the
+    /// divisibility (the padding absorbs the shortfall). The conv test
+    /// suite pins the round-trip on covering geometries of both kinds.
+    pub fn col2im(&self, spec: &Im2col) -> Result<MatI32> {
+        let span = spec.patches_per_image();
+        if self.cols != spec.patch_len() || self.rows % span != 0 {
+            return Err(Error::Shape(format!(
+                "col2im of {}x{} patches does not match geometry ({} per image, {} taps)",
+                self.rows,
+                self.cols,
+                span,
+                spec.patch_len()
+            )));
+        }
+        let batch = self.rows / span;
+        let (_, ow) = spec.out_dims();
+        let (k, hw) = (spec.kernel, spec.height * spec.width);
+        let mut out = MatI32::zeros(batch, spec.image_len());
+        for p in 0..self.rows {
+            let (b, pos) = (p / span, p % span);
+            let (oy, ox) = (pos / ow, pos % ow);
+            for t in 0..self.cols {
+                let (c, tap) = (t / (k * k), t % (k * k));
+                let (ky, kx) = (tap / k, tap % k);
+                let iy = (oy * spec.stride + ky) as isize - spec.padding as isize;
+                let ix = (ox * spec.stride + kx) as isize - spec.padding as isize;
+                if iy >= 0 && ix >= 0 && iy < spec.height as isize && ix < spec.width as isize {
+                    out.set(b, c * hw + iy as usize * spec.width + ix as usize, self.get(p, t));
+                }
+            }
+        }
+        Ok(out)
+    }
+
     /// Mean absolute difference against another matrix of the same shape.
     pub fn mean_abs_diff(&self, other: &MatI32) -> Result<f64> {
         if self.rows != other.rows || self.cols != other.cols {
@@ -160,6 +323,86 @@ mod tests {
         let c = a.matmul_exact(&b).unwrap();
         assert_eq!(c.data(), &[58, 64, 139, 154]);
         assert!(a.matmul_exact(&a).is_err(), "shape mismatch rejected");
+    }
+
+    #[test]
+    fn im2col_matches_manual_patch_extraction() {
+        // One 1-channel 3×3 image, 2×2 kernel, stride 1, no padding.
+        #[rustfmt::skip]
+        let img = MatI32::from_vec(1, 9, vec![
+            1, 2, 3,
+            4, 5, 6,
+            7, 8, 9,
+        ]).unwrap();
+        let spec = Im2col::new(1, 3, 3, 2, 1, 0).unwrap();
+        assert_eq!(spec.out_dims(), (2, 2));
+        let patches = img.im2col(&spec).unwrap();
+        assert_eq!((patches.rows, patches.cols), (4, 4));
+        assert_eq!(patches.row(0), &[1, 2, 4, 5]);
+        assert_eq!(patches.row(1), &[2, 3, 5, 6]);
+        assert_eq!(patches.row(2), &[4, 5, 7, 8]);
+        assert_eq!(patches.row(3), &[5, 6, 8, 9]);
+    }
+
+    #[test]
+    fn im2col_zero_pads_the_border() {
+        let img = MatI32::from_vec(1, 4, vec![1, 2, 3, 4]).unwrap(); // 2×2
+        let spec = Im2col::new(1, 2, 2, 2, 1, 1).unwrap();
+        assert_eq!(spec.out_dims(), (3, 3));
+        let patches = img.im2col(&spec).unwrap();
+        // Top-left patch sees the image's (0,0) in its bottom-right tap.
+        assert_eq!(patches.row(0), &[0, 0, 0, 1]);
+        // Center patch is the full image.
+        assert_eq!(patches.row(4), &[1, 2, 3, 4]);
+        // Bottom-right patch sees (1,1) in its top-left tap.
+        assert_eq!(patches.row(8), &[4, 0, 0, 0]);
+    }
+
+    #[test]
+    fn im2col_col2im_roundtrip_when_patches_cover_the_image() {
+        let mut rng = crate::util::Rng::new(0x1_2C01);
+        // Every geometry below has full patch coverage (each pixel is
+        // read by at least one patch) — some via exact stride
+        // divisibility, some via padding absorbing the edge shortfall.
+        for (c, h, w, k, s, p) in [
+            (1usize, 4usize, 4usize, 3usize, 1usize, 0usize),
+            (2, 5, 4, 2, 2, 1),
+            (3, 6, 6, 3, 2, 1),
+            (1, 3, 5, 1, 1, 0),
+        ] {
+            let spec = Im2col::new(c, h, w, k, s, p).unwrap();
+            let imgs = MatI32::random_range(3, spec.image_len(), -50, 50, &mut rng);
+            let patches = imgs.im2col(&spec).unwrap();
+            assert_eq!(patches.rows, 3 * spec.patches_per_image());
+            assert_eq!(patches.cols, spec.patch_len());
+            assert_eq!(patches.col2im(&spec).unwrap(), imgs, "{c}ch {h}x{w} k{k} s{s} p{p}");
+        }
+    }
+
+    #[test]
+    fn col2im_leaves_uncovered_pixels_zero() {
+        // 5×5 with kernel = stride = 2, no padding: the patch grid stops
+        // at row/col 3, so the last row and column are never read — the
+        // documented non-invertible case.
+        let spec = Im2col::new(1, 5, 5, 2, 2, 0).unwrap();
+        let img = MatI32::from_fn(1, 25, |_, c| c as i32 + 1);
+        let back = img.im2col(&spec).unwrap().col2im(&spec).unwrap();
+        for y in 0..5 {
+            for x in 0..5 {
+                let expect = if y == 4 || x == 4 { 0 } else { img.get(0, y * 5 + x) };
+                assert_eq!(back.get(0, y * 5 + x), expect, "({y},{x})");
+            }
+        }
+    }
+
+    #[test]
+    fn im2col_rejects_bad_geometry() {
+        assert!(Im2col::new(1, 4, 4, 5, 1, 0).is_err(), "kernel larger than image");
+        assert!(Im2col::new(1, 4, 4, 3, 0, 0).is_err(), "zero stride");
+        assert!(Im2col::new(0, 4, 4, 3, 1, 0).is_err(), "zero channels");
+        let spec = Im2col::new(1, 4, 4, 3, 1, 0).unwrap();
+        assert!(MatI32::zeros(1, 15).im2col(&spec).is_err(), "image length mismatch");
+        assert!(MatI32::zeros(5, spec.patch_len()).col2im(&spec).is_err(), "ragged batch");
     }
 
     #[test]

@@ -36,11 +36,16 @@
 //!
 //! The engine counts DSP work, so benchmarks can report the utilization
 //! gain over the one-multiply-per-DSP baseline (the paper's raison d'être).
+//!
+//! Convolution rides the same two phases: [`Im2col`] (on [`MatI32`])
+//! lowers a batched conv2d to `patches · weights`, so a filter bank is
+//! planned once like any weight matrix and every image batch is one
+//! `execute` call — see [`crate::nn`]'s `Conv2dLayer`.
 
 mod engine;
 mod matrix;
 mod plan;
 
 pub use engine::{DspOpStats, GemmEngine};
-pub use matrix::MatI32;
+pub use matrix::{Im2col, MatI32};
 pub use plan::{GemmPlan, PackedWeights};

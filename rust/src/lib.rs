@@ -53,6 +53,11 @@
 //! let r = mul.multiply(&[3, 10], &[-7, 5]).unwrap();
 //! assert_eq!(r, vec![-21, -70, 15, 50]); // full outer product, exact
 //! ```
+//!
+//! See `ARCHITECTURE.md` at the repository root for the layer map and the
+//! request-to-P-word data flow.
+
+#![warn(missing_docs)]
 
 pub mod addpack;
 pub mod analysis;
@@ -115,3 +120,13 @@ impl std::error::Error for Error {}
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+/// Compiled-and-run mirror of the repository README: every fenced `rust`
+/// block in `README.md` becomes a doctest of this module, so the headline
+/// API example cannot drift from the crate. Exists only under
+/// `cfg(doctest)` — `cargo test --doc` (run in CI) executes it; the
+/// module never appears in builds or docs.
+#[cfg(doctest)]
+pub mod readme_doctests {
+    #![doc = include_str!("../../README.md")]
+}

@@ -1,0 +1,515 @@
+//! Quantized 2-D convolution on the plan/execute GEMM engine, max-pooling,
+//! and the [`QuantCnn`] model — the paper's motivating workload (§I:
+//! quantized CNN inference is why low-precision packing matters).
+//!
+//! A convolution lowers to GEMM via **im2col**
+//! ([`crate::gemm::Im2col`] / [`MatI32::im2col`]): each output position
+//! becomes a patch row, the filter bank becomes a `(channels·K²) ×
+//! filters` weight matrix, and `conv2d(x, F) = im2col(x) · F`. That puts
+//! conv exactly where the plan/execute split pays off most: the filter
+//! bank is planned **once** into resident [`crate::gemm::PackedWeights`]
+//! (cached per layer, like dense layers), while every served batch only
+//! pays im2col plus one `execute` — thousands of activation streams
+//! against the same weight planes. `benches/conv_throughput.rs` measures
+//! the gap against per-call repacking.
+//!
+//! [`Conv2dLayer`] supports stride and zero padding, per-layer weight
+//! quantization, bias, and ReLU requantization; [`MaxPool2d`] reduces the
+//! feature map; [`QuantCnn`] chains conv → pool → dense head and runs in
+//! [`ExecMode::Exact`] and [`ExecMode::Packed`] with the same bit-identical
+//! [`DspOpStats`] accounting the dense layers have (pinned differentially
+//! against a naive direct convolution in `tests/conv.rs`).
+
+use super::data::Dataset;
+use super::mlp::{DenseLayer, ExecMode};
+use super::quantize;
+use super::NnModel;
+use crate::gemm::{DspOpStats, GemmEngine, Im2col, MatI32};
+use crate::{Error, Result};
+
+/// Spatial geometry of a convolution layer: input channels, square kernel,
+/// stride and zero padding. The input height/width are supplied per batch
+/// (the layer is shape-polymorphic over image sizes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeometry {
+    /// Input channels.
+    pub in_channels: usize,
+    /// Square kernel side length.
+    pub kernel: usize,
+    /// Stride in both spatial dimensions.
+    pub stride: usize,
+    /// Zero padding on every image edge.
+    pub padding: usize,
+}
+
+impl ConvGeometry {
+    /// Validated geometry (channels, kernel and stride must be positive).
+    pub fn new(in_channels: usize, kernel: usize, stride: usize, padding: usize) -> Result<Self> {
+        if in_channels == 0 || kernel == 0 || stride == 0 {
+            return Err(Error::Shape(format!(
+                "conv geometry with zero extent: {in_channels}ch k={kernel} s={stride}"
+            )));
+        }
+        Ok(ConvGeometry { in_channels, kernel, stride, padding })
+    }
+
+    /// Single-channel `kernel`×`kernel` convolution, stride 1, no padding.
+    pub fn unit(kernel: usize) -> Result<Self> {
+        Self::new(1, kernel, 1, 0)
+    }
+
+    /// Rows of the im2col weight matrix: `in_channels · kernel²`.
+    pub fn patch_len(&self) -> usize {
+        self.in_channels * self.kernel * self.kernel
+    }
+
+    /// The [`Im2col`] lowering for an input of the given height/width.
+    pub fn spec(&self, height: usize, width: usize) -> Result<Im2col> {
+        Im2col::new(self.in_channels, height, width, self.kernel, self.stride, self.padding)
+    }
+}
+
+/// One quantized conv2d layer, lowered to the packed GEMM via im2col.
+///
+/// The filter bank is a [`DenseLayer`] over the im2col patch space: its
+/// weight matrix is `(in_channels·K²) × out_channels` with row index
+/// `c·K² + ky·K + kx`, and forward is exactly the dense forward applied
+/// to the unrolled patches — same bias/requant tail, same plan cache
+/// (built on the first packed forward or by [`Conv2dLayer::prepare`],
+/// rebuilt when the engine or the public weights change).
+#[derive(Debug, Clone)]
+pub struct Conv2dLayer {
+    /// The filter bank as a dense layer over patch space: `weights`
+    /// (taps × filters), `bias`, `shift`, `requant` and the plan cache
+    /// all live here.
+    pub dense: DenseLayer,
+    /// Kernel/stride/padding geometry.
+    pub geometry: ConvGeometry,
+}
+
+impl Conv2dLayer {
+    /// Build from an already-quantized filter bank. `weights` must have
+    /// `geometry.patch_len()` rows; `bias` one entry per filter column.
+    pub fn new(
+        weights: MatI32,
+        bias: Vec<i32>,
+        geometry: ConvGeometry,
+        requant: bool,
+    ) -> Result<Self> {
+        if weights.rows != geometry.patch_len() {
+            return Err(Error::Shape(format!(
+                "conv weights {}x{} do not match geometry ({} taps)",
+                weights.rows,
+                weights.cols,
+                geometry.patch_len()
+            )));
+        }
+        Ok(Conv2dLayer { dense: DenseLayer::new(weights, bias, requant)?, geometry })
+    }
+
+    /// Build from float filters, quantizing the weights to `w_bits`
+    /// signed. `filters` is row-major `(patch_len × out_channels)` in the
+    /// im2col tap order; returns the layer and the weight scale.
+    pub fn from_f32(
+        filters: &[f32],
+        geometry: ConvGeometry,
+        out_channels: usize,
+        bias: &[f32],
+        w_bits: u32,
+        requant: bool,
+    ) -> Result<(Self, f32)> {
+        let taps = geometry.patch_len();
+        if filters.len() != taps * out_channels || bias.len() != out_channels {
+            return Err(Error::Shape("conv layer filter/bias shape".into()));
+        }
+        let (dense, scale) =
+            DenseLayer::from_f32(filters, taps, out_channels, bias, w_bits, requant)?;
+        Ok((Conv2dLayer { dense, geometry }, scale))
+    }
+
+    /// Number of filters (output channels).
+    pub fn out_channels(&self) -> usize {
+        self.dense.weights.cols
+    }
+
+    /// Pre-build (and cache) the filter bank's packed weight planes for
+    /// `engine` — the conv analogue (and in fact the same code path) as
+    /// `DenseLayer::prepare`.
+    pub fn prepare(&self, engine: &GemmEngine) -> Result<()> {
+        self.dense.prepare(engine)
+    }
+
+    /// Forward a batch: `x` is one image per row (channel-major pixels,
+    /// `height`×`width`); the result is the feature map as a patch-row
+    /// matrix, `(batch·OH·OW) × out_channels`. Unrolls the batch via
+    /// [`MatI32::im2col`] and runs the dense forward (weights-resident
+    /// packed path, bias, optional ReLU requant) over the patches.
+    pub fn forward(
+        &self,
+        x: &MatI32,
+        height: usize,
+        width: usize,
+        mode: &ExecMode,
+        a_bits: u32,
+        stats: &mut DspOpStats,
+    ) -> Result<MatI32> {
+        let patches = x.im2col(&self.geometry.spec(height, width)?)?;
+        self.dense.forward(&patches, mode, a_bits, stats)
+    }
+}
+
+/// 2-D max-pooling over a feature map in the conv layer's patch-row
+/// layout (`(batch·H·W) × channels`). Pooling a requantized feature map
+/// keeps values inside the activation range, so the pooled output feeds
+/// the next layer directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MaxPool2d {
+    /// Square window side length.
+    pub size: usize,
+    /// Stride in both spatial dimensions.
+    pub stride: usize,
+}
+
+impl MaxPool2d {
+    /// Validated pooling window (size and stride must be positive).
+    pub fn new(size: usize, stride: usize) -> Result<Self> {
+        if size == 0 || stride == 0 {
+            return Err(Error::Shape(format!("max-pool with zero extent: {size}/{stride}")));
+        }
+        Ok(MaxPool2d { size, stride })
+    }
+
+    /// Pooled dimensions for an input feature map of `height`×`width`.
+    pub fn out_dims(&self, height: usize, width: usize) -> Result<(usize, usize)> {
+        if height < self.size || width < self.size {
+            return Err(Error::Shape(format!(
+                "{}x{} pool window exceeds {height}x{width} feature map",
+                self.size, self.size
+            )));
+        }
+        Ok(((height - self.size) / self.stride + 1, (width - self.size) / self.stride + 1))
+    }
+
+    /// Pool a feature map of `batch` images of `height`×`width`, one
+    /// spatial position per row and one channel per column; returns the
+    /// same layout at the pooled dimensions.
+    pub fn forward(
+        &self,
+        fmap: &MatI32,
+        batch: usize,
+        height: usize,
+        width: usize,
+    ) -> Result<MatI32> {
+        if fmap.rows != batch * height * width {
+            return Err(Error::Shape(format!(
+                "feature map has {} rows, expected {batch}·{height}·{width}",
+                fmap.rows
+            )));
+        }
+        let (ph, pw) = self.out_dims(height, width)?;
+        let span = ph * pw;
+        Ok(MatI32::from_fn(batch * span, fmap.cols, |r, ch| {
+            let (b, pos) = (r / span, r % span);
+            let (py, px) = (pos / pw, pos % pw);
+            let mut m = i32::MIN;
+            for dy in 0..self.size {
+                for dx in 0..self.size {
+                    let iy = py * self.stride + dy;
+                    let ix = px * self.stride + dx;
+                    m = m.max(fmap.get(b * height * width + iy * width + ix, ch));
+                }
+            }
+            m
+        }))
+    }
+}
+
+/// A small quantized CNN: conv → ReLU-requant → max-pool → dense head,
+/// every matmul on the plan/execute GEMM engine.
+///
+/// All weight planes (the conv filter bank and the head matrix) are
+/// planned at [`QuantCnn::prepare`] time — the serving backend calls it at
+/// construction, so no request ever pays planning cost. Packed and exact
+/// execution share every non-GEMM step bit for bit, so with an exact
+/// correction scheme (e.g. full round-half-up on INT4) the packed logits
+/// equal the exact logits exactly.
+#[derive(Debug, Clone)]
+pub struct QuantCnn {
+    /// Convolution layer (filter bank planned once, then resident).
+    pub conv: Conv2dLayer,
+    /// Pooling between conv and head.
+    pub pool: MaxPool2d,
+    /// Dense classifier head over the flattened pooled features.
+    pub head: DenseLayer,
+    /// Input image side length (images are square, channel-major).
+    pub side: usize,
+    /// Activation bit width (the packing's a-operand width).
+    pub a_bits: u32,
+    /// Weight bit width used when (re)quantizing conv and head weights.
+    pub w_bits: u32,
+}
+
+impl QuantCnn {
+    /// The default small CNN for a square single-channel dataset: 3×3
+    /// conv (stride 1, no padding) with `filters` deterministic random
+    /// filters, 2×2/2 max-pool, and a centroid head fit in pooled-feature
+    /// space. Calibrates the conv requantization shift and fits the head
+    /// before returning.
+    pub fn new(ds: &Dataset, filters: usize, w_bits: u32, a_bits: u32, seed: u64) -> Result<Self> {
+        let geometry = ConvGeometry::unit(3)?;
+        let pool = MaxPool2d::new(2, 2)?;
+        Self::with_geometry(ds, filters, geometry, pool, w_bits, a_bits, seed)
+    }
+
+    /// Fully parameterized constructor: any [`ConvGeometry`] (stride /
+    /// padding / channels) and pooling window over a dataset whose images
+    /// are square `geometry.in_channels`-deep grids.
+    pub fn with_geometry(
+        ds: &Dataset,
+        filters: usize,
+        geometry: ConvGeometry,
+        pool: MaxPool2d,
+        w_bits: u32,
+        a_bits: u32,
+        seed: u64,
+    ) -> Result<Self> {
+        let pixels = ds.dim / geometry.in_channels;
+        let side = (pixels as f64).sqrt() as usize;
+        if side * side * geometry.in_channels != ds.dim {
+            return Err(Error::Shape(format!(
+                "dataset dim {} is not a square {}-channel image",
+                ds.dim, geometry.in_channels
+            )));
+        }
+        // Deterministic random filters: edge/blob detectors emerge from
+        // the synthetic data statistics, no training loop needed.
+        let mut rng = crate::util::Rng::new(seed);
+        let taps = geometry.patch_len();
+        let conv_w: Vec<f32> =
+            (0..taps * filters).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
+        let (conv, _) =
+            Conv2dLayer::from_f32(&conv_w, geometry, filters, &vec![0.0; filters], w_bits, true)?;
+        // Head: sized from the pooled feature dimensions, zero-filled
+        // until calibrate() fits the class centroids below.
+        let (oh, ow) = geometry.spec(side, side)?.out_dims();
+        let (ph, pw) = pool.out_dims(oh, ow)?;
+        let feat_dim = filters * ph * pw;
+        let (head, _) = DenseLayer::from_f32(
+            &vec![0.0; feat_dim * ds.classes],
+            feat_dim,
+            ds.classes,
+            &vec![0.0; ds.classes],
+            w_bits,
+            false,
+        )?;
+        let mut cnn = QuantCnn { conv, pool, head, side, a_bits, w_bits };
+        cnn.calibrate(ds, 32)?;
+        Ok(cnn)
+    }
+
+    /// Calibrate the conv requantization shift on (up to) `n` images and
+    /// refit the dense head as class centroids of the resulting exact
+    /// feature space.
+    pub fn calibrate(&mut self, ds: &Dataset, n: usize) -> Result<()> {
+        let n = n.min(ds.images.len());
+        let imgs: Vec<f32> = ds.images.iter().take(n).flatten().copied().collect();
+        let x = quantize::quantize_unsigned(&imgs, n, ds.dim, self.a_bits).0;
+        let spec = self.conv.geometry.spec(self.side, self.side)?;
+        let mut acc = x.im2col(&spec)?.matmul_exact(&self.conv.dense.weights)?;
+        // Calibrate on the same accumulators forward() requantizes:
+        // bias included (it shifts the range the shift must cover).
+        for r in 0..acc.rows {
+            for c in 0..acc.cols {
+                acc.set(r, c, acc.get(r, c) + self.conv.dense.bias[c]);
+            }
+        }
+        self.conv.dense.shift = quantize::calibrate_shift(&acc, self.a_bits);
+        self.fit_head(ds)
+    }
+
+    /// Fit the dense head as centered class centroids in exact
+    /// (calibrated) pooled-feature space.
+    fn fit_head(&mut self, ds: &Dataset) -> Result<()> {
+        let mut stats = DspOpStats::default();
+        let x = self.quantize_batch(&ds.images)?;
+        let feats = self.features(&x, &ExecMode::Exact, &mut stats)?;
+        let feat_dim = feats.cols;
+        let mut sums = vec![vec![0f64; feat_dim]; ds.classes];
+        let mut counts = vec![0usize; ds.classes];
+        for (i, &label) in ds.labels.iter().enumerate() {
+            for (s, &v) in sums[label].iter_mut().zip(feats.row(i)) {
+                *s += v as f64;
+            }
+            counts[label] += 1;
+        }
+        let mut w = vec![0f32; feat_dim * ds.classes];
+        for c in 0..ds.classes {
+            let n = counts[c].max(1) as f64;
+            let mean_all: f64 = sums[c].iter().sum::<f64>() / (feat_dim as f64 * n);
+            for k in 0..feat_dim {
+                w[k * ds.classes + c] = (sums[c][k] / n - mean_all) as f32;
+            }
+        }
+        let (head, _) = DenseLayer::from_f32(
+            &w,
+            feat_dim,
+            ds.classes,
+            &vec![0.0; ds.classes],
+            self.w_bits,
+            false,
+        )?;
+        self.head = head;
+        Ok(())
+    }
+
+    /// Pre-build every weight plane (conv filter bank + dense head) for
+    /// the given execution mode — a no-op for [`ExecMode::Exact`]. The
+    /// serving backend calls this at construction.
+    pub fn prepare(&self, mode: &ExecMode) -> Result<()> {
+        if let ExecMode::Packed(engine) = mode {
+            self.conv.prepare(engine)?;
+            self.head.prepare(engine)?;
+        }
+        Ok(())
+    }
+
+    /// Conv → pool → flatten: per-image feature vectors, channel-major
+    /// (`f·PH·PW + py·PW + px`), already requantized into the activation
+    /// range by the conv layer's calibrated shift.
+    fn features(&self, x: &MatI32, mode: &ExecMode, stats: &mut DspOpStats) -> Result<MatI32> {
+        let spec = self.conv.geometry.spec(self.side, self.side)?;
+        let (oh, ow) = spec.out_dims();
+        let fmap = self.conv.forward(x, self.side, self.side, mode, self.a_bits, stats)?;
+        let pooled = self.pool.forward(&fmap, x.rows, oh, ow)?;
+        let (ph, pw) = self.pool.out_dims(oh, ow)?;
+        let span = ph * pw;
+        Ok(MatI32::from_fn(x.rows, self.conv.out_channels() * span, |b, c| {
+            pooled.get(b * span + c % span, c / span)
+        }))
+    }
+
+    /// Forward a quantized batch; returns logits and DSP work stats.
+    /// (Quantization, classification and accuracy come from the
+    /// [`NnModel`] trait, shared with the MLP.)
+    pub fn forward(&self, x: &MatI32, mode: &ExecMode) -> Result<(MatI32, DspOpStats)> {
+        let mut stats = DspOpStats::default();
+        let feats = self.features(x, mode, &mut stats)?;
+        let logits = self.head.forward(&feats, mode, self.a_bits, &mut stats)?;
+        Ok((logits, stats))
+    }
+}
+
+impl NnModel for QuantCnn {
+    fn kind(&self) -> &'static str {
+        "cnn"
+    }
+
+    fn a_bits(&self) -> u32 {
+        self.a_bits
+    }
+
+    fn prepare(&self, mode: &ExecMode) -> Result<()> {
+        QuantCnn::prepare(self, mode)
+    }
+
+    fn forward(&self, x: &MatI32, mode: &ExecMode) -> Result<(MatI32, DspOpStats)> {
+        QuantCnn::forward(self, x, mode)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::correct::Correction;
+    use crate::nn::data;
+    use crate::packing::PackingConfig;
+
+    fn engine() -> GemmEngine {
+        GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap()
+    }
+
+    #[test]
+    fn max_pool_reduces_hand_case() {
+        // One image, 4×4, 2 channels; channel 1 is the negation of ch 0.
+        let fmap = MatI32::from_fn(16, 2, |r, c| {
+            let v = r as i32;
+            if c == 0 {
+                v
+            } else {
+                -v
+            }
+        });
+        let pool = MaxPool2d::new(2, 2).unwrap();
+        let out = pool.forward(&fmap, 1, 4, 4).unwrap();
+        assert_eq!((out.rows, out.cols), (4, 2));
+        // Window maxima of 0..16 laid row-major: 5, 7, 13, 15.
+        assert_eq!(out.row(0), &[5, 0]);
+        assert_eq!(
+            (0..4).map(|r| out.get(r, 0)).collect::<Vec<_>>(),
+            vec![5, 7, 13, 15]
+        );
+        // Max of negated values = negated min of each window.
+        assert_eq!(
+            (0..4).map(|r| out.get(r, 1)).collect::<Vec<_>>(),
+            vec![0, -2, -8, -10]
+        );
+    }
+
+    #[test]
+    fn max_pool_rejects_bad_shapes() {
+        assert!(MaxPool2d::new(0, 1).is_err());
+        let pool = MaxPool2d::new(3, 1).unwrap();
+        assert!(pool.out_dims(2, 5).is_err(), "window taller than the map");
+        assert!(pool.forward(&MatI32::zeros(7, 1), 1, 2, 4).is_err(), "row count mismatch");
+    }
+
+    #[test]
+    fn conv_layer_rejects_mismatched_weights() {
+        let g = ConvGeometry::unit(3).unwrap();
+        assert!(Conv2dLayer::new(MatI32::zeros(8, 4), vec![0; 4], g, false).is_err());
+        assert!(Conv2dLayer::new(MatI32::zeros(9, 4), vec![0; 3], g, false).is_err());
+        assert!(Conv2dLayer::from_f32(&[0.0; 9], g, 2, &[0.0; 2], 4, false).is_err());
+    }
+
+    #[test]
+    fn cnn_classifies_and_runs_packed() {
+        let ds = data::synthetic(80, 3, 64, 0.12, 31);
+        // new() already calibrates the conv shift and fits the head.
+        let cnn = QuantCnn::new(&ds, 4, 4, 4, 17).unwrap();
+        let (acc_exact, _) = cnn.accuracy(&ds, &ExecMode::Exact).unwrap();
+        assert!(acc_exact > 0.7, "exact CNN accuracy {acc_exact}");
+        let (acc_packed, stats) = cnn.accuracy(&ds, &ExecMode::Packed(engine())).unwrap();
+        assert!(stats.utilization() > 3.9);
+        assert!((acc_exact - acc_packed).abs() < 0.1, "{acc_exact} vs {acc_packed}");
+    }
+
+    #[test]
+    fn packed_cnn_with_full_correction_is_bit_exact() {
+        let ds = data::synthetic(48, 3, 64, 0.12, 41);
+        let cnn = QuantCnn::new(&ds, 4, 4, 4, 19).unwrap();
+        let x = cnn.quantize_batch(&ds.images).unwrap();
+        let (exact, _) = cnn.forward(&x, &ExecMode::Exact).unwrap();
+        let mode = ExecMode::Packed(engine());
+        cnn.prepare(&mode).unwrap();
+        let (packed, s1) = cnn.forward(&x, &mode).unwrap();
+        assert_eq!(exact, packed, "full correction is bit-exact through conv+pool+head");
+        // Planned paths serve identical batches with identical counters.
+        let (packed2, s2) = cnn.forward(&x, &mode).unwrap();
+        assert_eq!(packed, packed2);
+        assert_eq!(s1, s2);
+        assert!(s1.utilization() > 3.9);
+    }
+
+    #[test]
+    fn strided_padded_geometry_runs_both_modes() {
+        let ds = data::synthetic(32, 3, 64, 0.15, 51);
+        let g = ConvGeometry::new(1, 3, 2, 1).unwrap();
+        let cnn =
+            QuantCnn::with_geometry(&ds, 6, g, MaxPool2d::new(2, 1).unwrap(), 4, 4, 23).unwrap();
+        let x = cnn.quantize_batch(&ds.images).unwrap();
+        let (exact, _) = cnn.forward(&x, &ExecMode::Exact).unwrap();
+        let (packed, _) = cnn.forward(&x, &ExecMode::Packed(engine())).unwrap();
+        assert_eq!(exact, packed);
+        assert_eq!(exact.cols, ds.classes);
+    }
+}

@@ -1,4 +1,5 @@
-//! Quantized MLP / CNN models executing on the packed GEMM engine.
+//! Quantized dense layers and the MLP model executing on the packed GEMM
+//! engine (the convolutional model lives in [`super::conv`]).
 //!
 //! Dense layers are **weights-resident**: the first packed forward pass
 //! plans the layer's weight matrix into [`PackedWeights`] (see
@@ -75,6 +76,20 @@ pub struct DenseLayer {
 }
 
 impl DenseLayer {
+    /// Build a dense layer from an already-quantized weight matrix (K×N)
+    /// and a bias vector (one entry per output column), with the
+    /// requantization shift starting at 0.
+    pub fn new(weights: MatI32, bias: Vec<i32>, requant: bool) -> Result<Self> {
+        if bias.len() != weights.cols {
+            return Err(Error::Shape(format!(
+                "dense layer bias has {} entries for {} columns",
+                bias.len(),
+                weights.cols
+            )));
+        }
+        Ok(DenseLayer { weights, bias, shift: 0, requant, plan_cache: PlanCache::default() })
+    }
+
     /// Build a dense layer from float weights/bias, quantizing the weights
     /// to `w_bits` signed.
     pub fn from_f32(
@@ -91,16 +106,7 @@ impl DenseLayer {
         let (wq, scale) = quantize::quantize_signed(weights, in_dim, out_dim, w_bits);
         // Bias enters at accumulator scale; calibrated later with shift=0.
         let bq = bias.iter().map(|&b| (b * scale) as i32).collect();
-        Ok((
-            DenseLayer {
-                weights: wq,
-                bias: bq,
-                shift: 0,
-                requant,
-                plan_cache: PlanCache::default(),
-            },
-            scale,
-        ))
+        Self::new(wq, bq, requant).map(|layer| (layer, scale))
     }
 
     /// Pre-build (and cache) this layer's packed weight planes for
@@ -233,214 +239,46 @@ impl QuantMlp {
     }
 
     /// Quantize a float image batch into the activation range.
+    /// (Convenience inherent forwarder; the implementation is the
+    /// [`super::NnModel`] provided method, shared with the CNN.)
     pub fn quantize_batch(&self, images: &[Vec<f32>]) -> Result<MatI32> {
-        let dim = images.first().map(|i| i.len()).unwrap_or(0);
-        let flat: Vec<f32> = images.iter().flatten().copied().collect();
-        Ok(quantize::quantize_unsigned(&flat, images.len(), dim, self.a_bits).0)
+        <Self as super::NnModel>::quantize_batch(self, images)
     }
 
-    /// Classify: argmax over logits.
+    /// Classify: argmax over logits (inherent forwarder to
+    /// [`super::NnModel::classify`]).
     pub fn classify(&self, x: &MatI32, mode: &ExecMode) -> Result<(Vec<usize>, DspOpStats)> {
-        let (logits, stats) = self.forward(x, mode)?;
-        let preds = (0..logits.rows)
-            .map(|r| {
-                let row = logits.row(r);
-                row.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
-            })
-            .collect();
-        Ok((preds, stats))
+        <Self as super::NnModel>::classify(self, x, mode)
     }
 
-    /// Accuracy over a dataset.
+    /// Accuracy over a dataset (inherent forwarder to
+    /// [`super::NnModel::accuracy`]).
     pub fn accuracy(&self, ds: &Dataset, mode: &ExecMode) -> Result<(f64, DspOpStats)> {
-        let x = self.quantize_batch(&ds.images)?;
-        let (preds, stats) = self.classify(&x, mode)?;
-        let correct = preds.iter().zip(&ds.labels).filter(|(p, l)| p == l).count();
-        Ok((correct as f64 / ds.labels.len().max(1) as f64, stats))
+        <Self as super::NnModel>::accuracy(self, ds, mode)
     }
 }
 
-/// A small quantized CNN: one 3×3 conv (via im2col + GEMM) + 2×2 max-pool
-/// + dense head. Input is a square single-channel image.
-#[derive(Debug, Clone)]
-pub struct QuantCnn {
-    /// Conv filters as an im2col GEMM weight matrix (9 × filters).
-    pub conv: DenseLayer,
-    /// Number of conv filters.
-    pub filters: usize,
-    /// Input image side length.
-    pub side: usize,
-    /// Dense classifier head.
-    pub head: DenseLayer,
-    /// Activation bit width.
-    pub a_bits: u32,
-}
-
-impl QuantCnn {
-    /// Build with deterministic random conv filters (edge/blob detectors
-    /// emerge from the synthetic data statistics) and a centroid head in
-    /// pooled-feature space.
-    pub fn new(ds: &Dataset, filters: usize, w_bits: u32, a_bits: u32, seed: u64) -> Result<Self> {
-        let side = (ds.dim as f64).sqrt() as usize;
-        if side * side != ds.dim {
-            return Err(Error::Shape(format!("dataset dim {} is not square", ds.dim)));
-        }
-        let mut rng = crate::util::Rng::new(seed);
-        let conv_w: Vec<f32> =
-            (0..9 * filters).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
-        let (conv, _) =
-            DenseLayer::from_f32(&conv_w, 9, filters, &vec![0.0; filters], w_bits, true)?;
-        let pooled_side = (side - 2) / 2;
-        let feat_dim = pooled_side * pooled_side * filters;
-        // Head: centroids of pooled features of the prototypes (computed
-        // lazily at calibration); initialize to zeros, fill in calibrate().
-        let (head, _) = DenseLayer::from_f32(
-            &vec![0.0; feat_dim * ds.classes],
-            feat_dim,
-            ds.classes,
-            &vec![0.0; ds.classes],
-            w_bits,
-            false,
-        )?;
-        let mut cnn = QuantCnn { conv, filters, side, head, a_bits };
-        cnn.fit_head(ds, w_bits)?;
-        Ok(cnn)
+impl super::NnModel for QuantMlp {
+    fn kind(&self) -> &'static str {
+        "mlp"
     }
 
-    /// im2col over valid 3×3 patches: rows = patches, cols = 9.
-    pub fn im2col(&self, image_q: &[i32]) -> MatI32 {
-        let side = self.side;
-        let out_side = side - 2;
-        MatI32::from_fn(out_side * out_side, 9, |p, k| {
-            let (py, px) = (p / out_side, p % out_side);
-            let (ky, kx) = (k / 3, k % 3);
-            image_q[(py + ky) * side + (px + kx)]
-        })
+    fn a_bits(&self) -> u32 {
+        self.a_bits
     }
 
-    /// Forward features for one quantized image (conv → relu → pool).
-    fn features(&self, image_q: &[i32], mode: &ExecMode, stats: &mut DspOpStats) -> Result<Vec<i32>> {
-        let patches = self.im2col(image_q);
-        let fmap = self.conv.forward(&patches, mode, self.a_bits, stats)?;
-        // fmap: (out_side²) × filters. 2×2 max-pool per filter channel.
-        let out_side = self.side - 2;
-        let pooled_side = out_side / 2;
-        let mut feats = Vec::with_capacity(pooled_side * pooled_side * self.filters);
-        for f in 0..self.filters {
-            for py in 0..pooled_side {
-                for px in 0..pooled_side {
-                    let mut m = i32::MIN;
-                    for dy in 0..2 {
-                        for dx in 0..2 {
-                            let idx = (py * 2 + dy) * out_side + (px * 2 + dx);
-                            m = m.max(fmap.get(idx, f));
-                        }
-                    }
-                    feats.push(m);
-                }
-            }
-        }
-        Ok(feats)
+    fn prepare(&self, mode: &ExecMode) -> Result<()> {
+        QuantMlp::prepare(self, mode)
     }
 
-    /// Fit the dense head as class centroids in (exact) feature space.
-    fn fit_head(&mut self, ds: &Dataset, w_bits: u32) -> Result<()> {
-        let mut stats = DspOpStats::default();
-        let feat_dim = self.head.weights.rows;
-        let mut sums = vec![vec![0f64; feat_dim]; ds.classes];
-        let mut counts = vec![0usize; ds.classes];
-        let x = quantize::quantize_unsigned(
-            &ds.images.iter().flatten().copied().collect::<Vec<_>>(),
-            ds.images.len(),
-            ds.dim,
-            self.a_bits,
-        )
-        .0;
-        for (i, &label) in ds.labels.iter().enumerate() {
-            let f = self.features(x.row(i), &ExecMode::Exact, &mut stats)?;
-            for (s, &v) in sums[label].iter_mut().zip(&f) {
-                *s += v as f64;
-            }
-            counts[label] += 1;
-        }
-        let mut w = vec![0f32; feat_dim * ds.classes];
-        for c in 0..ds.classes {
-            let n = counts[c].max(1) as f64;
-            let mean_all: f64 = sums[c].iter().sum::<f64>() / (feat_dim as f64 * n);
-            for k in 0..feat_dim {
-                w[k * ds.classes + c] = (sums[c][k] / n - mean_all) as f32;
-            }
-        }
-        let (head, _) = DenseLayer::from_f32(
-            &w,
-            feat_dim,
-            ds.classes,
-            &vec![0.0; ds.classes],
-            w_bits,
-            false,
-        )?;
-        self.head = head;
-        Ok(())
+    fn forward(&self, x: &MatI32, mode: &ExecMode) -> Result<(MatI32, DspOpStats)> {
+        QuantMlp::forward(self, x, mode)
     }
 
-    /// Calibrate the conv requantization shift on a sample of images.
-    pub fn calibrate(&mut self, ds: &Dataset, n: usize) -> Result<()> {
-        let imgs: Vec<f32> =
-            ds.images.iter().take(n).flatten().copied().collect();
-        let x = quantize::quantize_unsigned(&imgs, n.min(ds.images.len()), ds.dim, self.a_bits).0;
-        let mut worst = 0;
-        for i in 0..x.rows {
-            let patches = self.im2col(x.row(i));
-            let acc = patches.matmul_exact(&self.conv.weights)?;
-            worst = worst.max(quantize::calibrate_shift(&acc, self.a_bits));
-        }
-        self.conv.shift = worst;
-        Ok(())
-    }
-
-    /// Classify one quantized image.
-    pub fn classify_one(
-        &self,
-        image_q: &[i32],
-        mode: &ExecMode,
-        stats: &mut DspOpStats,
-    ) -> Result<usize> {
-        let feats = self.features(image_q, mode, stats)?;
-        // Requantize features into the activation range for the head.
-        let top = (1i32 << self.a_bits) - 1;
-        let hi = feats.iter().copied().max().unwrap_or(1).max(1);
-        let mut shift = 0u32;
-        while (hi >> shift) > top {
-            shift += 1;
-        }
-        let fq = MatI32::from_fn(1, feats.len(), |_, c| (feats[c] >> shift).clamp(0, top));
-        let logits = self.head.forward(&fq, mode, self.a_bits, stats)?;
-        Ok(logits
-            .row(0)
-            .iter()
-            .enumerate()
-            .max_by_key(|(_, &v)| v)
-            .map(|(i, _)| i)
-            .unwrap_or(0))
-    }
-
-    /// Accuracy over a dataset.
-    pub fn accuracy(&self, ds: &Dataset, mode: &ExecMode) -> Result<(f64, DspOpStats)> {
-        let mut stats = DspOpStats::default();
-        let x = quantize::quantize_unsigned(
-            &ds.images.iter().flatten().copied().collect::<Vec<_>>(),
-            ds.images.len(),
-            ds.dim,
-            self.a_bits,
-        )
-        .0;
-        let mut correct = 0;
-        for (i, &label) in ds.labels.iter().enumerate() {
-            if self.classify_one(x.row(i), mode, &mut stats)? == label {
-                correct += 1;
-            }
-        }
-        Ok((correct as f64 / ds.labels.len().max(1) as f64, stats))
+    // Historical bare labels ("exact", "packed:<cfg>") predate the CNN;
+    // keep them stable for the original serving fleet.
+    fn label(&self, fabric: &str) -> String {
+        fabric.to_string()
     }
 }
 
@@ -547,15 +385,4 @@ mod tests {
         assert!(mlp.layers[0].shift > 0);
     }
 
-    #[test]
-    fn cnn_classifies_and_runs_packed() {
-        let ds = data::synthetic(80, 3, 64, 0.12, 31);
-        let mut cnn = QuantCnn::new(&ds, 4, 4, 4, 17).unwrap();
-        cnn.calibrate(&ds, 16).unwrap();
-        let (acc_exact, _) = cnn.accuracy(&ds, &ExecMode::Exact).unwrap();
-        assert!(acc_exact > 0.7, "exact CNN accuracy {acc_exact}");
-        let (acc_packed, stats) = cnn.accuracy(&ds, &ExecMode::Packed(engine())).unwrap();
-        assert!(stats.utilization() > 3.9);
-        assert!((acc_exact - acc_packed).abs() < 0.1, "{acc_exact} vs {acc_packed}");
-    }
 }

@@ -7,7 +7,9 @@
 //!   operand ranges (unsigned activations, signed weights).
 //! * [`QuantMlp`] / [`QuantCnn`] — small quantized models whose matmuls
 //!   run either exactly (reference) or on a [`crate::gemm::GemmEngine`]
-//!   with any packing configuration + correction scheme.
+//!   with any packing configuration + correction scheme. The CNN lowers
+//!   its convolution to the same packed GEMM via im2col
+//!   ([`Conv2dLayer`], [`MaxPool2d`] in [`conv`]).
 //! * [`SpikingDense`] — integrate-and-fire layer whose membrane
 //!   accumulators are packed into 48-bit DSP ALUs
 //!   ([`crate::addpack::PackedAccumulator`]); since spikes are binary,
@@ -15,12 +17,92 @@
 //!   §VII workload.
 //! * [`data`] — deterministic synthetic classification datasets for the
 //!   end-to-end examples and tests.
+//! * [`NnModel`] — the model interface the serving layer hosts
+//!   ([`crate::coordinator::PackedNnBackend`] is generic over it).
 
+pub mod conv;
 pub mod data;
 mod mlp;
 pub mod quantize;
 mod snn;
 pub mod weights;
 
-pub use mlp::{DenseLayer, ExecMode, QuantCnn, QuantMlp};
+pub use conv::{Conv2dLayer, ConvGeometry, MaxPool2d, QuantCnn};
+pub use mlp::{DenseLayer, ExecMode, QuantMlp};
 pub use snn::{SnnStats, SpikingDense};
+
+use crate::gemm::{DspOpStats, MatI32};
+use crate::Result;
+use self::data::Dataset;
+
+/// A quantized model the serving layer can host: it pre-plans its packed
+/// weight planes and classifies float image batches under an execution
+/// mode. Implemented by [`QuantMlp`] and [`QuantCnn`];
+/// [`crate::coordinator::PackedNnBackend`] serves any implementation.
+///
+/// Implementors supply the model-specific pieces ([`NnModel::forward`],
+/// [`NnModel::prepare`], [`NnModel::a_bits`]); quantization, argmax
+/// classification and accuracy are provided once here so every model
+/// shares one implementation.
+pub trait NnModel: Send + Sync + 'static {
+    /// Short model tag used in backend labels (`"mlp"`, `"cnn"`).
+    fn kind(&self) -> &'static str;
+
+    /// Activation bit width (the packing's a-operand width) the model
+    /// quantizes its inputs to.
+    fn a_bits(&self) -> u32;
+
+    /// Pre-build every packed weight plane for `mode` (a no-op for
+    /// [`ExecMode::Exact`]), so serving pays no per-request planning.
+    fn prepare(&self, mode: &ExecMode) -> Result<()>;
+
+    /// Forward a quantized batch (one image per row) to logits, merging
+    /// DSP work counters.
+    fn forward(&self, x: &MatI32, mode: &ExecMode) -> Result<(MatI32, DspOpStats)>;
+
+    /// Serving label over a fabric string (`"exact"` /
+    /// `"packed:<config>"`). Defaults to prefixing the model kind;
+    /// [`QuantMlp`] overrides it to keep its historical bare labels.
+    fn label(&self, fabric: &str) -> String {
+        format!("{}:{fabric}", self.kind())
+    }
+
+    /// Quantize a float image batch into the unsigned activation range.
+    fn quantize_batch(&self, images: &[Vec<f32>]) -> Result<MatI32> {
+        let dim = images.first().map(|i| i.len()).unwrap_or(0);
+        let flat: Vec<f32> = images.iter().flatten().copied().collect();
+        Ok(quantize::quantize_unsigned(&flat, images.len(), dim, self.a_bits()).0)
+    }
+
+    /// Classify a quantized batch: argmax over logits (ties break toward
+    /// the higher class index, matching `Iterator::max_by_key`).
+    fn classify(&self, x: &MatI32, mode: &ExecMode) -> Result<(Vec<usize>, DspOpStats)> {
+        let (logits, stats) = self.forward(x, mode)?;
+        let preds = (0..logits.rows)
+            .map(|r| {
+                let row = logits.row(r);
+                row.iter().enumerate().max_by_key(|(_, &v)| v).map(|(i, _)| i).unwrap_or(0)
+            })
+            .collect();
+        Ok((preds, stats))
+    }
+
+    /// Quantize a float image batch and classify it; returns one class
+    /// per image plus the DSP work counters.
+    fn classify_images(
+        &self,
+        images: &[Vec<f32>],
+        mode: &ExecMode,
+    ) -> Result<(Vec<usize>, DspOpStats)> {
+        let x = self.quantize_batch(images)?;
+        self.classify(&x, mode)
+    }
+
+    /// Accuracy over a dataset.
+    fn accuracy(&self, ds: &Dataset, mode: &ExecMode) -> Result<(f64, DspOpStats)> {
+        let x = self.quantize_batch(&ds.images)?;
+        let (preds, stats) = self.classify(&x, mode)?;
+        let correct = preds.iter().zip(&ds.labels).filter(|(p, l)| p == l).count();
+        Ok((correct as f64 / ds.labels.len().max(1) as f64, stats))
+    }
+}

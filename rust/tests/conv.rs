@@ -1,0 +1,330 @@
+//! Differential conv battery: the im2col-lowered packed convolution
+//! checked against an independent naive direct-convolution oracle.
+//!
+//! * the exhaustive small-shape sweep pins the exact path: over a grid of
+//!   (channels, image, kernel, stride, padding) shapes, packed conv with
+//!   full correction equals the naive i32 direct convolution bit for bit;
+//! * every preset packing × correction mode is checked for planned-path
+//!   bit-identity (layer forward == one-shot GEMM on the same patches,
+//!   outputs and DSP counters), with the exact schemes also pinned to the
+//!   oracle;
+//! * im2col round-trips through col2im at the integration level;
+//! * the conv plan cache rebuilds on weight mutation and engine swap;
+//! * the coordinator serves the CNN backend end to end.
+
+use dsp_packing::coordinator::{
+    Coordinator, InferenceBackend, PackedNnBackend, Request, ServerConfig,
+};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::{DspOpStats, GemmEngine, Im2col, MatI32};
+use dsp_packing::nn::{data, Conv2dLayer, ConvGeometry, ExecMode, QuantCnn};
+use dsp_packing::packing::PackingConfig;
+use dsp_packing::util::Rng;
+use std::sync::Arc;
+
+/// One conv problem shape: channels, image height/width, kernel, stride,
+/// padding.
+#[derive(Debug, Clone, Copy)]
+struct Shape {
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+}
+
+impl Shape {
+    fn out_dims(&self) -> (usize, usize) {
+        (
+            (self.h + 2 * self.p - self.k) / self.s + 1,
+            (self.w + 2 * self.p - self.k) / self.s + 1,
+        )
+    }
+
+    fn geometry(&self) -> ConvGeometry {
+        ConvGeometry::new(self.c, self.k, self.s, self.p).unwrap()
+    }
+
+    fn spec(&self) -> Im2col {
+        self.geometry().spec(self.h, self.w).unwrap()
+    }
+}
+
+/// Naive direct convolution — the oracle. Deliberately independent of the
+/// im2col path: explicit loops over output positions and kernel taps,
+/// i64 accumulation, zero padding. Output layout matches
+/// `Conv2dLayer::forward`: `(batch·OH·OW) × filters`.
+fn direct_conv(x: &MatI32, weights: &MatI32, bias: &[i32], sh: Shape) -> MatI32 {
+    let (oh, ow) = sh.out_dims();
+    let mut out = MatI32::zeros(x.rows * oh * ow, weights.cols);
+    for b in 0..x.rows {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for f in 0..weights.cols {
+                    let mut acc = 0i64;
+                    for c in 0..sh.c {
+                        for ky in 0..sh.k {
+                            for kx in 0..sh.k {
+                                let iy = (oy * sh.s + ky) as isize - sh.p as isize;
+                                let ix = (ox * sh.s + kx) as isize - sh.p as isize;
+                                if iy < 0
+                                    || ix < 0
+                                    || iy >= sh.h as isize
+                                    || ix >= sh.w as isize
+                                {
+                                    continue;
+                                }
+                                let xv = x.get(
+                                    b,
+                                    c * sh.h * sh.w + iy as usize * sh.w + ix as usize,
+                                ) as i64;
+                                let wv =
+                                    weights.get(c * sh.k * sh.k + ky * sh.k + kx, f) as i64;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    out.set(
+                        b * oh * ow + oy * ow + ox,
+                        f,
+                        acc as i32 + bias[f],
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+fn int4_engine() -> GemmEngine {
+    GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap()
+}
+
+/// Exhaustive small-shape differential: packed conv with full correction
+/// (and the exact mode) equal the naive direct convolution on every shape
+/// of the grid.
+#[test]
+fn exhaustive_small_shapes_match_direct_convolution() {
+    let engine = int4_engine();
+    let mut rng = Rng::new(0xC0); // NB: shared across shapes on purpose
+    let mut checked = 0;
+    for c in [1usize, 2] {
+        for h in [3usize, 4, 5] {
+            for w in [h, h + 1] {
+                for k in [1usize, 2, 3] {
+                    for s in [1usize, 2] {
+                        for p in [0usize, 1] {
+                            if h + 2 * p < k || w + 2 * p < k {
+                                continue;
+                            }
+                            let sh = Shape { c, h, w, k, s, p };
+                            let filters = 3;
+                            let x = MatI32::random_range(2, c * h * w, 0, 15, &mut rng);
+                            let wq = MatI32::random_range(
+                                sh.geometry().patch_len(),
+                                filters,
+                                -8,
+                                7,
+                                &mut rng,
+                            );
+                            let bias: Vec<i32> =
+                                (0..filters).map(|_| rng.range_i64(-20, 20) as i32).collect();
+                            let conv =
+                                Conv2dLayer::new(wq, bias.clone(), sh.geometry(), false).unwrap();
+                            let oracle = direct_conv(&x, &conv.dense.weights, &bias, sh);
+
+                            let mut stats = DspOpStats::default();
+                            let exact = conv
+                                .forward(&x, h, w, &ExecMode::Exact, 4, &mut stats)
+                                .unwrap();
+                            assert_eq!(exact, oracle, "exact path {sh:?}");
+
+                            let mode = ExecMode::Packed(engine.clone());
+                            let packed =
+                                conv.forward(&x, h, w, &mode, 4, &mut stats).unwrap();
+                            assert_eq!(packed, oracle, "packed path {sh:?}");
+                            checked += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    assert!(checked >= 100, "grid only produced {checked} shapes");
+}
+
+/// Every preset packing × correction mode that constructs: the planned
+/// conv layer forward is bit-identical — outputs and DSP counters — to
+/// the one-shot GEMM over the same im2col patches, and the schemes with
+/// an exactness guarantee also equal the naive oracle.
+#[test]
+fn preset_config_sweep_is_plan_execute_identical() {
+    let presets: Vec<(&str, PackingConfig)> = vec![
+        ("int4", PackingConfig::int4()),
+        ("int8", PackingConfig::int8()),
+        ("intn_fig9", PackingConfig::intn_fig9()),
+        ("overpack_fig9", PackingConfig::overpack_fig9()),
+        ("overpack_d1", PackingConfig::overpack_int4(-1).unwrap()),
+        ("overpack_d2", PackingConfig::overpack_int4(-2).unwrap()),
+        ("overpack_d3", PackingConfig::overpack_int4(-3).unwrap()),
+        ("overpack6", PackingConfig::overpack6_int4()),
+        ("precision6", PackingConfig::precision6()),
+    ];
+    let exact = |name: &str, corr: Correction, delta: i32| match corr {
+        Correction::FullRoundHalfUp => delta >= 0,
+        Correction::ApproxCPort => matches!(name, "int4" | "int8"),
+        _ => false,
+    };
+    let shapes = [
+        Shape { c: 1, h: 4, w: 4, k: 3, s: 1, p: 0 },
+        Shape { c: 2, h: 5, w: 4, k: 2, s: 2, p: 1 },
+        Shape { c: 3, h: 4, w: 6, k: 3, s: 1, p: 1 },
+    ];
+    let mut rng = Rng::new(0xC0D1FF);
+    let mut combos = 0;
+    for &(name, ref cfg) in &presets {
+        for corr in Correction::ALL {
+            let engine = match GemmEngine::new(cfg.clone(), corr) {
+                Ok(e) => e,
+                Err(_) => match GemmEngine::logical(cfg.clone(), corr) {
+                    Ok(e) => e,
+                    Err(_) => continue, // invalid combination
+                },
+            };
+            combos += 1;
+            let (a_lo, a_hi) = engine.config().a[0].range();
+            let (w_lo, w_hi) = engine.config().w[0].range();
+            for sh in shapes {
+                let x = MatI32::random_range(
+                    2,
+                    sh.c * sh.h * sh.w,
+                    a_lo as i32,
+                    a_hi as i32,
+                    &mut rng,
+                );
+                let filters = 3;
+                let wq = MatI32::random_range(
+                    sh.geometry().patch_len(),
+                    filters,
+                    w_lo as i32,
+                    w_hi as i32,
+                    &mut rng,
+                );
+                let bias: Vec<i32> =
+                    (0..filters).map(|_| rng.range_i64(-10, 10) as i32).collect();
+                let conv = Conv2dLayer::new(wq.clone(), bias.clone(), sh.geometry(), false)
+                    .unwrap();
+
+                // Layer forward (plan cached inside the layer)…
+                let mode = ExecMode::Packed(engine.clone());
+                conv.prepare(&engine).unwrap();
+                let mut layer_stats = DspOpStats::default();
+                let via_layer =
+                    conv.forward(&x, sh.h, sh.w, &mode, 4, &mut layer_stats).unwrap();
+
+                // …against the one-shot GEMM over the same patches.
+                let patches = x.im2col(&sh.spec()).unwrap();
+                let (mut one_shot, shot_stats) = engine.matmul(&patches, &wq).unwrap();
+                for r in 0..one_shot.rows {
+                    for f in 0..one_shot.cols {
+                        one_shot.set(r, f, one_shot.get(r, f) + bias[f]);
+                    }
+                }
+                assert_eq!(via_layer, one_shot, "{name}+{corr:?} {sh:?}");
+                assert_eq!(layer_stats, shot_stats, "{name}+{corr:?} {sh:?} counters");
+
+                if exact(name, corr, engine.config().delta) {
+                    let oracle = direct_conv(&x, &wq, &bias, sh);
+                    assert_eq!(via_layer, oracle, "{name}+{corr:?} {sh:?} must be exact");
+                }
+            }
+        }
+    }
+    assert!(combos >= 30, "only {combos} engine combinations constructed");
+}
+
+/// im2col round-trips through col2im whenever patches cover the image.
+#[test]
+fn im2col_roundtrip_at_integration_level() {
+    let mut rng = Rng::new(0x2C01);
+    for sh in [
+        Shape { c: 1, h: 6, w: 6, k: 3, s: 1, p: 0 },
+        Shape { c: 2, h: 5, w: 7, k: 2, s: 2, p: 1 },
+        Shape { c: 3, h: 4, w: 4, k: 3, s: 3, p: 1 },
+    ] {
+        let spec = sh.spec();
+        let imgs = MatI32::random_range(4, spec.image_len(), 0, 15, &mut rng);
+        let back = imgs.im2col(&spec).unwrap().col2im(&spec).unwrap();
+        assert_eq!(back, imgs, "{sh:?}");
+    }
+}
+
+/// The conv plan cache tracks weight mutation and engine swaps, exactly
+/// like the dense layers' cache.
+#[test]
+fn conv_plan_cache_invalidates_on_mutation_and_engine_swap() {
+    let sh = Shape { c: 1, h: 5, w: 5, k: 3, s: 1, p: 0 };
+    let mut rng = Rng::new(0xCACE);
+    let mut x = MatI32::random_range(2, 25, 0, 15, &mut rng);
+    // Pin the pixel the flipped tap reads so the mutation is provably
+    // visible in the feature map regardless of the random draw.
+    x.set(0, 0, 15);
+    let wq = MatI32::random_range(9, 4, -8, 7, &mut rng);
+    let mut conv = Conv2dLayer::new(wq, vec![0; 4], sh.geometry(), false).unwrap();
+
+    let rhu = ExecMode::Packed(int4_engine());
+    let mut stats = DspOpStats::default();
+    let before = conv.forward(&x, 5, 5, &rhu, 4, &mut stats).unwrap();
+
+    // Mutate the (public) weights in place after a plan was cached; flip
+    // a tap that a non-zero activation provably touches.
+    let flip = conv.dense.weights.get(0, 0);
+    conv.dense.weights.set(0, 0, if flip == 7 { -7 } else { 7 });
+    let exact = conv.forward(&x, 5, 5, &ExecMode::Exact, 4, &mut stats).unwrap();
+    let packed = conv.forward(&x, 5, 5, &rhu, 4, &mut stats).unwrap();
+    assert_eq!(packed, exact, "packed conv must track the mutated filter bank");
+    assert_ne!(packed, before, "the mutation must actually change the feature map");
+
+    // A differently-configured engine rebuilds rather than reusing…
+    let raw = ExecMode::Packed(
+        GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap(),
+    );
+    conv.forward(&x, 5, 5, &raw, 4, &mut stats).unwrap();
+    // …and the original engine still serves correct (rebuilt) planes.
+    let again = conv.forward(&x, 5, 5, &rhu, 4, &mut stats).unwrap();
+    assert_eq!(again, exact);
+}
+
+/// The coordinator serves the CNN backend end to end: batched predictions
+/// equal direct inference, and the packed fabric's utilization shows up
+/// in the metrics.
+#[test]
+fn coordinator_serves_the_cnn_backend() {
+    let ds = data::synthetic(64, 3, 64, 0.12, 91);
+    let cnn = QuantCnn::new(&ds, 4, 4, 4, 17).unwrap();
+    let backend = Arc::new(PackedNnBackend::new(cnn, ExecMode::Packed(int4_engine())));
+    assert_eq!(backend.name(), "cnn:packed:xilinx-int4");
+    // Oracle per image: the sequential blocking client below keeps the
+    // queue depth at 1, so every served batch is a single image and
+    // quantizes with that image's own scale — the oracle must do the
+    // same (a batch-of-64 oracle would quantize with the batch-global
+    // scale and can legitimately disagree).
+    let direct: Vec<usize> = ds
+        .images
+        .iter()
+        .map(|img| backend.infer(std::slice::from_ref(img)).unwrap().0[0])
+        .collect();
+
+    let coord = Coordinator::start(backend, ServerConfig::default());
+    let handle = coord.handle();
+    for (i, img) in ds.images.iter().enumerate() {
+        let pred = handle.infer(Request { id: i as u64, image: img.clone() }).unwrap();
+        assert_eq!(pred.id, i as u64);
+        assert_eq!(pred.class, direct[i], "batched CNN result equals direct");
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, 64);
+    assert_eq!(m.rejected, 0);
+    assert!(m.dsp_utilization > 3.9, "int4 packs 4 mults/cycle");
+}
