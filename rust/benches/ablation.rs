@@ -4,12 +4,13 @@
 //! configurations.
 
 use dsp_packing::analysis::{accumulation_sweep, exhaustive};
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::correct::Correction;
 use dsp_packing::packing::{PackedMultiplier, PackingConfig};
 
 fn main() {
     let bench = Bench::from_env();
+    let mut report = JsonReport::new("ablation");
 
     println!("=== ablation: padding delta vs error (4-bit operands, MR restore) ===");
     for delta in [-3, -2, -1] {
@@ -17,12 +18,14 @@ fn main() {
         let mul = PackedMultiplier::new(cfg, Correction::MrRestore).unwrap();
         let r = exhaustive(&mul);
         println!("delta={delta}: {}", r.row());
+        report.metric(&format!("mr_delta_{delta}_mae"), r.mae_bar());
     }
     for delta in [0, 1, 2, 3] {
         let cfg = PackingConfig::generate("d", 2, 4, 2, 4, delta).unwrap();
         let mul = PackedMultiplier::new(cfg, Correction::None).unwrap();
         let r = exhaustive(&mul);
         println!("delta={delta}: {}", r.row());
+        report.metric(&format!("raw_delta_{delta}_mae"), r.mae_bar());
     }
 
     println!("\n=== ablation: correction schemes on INT4 (incl. MR+C extension) ===");
@@ -65,11 +68,14 @@ fn main() {
     println!("4x 6-bit mults, MR d=-2: {}", exhaustive(&p6).row());
 
     println!();
-    bench.run_with_items("ablation/exhaustive_int4", 65536.0, || {
+    let r = bench.run_with_items("ablation/exhaustive_int4", 65536.0, || {
         let mul = PackedMultiplier::new(PackingConfig::int4(), Correction::None).unwrap();
         black_box(exhaustive(&mul));
     });
-    bench.run_with_items("ablation/accumulate_depth8", 8.0 * 1000.0, || {
+    report.push(&r);
+    let r = bench.run_with_items("ablation/accumulate_depth8", 8.0 * 1000.0, || {
         black_box(accumulation_sweep(&mul, 8, 1000, 5));
     });
+    report.push(&r);
+    report.write().expect("write BENCH_ablation.json");
 }

@@ -2,20 +2,22 @@
 //! latency per correction scheme, the exhaustive-sweep throughput, and
 //! the DSP slice primitive itself.
 
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::correct::Correction;
 use dsp_packing::dsp48::{Dsp48E2, DspInputs, Opmode};
 use dsp_packing::packing::{PackedMultiplier, PackingConfig};
 
 fn main() {
     let bench = Bench::from_env();
+    let mut report = JsonReport::new("analysis_perf");
 
     // Raw DSP slice eval (the substrate primitive).
     let dsp = Dsp48E2::new(Opmode::mult_add());
     let inp = DspInputs { a: 12345, b: 678, c: 9, d: -4000, ..Default::default() };
-    bench.run("perf/dsp48_eval", || {
+    let r = bench.run("perf/dsp48_eval", || {
         black_box(dsp.eval(&inp));
     });
+    report.push(&r);
 
     // One packed multiply end-to-end (pack -> multiply -> extract ->
     // correct), per correction scheme. 4 logical mults per call.
@@ -26,29 +28,33 @@ fn main() {
     ] {
         let mul = PackedMultiplier::new(PackingConfig::int4(), corr).unwrap();
         let mut k = 0i128;
-        bench.run_with_items(&format!("perf/packed_multiply_{corr:?}"), 4.0, || {
+        let r = bench.run_with_items(&format!("perf/packed_multiply_{corr:?}"), 4.0, || {
             let a = [k & 15, (k + 7) & 15];
             let w = [(k % 8) - 4, 3 - (k % 7)];
             black_box(mul.multiply(&a, &w).unwrap());
             k += 1;
         });
+        report.push(&r);
     }
     {
         let cfg = PackingConfig::overpack_int4(-2).unwrap();
         let mul = PackedMultiplier::new(cfg, Correction::MrRestore).unwrap();
         let mut k = 0i128;
-        bench.run_with_items("perf/packed_multiply_MrRestore", 4.0, || {
+        let r = bench.run_with_items("perf/packed_multiply_MrRestore", 4.0, || {
             let a = [k & 15, (k + 7) & 15];
             let w = [(k % 8) - 4, 3 - (k % 7)];
             black_box(mul.multiply(&a, &w).unwrap());
             k += 1;
         });
+        report.push(&r);
     }
 
     // The exhaustive sweep (65 536 multiplies, the Table I inner loop):
     // this is the number the §Perf target tracks (packed-mult evals/s).
     let mul = PackedMultiplier::new(PackingConfig::int4(), Correction::None).unwrap();
-    bench.run_with_items("perf/exhaustive_sweep_int4", 65536.0, || {
+    let r = bench.run_with_items("perf/exhaustive_sweep_int4", 65536.0, || {
         black_box(dsp_packing::analysis::exhaustive(&mul));
     });
+    report.push(&r);
+    report.write().expect("write BENCH_analysis_perf.json");
 }

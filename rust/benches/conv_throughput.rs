@@ -11,7 +11,7 @@
 //! Shapes are serving shapes: a single image per call (where weight-side
 //! work is the largest fraction) and a small batch.
 
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::{GemmEngine, MatI32};
 use dsp_packing::nn::{Conv2dLayer, ConvGeometry, ExecMode};
@@ -20,6 +20,9 @@ use dsp_packing::util::Rng;
 
 fn main() {
     let bench = Bench::from_env();
+    let fast = std::env::var("DSP_PACKING_BENCH_FAST").as_deref() == Ok("1");
+    let mut json = JsonReport::new("conv_throughput");
+    let mut violations: Vec<String> = Vec::new();
 
     // 4-channel 12×12 image, 64 filters of 3×3, stride 1, padding 1 —
     // im2col GEMM shape (per image): 144×36 patches by 36×64 weights.
@@ -75,6 +78,8 @@ fn main() {
                         black_box(engine.execute(&plan, &patches).unwrap());
                     },
                 );
+                json.push(&repack);
+                json.push(&planned);
                 speedup = speedup.max(planned.speedup_over(&repack));
                 if speedup > 1.0 {
                     break;
@@ -91,11 +96,13 @@ fn main() {
             // where per-call weight work is the largest fraction; larger
             // batches amortize it toward the noise floor and are reported
             // without an assertion.
-            assert!(
-                batch > 1 || speedup > 1.0,
-                "planned conv must beat per-call repacking at batch=1 \
-                 (got {speedup:.3}x)"
-            );
+            json.metric(&format!("{label}_b{batch}_plan_speedup"), speedup);
+            if batch == 1 && speedup <= 1.0 {
+                violations.push(format!(
+                    "planned conv must beat per-call repacking at batch=1 \
+                     (got {speedup:.3}x)"
+                ));
+            }
         }
     }
 
@@ -123,4 +130,14 @@ fn main() {
          (simulated DSP fabric; the FPGA claim is utilization, not sim speed)",
         packed_r.speedup_over(&exact_r),
     );
+    json.push(&exact_r);
+    json.push(&packed_r);
+    json.metric("layer_b8_packed_vs_exact", packed_r.speedup_over(&exact_r));
+    // Artifact first, enforcement second (warn-only under CI smoke
+    // settings -- the tiny sample budget is noise-dominated there).
+    json.write().expect("write BENCH_conv_throughput.json");
+    for v in &violations {
+        println!("PERF VIOLATION: {v}");
+    }
+    assert!(fast || violations.is_empty(), "{violations:?}");
 }

@@ -2,7 +2,7 @@
 //! full L3 path (batcher → worker pool → packed virtual accelerator),
 //! plus the batching-policy ablation.
 
-use dsp_packing::bench::Bench;
+use dsp_packing::bench::{Bench, JsonReport};
 use dsp_packing::coordinator::{
     BatcherConfig, Coordinator, PackedNnBackend, Request, ServerConfig,
 };
@@ -13,7 +13,7 @@ use dsp_packing::packing::PackingConfig;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-fn run_serving(label: &str, cfg: ServerConfig, n_requests: usize) {
+fn run_serving(json: &mut JsonReport, label: &str, cfg: ServerConfig, n_requests: usize) {
     let ds = data::synthetic(128, 4, 64, 0.15, 7);
     let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
     let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
@@ -41,19 +41,22 @@ fn run_serving(label: &str, cfg: ServerConfig, n_requests: usize) {
     }
     let elapsed = start.elapsed();
     let m = coord.shutdown();
+    let req_per_s = n_requests as f64 / elapsed.as_secs_f64();
     println!(
         "{label:<34} {:>8.0} req/s   p50={:>6}us p99={:>6}us  mean_batch={:.1}",
-        n_requests as f64 / elapsed.as_secs_f64(),
-        m.p50_latency_us,
-        m.p99_latency_us,
-        m.mean_batch
+        req_per_s, m.p50_latency_us, m.p99_latency_us, m.mean_batch
     );
+    json.metric(&format!("{label}/req_per_s"), req_per_s);
+    json.metric(&format!("{label}/p50_latency_us"), m.p50_latency_us);
+    json.metric(&format!("{label}/p99_latency_us"), m.p99_latency_us);
+    json.metric(&format!("{label}/mean_batch"), m.mean_batch);
 }
 
 fn main() {
     let _ = Bench::from_env(); // consistent env handling
     let fast = std::env::var("DSP_PACKING_BENCH_FAST").as_deref() == Ok("1");
     let n = if fast { 256 } else { 2048 };
+    let mut json = JsonReport::new("coordinator");
 
     println!("=== serving throughput/latency (packed INT4 backend, 4 clients) ===");
     for (label, max_batch, wait_us, workers) in [
@@ -64,6 +67,7 @@ fn main() {
         ("batch=16 wait=2ms workers=4", 16, 2000, 4),
     ] {
         run_serving(
+            &mut json,
             label,
             ServerConfig {
                 batcher: BatcherConfig {
@@ -77,4 +81,5 @@ fn main() {
             n,
         );
     }
+    json.write().expect("write BENCH_coordinator.json");
 }

@@ -2,12 +2,13 @@
 //! of INT8 / INT4 / INT-N / Overpacking, plus the configuration-search
 //! timing that produces the full density landscape.
 
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::density::{enumerate, fig9_points, pareto};
 use dsp_packing::dsp48::DspGeometry;
 
 fn main() {
     let bench = Bench::from_env();
+    let mut report = JsonReport::new("fig9");
 
     println!("=== Fig. 9 regeneration (paper: INT8 0.667, INT4 0.667, INT-N 0.875, Overpack 1.125) ===");
     for p in fig9_points() {
@@ -20,24 +21,31 @@ fn main() {
         );
     }
     let pts = fig9_points();
+    for p in &pts {
+        report.metric(&format!("density_{}", p.name), p.density);
+    }
     assert!((pts[0].density - 2.0 / 3.0).abs() < 1e-9);
     assert!((pts[1].density - 2.0 / 3.0).abs() < 1e-9);
     assert!((pts[2].density - 0.875).abs() < 1e-9);
     assert!((pts[3].density - 1.125).abs() < 1e-9);
     println!("all four bars match the paper exactly\n");
 
-    bench.run("fig9/density_points", || {
+    let r = bench.run("fig9/density_points", || {
         black_box(fig9_points());
     });
+    report.push(&r);
 
     let g = DspGeometry::DSP48E2;
-    bench.run("fig9/enumerate_delta_-3..3", || {
+    let r = bench.run("fig9/enumerate_delta_-3..3", || {
         black_box(enumerate(&g, -3..=3));
     });
+    report.push(&r);
 
     let all = enumerate(&g, -3..=3);
     println!("\n{} candidate configurations", all.len());
-    bench.run("fig9/pareto_front", || {
+    let r = bench.run("fig9/pareto_front", || {
         black_box(pareto(&all));
     });
+    report.push(&r);
+    report.write().expect("write BENCH_fig9.json");
 }

@@ -14,7 +14,7 @@
 //! much larger fraction of the call — the serving regime the coordinator
 //! lives in.
 
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::{GemmEngine, MatI32};
 use dsp_packing::packing::PackingConfig;
@@ -29,6 +29,9 @@ fn mats(m: usize, k: usize, n: usize, seed: u64) -> (MatI32, MatI32) {
 
 fn main() {
     let bench = Bench::from_env();
+    let fast = std::env::var("DSP_PACKING_BENCH_FAST").as_deref() == Ok("1");
+    let mut json = JsonReport::new("plan_vs_repack");
+    let mut violations: Vec<String> = Vec::new();
     let engines = [
         (
             "int4_rhu",
@@ -74,23 +77,35 @@ fn main() {
                         black_box(engine.execute(&plan, &a).unwrap());
                     },
                 );
+                json.push(&repack);
+                json.push(&planned);
                 speedup = speedup.max(planned.speedup_over(&repack));
                 if speedup > 1.0 {
                     break;
                 }
                 println!("    (attempt {attempt}: {speedup:.3}x, re-measuring)");
             }
+            json.metric(&format!("{label}_{m}x{k}x{n}_plan_speedup"), speedup);
             println!(
                 "    -> {label} {m}x{k}x{n}: planned is {speedup:.3}x repack \
                  ({} plane bytes resident, util {:.2} mults/DSP-cycle)",
                 plan.plane_bytes(),
                 s_plan.utilization(),
             );
-            assert!(
-                speedup > 1.0,
-                "planned execution must beat per-call repacking on {m}x{k}x{n} \
-                 (got {speedup:.3}x)"
-            );
+            if speedup <= 1.0 {
+                violations.push(format!(
+                    "planned execution must beat per-call repacking on \
+                     {m}x{k}x{n} (got {speedup:.3}x)"
+                ));
+            }
         }
     }
+    // Write the artifact before enforcing, so a failing run still ships
+    // its numbers; under the CI smoke settings the tiny sample budget is
+    // noise-dominated, so violations only warn there.
+    json.write().expect("write BENCH_plan_vs_repack.json");
+    for v in &violations {
+        println!("PERF VIOLATION: {v}");
+    }
+    assert!(fast || violations.is_empty(), "{violations:?}");
 }

@@ -5,7 +5,7 @@
 //! 262 144 result extractions per row).
 
 use dsp_packing::analysis::exhaustive;
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::correct::Correction;
 use dsp_packing::packing::{PackedMultiplier, PackingConfig};
 use dsp_packing::synth;
@@ -26,6 +26,7 @@ fn rows() -> Vec<(&'static str, PackingConfig, Correction)> {
 
 fn main() {
     let bench = Bench::from_env();
+    let mut json = JsonReport::new("table1");
     println!("=== Table I regeneration (paper values in parentheses) ===");
     let paper: [(&str, f64, f64, u64); 9] = [
         ("xilinx_int4", 0.37, 37.35, 1),
@@ -52,13 +53,18 @@ fn main() {
             report.wce_bar(),
             pwce
         );
+        json.metric(&format!("{name}_mae"), report.mae_bar());
+        json.metric(&format!("{name}_ep_percent"), report.ep_bar_percent());
+        json.metric(&format!("{name}_wce"), report.wce_bar());
         // 65 536 packed multiplies per sweep.
-        bench.run_with_items(&format!("table1/{name}"), 65536.0, || {
+        let r = bench.run_with_items(&format!("table1/{name}"), 65536.0, || {
             black_box(exhaustive(&mul));
         });
+        json.push(&r);
     }
     println!("\n=== Table I resource columns (built-in 6-LUT mapper) ===");
     for (name, est) in synth::table1_resources() {
         println!("{:<28} LUTs={:<4} FFs={}", name, est.luts, est.ffs);
     }
+    json.write().expect("write BENCH_table1.json");
 }

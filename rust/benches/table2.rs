@@ -2,12 +2,13 @@
 //! statistics of INT4 packing and MR-Overpacking δ=−2.
 
 use dsp_packing::analysis::exhaustive;
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::correct::Correction;
 use dsp_packing::packing::{PackedMultiplier, PackingConfig};
 
 fn main() {
     let bench = Bench::from_env();
+    let mut json = JsonReport::new("table2");
     // Paper values: (MAE, EP%, WCE) per result, INT4 then MR d=-2.
     let paper_int4 = [(0.00, 0.00, 0), (0.47, 46.87, 1), (0.50, 49.80, 1), (0.53, 52.73, 1)];
     let paper_mr = [(0.00, 0.00, 0), (0.60, 52.34, 2), (0.64, 55.41, 2), (0.66, 58.20, 2)];
@@ -43,8 +44,13 @@ fn main() {
             r.ep_bar_percent(),
             r.wce_bar()
         );
-        bench.run_with_items(&format!("table2/{label}"), 65536.0, || {
+        for (name, s) in names.iter().zip(&r.per_result) {
+            json.metric(&format!("{label}_{name}_mae"), s.mae());
+        }
+        let br = bench.run_with_items(&format!("table2/{label}"), 65536.0, || {
             black_box(exhaustive(&mul));
         });
+        json.push(&br);
     }
+    json.write().expect("write BENCH_table2.json");
 }

@@ -3,12 +3,13 @@
 //! plus throughput of packed vs SIMD vs scalar adds on the simulated DSP.
 
 use dsp_packing::addpack::{carry_leak_exhaustive, AdditionPacking, PackedAccumulator};
-use dsp_packing::bench::{black_box, Bench};
+use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::dsp48::SimdMode;
 use dsp_packing::util::Rng;
 
 fn main() {
     let bench = Bench::from_env();
+    let mut json = JsonReport::new("table3");
 
     println!("=== Table III regeneration ===");
     let (stats, p_carry) = carry_leak_exhaustive(9);
@@ -19,11 +20,15 @@ fn main() {
         stats.wce
     );
     println!("carry probability = {p_carry:.4}; see EXPERIMENTS.md §Table III for the deviation note\n");
+    json.metric("addition_packing_mae", stats.mae());
+    json.metric("addition_packing_ep_percent", stats.ep_percent());
+    json.metric("carry_probability", p_carry);
 
     // Exhaustive sweep timing (2^18 operand pairs).
-    bench.run_with_items("table3/exhaustive_carry_leak", (1u64 << 18) as f64, || {
+    let r = bench.run_with_items("table3/exhaustive_carry_leak", (1u64 << 18) as f64, || {
         black_box(carry_leak_exhaustive(9));
     });
+    json.push(&r);
 
     // Packed addition throughput: five 9-bit adds per DSP pass.
     let packing = AdditionPacking::table3();
@@ -33,16 +38,17 @@ fn main() {
         .collect();
     let ys = xs.clone();
     let mut i = 0;
-    bench.run_with_items("table3/packed_add_5x9bit", 5.0, || {
+    let r = bench.run_with_items("table3/packed_add_5x9bit", 5.0, || {
         let r = packing.add(&xs[i % 256], &ys[(i + 7) % 256]).unwrap();
         black_box(r);
         i += 1;
     });
+    json.push(&r);
 
     // SNN accumulate throughput (the §VII workload).
     let mut acc = PackedAccumulator::new(AdditionPacking::table3());
     let mut j = 0;
-    bench.run_with_items("table3/snn_accumulate_5lane", 5.0, || {
+    let r = bench.run_with_items("table3/snn_accumulate_5lane", 5.0, || {
         let inc: Vec<i128> = (0..5).map(|l| ((j + l) % 16) as i128).collect();
         black_box(acc.accumulate(&inc).unwrap());
         j += 1;
@@ -50,6 +56,7 @@ fn main() {
             acc.reset();
         }
     });
+    json.push(&r);
 
     // Native SIMD baseline for comparison (FOUR12: exact, 4 lanes).
     let simd = AdditionPacking::uniform(4, 12, 0).unwrap();
@@ -57,7 +64,7 @@ fn main() {
     use dsp_packing::dsp48::{Dsp48E2, DspInputs, Opmode};
     let dsp = Dsp48E2::new(Opmode::add_ab(SimdMode::Four12));
     let xw = simd.pack(&sx).unwrap();
-    bench.run_with_items("table3/simd_four12_baseline", 4.0, || {
+    let r = bench.run_with_items("table3/simd_four12_baseline", 4.0, || {
         let out = dsp.eval(&DspInputs {
             a: xw >> 18,
             b: xw & ((1 << 18) - 1),
@@ -66,4 +73,6 @@ fn main() {
         });
         black_box(out);
     });
+    json.push(&r);
+    json.write().expect("write BENCH_table3.json");
 }

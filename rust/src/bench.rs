@@ -4,7 +4,15 @@
 //! Methodology: warm up, then run timed batches until both a minimum
 //! sample count and a minimum measurement time are reached; report
 //! mean / median / p95 per-iteration time and derived throughput.
+//!
+//! Every bench target also emits a **machine-readable report**:
+//! [`JsonReport`] collects the measured [`BenchResult`]s plus derived
+//! metrics (speedup ratios, regenerated table figures) and writes them
+//! to `BENCH_<name>.json` via [`write_json`], so the perf trajectory is
+//! tracked run over run (CI uploads the files as artifacts).
 
+use crate::util::Json;
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 /// One benchmark's collected samples.
@@ -55,6 +63,24 @@ impl BenchResult {
         } else {
             format!("{:.3} s", ns / 1e9)
         }
+    }
+
+    /// This result as a JSON record (median/p5/p95/mean ns, sample count,
+    /// and derived throughput when items-per-iteration was declared).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj([
+            ("name", self.name.as_str().into()),
+            ("median_ns", self.median_ns().into()),
+            ("p5_ns", self.percentile_ns(5.0).into()),
+            ("p95_ns", self.percentile_ns(95.0).into()),
+            ("mean_ns", self.mean_ns().into()),
+            ("samples", self.samples_ns.len().into()),
+        ]);
+        if let Some(items) = self.items_per_iter {
+            j.set("items_per_iter", items.into());
+            j.set("throughput_per_s", (items / (self.median_ns() / 1e9)).into());
+        }
+        j
     }
 
     /// Print a criterion-style report line.
@@ -150,6 +176,76 @@ impl Bench {
     }
 }
 
+/// Machine-readable output of one bench target: measured results plus
+/// derived metrics, serialized to `BENCH_<name>.json`.
+///
+/// ```
+/// use dsp_packing::bench::{Bench, JsonReport};
+/// let mut report = JsonReport::new("doc_example");
+/// let b = Bench::new(3, std::time::Duration::from_millis(2),
+///                    std::time::Duration::from_millis(1));
+/// let r = b.run("noop", || {});
+/// report.push(&r);
+/// report.metric("speedup", 2.5);
+/// let json = report.json().to_string();
+/// assert!(json.contains("\"bench\":\"doc_example\""));
+/// assert!(json.contains("\"speedup\":2.5"));
+/// ```
+pub struct JsonReport {
+    name: String,
+    results: Vec<Json>,
+    metrics: Vec<(String, Json)>,
+}
+
+impl JsonReport {
+    /// New report for the bench target `name` (the `BENCH_<name>.json`
+    /// stem).
+    pub fn new(name: &str) -> Self {
+        JsonReport { name: name.to_string(), results: Vec::new(), metrics: Vec::new() }
+    }
+
+    /// Record one measured result.
+    pub fn push(&mut self, r: &BenchResult) {
+        self.results.push(r.to_json());
+    }
+
+    /// Record a derived scalar metric (a speedup ratio, a regenerated
+    /// table figure, a throughput headline).
+    pub fn metric(&mut self, key: &str, value: impl Into<Json>) {
+        self.metrics.push((key.to_string(), value.into()));
+    }
+
+    /// The whole report as one JSON object.
+    pub fn json(&self) -> Json {
+        let mut metrics = Json::Obj(Default::default());
+        for (k, v) in &self.metrics {
+            metrics.set(k, v.clone());
+        }
+        Json::obj([
+            ("bench", self.name.as_str().into()),
+            ("results", Json::Arr(self.results.clone())),
+            ("metrics", metrics),
+        ])
+    }
+
+    /// Write `BENCH_<name>.json` (see [`write_json`]); returns the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        write_json(&self.name, &self.json())
+    }
+}
+
+/// Write one `BENCH_<name>.json` file into `DSP_PACKING_BENCH_DIR`
+/// (default: the current directory) and return the path. The tiny
+/// indirection every bench target shares, so the output location is
+/// controlled by one env var in CI.
+pub fn write_json(name: &str, value: &Json) -> std::io::Result<PathBuf> {
+    let dir = std::env::var("DSP_PACKING_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = PathBuf::from(dir).join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, format!("{value}\n"))?;
+    println!("bench json -> {}", path.display());
+    Ok(path)
+}
+
 /// Prevent the optimizer from discarding a computed value.
 #[inline]
 pub fn black_box<T>(x: T) -> T {
@@ -183,6 +279,23 @@ mod tests {
         let slow = mk(150.0);
         assert!((fast.speedup_over(&slow) - 1.5).abs() < 1e-12);
         assert!((slow.speedup_over(&fast) - 1.0 / 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mk = |ns: f64| BenchResult {
+            name: "x".into(),
+            samples_ns: vec![ns; 5],
+            items_per_iter: Some(10.0),
+        };
+        let mut rep = JsonReport::new("unit");
+        rep.push(&mk(100.0));
+        rep.metric("ratio", 2.0);
+        let s = rep.json().to_string();
+        assert!(s.contains("\"bench\":\"unit\""), "{s}");
+        assert!(s.contains("\"median_ns\":100"), "{s}");
+        assert!(s.contains("\"ratio\":2"), "{s}");
+        assert!(s.contains("\"throughput_per_s\":"), "{s}");
     }
 
     #[test]

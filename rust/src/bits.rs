@@ -73,6 +73,48 @@ pub fn bit(v: i128, i: u32) -> i128 {
     (v >> i) & 1
 }
 
+// --- i64 twins for the narrow-word execution datapath -----------------
+//
+// The GEMM engine's narrow backend runs its hot loops in `i64` (an x86-64
+// register instead of a two-word `i128` pair). The helpers below are
+// bit-for-bit twins of the `i128` family above, valid for fields whose
+// `offset + width` stays below 64 — the narrowness predicate
+// (`PackingConfig::narrow_word_feasible`) guarantees that before the
+// backend is ever selected.
+
+/// Mask with the low `width` bits set ([`mask`] twin). `width` must be ≤ 63.
+#[inline]
+pub fn mask_i64(width: u32) -> i64 {
+    debug_assert!(width < 64);
+    (1i64 << width) - 1
+}
+
+/// [`field_unsigned`] twin on `i64` words.
+#[inline]
+pub fn field_unsigned_i64(v: i64, offset: u32, width: u32) -> i64 {
+    (v >> offset) & mask_i64(width)
+}
+
+/// [`field_signed`] twin on `i64` words.
+#[inline]
+pub fn field_signed_i64(v: i64, offset: u32, width: u32) -> i64 {
+    let u = field_unsigned_i64(v, offset, width);
+    let sign = 1i64 << (width - 1);
+    (u ^ sign) - sign
+}
+
+/// [`wrap_signed`] twin on `i64` words.
+#[inline]
+pub fn wrap_signed_i64(v: i64, width: u32) -> i64 {
+    field_signed_i64(v, 0, width)
+}
+
+/// [`wrap_unsigned`] twin on `i64` words.
+#[inline]
+pub fn wrap_unsigned_i64(v: i64, width: u32) -> i64 {
+    v & mask_i64(width)
+}
+
 /// Number of bits needed to represent `v` as signed two's complement.
 pub fn signed_width(v: i128) -> u32 {
     if v >= 0 {
@@ -141,6 +183,28 @@ mod tests {
             let v = rng.next_u64() as i64 as i128;
             let width = rng.range_i128(1, 59) as u32;
             assert_eq!(wrap_unsigned(v, width), v.rem_euclid(1i128 << width));
+        }
+    }
+
+    /// The i64 twins agree with the i128 family over their whole valid
+    /// domain (random words, random in-range fields).
+    #[test]
+    fn prop_i64_twins_match_i128() {
+        let mut rng = Rng::new(0xB64);
+        for _ in 0..20_000 {
+            let v = rng.next_u64() as i64;
+            let offset = rng.range_i128(0, 40) as u32;
+            let width = rng.range_i128(1, (63 - offset) as i128) as u32;
+            assert_eq!(
+                field_unsigned_i64(v, offset, width),
+                field_unsigned(v as i128, offset, width) as i64
+            );
+            assert_eq!(
+                field_signed_i64(v, offset, width),
+                field_signed(v as i128, offset, width) as i64
+            );
+            assert_eq!(wrap_signed_i64(v, width), wrap_signed(v as i128, width) as i64);
+            assert_eq!(wrap_unsigned_i64(v, width), wrap_unsigned(v as i128, width) as i64);
         }
     }
 

@@ -11,7 +11,11 @@
 //! Threading model (std only — the build is offline): clients call
 //! [`CoordinatorHandle::submit`], a batcher thread groups requests by
 //! deadline/batch-size, a worker pool executes batches, per-request
-//! channels deliver responses.
+//! channels deliver responses. Inside a batch, the GEMM engine's tile
+//! parallelism rides the process-wide persistent pool of
+//! [`crate::util::parallel_map`] — batch-1 requests no longer pay a
+//! `thread::scope` spawn per layer, and layers below the dispatch cost
+//! threshold run inline on the worker.
 
 mod adaptive;
 mod batcher;

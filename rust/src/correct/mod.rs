@@ -163,6 +163,59 @@ impl Correction {
             }
         }
     }
+
+    /// [`Correction::post_extract_in_place`] twin on `i64` buffers (the
+    /// narrow execution datapath). Bit-identical by construction: the
+    /// field widths involved satisfy the narrowness predicate before
+    /// this path is ever selected, and a conformance test pins the
+    /// narrow/wide identity differentially.
+    #[inline]
+    pub fn post_extract_in_place_i64(
+        &self,
+        cfg: &PackingConfig,
+        out: &mut [i64],
+        a: &[i64],
+        w: &[i64],
+    ) {
+        match self {
+            Correction::None | Correction::ApproxCPort | Correction::FullRoundHalfUp => {}
+            Correction::ApproxPostSign => {
+                for n in 1..cfg.results.len() {
+                    let pred = &cfg.results[n - 1];
+                    if w[pred.w_idx] < 0 {
+                        let r = &cfg.results[n];
+                        out[n] = rewrap_i64(out[n] + 1, r.width, r.signed);
+                    }
+                }
+            }
+            Correction::MrRestore | Correction::MrRestorePlusCPort => {
+                let overlap = (-cfg.delta).max(0) as u32;
+                if overlap == 0 {
+                    return;
+                }
+                for n in 0..cfg.results.len() {
+                    let Some(above) = cfg.results.get(n + 1) else { continue };
+                    let r = &cfg.results[n];
+                    if above.offset >= r.offset + r.width {
+                        continue;
+                    }
+                    let lsb_count = r.offset + r.width - above.offset;
+                    let lsbs = (a[above.a_idx] * w[above.w_idx]) & crate::bits::mask_i64(lsb_count);
+                    let shift = above.offset - r.offset;
+                    out[n] = rewrap_i64(out[n] - (lsbs << shift), r.width, r.signed);
+                }
+                if *self == Correction::MrRestorePlusCPort {
+                    for n in 1..cfg.results.len() {
+                        let pred = &cfg.results[n - 1];
+                        if w[pred.w_idx] < 0 {
+                            let r = &cfg.results[n];
+                            out[n] = rewrap_i64(out[n] + 1, r.width, r.signed);
+                        }
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Re-wrap a corrected value to its field width (hardware subtractors and
@@ -173,6 +226,17 @@ fn rewrap(v: i128, width: u32, signed: bool) -> i128 {
         wrap_signed(v, width)
     } else {
         wrap_unsigned(v, width)
+    }
+}
+
+/// [`rewrap`] twin on `i64` (narrow datapath; field widths ≤ 60 by the
+/// narrowness predicate).
+#[inline]
+fn rewrap_i64(v: i64, width: u32, signed: bool) -> i64 {
+    if signed {
+        crate::bits::wrap_signed_i64(v, width)
+    } else {
+        crate::bits::wrap_unsigned_i64(v, width)
     }
 }
 

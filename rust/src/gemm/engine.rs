@@ -1,11 +1,33 @@
 //! The packed GEMM engine: plan-phase weight encoding + execute-phase
 //! activation streaming over an array of simulated DSP slices.
+//!
+//! ## Word backends
+//!
+//! The execute phase runs on one of two integer datapaths, chosen once
+//! at engine build time ([`WordBackend`]):
+//!
+//! * **Narrow (`i64`)** — every DSP-feasible configuration whose P word
+//!   plus accumulation headroom δ fits 63 bits (all of them, in
+//!   practice: the physical P word is 48 bits). Operand and weight
+//!   planes are `i64`, the cascade/per-product inner loops are
+//!   single-machine-word multiplies, and extraction fuses with the
+//!   accumulator scatter. On x86-64 this is the difference between one
+//!   `imul` and a multi-instruction `i128` widening sequence per packed
+//!   product.
+//! * **Wide (`i128`)** — the generic fallback for logical
+//!   (architecture-independent) engines and pathological generated
+//!   configurations whose fields climb past bit 60.
+//!
+//! The two backends are bit-identical by construction (the narrow path
+//! replicates every port wrap of the DSP model at the same widths) and
+//! pinned against each other — outputs *and* [`DspOpStats`] — by the
+//! differential suite in `tests/conformance.rs`.
 
 use super::matrix::MatI32;
-use super::plan::{GemmPlan, PackedWeights};
+use super::plan::{GemmPlan, PackedWeights, PlaneStore};
 use crate::correct::Correction;
 use crate::packing::{PackedMultiplier, PackingConfig};
-use crate::util::parallel_map;
+use crate::util::parallel_map_with;
 use crate::{Error, Result};
 
 /// DSP work counters for one GEMM call — the basis of the utilization
@@ -39,6 +61,19 @@ impl DspOpStats {
     }
 }
 
+/// The integer width of the execution datapath (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WordBackend {
+    /// `i64` planes and inner loops — selected automatically for every
+    /// strict engine whose configuration passes
+    /// [`PackingConfig::narrow_word_feasible`].
+    Narrow64,
+    /// `i128` planes and inner loops — the generic fallback (logical
+    /// engines, overwide generated configs, or forced via
+    /// [`GemmEngine::new_wide`] for A/B benchmarking).
+    Wide128,
+}
+
 /// Tiled GEMM over simulated DSP slices using one packing configuration.
 #[derive(Debug, Clone)]
 pub struct GemmEngine {
@@ -47,21 +82,49 @@ pub struct GemmEngine {
     n_w: usize,
     /// How many k-steps accumulate in the P word before a drain.
     drain_period: usize,
+    /// Execution datapath width, fixed at build time.
+    backend: WordBackend,
+    /// Extraction may scatter straight into the tile accumulators when
+    /// the correction scheme has no post-extraction fix-up.
+    fused_extract: bool,
+}
+
+/// Per-worker scratch of the narrow execute path (hoists the per-tile
+/// `vec!` allocations of earlier revisions).
+struct NarrowScratch {
+    a_vals: Vec<i64>,
+    results: Vec<i64>,
+}
+
+/// Per-worker scratch of the wide execute path.
+struct WideScratch {
+    a_vals: Vec<i128>,
+    results: Vec<i128>,
 }
 
 impl GemmEngine {
-    /// Engine over a strict (DSP-feasible) packing configuration.
+    /// Engine over a strict (DSP-feasible) packing configuration. Narrow
+    /// (`i64`) execution is selected automatically when feasible.
     pub fn new(cfg: PackingConfig, correction: Correction) -> Result<Self> {
-        Self::build(PackedMultiplier::new(cfg, correction)?)
+        Self::build(PackedMultiplier::new(cfg, correction)?, false)
     }
 
     /// Engine over an architecture-independent packing (see
-    /// [`PackedMultiplier::logical`]).
+    /// [`PackedMultiplier::logical`]). Always runs the wide backend: the
+    /// logical mode's exact wide products are what `i128` is for.
     pub fn logical(cfg: PackingConfig, correction: Correction) -> Result<Self> {
-        Self::build(PackedMultiplier::logical(cfg, correction)?)
+        Self::build(PackedMultiplier::logical(cfg, correction)?, false)
     }
 
-    fn build(mul: PackedMultiplier) -> Result<Self> {
+    /// Strict engine pinned to the **wide (`i128`) backend** even when
+    /// the configuration is narrow-feasible. Exists for A/B measurement
+    /// (`benches/gemm_throughput.rs`) and for the narrow/wide
+    /// differential suite; production callers want [`GemmEngine::new`].
+    pub fn new_wide(cfg: PackingConfig, correction: Correction) -> Result<Self> {
+        Self::build(PackedMultiplier::new(cfg, correction)?, true)
+    }
+
+    fn build(mul: PackedMultiplier, force_wide: bool) -> Result<Self> {
         let cfg = mul.config();
         let n_a = cfg.a.len();
         let n_w = cfg.w.len();
@@ -82,7 +145,18 @@ impl GemmEngine {
         } else {
             cfg.max_accumulations() as usize
         };
-        Ok(GemmEngine { mul, n_a, n_w, drain_period })
+        let backend = if !force_wide && mul.narrow_feasible() {
+            WordBackend::Narrow64
+        } else {
+            WordBackend::Wide128
+        };
+        // Fused extract→scatter is legal exactly when post-extraction is
+        // a no-op (see `Correction::post_extract_in_place`).
+        let fused_extract = matches!(
+            mul.correction(),
+            Correction::None | Correction::FullRoundHalfUp | Correction::ApproxCPort
+        );
+        Ok(GemmEngine { mul, n_a, n_w, drain_period, backend, fused_extract })
     }
 
     /// The packing configuration in use.
@@ -105,11 +179,17 @@ impl GemmEngine {
         self.mul.correction()
     }
 
+    /// The execution datapath width this engine was built with.
+    pub fn word_backend(&self) -> WordBackend {
+        self.backend
+    }
+
     /// **Plan phase**: range-check `w` (K×N, signed w-operand range) and
-    /// encode its column tiles into reusable packed operand planes. Built
-    /// once per weight matrix and served by any number of
-    /// [`GemmEngine::execute`] calls — the weights-resident deployment
-    /// shape, where per-call work reduces to streaming activations.
+    /// encode its column tiles into reusable packed operand planes (in
+    /// the word width of this engine's backend). Built once per weight
+    /// matrix and served by any number of [`GemmEngine::execute`] calls —
+    /// the weights-resident deployment shape, where per-call work reduces
+    /// to streaming activations.
     pub fn plan(&self, w: &MatI32) -> Result<PackedWeights> {
         let (w_lo, w_hi) = self.mul.config().w[0].range();
         let (lo, hi) = w.min_max();
@@ -150,6 +230,21 @@ impl GemmEngine {
                 }
             }
         }
+        // One encode path for both backends: the planes are built in
+        // i128 and narrowed afterwards — lossless by the narrowness
+        // predicate. Checked conversion on this cold path: a gap in the
+        // predicate must panic here, not wrap into corrupt planes.
+        let narrow = |v: &i128| {
+            i64::try_from(*v).expect("narrow_word_feasible guarantees i64 planes")
+        };
+        let planes = match self.backend {
+            WordBackend::Wide128 => PlaneStore::Wide { words, raw, c_words },
+            WordBackend::Narrow64 => PlaneStore::Narrow {
+                words: words.iter().map(narrow).collect(),
+                raw: raw.iter().map(narrow).collect(),
+                c_words: c_words.iter().map(narrow).collect(),
+            },
+        };
         Ok(PackedWeights {
             config: self.mul.config().clone(),
             correction: self.mul.correction(),
@@ -157,9 +252,7 @@ impl GemmEngine {
             cols: w.cols,
             n_w: self.n_w,
             plan: GemmPlan::new(k_dim, col_tiles, self.drain_period),
-            words,
-            raw,
-            c_words,
+            planes,
         })
     }
 
@@ -167,12 +260,14 @@ impl GemmEngine {
     /// (values must fit the unsigned a-operand range); `W` is the matrix
     /// `weights` was planned from. Bit-identical to
     /// [`GemmEngine::matmul`] over the same operands (asserted across the
-    /// conformance suite), including the [`DspOpStats`] counters.
+    /// conformance suite), including the [`DspOpStats`] counters — and
+    /// identical across the narrow/wide backends.
     ///
-    /// Independent output tiles run in parallel: activation strips are
-    /// packed once per row tile, then every (row, column) output tile is a
-    /// separate work item over the shared activation planes and the
-    /// plan's weight planes.
+    /// Independent output tiles run in parallel on the persistent worker
+    /// pool when the estimated work clears the dispatch threshold;
+    /// activation strips are packed once per row tile, then every
+    /// (row, column) output tile is a separate work item over the shared
+    /// activation planes and the plan's weight planes.
     pub fn execute(&self, weights: &PackedWeights, a: &MatI32) -> Result<(MatI32, DspOpStats)> {
         if !weights.compatible_with(self) {
             return Err(weights.mismatch_error(self));
@@ -194,95 +289,18 @@ impl GemmEngine {
         let k_dim = weights.plan.k_dim;
         let col_tiles = weights.plan.col_tiles;
         let n_cols = weights.cols;
-        let packer = self.mul.packer();
-        let use_prepack = self.drain_period > 1;
-        let extra = self.mul.config().delta.max(0) as u32;
-        let rhu = matches!(self.mul.correction(), Correction::FullRoundHalfUp);
-
-        let row_tiles: Vec<usize> = (0..a.rows.div_ceil(self.n_a)).collect();
-        // Stage 1 (cascade path): pack each row strip's activations once;
-        // every column tile of that strip reuses the plane, mirroring the
-        // weight planes the plan already holds.
-        let pa: Vec<Vec<i128>> = if use_prepack {
-            parallel_map(&row_tiles, |&rt| {
-                let r0 = rt * self.n_a;
-                let mut a_vals = vec![0i128; self.n_a];
-                let mut plane = Vec::with_capacity(k_dim);
-                for k in 0..k_dim {
-                    for (ti, av) in a_vals.iter_mut().enumerate() {
-                        let r = r0 + ti;
-                        *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
-                    }
-                    plane.push(packer.pack_a_unchecked(&a_vals));
-                }
-                plane
-            })
-        } else {
-            Vec::new()
-        };
-
-        // Stage 2: every output tile is an independent work item.
-        let mut tiles = Vec::with_capacity(row_tiles.len() * col_tiles);
-        for &rt in &row_tiles {
+        let row_tiles = a.rows.div_ceil(self.n_a);
+        let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
+        for rt in 0..row_tiles {
             for ct in 0..col_tiles {
                 tiles.push((rt, ct));
             }
         }
-        let tile_results = parallel_map(&tiles, |&(rt, ct)| {
-            let mut stats = DspOpStats::default();
-            let mut results = vec![0i128; self.mul.config().num_results()];
-            let mut acc = vec![0i64; self.n_a * self.n_w];
-            let r0 = rt * self.n_a;
-            let base = ct * k_dim;
-            if !use_prepack {
-                // Per-product path (MR-style, C-port and post-sign
-                // corrections consume raw operand values; the plan holds
-                // them, plus the pre-computed C words).
-                let mut a_vals = vec![0i128; self.n_a];
-                for k in 0..k_dim {
-                    for (ti, av) in a_vals.iter_mut().enumerate() {
-                        let r = r0 + ti;
-                        *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
-                    }
-                    let w_raw = &weights.raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
-                    let c = weights.c_words.get(base + k).copied().unwrap_or(0);
-                    self.mul.multiply_prepacked_into(
-                        &a_vals,
-                        w_raw,
-                        weights.words[base + k],
-                        c,
-                        &mut results,
-                    );
-                    self.scatter(&results, &mut acc);
-                    stats.dsp_cycles += 1;
-                    stats.drains += 1;
-                    stats.multiplications += (self.n_a * self.n_w) as u64;
-                }
-            } else {
-                // In-DSP cascade accumulation per drain segment: P
-                // accumulates one wide product per step (the PCIN chain);
-                // fit() + the drain rhythm guarantee no field overflow, so
-                // the running sum equals the cascade's P word bit for bit.
-                let plane = &pa[rt];
-                let pwt = &weights.words[base..base + k_dim];
-                for &(k0, chunk) in &weights.plan.segments {
-                    let mut p = 0i128;
-                    for dk in 0..chunk {
-                        p += plane[k0 + dk] * pwt[k0 + dk];
-                    }
-                    if rhu {
-                        packer.extract_round_half_up_wide_into(p, extra, &mut results);
-                    } else {
-                        packer.extract_wide_into(p, extra, &mut results);
-                    }
-                    self.scatter(&results, &mut acc);
-                    stats.dsp_cycles += chunk as u64;
-                    stats.drains += 1;
-                    stats.multiplications += (chunk * self.n_a * self.n_w) as u64;
-                }
-            }
-            (acc, stats)
-        });
+
+        let tile_results = match self.backend {
+            WordBackend::Narrow64 => self.execute_tiles_narrow(weights, a, &tiles),
+            WordBackend::Wide128 => self.execute_tiles_wide(weights, a, &tiles),
+        };
 
         // Assemble: each tile owns a disjoint output block.
         let mut out = MatI32::zeros(a.rows, n_cols);
@@ -305,6 +323,222 @@ impl GemmEngine {
         Ok((out, stats))
     }
 
+    /// Narrow (`i64`) execute backend: flat i64 planes, fused
+    /// extract→scatter on the cascade drain, per-worker scratch.
+    fn execute_tiles_narrow(
+        &self,
+        weights: &PackedWeights,
+        a: &MatI32,
+        tiles: &[(usize, usize)],
+    ) -> Vec<(Vec<i64>, DspOpStats)> {
+        let k_dim = weights.plan.k_dim;
+        let packer = self.mul.packer();
+        let use_prepack = self.drain_period > 1;
+        let extra = self.mul.config().delta.max(0) as u32;
+        let rhu = matches!(self.mul.correction(), Correction::FullRoundHalfUp);
+        let n_res = self.mul.config().num_results();
+        let (words, raw, c_words) = match &weights.planes {
+            PlaneStore::Narrow { words, raw, c_words } => (words, raw, c_words),
+            PlaneStore::Wide { .. } => unreachable!("execute dispatch matches the plan backend"),
+        };
+
+        // Stage 1 (cascade path): pack each row strip's activations once;
+        // every column tile of that strip reuses the plane, mirroring the
+        // weight planes the plan already holds.
+        let pa: Vec<Vec<i64>> = if use_prepack {
+            let row_tiles: Vec<usize> = (0..a.rows.div_ceil(self.n_a)).collect();
+            let cost = (row_tiles.len() * k_dim * self.n_a) as u64;
+            parallel_map_with(
+                &row_tiles,
+                cost,
+                || vec![0i64; self.n_a],
+                |a_vals, &rt| {
+                    let r0 = rt * self.n_a;
+                    let mut plane = Vec::with_capacity(k_dim);
+                    for k in 0..k_dim {
+                        for (ti, av) in a_vals.iter_mut().enumerate() {
+                            let r = r0 + ti;
+                            *av = if r < a.rows { a.get(r, k) as i64 } else { 0 };
+                        }
+                        plane.push(packer.pack_a_unchecked_i64(a_vals));
+                    }
+                    plane
+                },
+            )
+        } else {
+            Vec::new()
+        };
+
+        // Stage 2: every output tile is an independent work item. Scratch
+        // is sized to what this engine's branch actually touches: the
+        // cascade path reads prepacked planes (no scratch at all), and
+        // the fused per-product path never stages per-result values.
+        let a_scratch = if use_prepack { 0 } else { self.n_a };
+        let r_scratch = if use_prepack || self.fused_extract { 0 } else { n_res };
+        let cost = (tiles.len() * k_dim * n_res) as u64;
+        parallel_map_with(
+            tiles,
+            cost,
+            || NarrowScratch { a_vals: vec![0i64; a_scratch], results: vec![0i64; r_scratch] },
+            |scratch, &(rt, ct)| {
+                let mut stats = DspOpStats::default();
+                let mut acc = vec![0i64; self.n_a * self.n_w];
+                let r0 = rt * self.n_a;
+                let base = ct * k_dim;
+                if !use_prepack {
+                    // Per-product path (MR-style, C-port and post-sign
+                    // corrections consume raw operand values; the plan
+                    // holds them, plus the pre-computed C words).
+                    for k in 0..k_dim {
+                        for (ti, av) in scratch.a_vals.iter_mut().enumerate() {
+                            let r = r0 + ti;
+                            *av = if r < a.rows { a.get(r, k) as i64 } else { 0 };
+                        }
+                        let c = c_words.get(base + k).copied().unwrap_or(0);
+                        let b_word = packer.pack_a_unchecked_i64(&scratch.a_vals);
+                        let p = self.mul.p_word_prepacked_i64(b_word, words[base + k], c);
+                        if self.fused_extract {
+                            packer.extract_scatter_into_i64(p, 0, rhu, &mut acc);
+                        } else {
+                            let w_raw =
+                                &raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
+                            self.mul.finish_into_i64(
+                                p,
+                                &scratch.a_vals,
+                                w_raw,
+                                &mut scratch.results,
+                            );
+                            packer.scatter_add_i64(&scratch.results, &mut acc);
+                        }
+                        stats.dsp_cycles += 1;
+                        stats.drains += 1;
+                        stats.multiplications += (self.n_a * self.n_w) as u64;
+                    }
+                } else {
+                    // In-DSP cascade accumulation per drain segment: P
+                    // accumulates one wide product per step (the PCIN
+                    // chain); fit() + the drain rhythm guarantee no field
+                    // overflow, so the running i64 sum equals the
+                    // cascade's P word bit for bit.
+                    let plane = &pa[rt];
+                    let pwt = &words[base..base + k_dim];
+                    for &(k0, chunk) in &weights.plan.segments {
+                        let mut p = 0i64;
+                        for dk in 0..chunk {
+                            p += plane[k0 + dk] * pwt[k0 + dk];
+                        }
+                        packer.extract_scatter_into_i64(p, extra, rhu, &mut acc);
+                        stats.dsp_cycles += chunk as u64;
+                        stats.drains += 1;
+                        stats.multiplications += (chunk * self.n_a * self.n_w) as u64;
+                    }
+                }
+                (acc, stats)
+            },
+        )
+    }
+
+    /// Wide (`i128`) execute backend: the generic fallback, structured
+    /// identically to the narrow path.
+    fn execute_tiles_wide(
+        &self,
+        weights: &PackedWeights,
+        a: &MatI32,
+        tiles: &[(usize, usize)],
+    ) -> Vec<(Vec<i64>, DspOpStats)> {
+        let k_dim = weights.plan.k_dim;
+        let packer = self.mul.packer();
+        let use_prepack = self.drain_period > 1;
+        let extra = self.mul.config().delta.max(0) as u32;
+        let rhu = matches!(self.mul.correction(), Correction::FullRoundHalfUp);
+        let n_res = self.mul.config().num_results();
+        let (words, raw, c_words) = match &weights.planes {
+            PlaneStore::Wide { words, raw, c_words } => (words, raw, c_words),
+            PlaneStore::Narrow { .. } => unreachable!("execute dispatch matches the plan backend"),
+        };
+
+        let pa: Vec<Vec<i128>> = if use_prepack {
+            let row_tiles: Vec<usize> = (0..a.rows.div_ceil(self.n_a)).collect();
+            let cost = (row_tiles.len() * k_dim * self.n_a) as u64;
+            parallel_map_with(
+                &row_tiles,
+                cost,
+                || vec![0i128; self.n_a],
+                |a_vals, &rt| {
+                    let r0 = rt * self.n_a;
+                    let mut plane = Vec::with_capacity(k_dim);
+                    for k in 0..k_dim {
+                        for (ti, av) in a_vals.iter_mut().enumerate() {
+                            let r = r0 + ti;
+                            *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
+                        }
+                        plane.push(packer.pack_a_unchecked(a_vals));
+                    }
+                    plane
+                },
+            )
+        } else {
+            Vec::new()
+        };
+
+        // Branch-specific scratch sizing — see the narrow path.
+        let a_scratch = if use_prepack { 0 } else { self.n_a };
+        let r_scratch = if use_prepack || self.fused_extract { 0 } else { n_res };
+        let cost = (tiles.len() * k_dim * n_res) as u64;
+        parallel_map_with(
+            tiles,
+            cost,
+            || WideScratch { a_vals: vec![0i128; a_scratch], results: vec![0i128; r_scratch] },
+            |scratch, &(rt, ct)| {
+                let mut stats = DspOpStats::default();
+                let mut acc = vec![0i64; self.n_a * self.n_w];
+                let r0 = rt * self.n_a;
+                let base = ct * k_dim;
+                if !use_prepack {
+                    for k in 0..k_dim {
+                        for (ti, av) in scratch.a_vals.iter_mut().enumerate() {
+                            let r = r0 + ti;
+                            *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
+                        }
+                        let c = c_words.get(base + k).copied().unwrap_or(0);
+                        let b_word = packer.pack_a_unchecked(&scratch.a_vals);
+                        let p = self.mul.p_word_prepacked(b_word, words[base + k], c);
+                        if self.fused_extract {
+                            packer.extract_scatter_into(p, 0, rhu, &mut acc);
+                        } else {
+                            let w_raw =
+                                &raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
+                            self.mul.finish_into(
+                                p,
+                                &scratch.a_vals,
+                                w_raw,
+                                &mut scratch.results,
+                            );
+                            packer.scatter_add(&scratch.results, &mut acc);
+                        }
+                        stats.dsp_cycles += 1;
+                        stats.drains += 1;
+                        stats.multiplications += (self.n_a * self.n_w) as u64;
+                    }
+                } else {
+                    let plane = &pa[rt];
+                    let pwt = &words[base..base + k_dim];
+                    for &(k0, chunk) in &weights.plan.segments {
+                        let mut p = 0i128;
+                        for dk in 0..chunk {
+                            p += plane[k0 + dk] * pwt[k0 + dk];
+                        }
+                        packer.extract_scatter_into(p, extra, rhu, &mut acc);
+                        stats.dsp_cycles += chunk as u64;
+                        stats.drains += 1;
+                        stats.multiplications += (chunk * self.n_a * self.n_w) as u64;
+                    }
+                }
+                (acc, stats)
+            },
+        )
+    }
+
     /// `C = A · W` on the packed DSP fabric — the one-shot compatibility
     /// wrapper: plans `W` and immediately executes. Callers that reuse a
     /// weight matrix should [`GemmEngine::plan`] once and
@@ -319,15 +553,6 @@ impl GemmEngine {
         }
         let weights = self.plan(w)?;
         self.execute(&weights, a)
-    }
-
-    /// Scatter extracted results (in result order) into the tile
-    /// accumulators, indexed `[w_idx * n_a + a_idx]`.
-    #[inline]
-    fn scatter(&self, results: &[i128], acc: &mut [i64]) {
-        for (r, spec) in results.iter().zip(&self.mul.config().results) {
-            acc[spec.w_idx * self.n_a + spec.a_idx] += *r as i64;
-        }
     }
 }
 
@@ -397,6 +622,37 @@ mod tests {
         assert!(mad < 8.0, "mad = {mad}");
     }
 
+    /// Backend selection: strict DSP-feasible engines run narrow, logical
+    /// engines and forced-wide engines run wide.
+    #[test]
+    fn backend_selection() {
+        let narrow =
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        assert_eq!(narrow.word_backend(), WordBackend::Narrow64);
+        let forced =
+            GemmEngine::new_wide(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        assert_eq!(forced.word_backend(), WordBackend::Wide128);
+        let logical =
+            GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap();
+        assert_eq!(logical.word_backend(), WordBackend::Wide128);
+    }
+
+    /// Narrow and forced-wide engines agree bit for bit — outputs and
+    /// counters (the full cross-preset differential lives in
+    /// `tests/conformance.rs`).
+    #[test]
+    fn narrow_matches_wide_quick() {
+        for corr in [Correction::FullRoundHalfUp, Correction::None, Correction::ApproxCPort] {
+            let narrow = GemmEngine::new(PackingConfig::int4(), corr).unwrap();
+            let wide = GemmEngine::new_wide(PackingConfig::int4(), corr).unwrap();
+            let (a, w) = random_mats(7, 33, 5, 0xAB);
+            let (cn, sn) = narrow.matmul(&a, &w).unwrap();
+            let (cw, sw) = wide.matmul(&a, &w).unwrap();
+            assert_eq!(cn, cw, "{corr:?}");
+            assert_eq!(sn, sw, "{corr:?}");
+        }
+    }
+
     /// Acceptance pin: `execute` over a prebuilt [`PackedWeights`] is
     /// bit-identical to the one-shot `matmul` — outputs AND DSP counters —
     /// for cascade, per-product, overpacked and logical engines.
@@ -415,6 +671,7 @@ mod tests {
                 let (a, w) = random_mats(m, k, n, 3 + (m * k * n) as u64);
                 let plan = eng.plan(&w).unwrap();
                 assert_eq!(plan.shape(), (k, n));
+                assert_eq!(plan.word_backend(), eng.word_backend());
                 let (via_plan, plan_stats) = eng.execute(&plan, &a).unwrap();
                 let (one_shot, shot_stats) = eng.matmul(&a, &w).unwrap();
                 assert_eq!(via_plan, one_shot, "{} {m}x{k}x{n}", eng.config().name);
@@ -442,26 +699,39 @@ mod tests {
     }
 
     /// Plans decode back to the weights they were built from (the codec
-    /// roundtrip guarantee lifted to whole matrices).
+    /// roundtrip guarantee lifted to whole matrices) — narrow planes
+    /// included.
     #[test]
     fn plan_decodes_back_to_weights() {
         let eng = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
         let (_, w) = random_mats(1, 13, 5, 23);
         assert_eq!(eng.plan(&w).unwrap().decode(), w);
+        let wide = GemmEngine::new_wide(PackingConfig::int4(), Correction::FullRoundHalfUp)
+            .unwrap();
+        assert_eq!(wide.plan(&w).unwrap().decode(), w);
     }
 
-    /// A plan only runs on the engine shape it was compiled for.
+    /// A plan only runs on the engine shape it was compiled for —
+    /// including the word backend.
     #[test]
     fn execute_rejects_foreign_plans() {
         let rhu = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
         let raw = GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap();
         let int8 = GemmEngine::new(PackingConfig::int8(), Correction::FullRoundHalfUp).unwrap();
+        let wide = GemmEngine::new_wide(PackingConfig::int4(), Correction::FullRoundHalfUp)
+            .unwrap();
         let (a, w) = random_mats(4, 8, 4, 77);
         let plan = rhu.plan(&w).unwrap();
         assert!(plan.compatible_with(&rhu));
         assert!(!plan.compatible_with(&raw));
         assert!(raw.execute(&plan, &a).is_err(), "correction mismatch");
         assert!(int8.execute(&plan, &a).is_err(), "packing mismatch");
+        // Backend mismatch: a narrow plan must not run on the wide
+        // engine (and vice versa) even though config + correction match.
+        assert!(!plan.compatible_with(&wide));
+        assert!(wide.execute(&plan, &a).is_err(), "backend mismatch");
+        let wide_plan = wide.plan(&w).unwrap();
+        assert!(rhu.execute(&wide_plan, &a).is_err(), "backend mismatch (reverse)");
         // Shape mismatch against a matching engine still errors.
         let short = MatI32::zeros(4, 7);
         assert!(rhu.execute(&plan, &short).is_err());
@@ -485,5 +755,18 @@ mod tests {
         let (a, w) = random_mats(3, 5, 3, 99);
         let (c, _) = eng.matmul(&a, &w).unwrap();
         assert_eq!(c, a.matmul_exact(&w).unwrap());
+    }
+
+    /// Narrow plans cost half the resident bytes of wide plans.
+    #[test]
+    fn narrow_planes_halve_resident_bytes() {
+        let narrow =
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        let wide =
+            GemmEngine::new_wide(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        let (_, w) = random_mats(1, 32, 16, 3);
+        let pn = narrow.plan(&w).unwrap();
+        let pw = wide.plan(&w).unwrap();
+        assert_eq!(pn.plane_bytes() * 2, pw.plane_bytes());
     }
 }

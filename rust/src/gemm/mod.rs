@@ -34,6 +34,18 @@
 //! checks, operand encoding, correction words) is paid once instead of
 //! per call. See `benches/plan_vs_repack.rs` for the measured gap.
 //!
+//! ## Narrow-word execution
+//!
+//! Execution runs on one of two integer datapaths ([`WordBackend`]),
+//! chosen once when the engine is built: every DSP-feasible
+//! configuration gets **`i64` planes and inner loops** (the physical P
+//! word is 48 bits — `i128` was pure overhead), while logical engines
+//! and pathological generated configs keep the generic `i128` fallback.
+//! Both backends are bit-identical — outputs and counters — which
+//! `tests/conformance.rs` pins differentially across every preset
+//! configuration × correction scheme; `benches/gemm_throughput.rs`
+//! measures the speedup and asserts the ≥ 2× floor on the INT4 cascade.
+//!
 //! The engine counts DSP work, so benchmarks can report the utilization
 //! gain over the one-multiply-per-DSP baseline (the paper's raison d'être).
 //!
@@ -46,6 +58,6 @@ mod engine;
 mod matrix;
 mod plan;
 
-pub use engine::{DspOpStats, GemmEngine};
+pub use engine::{DspOpStats, GemmEngine, WordBackend};
 pub use matrix::{Im2col, MatI32};
 pub use plan::{GemmPlan, PackedWeights};

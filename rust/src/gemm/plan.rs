@@ -14,6 +14,12 @@
 //!   operand bits, exactly as their fabric circuits do in hardware), and
 //! * the pre-computed C-port correction word (a pure function of `w`).
 //!
+//! Planes are **flat and contiguous** (the internal `PlaneStore`): one
+//! `Vec` per plane kind with a fixed `k_dim` tile stride, in the integer
+//! width of the engine's execution backend — `i64` for narrow-feasible
+//! configurations (half the resident bytes, and the inner loops run on
+//! one machine word), `i128` for the generic fallback.
+//!
 //! [`GemmPlan`] fixes the execution schedule that does not depend on the
 //! activation batch: the column tiling, the drain period (how many
 //! cascade steps fit the padding headroom, §III) and the resulting drain
@@ -23,6 +29,7 @@
 //! amortizing the per-call encode/range-check work the one-shot
 //! `matmul` repeats on every invocation.
 
+use super::engine::WordBackend;
 use super::matrix::MatI32;
 use crate::correct::Correction;
 use crate::packing::PackingConfig;
@@ -68,15 +75,57 @@ impl GemmPlan {
     }
 }
 
+/// Flat, contiguous plane storage of one plan, in the word width of the
+/// execution backend that built it.
+///
+/// Layout (identical in both variants): for column tile `ct` and
+/// reduction step `k`, the plane word and C word live at index
+/// `ct · k_dim + k` (tile stride `k_dim`); the raw operands of that step
+/// occupy `[(ct · k_dim + k) · n_w ..][..n_w]`. `raw` is empty for
+/// cascade-path engines (their extraction never consumes raw operands)
+/// and `c_words` is empty unless the correction feeds the C port.
+#[derive(Debug, Clone)]
+pub(super) enum PlaneStore {
+    /// Generic `i128` planes (the wide datapath).
+    Wide {
+        /// Packed multiplier-side words.
+        words: Vec<i128>,
+        /// Raw zero-padded `w` operands (per-product engines only).
+        raw: Vec<i128>,
+        /// Pre-computed C-port correction words.
+        c_words: Vec<i128>,
+    },
+    /// `i64` planes for narrow-feasible configurations: half the resident
+    /// bytes, single-machine-word inner loops.
+    Narrow {
+        /// Packed multiplier-side words.
+        words: Vec<i64>,
+        /// Raw zero-padded `w` operands (per-product engines only).
+        raw: Vec<i64>,
+        /// Pre-computed C-port correction words.
+        c_words: Vec<i64>,
+    },
+}
+
+impl PlaneStore {
+    /// The plane word at `idx`, widened for backend-agnostic consumers
+    /// (decode, tests).
+    pub(super) fn word_i128(&self, idx: usize) -> i128 {
+        match self {
+            PlaneStore::Wide { words, .. } => words[idx],
+            PlaneStore::Narrow { words, .. } => words[idx] as i128,
+        }
+    }
+}
+
 /// Weight tiles pre-encoded into packed operand planes, built once per
 /// (weight matrix, engine) and reused by every
 /// [`crate::gemm::GemmEngine::execute`] call.
 ///
-/// Layout: for column tile `ct` and reduction step `k`, the plane word and
-/// C word live at `ct * k_dim + k`; the raw operands of that step occupy
-/// `[(ct * k_dim + k) * n_w ..][..n_w]`. Edge tiles are zero-padded, so
-/// every tile is full-width — the same padding `matmul` applies on the
-/// fly.
+/// Edge tiles are zero-padded, so every tile is full-width — the same
+/// padding `matmul` applies on the fly. Plane storage is flat and
+/// contiguous with a `k_dim` tile stride, in the word width reported by
+/// [`PackedWeights::word_backend`] (see the module docs).
 #[derive(Debug, Clone)]
 pub struct PackedWeights {
     /// The packing configuration the planes were encoded under. `execute`
@@ -94,15 +143,8 @@ pub struct PackedWeights {
     pub(super) n_w: usize,
     /// The activation-independent schedule.
     pub(super) plan: GemmPlan,
-    /// Packed multiplier-side words, `[ct * k_dim + k]`.
-    pub(super) words: Vec<i128>,
-    /// Raw zero-padded `w` operands, `[(ct * k_dim + k) * n_w + j]`.
-    /// Empty for cascade-path engines (drain period > 1), whose
-    /// extraction never consumes raw operands.
-    pub(super) raw: Vec<i128>,
-    /// Pre-computed C-port correction words, `[ct * k_dim + k]`. Empty
-    /// unless the correction scheme feeds the C port.
-    pub(super) c_words: Vec<i128>,
+    /// The flat operand planes, in the execution backend's word width.
+    pub(super) planes: PlaneStore,
 }
 
 impl PackedWeights {
@@ -126,10 +168,26 @@ impl PackedWeights {
         self.correction
     }
 
+    /// Which execution datapath width the planes were stored for.
+    pub fn word_backend(&self) -> WordBackend {
+        match self.planes {
+            PlaneStore::Narrow { .. } => WordBackend::Narrow64,
+            PlaneStore::Wide { .. } => WordBackend::Wide128,
+        }
+    }
+
     /// Bytes of plane storage (capacity planning for weights-resident
     /// serving: one plan per dense layer stays resident per model).
+    /// Narrow plans cost half the bytes of wide ones.
     pub fn plane_bytes(&self) -> usize {
-        (self.words.len() + self.raw.len() + self.c_words.len()) * std::mem::size_of::<i128>()
+        match &self.planes {
+            PlaneStore::Wide { words, raw, c_words } => {
+                (words.len() + raw.len() + c_words.len()) * std::mem::size_of::<i128>()
+            }
+            PlaneStore::Narrow { words, raw, c_words } => {
+                (words.len() + raw.len() + c_words.len()) * std::mem::size_of::<i64>()
+            }
+        }
     }
 
     /// Decode the planned weight tile back to the original matrix — the
@@ -141,7 +199,8 @@ impl PackedWeights {
         for ct in 0..self.plan.col_tiles {
             let c0 = ct * self.n_w;
             for k in 0..self.plan.k_dim {
-                let vals = packer.unpack_w_value(self.words[ct * self.plan.k_dim + k]);
+                let word = self.planes.word_i128(ct * self.plan.k_dim + k);
+                let vals = packer.unpack_w_value(word);
                 for (j, &v) in vals.iter().enumerate() {
                     if c0 + j < self.cols {
                         out.set(k, c0 + j, v as i32);
@@ -153,22 +212,26 @@ impl PackedWeights {
     }
 
     /// Check that this plan was built for (an engine equivalent to)
-    /// `engine`: same packing configuration, correction scheme and drain
-    /// period.
+    /// `engine`: same packing configuration, correction scheme, drain
+    /// period **and word backend** — narrow planes only run on the
+    /// narrow datapath and vice versa.
     pub fn compatible_with(&self, engine: &super::GemmEngine) -> bool {
         self.config == *engine.config()
             && self.correction == engine.correction()
             && self.plan.drain_period == engine.drain_period()
+            && self.word_backend() == engine.word_backend()
     }
 
     /// Error for an engine/plan mismatch (shared by the execute guards).
     pub(super) fn mismatch_error(&self, engine: &super::GemmEngine) -> Error {
         Error::InvalidConfig(format!(
-            "plan built for packing {:?} + {:?}, engine runs {:?} + {:?}",
+            "plan built for packing {:?} + {:?} ({:?}), engine runs {:?} + {:?} ({:?})",
             self.config.name,
             self.correction,
+            self.word_backend(),
             engine.config().name,
-            engine.correction()
+            engine.correction(),
+            engine.word_backend()
         ))
     }
 }

@@ -27,7 +27,9 @@ pub enum ExecMode {
 /// every batch after. The cache is keyed on both the engine shape and a
 /// snapshot of the weight matrix, so a differently-configured engine —
 /// or a mutation of the layer's (public) weights — rebuilds the plan
-/// instead of silently serving a stale one.
+/// instead of silently serving a stale one. "Engine shape" includes the
+/// execution word backend (`PackedWeights::compatible_with` checks it):
+/// narrow `i64` planes never leak onto a wide engine or vice versa.
 #[derive(Debug, Default)]
 pub struct PlanCache {
     slot: Mutex<Option<(Arc<MatI32>, Arc<PackedWeights>)>>,
@@ -343,6 +345,28 @@ mod tests {
         let (y3, s3) = mlp.forward(&x, &mode).unwrap();
         assert_eq!(y1, y3);
         assert_eq!(s1, s3);
+    }
+
+    #[test]
+    fn plan_cache_rebuilds_across_word_backends() {
+        // A narrow engine and a forced-wide engine share config +
+        // correction but not plane storage; the cache must rebuild on the
+        // swap and both must serve bit-identical results.
+        let ds = data::synthetic(30, 4, 64, 0.15, 31);
+        let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+        let x = mlp.quantize_batch(&ds.images).unwrap();
+        let narrow = ExecMode::Packed(engine());
+        let wide = ExecMode::Packed(
+            GemmEngine::new_wide(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+        );
+        let (yn, sn) = mlp.forward(&x, &narrow).unwrap();
+        let (yw, sw) = mlp.forward(&x, &wide).unwrap();
+        assert_eq!(yn, yw, "backends must agree bit for bit");
+        assert_eq!(sn, sw);
+        // And back again — no stale wide planes on the narrow engine.
+        let (yn2, sn2) = mlp.forward(&x, &narrow).unwrap();
+        assert_eq!(yn, yn2);
+        assert_eq!(sn, sn2);
     }
 
     #[test]

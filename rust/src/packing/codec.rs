@@ -24,16 +24,39 @@ impl PackedOperands {
     }
 }
 
-/// Stateless pack/extract codec for one [`PackingConfig`].
+/// Pack/extract codec for one [`PackingConfig`]. Stateless at runtime;
+/// construction precomputes the port-split and scatter tables the hot
+/// paths would otherwise re-derive per call.
 #[derive(Debug, Clone)]
 pub struct Packer {
     cfg: PackingConfig,
+    /// Index of the lowest-offset `w` operand (rides the sign-extended A
+    /// port, §III). Precomputed: `pack_w` used to re-scan the specs on
+    /// every call.
+    lowest_idx: usize,
+    /// Indices of the remaining `w` operands (the D-port sum), in spec
+    /// order — replaces the per-call `filter` over all specs.
+    d_idx: Vec<usize>,
+    /// Result index → tile-accumulator index (`w_idx · n_a + a_idx`), the
+    /// layout the GEMM engine's per-tile accumulators use. Lets
+    /// extraction scatter directly into the accumulators without an
+    /// intermediate result buffer.
+    scatter: Vec<usize>,
 }
 
 impl Packer {
     /// New codec for the given configuration.
     pub fn new(cfg: PackingConfig) -> Self {
-        Packer { cfg }
+        let mut lowest_idx = 0;
+        for (j, s) in cfg.w.iter().enumerate() {
+            if s.offset < cfg.w[lowest_idx].offset {
+                lowest_idx = j;
+            }
+        }
+        let d_idx = (0..cfg.w.len()).filter(|&j| j != lowest_idx).collect();
+        let n_a = cfg.a.len();
+        let scatter = cfg.results.iter().map(|r| r.w_idx * n_a + r.a_idx).collect();
+        Packer { cfg, lowest_idx, d_idx, scatter }
     }
 
     /// The configuration this codec serves.
@@ -80,22 +103,11 @@ impl Packer {
     /// ride D, the pre-adder summing them (§III).
     pub fn pack_w(&self, w: &[i128]) -> Result<(i128, i128)> {
         Self::check(w, &self.cfg.w, "w")?;
-        let mut lowest_idx = 0;
-        for (j, s) in self.cfg.w.iter().enumerate() {
-            if s.offset < self.cfg.w[lowest_idx].offset {
-                lowest_idx = j;
-            }
+        let a_port = w[self.lowest_idx] << self.cfg.w[self.lowest_idx].offset;
+        let mut d_port = 0i128;
+        for &j in &self.d_idx {
+            d_port += w[j] << self.cfg.w[j].offset;
         }
-        let a_port = w[lowest_idx] << self.cfg.w[lowest_idx].offset;
-        let d_port: i128 = self
-            .cfg
-            .w
-            .iter()
-            .zip(w)
-            .enumerate()
-            .filter(|(j, _)| *j != lowest_idx)
-            .map(|(_, (s, &v))| v << s.offset)
-            .sum();
         Ok((a_port, d_port))
     }
 
@@ -270,6 +282,159 @@ impl Packer {
             };
         }
     }
+
+    // --- narrow-word (i64) twins and fused extract→scatter ------------
+    //
+    // The i64 family is bit-identical to the i128 family whenever the
+    // configuration satisfies `PackingConfig::narrow_word_feasible` — the
+    // GEMM engine's narrow backend only exists under that predicate, and
+    // the conformance suite pins the identity differentially.
+
+    /// [`Packer::pack_a_unchecked`] twin on `i64` words (narrow hot path).
+    #[inline]
+    pub fn pack_a_unchecked_i64(&self, a: &[i64]) -> i64 {
+        let mut b = 0i64;
+        for (s, &v) in self.cfg.a.iter().zip(a) {
+            b += crate::bits::wrap_unsigned_i64(v, s.width) << s.offset;
+        }
+        b
+    }
+
+    /// [`Packer::pack_w_value_unchecked`] twin on `i64` words.
+    #[inline]
+    pub fn pack_w_value_unchecked_i64(&self, w: &[i64]) -> i64 {
+        let mut sum = 0i64;
+        for (s, &v) in self.cfg.w.iter().zip(w) {
+            sum += v << s.offset;
+        }
+        sum
+    }
+
+    /// [`Packer::extract_wide_into`] twin on `i64` P words.
+    #[inline]
+    pub fn extract_wide_into_i64(&self, p: i64, extra: u32, out: &mut [i64]) {
+        for (o, r) in out.iter_mut().zip(&self.cfg.results) {
+            *o = if r.signed {
+                crate::bits::field_signed_i64(p, r.offset, r.width + extra)
+            } else {
+                crate::bits::field_unsigned_i64(p, r.offset, r.width + extra)
+            };
+        }
+    }
+
+    /// [`Packer::extract_round_half_up_wide_into`] twin on `i64` P words.
+    #[inline]
+    pub fn extract_round_half_up_wide_into_i64(&self, p: i64, extra: u32, out: &mut [i64]) {
+        for (o, r) in out.iter_mut().zip(&self.cfg.results) {
+            let width = r.width + extra;
+            *o = if r.offset == 0 {
+                if r.signed {
+                    crate::bits::field_signed_i64(p, 0, width)
+                } else {
+                    crate::bits::field_unsigned_i64(p, 0, width)
+                }
+            } else {
+                let rounded = (p >> (r.offset - 1)) + 1;
+                if r.signed {
+                    crate::bits::field_signed_i64(rounded, 1, width)
+                } else {
+                    crate::bits::field_unsigned_i64(rounded, 1, width)
+                }
+            };
+        }
+    }
+
+    /// **Fused extract→scatter** (wide): pull every result field out of
+    /// `p` (plain or round-half-up extraction, windows widened by
+    /// `extra`) and add it straight into the tile accumulators at the
+    /// precomputed `w_idx · n_a + a_idx` slots — no intermediate result
+    /// buffer. Only legal for correction schemes with no post-extraction
+    /// fix-up (None / round-half-up / C-port); the engine guards this.
+    #[inline]
+    pub fn extract_scatter_into(&self, p: i128, extra: u32, rhu: bool, acc: &mut [i64]) {
+        if rhu {
+            for (r, &dst) in self.cfg.results.iter().zip(&self.scatter) {
+                let width = r.width + extra;
+                let v = if r.offset == 0 {
+                    if r.signed {
+                        field_signed(p, 0, width)
+                    } else {
+                        field_unsigned(p, 0, width)
+                    }
+                } else {
+                    let rounded = (p >> (r.offset - 1)) + 1;
+                    if r.signed {
+                        field_signed(rounded, 1, width)
+                    } else {
+                        field_unsigned(rounded, 1, width)
+                    }
+                };
+                acc[dst] += v as i64;
+            }
+        } else {
+            for (r, &dst) in self.cfg.results.iter().zip(&self.scatter) {
+                let v = if r.signed {
+                    field_signed(p, r.offset, r.width + extra)
+                } else {
+                    field_unsigned(p, r.offset, r.width + extra)
+                };
+                acc[dst] += v as i64;
+            }
+        }
+    }
+
+    /// [`Packer::extract_scatter_into`] twin on `i64` P words (the narrow
+    /// cascade drain — the hottest extraction in the crate).
+    #[inline]
+    pub fn extract_scatter_into_i64(&self, p: i64, extra: u32, rhu: bool, acc: &mut [i64]) {
+        if rhu {
+            for (r, &dst) in self.cfg.results.iter().zip(&self.scatter) {
+                let width = r.width + extra;
+                let v = if r.offset == 0 {
+                    if r.signed {
+                        crate::bits::field_signed_i64(p, 0, width)
+                    } else {
+                        crate::bits::field_unsigned_i64(p, 0, width)
+                    }
+                } else {
+                    let rounded = (p >> (r.offset - 1)) + 1;
+                    if r.signed {
+                        crate::bits::field_signed_i64(rounded, 1, width)
+                    } else {
+                        crate::bits::field_unsigned_i64(rounded, 1, width)
+                    }
+                };
+                acc[dst] += v;
+            }
+        } else {
+            for (r, &dst) in self.cfg.results.iter().zip(&self.scatter) {
+                let v = if r.signed {
+                    crate::bits::field_signed_i64(p, r.offset, r.width + extra)
+                } else {
+                    crate::bits::field_unsigned_i64(p, r.offset, r.width + extra)
+                };
+                acc[dst] += v;
+            }
+        }
+    }
+
+    /// Scatter-add already-extracted results (wide) into the tile
+    /// accumulators — the non-fused tail for correction schemes whose
+    /// post-extraction fix-up needs the per-result values first.
+    #[inline]
+    pub fn scatter_add(&self, results: &[i128], acc: &mut [i64]) {
+        for (&v, &dst) in results.iter().zip(&self.scatter) {
+            acc[dst] += v as i64;
+        }
+    }
+
+    /// [`Packer::scatter_add`] twin for `i64` result buffers.
+    #[inline]
+    pub fn scatter_add_i64(&self, results: &[i64], acc: &mut [i64]) {
+        for (&v, &dst) in results.iter().zip(&self.scatter) {
+            acc[dst] += v;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -347,6 +512,61 @@ mod tests {
                         for (g, e) in p.extract(prod).iter().zip(&exp) {
                             let err = g - e;
                             assert!(err == 0 || err == -1, "err = {err}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// The i64 codec twins and the fused extract→scatter agree with the
+    /// i128 family bit for bit on a narrow-feasible configuration,
+    /// exhaustively over all INT4 operands and both extraction modes.
+    #[test]
+    fn prop_i64_twins_and_fused_scatter_match() {
+        let p = Packer::new(PackingConfig::int4());
+        assert!(p.config().narrow_word_feasible());
+        let n = p.config().num_results();
+        let n_a = p.config().a.len();
+        let n_w = p.config().w.len();
+        let mut wide = vec![0i128; n];
+        let mut narrow = vec![0i64; n];
+        for a0 in 0i128..16 {
+            for a1 in 0i128..16 {
+                for w0 in -8i128..8 {
+                    for w1 in -8i128..8 {
+                        let (a, w) = ([a0, a1], [w0, w1]);
+                        let a64 = [a0 as i64, a1 as i64];
+                        let w64 = [w0 as i64, w1 as i64];
+                        let b = p.pack_a_unchecked(&a);
+                        let wv = p.pack_w_value_unchecked(&w);
+                        assert_eq!(p.pack_a_unchecked_i64(&a64), b as i64);
+                        assert_eq!(p.pack_w_value_unchecked_i64(&w64), wv as i64);
+                        let prod = b * wv;
+                        for (extra, rhu) in [(0u32, false), (3, false), (0, true), (3, true)] {
+                            if rhu {
+                                p.extract_round_half_up_wide_into(prod, extra, &mut wide);
+                                p.extract_round_half_up_wide_into_i64(
+                                    prod as i64,
+                                    extra,
+                                    &mut narrow,
+                                );
+                            } else {
+                                p.extract_wide_into(prod, extra, &mut wide);
+                                p.extract_wide_into_i64(prod as i64, extra, &mut narrow);
+                            }
+                            for (x, y) in wide.iter().zip(&narrow) {
+                                assert_eq!(*x as i64, *y, "a={a:?} w={w:?} extra={extra}");
+                            }
+                            // Fused scatter == extract-then-scatter.
+                            let mut acc_fused = vec![0i64; n_a * n_w];
+                            let mut acc_split = vec![0i64; n_a * n_w];
+                            p.extract_scatter_into(prod, extra, rhu, &mut acc_fused);
+                            p.scatter_add(&wide, &mut acc_split);
+                            assert_eq!(acc_fused, acc_split);
+                            let mut acc_n = vec![0i64; n_a * n_w];
+                            p.extract_scatter_into_i64(prod as i64, extra, rhu, &mut acc_n);
+                            assert_eq!(acc_n, acc_fused);
                         }
                     }
                 }

@@ -327,6 +327,47 @@ impl PackingConfig {
     pub fn expected(&self, a: &[i128], w: &[i128]) -> Vec<i128> {
         self.results.iter().map(|r| a[r.a_idx] * w[r.w_idx]).collect()
     }
+
+    /// The **narrowness predicate** of the i64 execution datapath: can
+    /// every word this configuration ever routes through the GEMM hot
+    /// loops — packed operand words, the P word after `2^δ` cascade
+    /// accumulations, correction words, and every (δ-widened) extraction
+    /// window — be carried in an `i64` with headroom?
+    ///
+    /// Any DSP-feasible packing passes trivially: the physical P word is
+    /// 48 bits and δ is single-digit, so worst-case magnitudes sit far
+    /// below 2⁶⁰. The predicate only fails for pathological *generated*
+    /// configurations (fields placed high in the 120-bit codec words),
+    /// which keep the generic `i128` backend. The engine additionally
+    /// requires strict (DSP-routed) mode — see
+    /// [`super::PackedMultiplier::narrow_feasible`].
+    ///
+    /// The bound is conservative (bit-width arithmetic, not exact
+    /// magnitudes): a `false` merely costs the `i128` fallback, while
+    /// `true` must guarantee bit-identical arithmetic.
+    pub fn narrow_word_feasible(&self) -> bool {
+        // Extraction windows widen by δ when draining accumulated
+        // results (§III); every shift the codec performs must stay
+        // inside an i64, with a sign bit to spare.
+        let extra = self.delta.max(0) as u32;
+        if self.results.iter().any(|r| r.offset + r.width + extra > 60) {
+            return false;
+        }
+        if self.a.iter().chain(&self.w).any(|o| o.offset + o.width > 60) {
+            return false;
+        }
+        // Worst-case |P|: |packed a| · |packed w| · 2^δ accumulations,
+        // plus a correction word bounded by 2^p_bits_used (covered by the
+        // window check above). Bounded in bit widths to avoid computing
+        // (and overflowing) the actual product.
+        let a_max: i128 = self.a.iter().map(|o| o.range().1 << o.offset).sum();
+        let w_lo: i128 = self.w.iter().map(|o| o.range().0 << o.offset).sum();
+        let w_hi: i128 = self.w.iter().map(|o| o.range().1 << o.offset).sum();
+        let w_mag = w_hi.abs().max(w_lo.abs());
+        let a_bits = crate::bits::signed_width(a_max);
+        let w_bits = crate::bits::signed_width(w_mag);
+        a_bits + w_bits + extra <= 60
+    }
 }
 
 #[cfg(test)]
@@ -435,6 +476,28 @@ mod tests {
         assert_eq!(PackingConfig::int4().max_accumulations(), 8);
         assert_eq!(PackingConfig::intn_fig9().max_accumulations(), 1);
         assert_eq!(PackingConfig::overpack_fig9().max_accumulations(), 1);
+    }
+
+    #[test]
+    fn narrowness_predicate() {
+        // Every preset — DSP-feasible or paper-logical — sits far below
+        // the 60-bit bound.
+        for cfg in [
+            PackingConfig::int4(),
+            PackingConfig::int8(),
+            PackingConfig::intn_fig9(),
+            PackingConfig::overpack_fig9(),
+            PackingConfig::overpack_int4(-2).unwrap(),
+            PackingConfig::overpack6_int4(),
+            PackingConfig::precision6(),
+        ] {
+            assert!(cfg.narrow_word_feasible(), "{} should be narrow-feasible", cfg.name);
+        }
+        // A generated config whose widened result windows pass bit 60
+        // must keep the wide backend (spacing 28 puts the top window at
+        // 84 + 16 + 12 = 112 bits — constructible, but not narrow).
+        let huge = PackingConfig::generate("huge", 2, 8, 2, 8, 12).unwrap();
+        assert!(!huge.narrow_word_feasible());
     }
 
     #[test]

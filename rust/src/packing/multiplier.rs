@@ -142,6 +142,42 @@ impl PackedMultiplier {
         self.finish_into(p, a, w, out);
     }
 
+    /// The P word for a **pre-encoded** multiplier-side operand word: the
+    /// packed-`a` word `b_word` times the stored `w_word`
+    /// (`Σ_j w_j 2^{woff_j}`), plus the pre-computed C-port word — routed
+    /// through the bit-accurate DSP datapath in strict mode, computed
+    /// exactly in logical mode.
+    #[inline]
+    pub fn p_word_prepacked(&self, b_word: i128, w_word: i128, c: i128) -> i128 {
+        if self.strict {
+            self.dsp.eval(&DspInputs { a: w_word, b: b_word, c, d: 0, pcin: 0, carry_in: 0 })
+        } else {
+            b_word * w_word + c
+        }
+    }
+
+    /// [`PackedMultiplier::p_word_prepacked`] twin on `i64` words — the
+    /// narrow execution datapath. In strict mode this replicates
+    /// [`crate::dsp48::Dsp48E2::eval`] for the prepacked input shape
+    /// (`a = w_word`, `d = 0`, mult-add opmode, the only mode engine
+    /// multipliers use): port truncation of A/B/C, the 27-bit pre-adder
+    /// wrap, and the final P wrap — so it is bit-identical to the wide
+    /// path whenever [`PackedMultiplier::narrow_feasible`] holds (every
+    /// wrap width is ≤ 60 and no intermediate overflows an `i64`).
+    #[inline]
+    pub fn p_word_prepacked_i64(&self, b_word: i64, w_word: i64, c: i64) -> i64 {
+        use crate::bits::wrap_signed_i64;
+        if self.strict {
+            let g = &self.dsp.geometry;
+            let ad = wrap_signed_i64(wrap_signed_i64(w_word, g.a_width), g.ad_width());
+            let b = wrap_signed_i64(b_word, g.b_width);
+            let c = wrap_signed_i64(c, g.p_width);
+            wrap_signed_i64(b * ad + c, g.p_width)
+        } else {
+            b_word * w_word + c
+        }
+    }
+
     /// Packed multiply against a **pre-encoded** `w`-side operand word
     /// (a plane entry of [`crate::gemm::PackedWeights`]): packs only the
     /// `a` side, feeds the stored multiplier-side word and pre-computed
@@ -162,12 +198,39 @@ impl PackedMultiplier {
         out: &mut [i128],
     ) {
         let b = self.packer.pack_a_unchecked(a);
-        let p = if self.strict {
-            self.dsp.eval(&DspInputs { a: w_word, b, c, d: 0, pcin: 0, carry_in: 0 })
-        } else {
-            b * w_word + c
-        };
+        let p = self.p_word_prepacked(b, w_word, c);
         self.finish_into(p, a, w_raw, out);
+    }
+
+    /// [`PackedMultiplier::finish_into`] twin on `i64` buffers (narrow
+    /// per-product path): extraction plus post-extraction correction.
+    #[inline]
+    pub fn finish_into_i64(&self, p: i64, a: &[i64], w: &[i64], out: &mut [i64]) {
+        match self.correction {
+            Correction::FullRoundHalfUp => {
+                self.packer.extract_round_half_up_wide_into_i64(p, 0, out)
+            }
+            _ => self.packer.extract_wide_into_i64(p, 0, out),
+        }
+        self.correction.post_extract_in_place_i64(self.config(), out, a, w);
+    }
+
+    /// Is this multiplier running the bit-accurate DSP datapath (strict
+    /// mode) rather than the architecture-independent logical mode?
+    pub fn is_strict(&self) -> bool {
+        self.strict
+    }
+
+    /// Can this multiplier run on the **narrow (i64) execution
+    /// datapath**? Requires strict mode (the logical mode's exact wide
+    /// products are the generic fallback's job), a configuration that
+    /// satisfies [`PackingConfig::narrow_word_feasible`], and a geometry
+    /// whose P/M words leave i64 headroom (every real DSP family does).
+    pub fn narrow_feasible(&self) -> bool {
+        self.strict
+            && self.config().narrow_word_feasible()
+            && self.dsp.geometry.p_width <= 60
+            && self.dsp.geometry.m_width() <= 60
     }
 
     /// Accumulate `pairs.len()` packed products on a simulated DSP cascade
@@ -288,6 +351,75 @@ mod tests {
                 assert_eq!(direct, pre, "{} a={a:?} w={w:?}", mul.config().name);
             }
         }
+    }
+
+    /// The i64 prepacked path (narrow datapath building block) matches
+    /// the i128 prepacked path bit for bit across every correction
+    /// scheme that can run strict + narrow.
+    #[test]
+    fn prepacked_i64_matches_i128() {
+        let muls = [
+            PackedMultiplier::new(PackingConfig::int4(), Correction::None).unwrap(),
+            PackedMultiplier::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+            PackedMultiplier::new(PackingConfig::int4(), Correction::ApproxCPort).unwrap(),
+            PackedMultiplier::new(PackingConfig::int4(), Correction::ApproxPostSign).unwrap(),
+            PackedMultiplier::new(
+                PackingConfig::overpack_int4(-2).unwrap(),
+                Correction::MrRestore,
+            )
+            .unwrap(),
+            PackedMultiplier::new(
+                PackingConfig::overpack_int4(-1).unwrap(),
+                Correction::MrRestorePlusCPort,
+            )
+            .unwrap(),
+        ];
+        let mut rng = Rng::new(0x6411);
+        for mul in &muls {
+            assert!(mul.narrow_feasible(), "{}", mul.config().name);
+            let n = mul.config().num_results();
+            let mut wide = vec![0i128; n];
+            let mut narrow = vec![0i64; n];
+            for _ in 0..500 {
+                let a: Vec<i128> = mul
+                    .config()
+                    .a
+                    .iter()
+                    .map(|s| rng.range_i128(s.range().0, s.range().1))
+                    .collect();
+                let w: Vec<i128> = mul
+                    .config()
+                    .w
+                    .iter()
+                    .map(|s| rng.range_i128(s.range().0, s.range().1))
+                    .collect();
+                let word = mul.packer().pack_w_value_unchecked(&w);
+                let c = mul.correction().c_word(mul.config(), &a, &w);
+                mul.multiply_prepacked_into(&a, &w, word, c, &mut wide);
+
+                let a64: Vec<i64> = a.iter().map(|&v| v as i64).collect();
+                let w64: Vec<i64> = w.iter().map(|&v| v as i64).collect();
+                let b64 = mul.packer().pack_a_unchecked_i64(&a64);
+                let p64 = mul.p_word_prepacked_i64(b64, word as i64, c as i64);
+                mul.finish_into_i64(p64, &a64, &w64, &mut narrow);
+                for (x, y) in wide.iter().zip(&narrow) {
+                    assert_eq!(*x as i64, *y, "{} a={a:?} w={w:?}", mul.config().name);
+                }
+            }
+        }
+    }
+
+    /// Narrow feasibility: strict engines on real configs qualify,
+    /// logical mode never does.
+    #[test]
+    fn narrow_feasibility_modes() {
+        let strict =
+            PackedMultiplier::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        assert!(strict.is_strict() && strict.narrow_feasible());
+        let logical =
+            PackedMultiplier::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
+                .unwrap();
+        assert!(!logical.is_strict() && !logical.narrow_feasible());
     }
 
     #[test]

@@ -1,7 +1,7 @@
-//! Zero-dependency utilities: deterministic RNG, a scoped thread pool, and
-//! a small JSON writer. The build environment is offline, so the usual
-//! crates (rand, rayon, serde_json) are replaced by these focused
-//! implementations.
+//! Zero-dependency utilities: deterministic RNG, a persistent worker
+//! pool, and a small JSON writer. The build environment is offline, so
+//! the usual crates (rand, rayon, serde_json) are replaced by these
+//! focused implementations.
 
 mod json;
 mod rng;
@@ -9,4 +9,7 @@ mod threads;
 
 pub use json::Json;
 pub use rng::Rng;
-pub use threads::{parallel_jobs, parallel_map, parallel_reduce};
+pub use threads::{
+    parallel_jobs, parallel_map, parallel_map_cost, parallel_map_with, parallel_reduce,
+    workers, PARALLEL_COST_THRESHOLD,
+};

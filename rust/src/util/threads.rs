@@ -1,39 +1,276 @@
-//! Scoped data-parallel helpers over `std::thread` (rayon replacement for
-//! the exhaustive analysis sweeps).
+//! Data-parallel helpers over a **persistent worker pool** (rayon
+//! replacement for the analysis sweeps and the GEMM execution engine).
+//!
+//! Earlier revisions spawned fresh `std::thread::scope` threads on every
+//! call, which a serving deployment pays on *every request*: a batch-1
+//! GEMM on a small layer spends more time in `clone(2)` than in the
+//! packed arithmetic. The pool here is spawned once (lazily, sized by
+//! [`workers`]) and lives for the process; a [`parallel_map`] call
+//! submits one chunk job per worker, runs the first chunk on the calling
+//! thread, and blocks until its own jobs drained — so back-to-back
+//! batch-1 requests pay a queue push + condvar wake instead of a thread
+//! spawn.
+//!
+//! Two more serving-oriented controls:
+//!
+//! * **Cost threshold** — [`parallel_map_cost`] / [`parallel_map_with`]
+//!   take the caller's estimate of total work and run inline below
+//!   [`PARALLEL_COST_THRESHOLD`], so tiny GEMM tiles stop losing their
+//!   parallel win to dispatch overhead.
+//! * **Per-worker scratch** — [`parallel_map_with`] threads a
+//!   caller-built scratch value through every item a worker processes,
+//!   replacing per-item allocations in the hot loops.
+//!
+//! Nested calls (a mapped closure calling back into `parallel_map`) run
+//! inline on the worker: the outer call already saturates the pool, and
+//! inlining makes pool-starvation deadlocks impossible by construction.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
 
 /// Number of worker threads to use.
 pub fn workers() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
-/// Map `f` over `items` in parallel, preserving order. Chunked statically:
-/// the sweeps this serves are uniform-cost, so static chunking is optimal
-/// (no work-stealing overhead).
+/// Total estimated cost (in roughly per-element operation units) below
+/// which a cost-aware parallel map runs inline on the calling thread.
+/// Calibrated against the pool dispatch cost (a queue push, a condvar
+/// wake and a latch wait — single-digit microseconds): work much smaller
+/// than ~10⁴ element-ops finishes faster sequentially.
+pub const PARALLEL_COST_THRESHOLD: u64 = 16_384;
+
+/// Lock a mutex, ignoring poisoning: the pool must keep serving after a
+/// mapped closure panicked (the panic is re-raised at the submitting
+/// call site, not swallowed).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct PoolInner {
+    queue: Mutex<VecDeque<Task>>,
+    available: Condvar,
+}
+
+thread_local! {
+    /// Set for the lifetime of every pool worker thread: submissions from
+    /// inside a worker run inline instead of re-entering the pool.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+fn worker_loop(inner: &PoolInner) {
+    IN_POOL_WORKER.with(|f| f.set(true));
+    loop {
+        let task = {
+            let mut q = lock(&inner.queue);
+            loop {
+                if let Some(t) = q.pop_front() {
+                    break t;
+                }
+                q = inner.available.wait(q).unwrap_or_else(std::sync::PoisonError::into_inner);
+            }
+        };
+        // Jobs catch their own panics (the payload travels back through
+        // the latch and is re-raised at the submitting call); this outer
+        // catch is a backstop so no conceivable panic kills the worker.
+        let _ = catch_unwind(AssertUnwindSafe(task));
+    }
+}
+
+/// The process-wide pool, spawned on first use.
+fn pool() -> &'static Arc<PoolInner> {
+    static POOL: OnceLock<Arc<PoolInner>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let inner = Arc::new(PoolInner {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+        });
+        for i in 0..workers() {
+            let inner = Arc::clone(&inner);
+            std::thread::Builder::new()
+                .name(format!("dsp-pool-{i}"))
+                .spawn(move || worker_loop(&inner))
+                .expect("spawn pool worker");
+        }
+        inner
+    })
+}
+
+fn submit(task: Task) {
+    let inner = pool();
+    lock(&inner.queue).push_back(task);
+    inner.available.notify_one();
+}
+
+/// Completion latch for one `parallel_map` call: counts outstanding jobs
+/// and holds the first panic payload so the submitting call re-raises
+/// the *original* panic (message and all), as `thread::scope` did.
+struct Latch {
+    /// (jobs still running, first captured panic payload)
+    state: Mutex<(usize, Option<Box<dyn std::any::Any + Send>>)>,
+    done: Condvar,
+}
+
+impl Latch {
+    fn new(jobs: usize) -> Arc<Latch> {
+        Arc::new(Latch { state: Mutex::new((jobs, None)), done: Condvar::new() })
+    }
+
+    /// One job finished — with the panic payload it caught, if any. Every
+    /// submitted job calls this exactly once (its body runs inside
+    /// `catch_unwind`, so nothing unwinds past the call).
+    fn complete(&self, panic: Option<Box<dyn std::any::Any + Send>>) {
+        let mut s = lock(&self.state);
+        s.0 -= 1;
+        if s.1.is_none() {
+            s.1 = panic;
+        }
+        if s.0 == 0 {
+            self.done.notify_all();
+        }
+    }
+
+    /// Block until every job completed (panicked or not).
+    fn wait_only(&self) {
+        let mut s = lock(&self.state);
+        while s.0 > 0 {
+            s = self.done.wait(s).unwrap_or_else(std::sync::PoisonError::into_inner);
+        }
+    }
+
+    /// Block until every job finished, then re-raise the first captured
+    /// panic at the submitting call site.
+    fn wait_and_check(&self) {
+        self.wait_only();
+        if let Some(payload) = lock(&self.state).1.take() {
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// Blocks until the latch drains even if the guarded scope unwinds — the
+/// soundness anchor for the lifetime erasure in `parallel_map_with`: the
+/// borrows handed to pool jobs cannot outlive the call, panics included.
+struct WaitOnDrop<'l>(&'l Latch);
+
+impl Drop for WaitOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.wait_only();
+    }
+}
+
+/// Erase the borrow lifetime of a ready-to-run job so it can ride the
+/// persistent (necessarily `'static`) pool queue.
+///
+/// # Safety
+/// The caller must not return — nor touch the data the job borrows —
+/// until the job has finished. `parallel_map_with` enforces this with a
+/// completion latch: every job's body runs inside `catch_unwind` and
+/// always reports completion (carrying any panic payload), so the wait
+/// cannot be skipped.
+unsafe fn erase_lifetime<'a>(job: Box<dyn FnOnce() + Send + 'a>) -> Task {
+    std::mem::transmute::<Box<dyn FnOnce() + Send + 'a>, Box<dyn FnOnce() + Send + 'static>>(job)
+}
+
+/// Map `f` over `items` in parallel on the persistent pool, preserving
+/// order, with a per-worker scratch value built by `init` (hot loops use
+/// it to hoist per-item allocations) and an inline fallback when
+/// `total_cost` (estimated element-ops) is below
+/// [`PARALLEL_COST_THRESHOLD`].
+///
+/// Chunked statically: the callers are uniform-cost, so static chunking
+/// is optimal (no work-stealing overhead). The calling thread processes
+/// the first chunk itself, which both saves one dispatch and guarantees
+/// progress regardless of pool load.
+pub fn parallel_map_with<T, R, S, I, F>(items: &[T], total_cost: u64, init: I, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
+    let inline = items.len() < 2
+        || workers() <= 1
+        || total_cost < PARALLEL_COST_THRESHOLD
+        || IN_POOL_WORKER.with(std::cell::Cell::get);
+    if inline {
+        let mut scratch = init();
+        return items.iter().map(|item| f(&mut scratch, item)).collect();
+    }
+
+    let n_workers = workers().min(items.len());
+    let chunk = items.len().div_ceil(n_workers);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+
+    let pairs: Vec<(&[T], &mut [Option<R>])> =
+        items.chunks(chunk).zip(out.chunks_mut(chunk)).collect();
+    let latch = Latch::new(pairs.len().saturating_sub(1));
+    {
+        // Waits for all submitted jobs even if the local chunk below
+        // panics — see `erase_lifetime`'s safety contract.
+        let _waiter = WaitOnDrop(&latch);
+        let mut local: Option<(&[T], &mut [Option<R>])> = None;
+        for (idx, (slice_in, slice_out)) in pairs.into_iter().enumerate() {
+            if idx == 0 {
+                local = Some((slice_in, slice_out));
+                continue;
+            }
+            let latch = Arc::clone(&latch);
+            let f = &f;
+            let init = &init;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    let mut scratch = init();
+                    for (slot, item) in slice_out.iter_mut().zip(slice_in) {
+                        *slot = Some(f(&mut scratch, item));
+                    }
+                }));
+                latch.complete(result.err());
+            });
+            // SAFETY: `_waiter` + `wait_and_check` below block until every
+            // submitted job reported completion, so the borrows of
+            // `items`/`out`/`f`/`init` cannot outlive this call.
+            submit(unsafe { erase_lifetime(job) });
+        }
+        if let Some((slice_in, slice_out)) = local {
+            let mut scratch = init();
+            for (slot, item) in slice_out.iter_mut().zip(slice_in) {
+                *slot = Some(f(&mut scratch, item));
+            }
+        }
+    }
+    latch.wait_and_check();
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
+/// [`parallel_map_with`] without scratch: parallel map with an inline
+/// fallback for small workloads. `total_cost` is the caller's estimate of
+/// the whole call's work in per-element operation units (for a GEMM:
+/// tiles × reduction steps × results per tile).
+pub fn parallel_map_cost<T, R, F>(items: &[T], total_cost: u64, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    parallel_map_with(items, total_cost, || (), move |_, item| f(item))
+}
+
+/// Map `f` over `items` in parallel, preserving order. Always dispatches
+/// to the pool when `items` has ≥ 2 elements — the uniform-cost sweeps
+/// this serves are far above any sensible threshold; cost-sensitive
+/// callers use [`parallel_map_cost`].
 pub fn parallel_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(&T) -> R + Sync,
 {
-    let n_workers = workers().min(items.len().max(1));
-    if n_workers <= 1 || items.len() < 2 {
-        return items.iter().map(&f).collect();
-    }
-    let chunk = items.len().div_ceil(n_workers);
-    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
-    out.resize_with(items.len(), || None);
-    let out_chunks: Vec<&mut [Option<R>]> = out.chunks_mut(chunk).collect();
-    std::thread::scope(|s| {
-        for (slice_in, slice_out) in items.chunks(chunk).zip(out_chunks) {
-            let f = &f;
-            s.spawn(move || {
-                for (i, item) in slice_in.iter().enumerate() {
-                    slice_out[i] = Some(f(item));
-                }
-            });
-        }
-    });
-    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+    parallel_map_cost(items, u64::MAX, f)
 }
 
 /// Parallel map-reduce: map `f` over `items`, fold results with `merge`
@@ -78,6 +315,82 @@ mod tests {
         assert_eq!(parallel_map(&[5u64], |&x| x + 1), vec![6]);
         let empty: Vec<u64> = vec![];
         assert!(parallel_map(&empty, |&x: &u64| x).is_empty());
+    }
+
+    #[test]
+    fn pool_survives_repeated_calls() {
+        for round in 0u64..20 {
+            let items: Vec<u64> = (0..257).collect();
+            let out = parallel_map(&items, |&x| x + round);
+            assert_eq!(out[256], 256 + round);
+        }
+    }
+
+    #[test]
+    fn below_cost_threshold_runs_on_calling_thread() {
+        let items: Vec<u64> = (0..100).collect();
+        let me = std::thread::current().id();
+        let ids = parallel_map_cost(&items, PARALLEL_COST_THRESHOLD - 1, |_| {
+            std::thread::current().id()
+        });
+        assert!(ids.iter().all(|&id| id == me), "tiny workloads must stay inline");
+    }
+
+    #[test]
+    fn scratch_is_reused_within_a_worker() {
+        let items: Vec<u64> = (0..64).collect();
+        // Scratch counts the items each worker processed; every item must
+        // see a scratch that was inited exactly once per worker (the
+        // counter only grows within a chunk).
+        let out = parallel_map_with(
+            &items,
+            u64::MAX,
+            || 0u64,
+            |count, &x| {
+                *count += 1;
+                (*count, x)
+            },
+        );
+        let total: u64 = out
+            .iter()
+            .zip(out.iter().skip(1))
+            .map(|(&(c0, _), &(c1, _))| u64::from(c1 <= c0))
+            .sum();
+        // Counters reset at chunk boundaries only: strictly fewer resets
+        // than items (with one worker chunk there are zero).
+        assert!(total < items.len() as u64);
+        assert_eq!(out.len(), items.len());
+        for (i, &(_, x)) in out.iter().enumerate() {
+            assert_eq!(x, i as u64, "order preserved");
+        }
+    }
+
+    #[test]
+    fn nested_parallel_map_runs_inline() {
+        let items: Vec<u64> = (0..64).collect();
+        let out = parallel_map(&items, |&x| {
+            let inner: Vec<u64> = (0..8).collect();
+            parallel_map(&inner, |&y| y + x).into_iter().sum::<u64>()
+        });
+        for (i, v) in out.iter().enumerate() {
+            let expect: u64 = (0..8).map(|y| y + i as u64).sum();
+            assert_eq!(*v, expect);
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let items: Vec<u64> = (0..100).collect();
+        let r = std::panic::catch_unwind(|| {
+            parallel_map(&items, |&x| {
+                assert!(x != 57, "injected failure");
+                x
+            })
+        });
+        assert!(r.is_err(), "a panicking mapped closure must fail the call");
+        // The pool keeps working after a panic.
+        let out = parallel_map(&items, |&x| x + 1);
+        assert_eq!(out[99], 100);
     }
 
     #[test]

@@ -14,9 +14,24 @@
 
 use dsp_packing::analysis::ErrorStats;
 use dsp_packing::correct::Correction;
-use dsp_packing::gemm::{GemmEngine, MatI32};
+use dsp_packing::gemm::{GemmEngine, MatI32, WordBackend};
 use dsp_packing::packing::{PackedMultiplier, Packer, PackingConfig};
 use dsp_packing::util::Rng;
+
+/// The preset configurations the differential suites sweep.
+fn presets() -> Vec<(&'static str, PackingConfig)> {
+    vec![
+        ("int4", PackingConfig::int4()),
+        ("int8", PackingConfig::int8()),
+        ("intn_fig9", PackingConfig::intn_fig9()),
+        ("overpack_fig9", PackingConfig::overpack_fig9()),
+        ("overpack_d1", PackingConfig::overpack_int4(-1).unwrap()),
+        ("overpack_d2", PackingConfig::overpack_int4(-2).unwrap()),
+        ("overpack_d3", PackingConfig::overpack_int4(-3).unwrap()),
+        ("overpack6", PackingConfig::overpack6_int4()),
+        ("precision6", PackingConfig::precision6()),
+    ]
+}
 
 /// §V pinned exhaustively: over all 16·16·16·16 INT4 operand pairs, the
 /// full round-half-up correction reproduces the exact scalar outer
@@ -142,17 +157,7 @@ fn prop_plan_decode_roundtrip() {
 /// equal the exact i32 reference.
 #[test]
 fn prop_plan_execute_matmul_differential() {
-    let presets: Vec<(&str, PackingConfig)> = vec![
-        ("int4", PackingConfig::int4()),
-        ("int8", PackingConfig::int8()),
-        ("intn_fig9", PackingConfig::intn_fig9()),
-        ("overpack_fig9", PackingConfig::overpack_fig9()),
-        ("overpack_d1", PackingConfig::overpack_int4(-1).unwrap()),
-        ("overpack_d2", PackingConfig::overpack_int4(-2).unwrap()),
-        ("overpack_d3", PackingConfig::overpack_int4(-3).unwrap()),
-        ("overpack6", PackingConfig::overpack6_int4()),
-        ("precision6", PackingConfig::precision6()),
-    ];
+    let presets = presets();
     // The schemes with an exactness guarantee to enforce: full correction
     // on δ ≥ 0 (§V-A), and the C-port correction on the two Xilinx
     // configurations (measured exhaustive, see EXPERIMENTS notes).
@@ -199,4 +204,115 @@ fn prop_plan_execute_matmul_differential() {
     // 9 presets × 6 schemes minus the invalid combinations; make sure the
     // loop actually exercised a healthy cross-section.
     assert!(combos >= 30, "only {combos} engine combinations constructed");
+}
+
+/// **Narrow/wide backend differential** (the i64 datapath acceptance):
+/// for every preset configuration × correction scheme that runs strict,
+/// the auto-selected engine and the forced-wide engine must agree **bit
+/// for bit** — outputs AND `DspOpStats` — over randomized shapes, both
+/// through `matmul` and through cross-built plans. Narrow plans must be
+/// rejected by wide engines and vice versa.
+#[test]
+fn prop_narrow_wide_backend_differential() {
+    let mut rng = Rng::new(0x64128);
+    let mut narrow_combos = 0;
+    for (name, cfg) in presets() {
+        for corr in Correction::ALL {
+            let Ok(auto) = GemmEngine::new(cfg.clone(), corr) else {
+                continue; // logical-only or invalid combination
+            };
+            if auto.word_backend() != WordBackend::Narrow64 {
+                continue; // nothing to differentiate
+            }
+            narrow_combos += 1;
+            let wide = GemmEngine::new_wide(cfg.clone(), corr).unwrap();
+            assert_eq!(wide.word_backend(), WordBackend::Wide128);
+            let (a_lo, a_hi) = auto.config().a[0].range();
+            let (w_lo, w_hi) = auto.config().w[0].range();
+            for _ in 0..4 {
+                let m = 1 + rng.below(9) as usize;
+                let k = 1 + rng.below(33) as usize;
+                let n = 1 + rng.below(9) as usize;
+                let a = MatI32::random_range(m, k, a_lo as i32, a_hi as i32, &mut rng);
+                let w = MatI32::random_range(k, n, w_lo as i32, w_hi as i32, &mut rng);
+
+                let plan_n = auto.plan(&w).unwrap();
+                let plan_w = wide.plan(&w).unwrap();
+                assert_eq!(plan_n.word_backend(), WordBackend::Narrow64);
+                assert_eq!(plan_w.word_backend(), WordBackend::Wide128);
+                // Planes carry identical weight information either way.
+                assert_eq!(plan_n.decode(), plan_w.decode(), "{name}+{corr:?}");
+
+                let (cn, sn) = auto.execute(&plan_n, &a).unwrap();
+                let (cw, sw) = wide.execute(&plan_w, &a).unwrap();
+                assert_eq!(cn, cw, "{name}+{corr:?} {m}x{k}x{n} outputs");
+                assert_eq!(sn, sw, "{name}+{corr:?} {m}x{k}x{n} DspOpStats");
+
+                let (mn, smn) = auto.matmul(&a, &w).unwrap();
+                let (mw, smw) = wide.matmul(&a, &w).unwrap();
+                assert_eq!(mn, cn, "{name}+{corr:?} narrow matmul == execute");
+                assert_eq!(mw, cw, "{name}+{corr:?} wide matmul == execute");
+                assert_eq!(smn, smw);
+
+                // Plans are pinned to their backend.
+                assert!(wide.execute(&plan_n, &a).is_err(), "narrow plan on wide engine");
+                assert!(auto.execute(&plan_w, &a).is_err(), "wide plan on narrow engine");
+            }
+        }
+    }
+    // int4/int8 (4 non-MR schemes each) + the three overpack presets and
+    // precision6 (6 schemes each): every strict preset must have gone
+    // narrow.
+    assert_eq!(narrow_combos, 32, "narrow coverage regressed");
+}
+
+/// **Exhaustive INT4 through the narrow engine**: drive every one of the
+/// 16·16·16·16 INT4 operand combinations through the i64 datapath as
+/// 2×1×2 GEMMs and re-derive the paper's error figures — the uncorrected
+/// engine must reproduce the Table I/II row-1 statistics exactly, and
+/// the round-half-up engine must be exact everywhere. This pins the §V
+/// error structure to the *execution* path (drain-widened extraction
+/// windows included), not just the scalar multiplier.
+#[test]
+fn int4_exhaustive_narrow_engine_matches_tables() {
+    let raw = GemmEngine::new(PackingConfig::int4(), Correction::None).unwrap();
+    let rhu = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    assert_eq!(raw.word_backend(), WordBackend::Narrow64);
+    assert_eq!(rhu.word_backend(), WordBackend::Narrow64);
+    // Result order by offset is a0w0, a1w0, a0w1, a1w1 → output cells
+    // C[0][0], C[1][0], C[0][1], C[1][1].
+    let cells = [(0usize, 0usize), (1, 0), (0, 1), (1, 1)];
+    let mut stats = vec![ErrorStats::default(); 4];
+    for w0 in -8i32..8 {
+        for w1 in -8i32..8 {
+            let w = MatI32::from_vec(1, 2, vec![w0, w1]).unwrap();
+            let plan_raw = raw.plan(&w).unwrap();
+            let plan_rhu = rhu.plan(&w).unwrap();
+            for a0 in 0i32..16 {
+                for a1 in 0i32..16 {
+                    let a = MatI32::from_vec(2, 1, vec![a0, a1]).unwrap();
+                    let (got_raw, _) = raw.execute(&plan_raw, &a).unwrap();
+                    let (got_rhu, _) = rhu.execute(&plan_rhu, &a).unwrap();
+                    let exact = a.matmul_exact(&w).unwrap();
+                    assert_eq!(got_rhu, exact, "RHU exact at a=[{a0},{a1}] w=[{w0},{w1}]");
+                    for (s, &(i, j)) in stats.iter_mut().zip(&cells) {
+                        s.record(got_raw.get(i, j) as i128, exact.get(i, j) as i128);
+                    }
+                }
+            }
+        }
+    }
+    // Table II row 1 per-result figures, now measured through the narrow
+    // engine: EP 0 / 46.87 / 49.80 / 52.73 %, WCE ≤ 1, floor bias.
+    let paper_ep = [0.0, 46.875, 49.805, 52.734];
+    for (i, (s, ep)) in stats.iter().zip(paper_ep).enumerate() {
+        assert_eq!(s.n, 65536);
+        assert!((s.ep_percent() - ep).abs() < 0.01, "r{i}: EP {}", s.ep_percent());
+        assert!(s.wce <= 1, "r{i}: WCE {}", s.wce);
+        if i > 0 {
+            assert!(s.bias() < 0.0, "floor error biases toward -inf");
+        }
+    }
+    let mae_bar = stats.iter().map(ErrorStats::mae).sum::<f64>() / 4.0;
+    assert!((mae_bar - 0.37354).abs() < 0.0001, "MAE-bar {mae_bar}");
 }
