@@ -1,14 +1,21 @@
-//! End-to-end driver (experiment E9): serve quantized **CNN** inference
-//! through the full stack — a conv → max-pool → dense-head model lowered
-//! to the packed GEMM via im2col — and compare backends on the same
+//! End-to-end driver (experiment E9): serve quantized **deep CNN**
+//! inference through the full stack — a three-conv-stage model
+//! (conv→pool → conv → conv→pool → dense head, every matmul lowered to
+//! the packed GEMM via im2col) — and compare backends on the same
 //! workload:
 //!
-//! * **cnn:exact** — the quantized CNN on the exact i32 reference path.
+//! * **cnn:exact** — the deep CNN on the exact i32 reference path.
 //! * **cnn:packed:xilinx-int4** — the same CNN on the Rust virtual
 //!   accelerator: bit-accurate DSP48E2 slices running INT4 packing with
-//!   full correction (bit-identical logits to `cnn:exact`).
+//!   full correction (bit-identical logits to `cnn:exact`, asserted
+//!   before serving).
 //! * **cnn:packed:overpack6-int4** — MR-Overpacking, six multiplications
 //!   per DSP, small bounded approximation error.
+//! * **cnn:adaptive** — the precision router: each request carries an
+//!   error budget in an appended metadata channel; exact-budget requests
+//!   run the INT4-corrected fabric, tolerant ones the MR-Overpacking
+//!   fabric. One model replica per fabric keeps both plan sets resident,
+//!   under a shared plan-cache byte budget ([`dsp_packing::nn::PlanBudget`]).
 //! * **exact / packed:...** — the original MLP backends on the same
 //!   dataset, for cross-model comparison (requires `make artifacts` for
 //!   the JAX-trained weights; skipped otherwise).
@@ -24,11 +31,12 @@
 //! ```
 
 use dsp_packing::coordinator::{
-    Coordinator, InferenceBackend, PackedNnBackend, Request, ServerConfig,
+    AdaptiveBackend, BudgetChannelPolicy, Coordinator, InferenceBackend, PackedNnBackend,
+    Request, ServerConfig,
 };
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::GemmEngine;
-use dsp_packing::nn::{data, weights, ExecMode, QuantCnn};
+use dsp_packing::nn::{data, weights, ExecMode, NnModel, PlanBudget, QuantCnn, StageSpec};
 use dsp_packing::packing::PackingConfig;
 use dsp_packing::runtime::PjrtBackend;
 use std::sync::Arc;
@@ -80,29 +88,98 @@ fn serve(backend: Arc<dyn InferenceBackend>, ds: &data::Dataset) -> dsp_packing:
     Ok(())
 }
 
+fn with_budget(img: &[f32], budget: f32) -> Vec<f32> {
+    let mut v = img.to_vec();
+    v.push(budget);
+    v
+}
+
 fn main() -> dsp_packing::Result<()> {
     // The dataset both sides agree on (seed 7, bit-identical generators).
     let ds = data::synthetic(256, 4, 64, 0.15, 7);
 
-    println!("end-to-end inference, {REQUESTS} requests, 4 concurrent clients\n");
+    println!("end-to-end deep-CNN inference, {REQUESTS} requests, 4 concurrent clients\n");
 
-    // The quantized CNN: 3×3 conv (8 filters) → 2×2 max-pool → centroid
-    // head, filter bank planned once into resident weight planes. Built
-    // from the synthetic dataset — no artifacts required.
-    let cnn = QuantCnn::new(&ds, 8, 4, 4, 17)?;
+    // The deep quantized CNN: three 3×3 conv stages (8 → 12 → 16
+    // filters, pooling after the first and last) and a centroid head —
+    // every per-stage requant shift calibrated stage by stage, every
+    // filter bank planned once into resident weight planes.
+    let specs = [
+        StageSpec::conv3x3(8).with_pool(2, 2)?,
+        StageSpec::conv3x3(12),
+        StageSpec::conv3x3(16).with_pool(2, 2)?,
+    ];
+    let cnn = QuantCnn::deep(&ds, 1, &specs, 4, 4, 17)?;
+    println!("model: {} conv stages, head over {} features\n", cnn.depth(), cnn.head.weights.rows);
 
-    // 1. CNN on the exact i32 reference.
+    // 1. Deep CNN on the exact i32 reference.
     serve(Arc::new(PackedNnBackend::new(cnn.clone(), ExecMode::Exact)), &ds)?;
 
-    // 2. CNN on the virtual accelerator: INT4 packing + full correction.
+    // 2. Deep CNN on the virtual accelerator: INT4 packing + full
+    //    correction (bit-identical to exact — asserted below via the
+    //    adaptive backend's exact route).
     let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp)?;
     serve(Arc::new(PackedNnBackend::new(cnn.clone(), ExecMode::Packed(engine.clone()))), &ds)?;
 
-    // 3. CNN on MR-Overpacking (6 mults per DSP, approximate).
+    // 3. Deep CNN on MR-Overpacking (6 mults per DSP, approximate).
     let engine6 = GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)?;
-    serve(Arc::new(PackedNnBackend::new(cnn, ExecMode::Packed(engine6.clone()))), &ds)?;
+    serve(Arc::new(PackedNnBackend::new(cnn.clone(), ExecMode::Packed(engine6.clone()))), &ds)?;
 
-    // 4. The MLP comparison rows (JAX-trained weights, exported at
+    // 4. Adaptive precision routing: per-request error budgets (the
+    //    appended metadata channel) split traffic between the two
+    //    fabrics. A shared plan-cache budget accounts both replicas'
+    //    resident planes (generous here; shrink it to watch LRU eviction
+    //    kick in — serving stays bit-identical, just re-plans).
+    let adaptive = Arc::new(AdaptiveBackend::new(
+        cnn,
+        ExecMode::Packed(engine.clone()),
+        ExecMode::Packed(engine6.clone()),
+        BudgetChannelPolicy { threshold: 0.5 },
+        true,
+    ));
+    let plan_budget = PlanBudget::new(1 << 20);
+    adaptive.exact_model().attach_plan_budget(&plan_budget);
+    adaptive.dense_model().attach_plan_budget(&plan_budget);
+
+    // Acceptance: with exact-precision budgets, the adaptive backend's
+    // packed output is bit-identical to the exact reference — through
+    // all three conv stages and the head.
+    let exact_batch: Vec<Vec<f32>> = ds.images.iter().map(|i| with_budget(i, 0.0)).collect();
+    let (adaptive_preds, _) = adaptive.infer(&exact_batch)?;
+    let (exact_preds, _) =
+        adaptive.exact_model().classify_images(&ds.images, &ExecMode::Exact)?;
+    assert_eq!(
+        adaptive_preds, exact_preds,
+        "adaptive exact route must be bit-identical to the exact backend"
+    );
+    // Snapshot the routing counters so the served-stream split below
+    // excludes this assertion batch.
+    let (exact_before, dense_before) = (
+        adaptive.exact_routed.load(std::sync::atomic::Ordering::Relaxed),
+        adaptive.dense_routed.load(std::sync::atomic::Ordering::Relaxed),
+    );
+
+    // Serve a mixed stream: half the requests tolerate approximation.
+    let ds_adaptive = data::Dataset {
+        images: ds
+            .images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| with_budget(img, if i % 2 == 0 { 0.0 } else { 1.0 }))
+            .collect(),
+        ..ds.clone()
+    };
+    serve(adaptive.clone(), &ds_adaptive)?;
+    println!(
+        "    adaptive routing: {} exact / {} dense; plan cache {} B resident ({} plans, {} evictions)",
+        adaptive.exact_routed.load(std::sync::atomic::Ordering::Relaxed) - exact_before,
+        adaptive.dense_routed.load(std::sync::atomic::Ordering::Relaxed) - dense_before,
+        plan_budget.resident_bytes(),
+        plan_budget.resident_plans(),
+        plan_budget.evictions(),
+    );
+
+    // 5. The MLP comparison rows (JAX-trained weights, exported at
     //    `make artifacts` time); skipped gracefully when not built.
     match dsp_packing::runtime::PjrtRuntime::artifact_path("mlp_weights.txt") {
         Some(weights_path) => {
@@ -116,7 +193,7 @@ fn main() -> dsp_packing::Result<()> {
         None => println!("mlp backends                skipped: run `make artifacts` first"),
     }
 
-    // 5. PJRT: the AOT JAX artifacts (exact and packed-kernel variants).
+    // 6. PJRT: the AOT JAX artifacts (exact and packed-kernel variants).
     for name in ["mlp_exact.hlo.txt", "mlp_packed.hlo.txt"] {
         match PjrtBackend::load(name, 16, 64, 4) {
             Ok(b) => serve(Arc::new(b), &ds)?,
@@ -124,10 +201,12 @@ fn main() -> dsp_packing::Result<()> {
         }
     }
 
-    println!("\nreading: the packed CNN matches exact accuracy (full correction is");
-    println!("bit-exact through conv, pool and head) at 4x DSP utilization, with the");
-    println!("filter bank planned once and resident across all {REQUESTS} requests;");
-    println!("MR-Overpacking trades ~0 accuracy on this model for 6x. The MLP and");
-    println!("PJRT rows put the original dense stack on the same workload.");
+    println!("\nreading: the packed deep CNN matches exact accuracy (full correction");
+    println!("is bit-exact through every conv stage, pool and head) at 4x DSP");
+    println!("utilization, with all filter banks planned once and resident across");
+    println!("all {REQUESTS} requests; MR-Overpacking trades ~0 accuracy on this model");
+    println!("for 6x, and the adaptive router serves both fabrics per request");
+    println!("under one plan-cache byte budget. The MLP and PJRT rows put the");
+    println!("original dense stack on the same workload.");
     Ok(())
 }

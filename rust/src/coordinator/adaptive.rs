@@ -8,10 +8,17 @@
 //! need exactness run on the corrected INT4 fabric. On a real FPGA this
 //! corresponds to partial reconfiguration or multiplexed extraction
 //! logic; here the virtual fabric switches per batch.
+//!
+//! The backend is generic over the model it routes ([`NnModel`]): the
+//! original MLP fleet and the deep conv stacks of [`crate::nn::QuantCnn`]
+//! both serve through it — one model replica per fabric keeps both
+//! fabrics' weight planes resident, so routing a mixed batch never
+//! re-plans (a shared [`crate::nn::PlanBudget`] can cap the combined
+//! resident bytes across both replicas).
 
 use super::server::InferenceBackend;
 use crate::gemm::DspOpStats;
-use crate::nn::{ExecMode, QuantMlp};
+use crate::nn::{ExecMode, NnModel, QuantMlp};
 use crate::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -48,9 +55,20 @@ impl PrecisionPolicy for BudgetChannelPolicy {
 }
 
 /// A backend that dispatches between an exact and a dense (approximate)
-/// packed fabric per request.
-pub struct AdaptiveBackend<P: PrecisionPolicy> {
-    model: QuantMlp,
+/// packed fabric per request, generic over the model it serves (any
+/// [`NnModel`]: the MLP, the deep im2col-lowered CNN, ...).
+///
+/// The backend keeps **one model replica per fabric**: plan caches live
+/// inside the layers and hold a single plan each, so separate replicas
+/// keep both fabrics' weight planes resident simultaneously — routing a
+/// mixed batch never re-plans. Both replicas share the same quantized
+/// weights (the clone is taken at construction), so their non-GEMM
+/// arithmetic is bit-identical.
+pub struct AdaptiveBackend<P: PrecisionPolicy, M: NnModel = QuantMlp> {
+    /// Model replica serving the exact fabric (own resident plans).
+    exact_model: M,
+    /// Model replica serving the dense fabric (own resident plans).
+    dense_model: M,
     exact_mode: ExecMode,
     dense_mode: ExecMode,
     policy: P,
@@ -60,40 +78,67 @@ pub struct AdaptiveBackend<P: PrecisionPolicy> {
     pub exact_routed: AtomicU64,
     /// Strip the budget channel before inference?
     strip_last_feature: bool,
+    label: String,
 }
 
-impl<P: PrecisionPolicy> AdaptiveBackend<P> {
-    /// Build from a model plus the two execution modes.
+impl<P: PrecisionPolicy, M: NnModel + Clone> AdaptiveBackend<P, M> {
+    /// Build from a model plus the two execution modes. Both fabric
+    /// replicas are pre-planned here (a planning failure is deferred to
+    /// the first `infer`, like [`super::PackedNnBackend::new`]).
     pub fn new(
-        model: QuantMlp,
+        model: M,
         exact_mode: ExecMode,
         dense_mode: ExecMode,
         policy: P,
         strip_last_feature: bool,
     ) -> Self {
+        let label = model.label("adaptive");
+        let dense_model = model.clone();
+        let _ = model.prepare(&exact_mode);
+        let _ = dense_model.prepare(&dense_mode);
         AdaptiveBackend {
-            model,
+            exact_model: model,
+            dense_model,
             exact_mode,
             dense_mode,
             policy,
             dense_routed: AtomicU64::new(0),
             exact_routed: AtomicU64::new(0),
             strip_last_feature,
+            label,
         }
     }
 
-    fn run(&self, images: &[Vec<f32>], mode: &ExecMode) -> Result<(Vec<usize>, DspOpStats)> {
+    /// The model replica serving the exact fabric.
+    pub fn exact_model(&self) -> &M {
+        &self.exact_model
+    }
+
+    /// The model replica serving the dense (approximate) fabric.
+    pub fn dense_model(&self) -> &M {
+        &self.dense_model
+    }
+
+    fn run(
+        &self,
+        model: &M,
+        images: &[Vec<f32>],
+        mode: &ExecMode,
+    ) -> Result<(Vec<usize>, DspOpStats)> {
         let stripped: Vec<Vec<f32>> = if self.strip_last_feature {
-            images.iter().map(|i| i[..i.len() - 1].to_vec()).collect()
+            // saturating: an empty (malformed) image has no budget channel
+            // to strip — let the model's shape validation reject it as an
+            // Err instead of panicking the serving worker.
+            images.iter().map(|i| i[..i.len().saturating_sub(1)].to_vec()).collect()
         } else {
             images.to_vec()
         };
-        let x = self.model.quantize_batch(&stripped)?;
-        self.model.classify(&x, mode)
+        let x = model.quantize_batch(&stripped)?;
+        model.classify(&x, mode)
     }
 }
 
-impl<P: PrecisionPolicy> InferenceBackend for AdaptiveBackend<P> {
+impl<P: PrecisionPolicy, M: NnModel + Clone> InferenceBackend for AdaptiveBackend<P, M> {
     fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
         // Split the batch by class, run each sub-batch on its fabric,
         // merge results in the original order.
@@ -112,12 +157,15 @@ impl<P: PrecisionPolicy> InferenceBackend for AdaptiveBackend<P> {
 
         let mut preds = vec![0usize; batch.len()];
         let mut stats = DspOpStats::default();
-        for (idx, mode) in [(&exact_idx, &self.exact_mode), (&dense_idx, &self.dense_mode)] {
+        for (idx, model, mode) in [
+            (&exact_idx, &self.exact_model, &self.exact_mode),
+            (&dense_idx, &self.dense_model, &self.dense_mode),
+        ] {
             if idx.is_empty() {
                 continue;
             }
             let sub: Vec<Vec<f32>> = idx.iter().map(|&i| batch[i].clone()).collect();
-            let (p, s) = self.run(&sub, mode)?;
+            let (p, s) = self.run(model, &sub, mode)?;
             stats.merge(&s);
             for (&i, pred) in idx.iter().zip(p) {
                 preds[i] = pred;
@@ -127,7 +175,7 @@ impl<P: PrecisionPolicy> InferenceBackend for AdaptiveBackend<P> {
     }
 
     fn name(&self) -> &str {
-        "adaptive"
+        &self.label
     }
 }
 

@@ -6,17 +6,20 @@
 //! The execute phase runs on one of two integer datapaths, chosen once
 //! at engine build time ([`WordBackend`]):
 //!
-//! * **Narrow (`i64`)** — every DSP-feasible configuration whose P word
-//!   plus accumulation headroom δ fits 63 bits (all of them, in
-//!   practice: the physical P word is 48 bits). Operand and weight
-//!   planes are `i64`, the cascade/per-product inner loops are
-//!   single-machine-word multiplies, and extraction fuses with the
-//!   accumulator scatter. On x86-64 this is the difference between one
-//!   `imul` and a multi-instruction `i128` widening sequence per packed
-//!   product.
-//! * **Wide (`i128`)** — the generic fallback for logical
-//!   (architecture-independent) engines and pathological generated
-//!   configurations whose fields climb past bit 60.
+//! * **Narrow (`i64`)** — every configuration whose P word plus
+//!   accumulation headroom δ fits 63 bits: all DSP-feasible strict
+//!   configurations (the physical P word is 48 bits), **and** logical
+//!   (architecture-independent) configurations within the same bound —
+//!   their product is exact with no port wrap, so `i64` arithmetic is
+//!   trivially bit-identical. Operand and weight planes are `i64`, the
+//!   cascade/per-product inner loops are single-machine-word multiplies,
+//!   and extraction fuses with the accumulator scatter. On x86-64 this
+//!   is the difference between one `imul` and a multi-instruction
+//!   `i128` widening sequence per packed product.
+//! * **Wide (`i128`)** — the generic fallback for pathological generated
+//!   configurations whose fields climb past bit 60, and the pinned
+//!   "before" side of A/B comparisons ([`GemmEngine::new_wide`],
+//!   [`GemmEngine::logical_wide`]).
 //!
 //! The two backends are bit-identical by construction (the narrow path
 //! replicates every port wrap of the DSP model at the same widths) and
@@ -65,12 +68,12 @@ impl DspOpStats {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WordBackend {
     /// `i64` planes and inner loops — selected automatically for every
-    /// strict engine whose configuration passes
+    /// engine (strict or logical) whose configuration passes
     /// [`PackingConfig::narrow_word_feasible`].
     Narrow64,
-    /// `i128` planes and inner loops — the generic fallback (logical
-    /// engines, overwide generated configs, or forced via
-    /// [`GemmEngine::new_wide`] for A/B benchmarking).
+    /// `i128` planes and inner loops — the generic fallback (overwide
+    /// generated configs, or forced via [`GemmEngine::new_wide`] /
+    /// [`GemmEngine::logical_wide`] for A/B benchmarking).
     Wide128,
 }
 
@@ -110,8 +113,13 @@ impl GemmEngine {
     }
 
     /// Engine over an architecture-independent packing (see
-    /// [`PackedMultiplier::logical`]). Always runs the wide backend: the
-    /// logical mode's exact wide products are what `i128` is for.
+    /// [`PackedMultiplier::logical`]). Narrow (`i64`) execution is
+    /// selected automatically here too: the logical product is the exact
+    /// `b_word · w_word` with no port wrap, and the narrowness predicate
+    /// bounds its magnitude below 2⁶⁰ — so the Fig. 9 sweep engines run
+    /// the same single-machine-word inner loops the strict engines do
+    /// (`tests/conformance.rs` pins the logical narrow/wide identity).
+    /// Overwide generated configurations keep the `i128` fallback.
     pub fn logical(cfg: PackingConfig, correction: Correction) -> Result<Self> {
         Self::build(PackedMultiplier::logical(cfg, correction)?, false)
     }
@@ -122,6 +130,14 @@ impl GemmEngine {
     /// differential suite; production callers want [`GemmEngine::new`].
     pub fn new_wide(cfg: PackingConfig, correction: Correction) -> Result<Self> {
         Self::build(PackedMultiplier::new(cfg, correction)?, true)
+    }
+
+    /// Logical engine pinned to the **wide (`i128`) backend** — the
+    /// pre-narrow behaviour of [`GemmEngine::logical`], kept as the
+    /// "before" side of the Fig. 9 narrow/wide differential and for A/B
+    /// measurement.
+    pub fn logical_wide(cfg: PackingConfig, correction: Correction) -> Result<Self> {
+        Self::build(PackedMultiplier::logical(cfg, correction)?, true)
     }
 
     fn build(mul: PackedMultiplier, force_wide: bool) -> Result<Self> {
@@ -622,8 +638,9 @@ mod tests {
         assert!(mad < 8.0, "mad = {mad}");
     }
 
-    /// Backend selection: strict DSP-feasible engines run narrow, logical
-    /// engines and forced-wide engines run wide.
+    /// Backend selection: strict DSP-feasible engines *and* logical
+    /// engines on narrow configurations run narrow; only forced-wide
+    /// engines (and overwide generated configs) run wide.
     #[test]
     fn backend_selection() {
         let narrow =
@@ -634,7 +651,28 @@ mod tests {
         assert_eq!(forced.word_backend(), WordBackend::Wide128);
         let logical =
             GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap();
-        assert_eq!(logical.word_backend(), WordBackend::Wide128);
+        assert_eq!(logical.word_backend(), WordBackend::Narrow64);
+        let logical_forced =
+            GemmEngine::logical_wide(PackingConfig::overpack6_int4(), Correction::MrRestore)
+                .unwrap();
+        assert_eq!(logical_forced.word_backend(), WordBackend::Wide128);
+    }
+
+    /// Logical narrow engines match the pinned-wide logical engines bit
+    /// for bit (outputs and counters) — quick check; the Fig. 9 sweep pin
+    /// lives in `tests/conformance.rs`.
+    #[test]
+    fn logical_narrow_matches_logical_wide_quick() {
+        let narrow =
+            GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap();
+        let wide =
+            GemmEngine::logical_wide(PackingConfig::overpack6_int4(), Correction::MrRestore)
+                .unwrap();
+        let (a, w) = random_mats(9, 21, 4, 0x16F9);
+        let (cn, sn) = narrow.matmul(&a, &w).unwrap();
+        let (cw, sw) = wide.matmul(&a, &w).unwrap();
+        assert_eq!(cn, cw);
+        assert_eq!(sn, sw);
     }
 
     /// Narrow and forced-wide engines agree bit for bit — outputs and

@@ -39,8 +39,10 @@
 //! Execution runs on one of two integer datapaths ([`WordBackend`]),
 //! chosen once when the engine is built: every DSP-feasible
 //! configuration gets **`i64` planes and inner loops** (the physical P
-//! word is 48 bits — `i128` was pure overhead), while logical engines
-//! and pathological generated configs keep the generic `i128` fallback.
+//! word is 48 bits — `i128` was pure overhead), and logical
+//! (architecture-independent) engines within the same 60-bit bound take
+//! the `i64` path too (their exact products involve no port wrap);
+//! only pathological generated configs keep the generic `i128` fallback.
 //! Both backends are bit-identical — outputs and counters — which
 //! `tests/conformance.rs` pins differentially across every preset
 //! configuration × correction scheme; `benches/gemm_throughput.rs`

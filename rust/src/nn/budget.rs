@@ -1,0 +1,227 @@
+//! Plan-cache memory budget: per-model accounting of resident
+//! [`PackedWeights`] plane bytes with LRU eviction.
+//!
+//! A weights-resident model pins one packed plan per layer
+//! ([`crate::gemm::PackedWeights`], sized by
+//! [`crate::gemm::PackedWeights::plane_bytes`]). A shallow model's
+//! handful of planes is negligible; a deep CNN serving several packings
+//! (the adaptive coordinator keeps one plan per layer *per fabric*) can
+//! pin an unbounded resident set. [`PlanBudget`] caps it: every layer
+//! plan cache of a model is attached to one shared budget, the budget
+//! tracks the exact `plane_bytes` of each resident plan, and storing a
+//! plan that pushes the total past the limit evicts the
+//! least-recently-used resident plan(s) of *other* caches — the evicted
+//! layer simply re-plans on its next forward (bit-identically, which
+//! `tests/conv.rs` pins).
+//!
+//! Locking contract (deadlock freedom): a plan cache never calls into the
+//! budget while holding its slot lock, and the budget never holds its own
+//! lock while clearing a victim slot. The cost is a benign race: a victim
+//! that is concurrently re-planned may be charged and then evicted (or
+//! transiently over-counted until its next use); accounting self-heals on
+//! the next access because every use re-records the slot's current bytes.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+use super::mlp::CacheSlot;
+
+/// Monotonic id source for plan-cache slots (process-wide).
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(0);
+
+/// A fresh plan-cache id.
+pub(super) fn next_cache_id() -> u64 {
+    NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One resident plan the budget knows about.
+struct BudgetEntry {
+    /// Exact `PackedWeights::plane_bytes` of the resident plan.
+    bytes: usize,
+    /// LRU clock stamp of the last use (hit or store).
+    last_use: u64,
+    /// The owning cache's slot, cleared on eviction. Weak: the budget
+    /// must not keep dropped layers (or their planes) alive.
+    slot: Weak<CacheSlot>,
+}
+
+struct BudgetInner {
+    /// LRU clock (bumped on every use).
+    clock: u64,
+    /// Resident plans by cache id.
+    entries: HashMap<u64, BudgetEntry>,
+}
+
+impl BudgetInner {
+    fn total_bytes(&self) -> usize {
+        self.entries.values().map(|e| e.bytes).sum()
+    }
+}
+
+/// A byte budget shared by every layer plan cache of one model (see the
+/// module docs). Construct with [`PlanBudget::new`], attach with the
+/// model's `attach_plan_budget`, and observe with
+/// [`PlanBudget::resident_bytes`] / [`PlanBudget::evictions`].
+pub struct PlanBudget {
+    /// Resident-plane byte ceiling.
+    limit: usize,
+    inner: Mutex<BudgetInner>,
+    evictions: AtomicU64,
+}
+
+impl std::fmt::Debug for PlanBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanBudget")
+            .field("limit", &self.limit)
+            .field("resident_bytes", &self.resident_bytes())
+            .field("evictions", &self.evictions())
+            .finish()
+    }
+}
+
+impl PlanBudget {
+    /// A budget capping resident plan planes at `limit_bytes`.
+    pub fn new(limit_bytes: usize) -> Arc<Self> {
+        Arc::new(PlanBudget {
+            limit: limit_bytes,
+            inner: Mutex::new(BudgetInner { clock: 0, entries: HashMap::new() }),
+            evictions: AtomicU64::new(0),
+        })
+    }
+
+    /// An accounting-only budget that never evicts.
+    pub fn unbounded() -> Arc<Self> {
+        Self::new(usize::MAX)
+    }
+
+    /// The configured byte ceiling.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// Exact bytes of resident plan planes currently accounted
+    /// (`Σ plane_bytes` over the attached caches' resident plans).
+    pub fn resident_bytes(&self) -> usize {
+        self.inner.lock().expect("plan budget poisoned").total_bytes()
+    }
+
+    /// Number of resident plans currently accounted.
+    pub fn resident_plans(&self) -> usize {
+        self.inner.lock().expect("plan budget poisoned").entries.len()
+    }
+
+    /// How many plans have been evicted to enforce the limit.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    /// Record a use (cache hit or store) of cache `id` whose resident
+    /// plan occupies `bytes`, then enforce the limit by evicting the
+    /// least-recently-used *other* resident plans. Called by
+    /// `PlanCache::plan_for` after the slot lock is released.
+    pub(super) fn note_use(&self, id: u64, bytes: usize, slot: &Arc<CacheSlot>) {
+        // Phase 1 (budget lock only): account, pick victims.
+        let victims: Vec<Arc<CacheSlot>> = {
+            let mut inner = self.inner.lock().expect("plan budget poisoned");
+            inner.clock += 1;
+            let stamp = inner.clock;
+            inner.entries.insert(
+                id,
+                BudgetEntry { bytes, last_use: stamp, slot: Arc::downgrade(slot) },
+            );
+            let mut victims = Vec::new();
+            while inner.total_bytes() > self.limit {
+                // LRU among everything except the plan just used — the
+                // newest plan must be allowed to exceed the limit alone,
+                // otherwise an over-sized layer could never run at all.
+                let victim = inner
+                    .entries
+                    .iter()
+                    .filter(|&(&k, _)| k != id)
+                    .min_by_key(|&(_, e)| e.last_use)
+                    .map(|(&k, _)| k);
+                let Some(vid) = victim else { break };
+                let entry = inner.entries.remove(&vid).expect("victim exists");
+                if let Some(victim_slot) = entry.slot.upgrade() {
+                    victims.push(victim_slot);
+                }
+            }
+            victims
+        };
+        // Phase 2 (victim slot locks only): drop the evicted planes.
+        for victim_slot in victims {
+            *victim_slot.lock().expect("plan cache poisoned") = None;
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Drop cache `id` from the accounting (its plan was replaced or its
+    /// layer dropped); no eviction is triggered by shrinking.
+    pub(super) fn release(&self, id: u64) {
+        self.inner.lock().expect("plan budget poisoned").entries.remove(&id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    fn slot() -> Arc<CacheSlot> {
+        Arc::new(Mutex::new(None))
+    }
+
+    #[test]
+    fn accounting_tracks_uses_and_release() {
+        let b = PlanBudget::unbounded();
+        let (s1, s2) = (slot(), slot());
+        b.note_use(1, 100, &s1);
+        b.note_use(2, 250, &s2);
+        assert_eq!(b.resident_bytes(), 350);
+        assert_eq!(b.resident_plans(), 2);
+        // Re-using an id replaces its entry (a rebuilt plan may change
+        // size, e.g. after a narrow/wide engine swap).
+        b.note_use(1, 60, &s1);
+        assert_eq!(b.resident_bytes(), 310);
+        b.release(1);
+        assert_eq!(b.resident_bytes(), 250);
+        assert_eq!(b.evictions(), 0);
+    }
+
+    #[test]
+    fn evicts_lru_first_and_clears_the_slot() {
+        let b = PlanBudget::new(250);
+        let (s1, s2, s3) = (slot(), slot(), slot());
+        b.note_use(1, 100, &s1);
+        b.note_use(2, 100, &s2);
+        b.note_use(1, 100, &s1); // 1 is now more recent than 2
+        b.note_use(3, 100, &s3); // 300 > 250: evict LRU = 2
+        assert_eq!(b.evictions(), 1);
+        assert_eq!(b.resident_bytes(), 200);
+        assert_eq!(b.resident_plans(), 2);
+    }
+
+    #[test]
+    fn the_newest_plan_is_never_its_own_victim() {
+        let b = PlanBudget::new(50);
+        let s = slot();
+        // A single over-sized plan stays resident (the alternative is a
+        // layer that can never execute).
+        b.note_use(7, 500, &s);
+        assert_eq!(b.evictions(), 0);
+        assert_eq!(b.resident_bytes(), 500);
+    }
+
+    #[test]
+    fn dropped_slots_do_not_block_eviction() {
+        let b = PlanBudget::new(150);
+        let s1 = slot();
+        b.note_use(1, 100, &s1);
+        drop(s1); // layer dropped; Weak upgrade fails but entry clears
+        let s2 = slot();
+        b.note_use(2, 100, &s2);
+        assert_eq!(b.resident_plans(), 1);
+        assert_eq!(b.resident_bytes(), 100);
+    }
+}

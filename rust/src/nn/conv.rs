@@ -15,17 +15,24 @@
 //!
 //! [`Conv2dLayer`] supports stride and zero padding, per-layer weight
 //! quantization, bias, and ReLU requantization; [`MaxPool2d`] reduces the
-//! feature map; [`QuantCnn`] chains conv → pool → dense head and runs in
-//! [`ExecMode::Exact`] and [`ExecMode::Packed`] with the same bit-identical
-//! [`DspOpStats`] accounting the dense layers have (pinned differentially
-//! against a naive direct convolution in `tests/conv.rs`).
+//! feature map; [`QuantCnn`] chains **any number** of conv stages
+//! ([`ConvStage`], built from [`StageSpec`]s via [`QuantCnn::deep`]) with
+//! interleaved pooling and a dense head, and runs in [`ExecMode::Exact`]
+//! and [`ExecMode::Packed`] with the same bit-identical [`DspOpStats`]
+//! accounting the dense layers have (pinned differentially against a
+//! naive direct convolution in `tests/conv.rs`). Per-stage requant shifts
+//! are calibrated stage by stage, so quantization composes through depth;
+//! deep stacks cap their resident weight planes with
+//! [`QuantCnn::attach_plan_budget`] ([`super::budget`]).
 
+use super::budget::PlanBudget;
 use super::data::Dataset;
 use super::mlp::{DenseLayer, ExecMode};
 use super::quantize;
 use super::NnModel;
 use crate::gemm::{DspOpStats, GemmEngine, Im2col, MatI32};
 use crate::{Error, Result};
+use std::sync::Arc;
 
 /// Spatial geometry of a convolution layer: input channels, square kernel,
 /// stride and zero padding. The input height/width are supplied per batch
@@ -139,6 +146,13 @@ impl Conv2dLayer {
         self.dense.prepare(engine)
     }
 
+    /// Attach the filter bank's plan cache to a shared [`PlanBudget`]
+    /// (same semantics as `DenseLayer::attach_budget`, which this
+    /// forwards to).
+    pub fn attach_budget(&self, budget: &Arc<PlanBudget>) {
+        self.dense.attach_budget(budget);
+    }
+
     /// Forward a batch: `x` is one image per row (channel-major pixels,
     /// `height`×`width`); the result is the feature map as a patch-row
     /// matrix, `(batch·OH·OW) × out_channels`. Unrolls the batch via
@@ -224,22 +238,68 @@ impl MaxPool2d {
     }
 }
 
-/// A small quantized CNN: conv → ReLU-requant → max-pool → dense head,
-/// every matmul on the plan/execute GEMM engine.
+/// Specification of one conv stage of a deep [`QuantCnn`]: a square
+/// `kernel`×`kernel` convolution producing `filters` output channels
+/// (input channels chain automatically from the previous stage),
+/// optionally followed by a max-pool. Build with [`StageSpec::conv3x3`]
+/// (or struct literal syntax) and [`StageSpec::with_pool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StageSpec {
+    /// Output channels of this stage's filter bank.
+    pub filters: usize,
+    /// Square kernel side length.
+    pub kernel: usize,
+    /// Stride in both spatial dimensions.
+    pub stride: usize,
+    /// Zero padding on every image edge.
+    pub padding: usize,
+    /// Optional pooling after the conv + ReLU-requant.
+    pub pool: Option<MaxPool2d>,
+}
+
+impl StageSpec {
+    /// The workhorse stage: 3×3 conv, stride 1, padding 1 (spatial dims
+    /// preserved), no pooling.
+    pub fn conv3x3(filters: usize) -> Self {
+        StageSpec { filters, kernel: 3, stride: 1, padding: 1, pool: None }
+    }
+
+    /// Append a `size`×`size`/`stride` max-pool to this stage.
+    pub fn with_pool(mut self, size: usize, stride: usize) -> Result<Self> {
+        self.pool = Some(MaxPool2d::new(size, stride)?);
+        Ok(self)
+    }
+}
+
+/// One realized stage of a [`QuantCnn`]: the quantized conv layer (its
+/// filter bank plan-cached like any dense layer) plus optional pooling.
+#[derive(Debug, Clone)]
+pub struct ConvStage {
+    /// The convolution layer (filter bank planned once, then resident).
+    pub conv: Conv2dLayer,
+    /// Pooling applied to this stage's requantized feature map, if any.
+    pub pool: Option<MaxPool2d>,
+}
+
+/// A quantized CNN of arbitrary depth: N × (conv → ReLU-requant →
+/// optional max-pool) stages followed by a dense head, every matmul on
+/// the plan/execute GEMM engine. Per-stage requantization shifts are
+/// calibrated stage by stage ([`QuantCnn::calibrate`]), so the shift
+/// calibration composes through any depth.
 ///
-/// All weight planes (the conv filter bank and the head matrix) are
+/// All weight planes (every stage's filter bank and the head matrix) are
 /// planned at [`QuantCnn::prepare`] time — the serving backend calls it at
-/// construction, so no request ever pays planning cost. Packed and exact
-/// execution share every non-GEMM step bit for bit, so with an exact
-/// correction scheme (e.g. full round-half-up on INT4) the packed logits
-/// equal the exact logits exactly.
+/// construction, so no request ever pays planning cost; deep models can
+/// additionally cap their resident planes with
+/// [`QuantCnn::attach_plan_budget`]. Packed and exact execution share
+/// every non-GEMM step bit for bit, so with an exact correction scheme
+/// (e.g. full round-half-up on INT4) the packed logits equal the exact
+/// logits exactly — at any depth.
 #[derive(Debug, Clone)]
 pub struct QuantCnn {
-    /// Convolution layer (filter bank planned once, then resident).
-    pub conv: Conv2dLayer,
-    /// Pooling between conv and head.
-    pub pool: MaxPool2d,
-    /// Dense classifier head over the flattened pooled features.
+    /// Conv stages, applied in order (input channels chain).
+    pub stages: Vec<ConvStage>,
+    /// Dense classifier head over the flattened final feature map.
     pub head: DenseLayer,
     /// Input image side length (images are square, channel-major).
     pub side: usize,
@@ -261,9 +321,9 @@ impl QuantCnn {
         Self::with_geometry(ds, filters, geometry, pool, w_bits, a_bits, seed)
     }
 
-    /// Fully parameterized constructor: any [`ConvGeometry`] (stride /
-    /// padding / channels) and pooling window over a dataset whose images
-    /// are square `geometry.in_channels`-deep grids.
+    /// Fully parameterized single-stage constructor: any [`ConvGeometry`]
+    /// (stride / padding / channels) and pooling window over a dataset
+    /// whose images are square `geometry.in_channels`-deep grids.
     pub fn with_geometry(
         ds: &Dataset,
         filters: usize,
@@ -273,27 +333,90 @@ impl QuantCnn {
         a_bits: u32,
         seed: u64,
     ) -> Result<Self> {
-        let pixels = ds.dim / geometry.in_channels;
+        Self::from_stage_defs(ds, vec![(geometry, filters, Some(pool))], w_bits, a_bits, seed)
+    }
+
+    /// A **deep** CNN: chain the given conv stages (input channels link
+    /// automatically, starting at `in_channels`), then a centroid head
+    /// over the final feature map. Calibrates every stage's
+    /// requantization shift stage by stage and fits the head before
+    /// returning — see [`QuantCnn::calibrate`].
+    pub fn deep(
+        ds: &Dataset,
+        in_channels: usize,
+        specs: &[StageSpec],
+        w_bits: u32,
+        a_bits: u32,
+        seed: u64,
+    ) -> Result<Self> {
+        if specs.is_empty() {
+            return Err(Error::Shape("deep CNN needs at least one conv stage".into()));
+        }
+        let mut defs = Vec::with_capacity(specs.len());
+        let mut ch = in_channels;
+        for spec in specs {
+            let geometry = ConvGeometry::new(ch, spec.kernel, spec.stride, spec.padding)?;
+            defs.push((geometry, spec.filters, spec.pool));
+            ch = spec.filters;
+        }
+        Self::from_stage_defs(ds, defs, w_bits, a_bits, seed)
+    }
+
+    /// Shared builder: deterministic random filters per stage (edge/blob
+    /// detectors emerge from the synthetic data statistics, no training
+    /// loop needed), head sized by walking the spatial dims through every
+    /// stage, then full calibration.
+    fn from_stage_defs(
+        ds: &Dataset,
+        defs: Vec<(ConvGeometry, usize, Option<MaxPool2d>)>,
+        w_bits: u32,
+        a_bits: u32,
+        seed: u64,
+    ) -> Result<Self> {
+        let in_channels = defs[0].0.in_channels;
+        let pixels = ds.dim / in_channels;
         let side = (pixels as f64).sqrt() as usize;
-        if side * side * geometry.in_channels != ds.dim {
+        if side * side * in_channels != ds.dim {
             return Err(Error::Shape(format!(
-                "dataset dim {} is not a square {}-channel image",
-                ds.dim, geometry.in_channels
+                "dataset dim {} is not a square {in_channels}-channel image",
+                ds.dim
             )));
         }
-        // Deterministic random filters: edge/blob detectors emerge from
-        // the synthetic data statistics, no training loop needed.
         let mut rng = crate::util::Rng::new(seed);
-        let taps = geometry.patch_len();
-        let conv_w: Vec<f32> =
-            (0..taps * filters).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
-        let (conv, _) =
-            Conv2dLayer::from_f32(&conv_w, geometry, filters, &vec![0.0; filters], w_bits, true)?;
-        // Head: sized from the pooled feature dimensions, zero-filled
+        let (mut h, mut w) = (side, side);
+        let mut ch = in_channels;
+        let mut stages = Vec::with_capacity(defs.len());
+        for (geometry, filters, pool) in defs {
+            if geometry.in_channels != ch {
+                return Err(Error::Shape(format!(
+                    "stage expects {} input channels, previous stage produces {ch}",
+                    geometry.in_channels
+                )));
+            }
+            let taps = geometry.patch_len();
+            let conv_w: Vec<f32> =
+                (0..taps * filters).map(|_| (rng.f64() as f32 - 0.5) * 2.0).collect();
+            let (conv, _) = Conv2dLayer::from_f32(
+                &conv_w,
+                geometry,
+                filters,
+                &vec![0.0; filters],
+                w_bits,
+                true,
+            )?;
+            let (oh, ow) = geometry.spec(h, w)?.out_dims();
+            let (fh, fw) = match pool {
+                Some(p) => p.out_dims(oh, ow)?,
+                None => (oh, ow),
+            };
+            stages.push(ConvStage { conv, pool });
+            ch = filters;
+            h = fh;
+            w = fw;
+        }
+        // Head: sized from the final feature dimensions, zero-filled
         // until calibrate() fits the class centroids below.
-        let (oh, ow) = geometry.spec(side, side)?.out_dims();
-        let (ph, pw) = pool.out_dims(oh, ow)?;
-        let feat_dim = filters * ph * pw;
+        let feat_dim = ch * h * w;
         let (head, _) = DenseLayer::from_f32(
             &vec![0.0; feat_dim * ds.classes],
             feat_dim,
@@ -302,28 +425,59 @@ impl QuantCnn {
             w_bits,
             false,
         )?;
-        let mut cnn = QuantCnn { conv, pool, head, side, a_bits, w_bits };
+        let mut cnn = QuantCnn { stages, head, side, a_bits, w_bits };
         cnn.calibrate(ds, 32)?;
         Ok(cnn)
     }
 
-    /// Calibrate the conv requantization shift on (up to) `n` images and
-    /// refit the dense head as class centroids of the resulting exact
-    /// feature space.
+    /// Number of conv stages.
+    pub fn depth(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Calibrate every stage's requantization shift on (up to) `n`
+    /// images — stage `i+1` is calibrated on the exact output of the
+    /// already-calibrated stages `0..=i`, so per-layer shifts compose
+    /// through any depth — and refit the dense head as class centroids of
+    /// the resulting exact feature space.
     pub fn calibrate(&mut self, ds: &Dataset, n: usize) -> Result<()> {
         let n = n.min(ds.images.len());
         let imgs: Vec<f32> = ds.images.iter().take(n).flatten().copied().collect();
-        let x = quantize::quantize_unsigned(&imgs, n, ds.dim, self.a_bits).0;
-        let spec = self.conv.geometry.spec(self.side, self.side)?;
-        let mut acc = x.im2col(&spec)?.matmul_exact(&self.conv.dense.weights)?;
-        // Calibrate on the same accumulators forward() requantizes:
-        // bias included (it shifts the range the shift must cover).
-        for r in 0..acc.rows {
-            for c in 0..acc.cols {
-                acc.set(r, c, acc.get(r, c) + self.conv.dense.bias[c]);
+        let mut x = quantize::quantize_unsigned(&imgs, n, ds.dim, self.a_bits).0;
+        let (mut h, mut w) = (self.side, self.side);
+        let a_bits = self.a_bits;
+        for stage in self.stages.iter_mut() {
+            let spec = stage.conv.geometry.spec(h, w)?;
+            let (oh, ow) = spec.out_dims();
+            // Calibrate on the same accumulators forward() requantizes:
+            // bias included (it shifts the range the shift must cover).
+            let mut acc = x.im2col(&spec)?.matmul_exact(&stage.conv.dense.weights)?;
+            for r in 0..acc.rows {
+                for c in 0..acc.cols {
+                    acc.set(r, c, acc.get(r, c) + stage.conv.dense.bias[c]);
+                }
             }
+            stage.conv.dense.shift = quantize::calibrate_shift(&acc, a_bits);
+            // `acc` is exactly the accumulator matrix the stage's exact
+            // forward would recompute; requantize it with the just-fitted
+            // shift instead of paying a second im2col + GEMM. This feeds
+            // the next stage's calibration (shift composition).
+            let fmap = if stage.conv.dense.requant {
+                quantize::requantize_relu(&acc, stage.conv.dense.shift, a_bits)
+            } else {
+                acc
+            };
+            let (fmap, fh, fw) = match &stage.pool {
+                Some(pool) => {
+                    let (ph, pw) = pool.out_dims(oh, ow)?;
+                    (pool.forward(&fmap, x.rows, oh, ow)?, ph, pw)
+                }
+                None => (fmap, oh, ow),
+            };
+            x = Self::fmap_to_rows(&fmap, x.rows, fh, fw);
+            h = fh;
+            w = fw;
         }
-        self.conv.dense.shift = quantize::calibrate_shift(&acc, self.a_bits);
         self.fit_head(ds)
     }
 
@@ -358,34 +512,80 @@ impl QuantCnn {
             self.w_bits,
             false,
         )?;
+        // The refit replaces the head layer wholesale; carry any plan
+        // budget attachment over so the new head's resident plan stays
+        // accounted and evictable.
+        if let Some(budget) = self.head.attached_budget() {
+            head.attach_budget(&budget);
+        }
         self.head = head;
         Ok(())
     }
 
-    /// Pre-build every weight plane (conv filter bank + dense head) for
-    /// the given execution mode — a no-op for [`ExecMode::Exact`]. The
-    /// serving backend calls this at construction.
+    /// Pre-build every weight plane (each stage's filter bank + dense
+    /// head) for the given execution mode — a no-op for
+    /// [`ExecMode::Exact`]. The serving backend calls this at
+    /// construction.
     pub fn prepare(&self, mode: &ExecMode) -> Result<()> {
         if let ExecMode::Packed(engine) = mode {
-            self.conv.prepare(engine)?;
+            for stage in &self.stages {
+                stage.conv.prepare(engine)?;
+            }
             self.head.prepare(engine)?;
         }
         Ok(())
     }
 
-    /// Conv → pool → flatten: per-image feature vectors, channel-major
-    /// (`f·PH·PW + py·PW + px`), already requantized into the activation
-    /// range by the conv layer's calibrated shift.
+    /// Attach every layer's plan cache (all filter banks + the head) to
+    /// one shared [`PlanBudget`]: resident plans are accounted by exact
+    /// `plane_bytes` and LRU-evicted past the budget's ceiling; an
+    /// evicted layer re-plans on its next packed forward, bit-identically.
+    pub fn attach_plan_budget(&self, budget: &Arc<PlanBudget>) {
+        for stage in &self.stages {
+            stage.conv.attach_budget(budget);
+        }
+        self.head.attach_budget(budget);
+    }
+
+    /// Feature-map layout `(batch·H·W) × channels` → image-row layout
+    /// `batch × (channels·H·W)` (channel-major pixels): the input layout
+    /// of the next conv stage, and the flattened feature layout
+    /// (`f·H·W + y·W + x`) the dense head consumes.
+    fn fmap_to_rows(fmap: &MatI32, batch: usize, height: usize, width: usize) -> MatI32 {
+        let span = height * width;
+        MatI32::from_fn(batch, fmap.cols * span, |b, c| {
+            fmap.get(b * span + c % span, c / span)
+        })
+    }
+
+    /// Walk every stage (conv → optional pool → relayout): per-image
+    /// feature vectors, channel-major, already requantized into the
+    /// activation range by each stage's calibrated shift.
     fn features(&self, x: &MatI32, mode: &ExecMode, stats: &mut DspOpStats) -> Result<MatI32> {
-        let spec = self.conv.geometry.spec(self.side, self.side)?;
-        let (oh, ow) = spec.out_dims();
-        let fmap = self.conv.forward(x, self.side, self.side, mode, self.a_bits, stats)?;
-        let pooled = self.pool.forward(&fmap, x.rows, oh, ow)?;
-        let (ph, pw) = self.pool.out_dims(oh, ow)?;
-        let span = ph * pw;
-        Ok(MatI32::from_fn(x.rows, self.conv.out_channels() * span, |b, c| {
-            pooled.get(b * span + c % span, c / span)
-        }))
+        // The first stage reads `x` by reference (no batch copy on the
+        // serving hot path); later stages consume the previous output.
+        let mut cur: Option<MatI32> = None;
+        let (mut h, mut w) = (self.side, self.side);
+        for stage in &self.stages {
+            let input = cur.as_ref().unwrap_or(x);
+            let batch = input.rows;
+            let spec = stage.conv.geometry.spec(h, w)?;
+            let (oh, ow) = spec.out_dims();
+            let fmap = stage.conv.forward(input, h, w, mode, self.a_bits, stats)?;
+            let (fmap, fh, fw) = match &stage.pool {
+                Some(pool) => {
+                    let (ph, pw) = pool.out_dims(oh, ow)?;
+                    (pool.forward(&fmap, batch, oh, ow)?, ph, pw)
+                }
+                None => (fmap, oh, ow),
+            };
+            cur = Some(Self::fmap_to_rows(&fmap, batch, fh, fw));
+            h = fh;
+            w = fw;
+        }
+        // Constructors guarantee at least one stage; the fallback only
+        // exists to keep this total.
+        Ok(cur.unwrap_or_else(|| x.clone()))
     }
 
     /// Forward a quantized batch; returns logits and DSP work stats.
@@ -498,6 +698,45 @@ mod tests {
         assert_eq!(packed, packed2);
         assert_eq!(s1, s2);
         assert!(s1.utilization() > 3.9);
+    }
+
+    #[test]
+    fn deep_three_stage_cnn_is_bit_exact_under_full_correction() {
+        let ds = data::synthetic(48, 3, 64, 0.12, 37);
+        // 8×8 → conv3×3/p1 (8×8) → pool 2/2 (4×4) → conv3×3/p1 (4×4)
+        //     → conv3×3/p1 (4×4) → pool 2/2 (2×2); head over 8·2·2.
+        let specs = [
+            StageSpec::conv3x3(4).with_pool(2, 2).unwrap(),
+            StageSpec::conv3x3(6),
+            StageSpec::conv3x3(8).with_pool(2, 2).unwrap(),
+        ];
+        let cnn = QuantCnn::deep(&ds, 1, &specs, 4, 4, 29).unwrap();
+        assert_eq!(cnn.depth(), 3);
+        assert_eq!(cnn.head.weights.rows, 8 * 2 * 2);
+        // Every stage's shift was calibrated on its own input range.
+        let x = cnn.quantize_batch(&ds.images).unwrap();
+        let (exact, _) = cnn.forward(&x, &ExecMode::Exact).unwrap();
+        assert_eq!(exact.cols, ds.classes);
+        let mode = ExecMode::Packed(engine());
+        cnn.prepare(&mode).unwrap();
+        let (packed, s1) = cnn.forward(&x, &mode).unwrap();
+        assert_eq!(exact, packed, "full correction is bit-exact through 3 conv stages");
+        let (packed2, s2) = cnn.forward(&x, &mode).unwrap();
+        assert_eq!(packed, packed2);
+        assert_eq!(s1, s2, "resident plans serve identical batches identically");
+        assert!(s1.utilization() > 3.9);
+    }
+
+    #[test]
+    fn deep_rejects_empty_and_mismatched_stacks() {
+        let ds = data::synthetic(8, 2, 64, 0.15, 5);
+        assert!(QuantCnn::deep(&ds, 1, &[], 4, 4, 1).is_err());
+        // A pool window larger than the final feature map must surface as
+        // a shape error at construction, not at serve time.
+        let bad = [StageSpec { filters: 4, kernel: 3, stride: 2, padding: 0, pool: None }
+            .with_pool(4, 4)
+            .unwrap()];
+        assert!(QuantCnn::deep(&ds, 1, &bad, 4, 4, 1).is_err());
     }
 
     #[test]

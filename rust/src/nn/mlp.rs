@@ -7,11 +7,18 @@
 //! against the cached plan. [`QuantMlp::prepare`] builds all plans up
 //! front, which the serving backend does at construction.
 
+use super::budget::{next_cache_id, PlanBudget};
 use super::data::Dataset;
 use super::quantize;
 use crate::gemm::{DspOpStats, GemmEngine, MatI32, PackedWeights};
 use crate::{Error, Result};
 use std::sync::{Arc, Mutex};
+
+/// The shared storage cell of one plan cache: the weight snapshot the
+/// plan was built from plus the plan itself. `Arc`'d so an attached
+/// [`PlanBudget`] can hold a `Weak` reference and clear the slot when it
+/// evicts the plan.
+pub(super) type CacheSlot = Mutex<Option<(Arc<MatI32>, Arc<PackedWeights>)>>;
 
 /// How a model's matmuls execute.
 #[derive(Debug, Clone)]
@@ -30,32 +37,113 @@ pub enum ExecMode {
 /// instead of silently serving a stale one. "Engine shape" includes the
 /// execution word backend (`PackedWeights::compatible_with` checks it):
 /// narrow `i64` planes never leak onto a wide engine or vice versa.
-#[derive(Debug, Default)]
+///
+/// A cache may be attached to a shared per-model [`PlanBudget`]
+/// (`DenseLayer::attach_budget`): every hit or store is then reported to
+/// the budget (exact `plane_bytes` accounting, LRU stamps), and the
+/// budget may clear this cache's slot to enforce its byte ceiling — the
+/// next forward simply re-plans, bit-identically.
+#[derive(Debug)]
 pub struct PlanCache {
-    slot: Mutex<Option<(Arc<MatI32>, Arc<PackedWeights>)>>,
+    slot: Arc<CacheSlot>,
+    /// Process-unique id this cache is accounted under in a budget.
+    id: u64,
+    budget: Mutex<Option<Arc<PlanBudget>>>,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache {
+            slot: Arc::new(Mutex::new(None)),
+            id: next_cache_id(),
+            budget: Mutex::new(None),
+        }
+    }
 }
 
 impl Clone for PlanCache {
     fn clone(&self) -> Self {
-        PlanCache { slot: Mutex::new(self.slot.lock().expect("plan cache poisoned").clone()) }
+        // The clone is an independent cache: own slot (same resident
+        // plan, shared via Arc until either side rebuilds), own id, same
+        // attached budget. Its plan is accounted on its first use — note
+        // that while the Arc is still shared, a budget covering both
+        // caches counts the plan once per cache: conservative (it
+        // over-counts, never under-counts) until a rebuild un-shares it.
+        PlanCache {
+            slot: Arc::new(Mutex::new(
+                self.slot.lock().expect("plan cache poisoned").clone(),
+            )),
+            id: next_cache_id(),
+            budget: Mutex::new(self.budget.lock().expect("plan cache poisoned").clone()),
+        }
+    }
+}
+
+impl Drop for PlanCache {
+    fn drop(&mut self) {
+        if let Some(budget) = self.budget.lock().expect("plan cache poisoned").as_ref() {
+            budget.release(self.id);
+        }
     }
 }
 
 impl PlanCache {
+    /// Attach a shared budget; this cache's resident plan is accounted
+    /// (and evictable) from its next use on. Re-attaching to a different
+    /// budget releases this cache's entry from the previous one, so no
+    /// phantom bytes linger there.
+    pub(super) fn attach(&self, budget: Arc<PlanBudget>) {
+        let mut slot = self.budget.lock().expect("plan cache poisoned");
+        if let Some(old) = slot.as_ref() {
+            if !Arc::ptr_eq(old, &budget) {
+                old.release(self.id);
+            }
+        }
+        *slot = Some(budget);
+    }
+
+    /// The budget this cache is attached to, if any (used to carry the
+    /// attachment across layer rebuilds, e.g. a head refit).
+    pub(super) fn attached_budget(&self) -> Option<Arc<PlanBudget>> {
+        self.budget.lock().expect("plan cache poisoned").clone()
+    }
+
+    /// Report a hit/store to the attached budget, if any. Must be called
+    /// **without** the slot lock held (see the locking contract in
+    /// [`super::budget`]).
+    fn note_use(&self, bytes: usize) {
+        let budget = self.budget.lock().expect("plan cache poisoned").clone();
+        if let Some(budget) = budget {
+            budget.note_use(self.id, bytes, &self.slot);
+        }
+    }
+
     /// The plan for `engine` over `weights`: served from the cache when
     /// the cached plan matches the engine and the snapshot equals the
     /// current weight contents, (re)built and cached otherwise. The
     /// equality pass is one exact scan of `weights` — negligible next to
     /// the GEMM it guards, and collision-free (unlike a hash key).
     fn plan_for(&self, engine: &GemmEngine, weights: &MatI32) -> Result<Arc<PackedWeights>> {
-        let mut slot = self.slot.lock().expect("plan cache poisoned");
-        if let Some((snapshot, plan)) = slot.as_ref() {
-            if snapshot.as_ref() == weights && plan.compatible_with(engine) {
-                return Ok(plan.clone());
+        let plan = {
+            let mut slot = self.slot.lock().expect("plan cache poisoned");
+            let hit = match slot.as_ref() {
+                Some((snapshot, plan))
+                    if snapshot.as_ref() == weights && plan.compatible_with(engine) =>
+                {
+                    Some(plan.clone())
+                }
+                _ => None,
+            };
+            match hit {
+                Some(plan) => plan,
+                None => {
+                    let plan = Arc::new(engine.plan(weights)?);
+                    *slot = Some((Arc::new(weights.clone()), plan.clone()));
+                    plan
+                }
             }
-        }
-        let plan = Arc::new(engine.plan(weights)?);
-        *slot = Some((Arc::new(weights.clone()), plan.clone()));
+        };
+        self.note_use(plan.plane_bytes());
         Ok(plan)
     }
 }
@@ -116,6 +204,19 @@ impl DenseLayer {
     /// the cost explicit at model-construction time.
     pub fn prepare(&self, engine: &GemmEngine) -> Result<()> {
         self.plan_cache.plan_for(engine, &self.weights).map(|_| ())
+    }
+
+    /// Attach this layer's plan cache to a shared [`PlanBudget`]: its
+    /// resident [`PackedWeights`] is accounted by exact `plane_bytes`
+    /// and becomes evictable under the budget's LRU policy (an evicted
+    /// layer transparently re-plans on its next packed forward).
+    pub fn attach_budget(&self, budget: &Arc<PlanBudget>) {
+        self.plan_cache.attach(budget.clone());
+    }
+
+    /// The budget this layer's cache is attached to, if any.
+    pub(super) fn attached_budget(&self) -> Option<Arc<PlanBudget>> {
+        self.plan_cache.attached_budget()
     }
 
     /// Forward one batch through this layer.
@@ -207,6 +308,15 @@ impl QuantMlp {
             }
         }
         Ok(())
+    }
+
+    /// Attach every layer's plan cache to one shared [`PlanBudget`]
+    /// (per-model resident-plane accounting + LRU eviction; see
+    /// [`super::budget`]).
+    pub fn attach_plan_budget(&self, budget: &Arc<PlanBudget>) {
+        for layer in &self.layers {
+            layer.attach_budget(budget);
+        }
     }
 
     /// Calibrate per-layer requantization shifts on a sample batch (run

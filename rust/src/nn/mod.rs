@@ -19,7 +19,11 @@
 //!   end-to-end examples and tests.
 //! * [`NnModel`] — the model interface the serving layer hosts
 //!   ([`crate::coordinator::PackedNnBackend`] is generic over it).
+//! * [`budget`] — the per-model plan-cache memory budget: exact
+//!   `plane_bytes` accounting of every resident packed plan with LRU
+//!   eviction, so deep stacks don't pin unbounded weight planes.
 
+pub mod budget;
 pub mod conv;
 pub mod data;
 mod mlp;
@@ -27,7 +31,8 @@ pub mod quantize;
 mod snn;
 pub mod weights;
 
-pub use conv::{Conv2dLayer, ConvGeometry, MaxPool2d, QuantCnn};
+pub use budget::PlanBudget;
+pub use conv::{Conv2dLayer, ConvGeometry, ConvStage, MaxPool2d, QuantCnn, StageSpec};
 pub use mlp::{DenseLayer, ExecMode, QuantMlp};
 pub use snn::{SnnStats, SpikingDense};
 
@@ -68,8 +73,17 @@ pub trait NnModel: Send + Sync + 'static {
     }
 
     /// Quantize a float image batch into the unsigned activation range.
+    /// Ragged batches (images of differing lengths) are rejected with a
+    /// shape error — serving workers must see an `Err`, not an
+    /// out-of-bounds panic, on malformed client input.
     fn quantize_batch(&self, images: &[Vec<f32>]) -> Result<MatI32> {
         let dim = images.first().map(|i| i.len()).unwrap_or(0);
+        if let Some(bad) = images.iter().find(|i| i.len() != dim) {
+            return Err(crate::Error::Shape(format!(
+                "ragged image batch: expected {dim} features, got {}",
+                bad.len()
+            )));
+        }
         let flat: Vec<f32> = images.iter().flatten().copied().collect();
         Ok(quantize::quantize_unsigned(&flat, images.len(), dim, self.a_bits()).0)
     }

@@ -574,6 +574,41 @@ mod tests {
         }
     }
 
+    /// The row-tiled INT8 preset rides the same codec paths as every
+    /// other preset: operand words round-trip, and the fused
+    /// extract→scatter lands each of the four 16-bit results in its
+    /// `w_idx·n_a + a_idx` accumulator slot (i64 twins included).
+    #[test]
+    fn int8_tiled_roundtrip_and_scatter() {
+        let p = Packer::new(PackingConfig::int8_tiled());
+        let mut rng = Rng::new(0x8711);
+        let mut wide = vec![0i128; 4];
+        let mut narrow = vec![0i64; 4];
+        for _ in 0..500 {
+            let a = vec![rng.range_i128(0, 255), rng.range_i128(0, 255)];
+            let w = vec![rng.range_i128(-128, 127), rng.range_i128(-128, 127)];
+            let word_a = p.pack_a(&a).unwrap();
+            assert_eq!(p.unpack_a(word_a), a);
+            let word_w = p.pack_w_value_unchecked(&w);
+            assert_eq!(p.unpack_w_value(word_w), w);
+            let prod = word_a * word_w;
+            p.extract_wide_into(prod, 0, &mut wide);
+            p.extract_wide_into_i64(prod as i64, 0, &mut narrow);
+            for (x, y) in wide.iter().zip(&narrow) {
+                assert_eq!(*x as i64, *y);
+            }
+            // Fused scatter == extract-then-scatter, both widths.
+            let mut acc_fused = vec![0i64; 4];
+            let mut acc_split = vec![0i64; 4];
+            let mut acc_n = vec![0i64; 4];
+            p.extract_scatter_into(prod, 0, false, &mut acc_fused);
+            p.scatter_add(&wide, &mut acc_split);
+            p.extract_scatter_into_i64(prod as i64, 0, false, &mut acc_n);
+            assert_eq!(acc_fused, acc_split);
+            assert_eq!(acc_n, acc_fused);
+        }
+    }
+
     /// The generalized INT-N equation (Eqn. 4) holds for arbitrary
     /// generated configs with non-negative padding.
     #[test]

@@ -183,6 +183,27 @@ impl PackingConfig {
         Self::generate("xilinx-int8", 1, 8, 2, 8, 2).expect("int8 is valid")
     }
 
+    /// The **row-tiled INT8** configuration: two unsigned 8-bit
+    /// activations (e.g. two im2col patch rows of a conv batch) times two
+    /// packed signed 8-bit weights via MR-Overpacking (δ=−7, spacing 9) —
+    /// **four** INT8 multiplications per DSP where wp486's [`Self::int8`]
+    /// packs two and leaves the B port nearly idle (`n_a = 1`).
+    ///
+    /// Unlike the architecture-independent Fig. 9 configurations this
+    /// fits the DSP48E2 **strictly**: the packed a word spans 17 of the
+    /// 18 B-port bits (max 130815 < 2¹⁷), the w word is bit-identical to
+    /// the `int8` layout (26 of 27 pre-adder bits), and the four 16-bit
+    /// results end at P bit 43. The deep overlap is the near-precise
+    /// regime: with [`crate::correct::Correction::MrRestore`] the
+    /// residual per product is the below-neighbour's bleed into the
+    /// extraction window — bounded by ~2⁶ on products up to ±2¹⁵, i.e.
+    /// ≲ 0.2 % of full scale worst-case (typical error far lower;
+    /// `benches/conv_throughput.rs` measures and records the MAE in
+    /// `BENCH_conv_throughput.json`).
+    pub fn int8_tiled() -> Self {
+        Self::generate("xilinx-int8-tiled", 2, 8, 2, 8, -7).expect("int8_tiled is valid")
+    }
+
     /// The INT-N example evaluated in Fig. 9: δ=0, w = {s3@0, s3@21},
     /// a = {u4@0, u4@7, u4@14}, six 7-bit results at {0,7,14,21,28,35}.
     pub fn intn_fig9() -> Self {
@@ -336,10 +357,11 @@ impl PackingConfig {
     ///
     /// Any DSP-feasible packing passes trivially: the physical P word is
     /// 48 bits and δ is single-digit, so worst-case magnitudes sit far
-    /// below 2⁶⁰. The predicate only fails for pathological *generated*
-    /// configurations (fields placed high in the 120-bit codec words),
-    /// which keep the generic `i128` backend. The engine additionally
-    /// requires strict (DSP-routed) mode — see
+    /// below 2⁶⁰. Logical (architecture-independent) configurations
+    /// within the bound qualify too — their exact products involve no
+    /// port wrap at all. The predicate only fails for pathological
+    /// *generated* configurations (fields placed high in the 120-bit
+    /// codec words), which keep the generic `i128` backend — see
     /// [`super::PackedMultiplier::narrow_feasible`].
     ///
     /// The bound is conservative (bit-width arithmetic, not exact
@@ -440,6 +462,32 @@ mod tests {
     }
 
     #[test]
+    fn int8_tiled_is_a_strict_dsp_fit() {
+        // n_a = 2 (two patch rows) × n_w = 2 at δ=−7: spacing 9, a at
+        // {0,9}, w at {0,18} (the int8 weight layout), 16-bit results at
+        // {0,9,18,27}.
+        let c = PackingConfig::int8_tiled();
+        assert_eq!(c.delta, -7);
+        assert_eq!(c.a.iter().map(|o| o.offset).collect::<Vec<_>>(), vec![0, 9]);
+        assert_eq!(c.w.iter().map(|o| o.offset).collect::<Vec<_>>(), vec![0, 18]);
+        assert_eq!(
+            c.results.iter().map(|r| r.offset).collect::<Vec<_>>(),
+            vec![0, 9, 18, 27]
+        );
+        assert!(c.results.iter().all(|r| r.width == 16 && r.signed));
+        assert_eq!(c.num_results(), 4, "double the int8 multiplication count");
+        assert_eq!(PackingConfig::int8().num_results(), 2);
+        // Strict fit: 17/18 B-port bits, the int8 w word, P ends at 43.
+        assert_eq!(c.a_port_width(), 17);
+        assert_eq!(c.w_port_width(), PackingConfig::int8().w_port_width());
+        assert_eq!(c.p_bits_used(), 43);
+        c.fit(&DspGeometry::DSP48E2).unwrap();
+        // Overpacked: no cascade accumulation headroom.
+        assert_eq!(c.max_accumulations(), 1);
+        assert!(c.narrow_word_feasible());
+    }
+
+    #[test]
     fn rejects_overlapping_operands() {
         let a = vec![OperandSpec::unsigned(4, 0), OperandSpec::unsigned(4, 2)];
         let w = vec![OperandSpec::signed(4, 0)];
@@ -485,6 +533,7 @@ mod tests {
         for cfg in [
             PackingConfig::int4(),
             PackingConfig::int8(),
+            PackingConfig::int8_tiled(),
             PackingConfig::intn_fig9(),
             PackingConfig::overpack_fig9(),
             PackingConfig::overpack_int4(-2).unwrap(),

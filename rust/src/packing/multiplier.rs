@@ -222,15 +222,22 @@ impl PackedMultiplier {
     }
 
     /// Can this multiplier run on the **narrow (i64) execution
-    /// datapath**? Requires strict mode (the logical mode's exact wide
-    /// products are the generic fallback's job), a configuration that
-    /// satisfies [`PackingConfig::narrow_word_feasible`], and a geometry
-    /// whose P/M words leave i64 headroom (every real DSP family does).
+    /// datapath**? Requires a configuration that satisfies
+    /// [`PackingConfig::narrow_word_feasible`]; strict mode additionally
+    /// needs a geometry whose P/M words leave i64 headroom (every real
+    /// DSP family does), so that every port wrap replicates in `i64`.
+    ///
+    /// Logical (architecture-independent) multipliers qualify too: their
+    /// product is the exact `b_word · w_word + c`, whose magnitude the
+    /// narrowness predicate already bounds below 2⁶⁰ — no port wrap is
+    /// involved, so the `i64` product is bit-identical to the `i128` one
+    /// (the Fig. 9 sweep engines take this path; `tests/conformance.rs`
+    /// pins logical narrow vs wide differentially).
     pub fn narrow_feasible(&self) -> bool {
-        self.strict
-            && self.config().narrow_word_feasible()
-            && self.dsp.geometry.p_width <= 60
-            && self.dsp.geometry.m_width() <= 60
+        if !self.config().narrow_word_feasible() {
+            return false;
+        }
+        !self.strict || (self.dsp.geometry.p_width <= 60 && self.dsp.geometry.m_width() <= 60)
     }
 
     /// Accumulate `pairs.len()` packed products on a simulated DSP cascade
@@ -409,8 +416,10 @@ mod tests {
         }
     }
 
-    /// Narrow feasibility: strict engines on real configs qualify,
-    /// logical mode never does.
+    /// Narrow feasibility: strict engines on real configs qualify, and —
+    /// since the logical product needs no port wrap — logical engines on
+    /// narrow configurations do too. Only configurations whose fields
+    /// climb past bit 60 keep the wide path.
     #[test]
     fn narrow_feasibility_modes() {
         let strict =
@@ -419,7 +428,14 @@ mod tests {
         let logical =
             PackedMultiplier::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
                 .unwrap();
-        assert!(!logical.is_strict() && !logical.narrow_feasible());
+        assert!(!logical.is_strict() && logical.narrow_feasible());
+        // A generated configuration whose δ-widened accumulation bound
+        // passes bit 60 keeps the wide path even in logical mode (it
+        // still passes the relaxed port fit: one u8×s8 result at P 0..16).
+        let wide_acc = PackingConfig::generate("wide-acc", 1, 8, 1, 8, 44).unwrap();
+        assert!(!wide_acc.narrow_word_feasible());
+        let logical_wide = PackedMultiplier::logical(wide_acc, Correction::None).unwrap();
+        assert!(!logical_wide.narrow_feasible());
     }
 
     #[test]

@@ -23,6 +23,7 @@ fn presets() -> Vec<(&'static str, PackingConfig)> {
     vec![
         ("int4", PackingConfig::int4()),
         ("int8", PackingConfig::int8()),
+        ("int8_tiled", PackingConfig::int8_tiled()),
         ("intn_fig9", PackingConfig::intn_fig9()),
         ("overpack_fig9", PackingConfig::overpack_fig9()),
         ("overpack_d1", PackingConfig::overpack_int4(-1).unwrap()),
@@ -260,10 +261,10 @@ fn prop_narrow_wide_backend_differential() {
             }
         }
     }
-    // int4/int8 (4 non-MR schemes each) + the three overpack presets and
-    // precision6 (6 schemes each): every strict preset must have gone
-    // narrow.
-    assert_eq!(narrow_combos, 32, "narrow coverage regressed");
+    // int4/int8 (4 non-MR schemes each) + the three overpack presets,
+    // the row-tiled INT8 overpack and precision6 (6 schemes each): every
+    // strict preset must have gone narrow.
+    assert_eq!(narrow_combos, 38, "narrow coverage regressed");
 }
 
 /// **Exhaustive INT4 through the narrow engine**: drive every one of the
@@ -315,4 +316,60 @@ fn int4_exhaustive_narrow_engine_matches_tables() {
     }
     let mae_bar = stats.iter().map(ErrorStats::mae).sum::<f64>() / 4.0;
     assert!((mae_bar - 0.37354).abs() < 0.0001, "MAE-bar {mae_bar}");
+}
+
+/// **Fig. 9 sweep outputs pinned before/after the narrow-logical
+/// switch**: the architecture-independent Fig. 9 engines (INT-N δ=0,
+/// Overpacking δ=−2, §IX overpack6) now auto-select the narrow (`i64`)
+/// datapath; for every correction scheme that constructs, their outputs
+/// AND `DspOpStats` must equal the pinned-wide logical engine
+/// ([`GemmEngine::logical_wide`] — the pre-switch `i128` behaviour) bit
+/// for bit, so the published sweep figures are unchanged by the
+/// datapath swap. Cross-backend plans stay rejected in logical mode too.
+#[test]
+fn fig9_logical_sweeps_narrow_vs_wide_pinned() {
+    let configs = [
+        ("intn_fig9", PackingConfig::intn_fig9()),
+        ("overpack_fig9", PackingConfig::overpack_fig9()),
+        ("overpack6", PackingConfig::overpack6_int4()),
+    ];
+    let mut rng = Rng::new(0xF19);
+    let mut combos = 0;
+    for (name, cfg) in &configs {
+        for corr in Correction::ALL {
+            let Ok(narrow) = GemmEngine::logical(cfg.clone(), corr) else {
+                continue; // invalid combination (e.g. MR on δ ≥ 0)
+            };
+            combos += 1;
+            assert_eq!(
+                narrow.word_backend(),
+                WordBackend::Narrow64,
+                "{name}+{corr:?}: logical engines on narrow configs must go narrow"
+            );
+            let wide = GemmEngine::logical_wide(cfg.clone(), corr).unwrap();
+            assert_eq!(wide.word_backend(), WordBackend::Wide128);
+            let (a_lo, a_hi) = cfg.a[0].range();
+            let (w_lo, w_hi) = cfg.w[0].range();
+            for _ in 0..4 {
+                let m = 1 + rng.below(8) as usize;
+                let k = 1 + rng.below(24) as usize;
+                let n = 1 + rng.below(8) as usize;
+                let a = MatI32::random_range(m, k, a_lo as i32, a_hi as i32, &mut rng);
+                let w = MatI32::random_range(k, n, w_lo as i32, w_hi as i32, &mut rng);
+                let plan_n = narrow.plan(&w).unwrap();
+                let plan_w = wide.plan(&w).unwrap();
+                assert_eq!(plan_n.word_backend(), WordBackend::Narrow64);
+                assert_eq!(plan_w.word_backend(), WordBackend::Wide128);
+                assert_eq!(plan_n.decode(), plan_w.decode(), "{name}+{corr:?}");
+                let (cn, sn) = narrow.execute(&plan_n, &a).unwrap();
+                let (cw, sw) = wide.execute(&plan_w, &a).unwrap();
+                assert_eq!(cn, cw, "{name}+{corr:?} {m}x{k}x{n} sweep outputs");
+                assert_eq!(sn, sw, "{name}+{corr:?} {m}x{k}x{n} DspOpStats");
+                assert!(wide.execute(&plan_n, &a).is_err(), "narrow plan on wide engine");
+                assert!(narrow.execute(&plan_w, &a).is_err(), "wide plan on narrow engine");
+            }
+        }
+    }
+    // INT-N δ=0 runs 4 schemes (no MR), both overpacked configs all 6.
+    assert_eq!(combos, 16, "Fig. 9 logical coverage regressed");
 }

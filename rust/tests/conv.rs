@@ -17,7 +17,9 @@ use dsp_packing::coordinator::{
 };
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::{DspOpStats, GemmEngine, Im2col, MatI32};
-use dsp_packing::nn::{data, Conv2dLayer, ConvGeometry, ExecMode, QuantCnn};
+use dsp_packing::nn::{
+    data, Conv2dLayer, ConvGeometry, ExecMode, NnModel, PlanBudget, QuantCnn, StageSpec,
+};
 use dsp_packing::packing::PackingConfig;
 use dsp_packing::util::Rng;
 use std::sync::Arc;
@@ -163,6 +165,7 @@ fn preset_config_sweep_is_plan_execute_identical() {
     let presets: Vec<(&str, PackingConfig)> = vec![
         ("int4", PackingConfig::int4()),
         ("int8", PackingConfig::int8()),
+        ("int8_tiled", PackingConfig::int8_tiled()),
         ("intn_fig9", PackingConfig::intn_fig9()),
         ("overpack_fig9", PackingConfig::overpack_fig9()),
         ("overpack_d1", PackingConfig::overpack_int4(-1).unwrap()),
@@ -294,6 +297,131 @@ fn conv_plan_cache_invalidates_on_mutation_and_engine_swap() {
     // …and the original engine still serves correct (rebuilt) planes.
     let again = conv.forward(&x, 5, 5, &rhu, 4, &mut stats).unwrap();
     assert_eq!(again, exact);
+}
+
+/// Deep-CNN helper shared by the plan-budget tests: three conv stages +
+/// head = four plan caches on one budget.
+fn deep_cnn(ds: &data::Dataset, seed: u64) -> QuantCnn {
+    let specs = [
+        StageSpec::conv3x3(4).with_pool(2, 2).unwrap(),
+        StageSpec::conv3x3(6),
+        StageSpec::conv3x3(8).with_pool(2, 2).unwrap(),
+    ];
+    QuantCnn::deep(ds, 1, &specs, 4, 4, seed).unwrap()
+}
+
+/// Plan-budget accounting exactness: after `prepare`, the budget's
+/// resident bytes equal a hand-computed oracle — the sum of
+/// `PackedWeights::plane_bytes` over independently planned copies of
+/// every layer's weights — and serving (cache hits) never changes it.
+#[test]
+fn plan_budget_accounting_matches_plane_bytes_oracle() {
+    let ds = data::synthetic(24, 3, 64, 0.12, 61);
+    let mut cnn = deep_cnn(&ds, 7);
+    let budget = PlanBudget::unbounded();
+    cnn.attach_plan_budget(&budget);
+    assert_eq!(budget.resident_bytes(), 0, "nothing planned yet");
+
+    let engine = int4_engine();
+    let mode = ExecMode::Packed(engine.clone());
+    cnn.prepare(&mode).unwrap();
+    let mut oracle = 0usize;
+    for stage in &cnn.stages {
+        oracle += engine.plan(&stage.conv.dense.weights).unwrap().plane_bytes();
+    }
+    oracle += engine.plan(&cnn.head.weights).unwrap().plane_bytes();
+    assert!(oracle > 0);
+    assert_eq!(budget.resident_bytes(), oracle, "accounting must be byte-exact");
+    assert_eq!(budget.resident_plans(), cnn.depth() + 1);
+    assert_eq!(budget.evictions(), 0);
+
+    // Serving hits the caches; the accounting is unchanged.
+    let x = cnn.quantize_batch(&ds.images).unwrap();
+    cnn.forward(&x, &mode).unwrap();
+    assert_eq!(budget.resident_bytes(), oracle);
+    assert_eq!(budget.evictions(), 0);
+
+    // Recalibration refits the head (a brand-new DenseLayer); the budget
+    // attachment must survive the swap, so after re-preparing, the same
+    // byte-exact accounting holds (head shape — and thus bytes — is
+    // unchanged; the old head's entry is released on drop).
+    cnn.calibrate(&ds, 8).unwrap();
+    cnn.prepare(&mode).unwrap();
+    assert_eq!(budget.resident_plans(), cnn.depth() + 1);
+    assert_eq!(budget.resident_bytes(), oracle, "head swap must stay accounted");
+}
+
+/// LRU eviction order, observed through the eviction counter: hits never
+/// evict, the least-recently-used resident plan is always the victim,
+/// and an evicted layer re-plans **bit-identically** on its next use.
+#[test]
+fn plan_budget_evicts_lru_and_replans_bit_identically() {
+    let engine = int4_engine();
+    let mode = ExecMode::Packed(engine.clone());
+    let mut rng = Rng::new(0xB4D6);
+    let g = ConvGeometry::unit(3).unwrap();
+    let convs: Vec<Conv2dLayer> = (0..3)
+        .map(|_| {
+            let w = MatI32::random_range(9, 4, -8, 7, &mut rng);
+            Conv2dLayer::new(w, vec![0; 4], g, false).unwrap()
+        })
+        .collect();
+    // All three banks share a shape, so their plans cost the same bytes;
+    // the budget fits exactly two of them.
+    let per = engine.plan(&convs[0].dense.weights).unwrap().plane_bytes();
+    let budget = PlanBudget::new(2 * per);
+    for c in &convs {
+        c.attach_budget(&budget);
+    }
+    let x = MatI32::random_range(2, 25, 0, 15, &mut rng);
+    let mut stats = DspOpStats::default();
+    let mut fwd = |i: usize| convs[i].forward(&x, 5, 5, &mode, 4, &mut stats).unwrap();
+
+    let out0 = fwd(0); // plans {0}
+    let out1 = fwd(1); // plans {0,1}
+    assert_eq!(budget.resident_plans(), 2);
+    assert_eq!(budget.evictions(), 0);
+    fwd(2); // over budget: LRU victim is 0 → {1,2}
+    assert_eq!(budget.evictions(), 1);
+    assert_eq!(budget.resident_plans(), 2);
+    assert_eq!(budget.resident_bytes(), 2 * per);
+    let again1 = fwd(1); // hit: no eviction, bumps 1's recency → LRU is 2
+    assert_eq!(budget.evictions(), 1, "cache hits never evict");
+    assert_eq!(again1, out1);
+    let again0 = fwd(0); // miss (evicted): re-plan, victim is 2 → {1,0}
+    assert_eq!(budget.evictions(), 2);
+    assert_eq!(again0, out0, "re-planned-after-eviction output is bit-identical");
+    fwd(2); // miss: victim is the now-LRU 1 → {0,2}
+    assert_eq!(budget.evictions(), 3);
+    let again0b = fwd(0); // hit again: 0 stayed resident through 2's re-plan
+    assert_eq!(budget.evictions(), 3, "most-recently-used plan survived");
+    assert_eq!(again0b, out0);
+    assert_eq!(budget.resident_plans(), 2);
+}
+
+/// A deep CNN under a budget that can hold only one plan thrashes
+/// (every layer evicts its predecessor) yet stays bit-identical to the
+/// unbudgeted run — outputs *and* `DspOpStats` (planning is off the DSP
+/// books) — across repeated forwards.
+#[test]
+fn deep_cnn_under_tight_budget_is_bit_identical() {
+    let ds = data::synthetic(24, 3, 64, 0.12, 67);
+    let cnn = deep_cnn(&ds, 11);
+    let mode = ExecMode::Packed(int4_engine());
+    let x = cnn.quantize_batch(&ds.images).unwrap();
+    let (unbudgeted, s0) = cnn.forward(&x, &mode).unwrap();
+
+    // One-plan budget: every store exceeds it, evicting all others.
+    let budget = PlanBudget::new(1);
+    cnn.attach_plan_budget(&budget);
+    let (tight, s1) = cnn.forward(&x, &mode).unwrap();
+    assert_eq!(unbudgeted, tight, "eviction-forced re-planning is bit-identical");
+    assert_eq!(s0, s1, "planning cost never touches the DSP counters");
+    assert!(budget.evictions() > 0, "the tight budget must actually evict");
+    assert_eq!(budget.resident_plans(), 1, "only the most recent plan stays");
+    let (tight2, s2) = cnn.forward(&x, &mode).unwrap();
+    assert_eq!(tight, tight2);
+    assert_eq!(s1, s2);
 }
 
 /// The coordinator serves the CNN backend end to end: batched predictions

@@ -1,0 +1,243 @@
+//! Randomized differential fuzz battery: seeded random **DSP-feasible**
+//! packing configurations × random GEMM/conv shapes, every case checked
+//! three ways against independent references:
+//!
+//! * **narrow vs wide**: the auto-selected (`i64`) engine and the
+//!   pinned-wide (`i128`) engine must agree **bit for bit** — outputs
+//!   *and* [`DspOpStats`] — through both `plan`/`execute` and `matmul`;
+//! * **plan/execute vs matmul**: the two entry points must be
+//!   bit-identical (the weights-resident serving contract);
+//! * **exact oracle**: full round-half-up with δ ≥ 0 must equal the
+//!   exact `i32` reference everywhere (§V-A); every scheme must respect
+//!   the hard per-element bound `|err| < K·2^width` (each extracted
+//!   per-product field and its exact value both live in the field's
+//!   signed range); and the MR-Overpacking family must additionally meet
+//!   the provable near-precise bound in the wrap-free regime: the
+//!   residual per product is the below-neighbour's bleed into the
+//!   extraction window, `|e| ≤ 2^(|δ|−1) + 7` (bleed + lower-field floor
+//!   carries + the optional borrow fix), so `|err| ≤ K·e_max` whenever
+//!   `e_max` fits the product's `2^(w_width−1)` range headroom (no
+//!   two's-complement wrap possible).
+//!
+//! Every case derives from a printed seed: on failure the assert message
+//! carries the case seed, the harness writes it to `FUZZ_FAILURES.txt`
+//! (uploaded as a CI artifact by the scheduled exhaustive job), and
+//! `DSP_PACKING_FUZZ_CASE_SEED=<seed> cargo test fuzz` replays exactly
+//! that case. `DSP_PACKING_FUZZ_SEED` re-seeds the whole battery and
+//! `DSP_PACKING_FUZZ_CASES` scales the budget (the `--ignored`
+//! exhaustive variant defaults much higher and runs on a CI cron).
+
+use dsp_packing::correct::Correction;
+use dsp_packing::dsp48::DspGeometry;
+use dsp_packing::gemm::{DspOpStats, GemmEngine, MatI32, WordBackend};
+use dsp_packing::nn::{Conv2dLayer, ConvGeometry, ExecMode};
+use dsp_packing::packing::PackingConfig;
+use dsp_packing::util::Rng;
+
+const DEFAULT_SEED: u64 = 0xD5B0_F022_2203_1102;
+
+fn parse_u64(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if let Some(hex) = s.strip_prefix("0x") {
+        u64::from_str_radix(hex, 16).ok()
+    } else {
+        s.parse().ok()
+    }
+}
+
+fn env_u64(key: &str) -> Option<u64> {
+    parse_u64(&std::env::var(key).ok()?)
+}
+
+/// Draw a random packing configuration that fits the DSP48E2 strictly,
+/// plus a correction scheme valid for it.
+fn draw_feasible(rng: &mut Rng) -> (PackingConfig, Correction) {
+    loop {
+        let n_a = rng.range_i64(1, 3) as usize;
+        let n_w = rng.range_i64(1, 2) as usize;
+        let aw = rng.range_i64(2, 8) as u32;
+        let ww = rng.range_i64(2, 8) as u32;
+        let delta = rng.range_i64(-3, 3) as i32;
+        if (aw + ww) as i32 + delta <= 0 {
+            continue;
+        }
+        let Ok(cfg) = PackingConfig::generate("fuzz", n_a, aw, n_w, ww, delta) else {
+            continue;
+        };
+        if cfg.fit(&DspGeometry::DSP48E2).is_err() {
+            continue;
+        }
+        let corr = Correction::ALL[rng.below(Correction::ALL.len() as u64) as usize];
+        if corr.requires_overpacking() && delta >= 0 {
+            continue;
+        }
+        return (cfg, corr);
+    }
+}
+
+/// One fuzz case: config + correction + shapes all derived from `seed`.
+fn run_case(seed: u64) {
+    let mut rng = Rng::new(seed);
+    let (cfg, corr) = draw_feasible(&mut rng);
+    let ctx = format!(
+        "DSP_PACKING_FUZZ_CASE_SEED={seed:#018x} [{}x u{} · {}x s{} δ={} {corr:?}]",
+        cfg.a.len(),
+        cfg.a[0].width,
+        cfg.w.len(),
+        cfg.w[0].width,
+        cfg.delta,
+    );
+
+    let auto = GemmEngine::new(cfg.clone(), corr).expect("feasible combo constructs");
+    let wide = GemmEngine::new_wide(cfg.clone(), corr).expect("wide twin constructs");
+    // Every DSP-feasible configuration is narrow-feasible (the P word is
+    // 48 bits); the differential below is only meaningful if it is.
+    assert_eq!(auto.word_backend(), WordBackend::Narrow64, "{ctx}: backend selection");
+    assert_eq!(wide.word_backend(), WordBackend::Wide128, "{ctx}");
+
+    let (a_lo, a_hi) = cfg.a[0].range();
+    let (w_lo, w_hi) = cfg.w[0].range();
+    let m = 1 + rng.below(6) as usize;
+    let k = 1 + rng.below(24) as usize;
+    let n = 1 + rng.below(6) as usize;
+    let a = MatI32::random_range(m, k, a_lo as i32, a_hi as i32, &mut rng);
+    let w = MatI32::random_range(k, n, w_lo as i32, w_hi as i32, &mut rng);
+
+    // Narrow vs wide, through plans: outputs and counters bit-identical.
+    let plan_n = auto.plan(&w).unwrap();
+    let plan_w = wide.plan(&w).unwrap();
+    assert_eq!(plan_n.decode(), w, "{ctx}: narrow plan decodes to W");
+    assert_eq!(plan_w.decode(), w, "{ctx}: wide plan decodes to W");
+    let (cn, sn) = auto.execute(&plan_n, &a).unwrap();
+    let (cw, sw) = wide.execute(&plan_w, &a).unwrap();
+    assert_eq!(cn, cw, "{ctx}: narrow/wide outputs {m}x{k}x{n}");
+    assert_eq!(sn, sw, "{ctx}: narrow/wide DspOpStats {m}x{k}x{n}");
+
+    // Plan/execute vs the one-shot matmul: bit-identical entry points.
+    let (cm, sm) = auto.matmul(&a, &w).unwrap();
+    assert_eq!(cm, cn, "{ctx}: matmul == plan/execute");
+    assert_eq!(sm, sn, "{ctx}: matmul DspOpStats");
+
+    // Exact-oracle tier.
+    let exact = a.matmul_exact(&w).unwrap();
+    if corr == Correction::FullRoundHalfUp && cfg.delta >= 0 {
+        assert_eq!(cn, exact, "{ctx}: RHU must be exact for δ ≥ 0");
+    }
+    // Hard per-element bound, every scheme: each per-product extracted
+    // field and its exact product both lie in the field's signed range,
+    // so K accumulated products differ by strictly less than K·2^width.
+    let width = cfg.results[0].width;
+    let hard = (k as i128) << width;
+    for r in 0..m {
+        for c in 0..n {
+            let err = (cn.get(r, c) as i128 - exact.get(r, c) as i128).abs();
+            assert!(err < hard, "{ctx}: |err| {err} breaks the hard bound {hard}");
+        }
+    }
+    // Near-precise tier: the MR restore leaves only the below-neighbour
+    // bleed; in the wrap-free regime that bound is provable, not
+    // statistical (see the module docs), and it also bounds the MAE.
+    if matches!(corr, Correction::MrRestore | Correction::MrRestorePlusCPort) {
+        let overlap = (-cfg.delta) as u32; // δ < 0 for the MR family
+        let e_max = (1i128 << (overlap - 1)) + 7;
+        if e_max <= 1i128 << (cfg.w[0].width - 1) {
+            // Per-element bound; it implies the MAE bound a fortiori.
+            let bound = k as i128 * e_max;
+            for r in 0..m {
+                for c in 0..n {
+                    let err = (cn.get(r, c) as i128 - exact.get(r, c) as i128).abs();
+                    assert!(
+                        err <= bound,
+                        "{ctx}: MR residual {err} breaks the bound {bound} (K={k})"
+                    );
+                }
+            }
+        }
+    }
+
+    // Conv lowering tier (a deterministic ~quarter of the cases): the
+    // im2col-lowered conv layer must be narrow/wide bit-identical and
+    // exact-oracle-equal under exact corrections, stats included.
+    if rng.chance(0.25) {
+        let ch = 1 + rng.below(2) as usize;
+        let h = 3 + rng.below(4) as usize;
+        let wimg = 3 + rng.below(4) as usize;
+        let kk = 1 + rng.below(3) as usize;
+        let st = 1 + rng.below(2) as usize;
+        let pp = rng.below(2) as usize;
+        if h + 2 * pp >= kk && wimg + 2 * pp >= kk {
+            let geometry = ConvGeometry::new(ch, kk, st, pp).unwrap();
+            let filters = 2 + rng.below(3) as usize;
+            let x = MatI32::random_range(2, ch * h * wimg, a_lo as i32, a_hi as i32, &mut rng);
+            let wq = MatI32::random_range(
+                geometry.patch_len(),
+                filters,
+                w_lo as i32,
+                w_hi as i32,
+                &mut rng,
+            );
+            let bias: Vec<i32> = (0..filters).map(|_| rng.range_i64(-10, 10) as i32).collect();
+            let conv = Conv2dLayer::new(wq, bias, geometry, false).unwrap();
+            let mut s_n = DspOpStats::default();
+            let mut s_w = DspOpStats::default();
+            let a_bits = cfg.a[0].width;
+            let out_n = conv
+                .forward(&x, h, wimg, &ExecMode::Packed(auto.clone()), a_bits, &mut s_n)
+                .unwrap();
+            let out_w = conv
+                .forward(&x, h, wimg, &ExecMode::Packed(wide.clone()), a_bits, &mut s_w)
+                .unwrap();
+            assert_eq!(out_n, out_w, "{ctx}: conv narrow/wide outputs");
+            assert_eq!(s_n, s_w, "{ctx}: conv narrow/wide DspOpStats");
+            if corr == Correction::FullRoundHalfUp && cfg.delta >= 0 {
+                let mut s_e = DspOpStats::default();
+                let out_e = conv
+                    .forward(&x, h, wimg, &ExecMode::Exact, a_bits, &mut s_e)
+                    .unwrap();
+                assert_eq!(out_n, out_e, "{ctx}: conv RHU must equal the exact path");
+            }
+        }
+    }
+}
+
+/// Drive `cases` seeded cases; on a failure, persist the reproducer seed
+/// to `FUZZ_FAILURES.txt` (CI uploads it) and re-raise the panic.
+fn fuzz(cases: u64, base_seed: u64) {
+    if let Some(case_seed) = env_u64("DSP_PACKING_FUZZ_CASE_SEED") {
+        // Single-case replay of a recorded failure seed.
+        run_case(case_seed);
+        return;
+    }
+    for i in 0..cases {
+        let seed = Rng::new(base_seed ^ i.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64();
+        let outcome = std::panic::catch_unwind(|| run_case(seed));
+        if let Err(payload) = outcome {
+            let line = format!(
+                "DSP_PACKING_FUZZ_CASE_SEED={seed:#018x} \
+                 (base seed {base_seed:#018x}, case {i} of {cases})\n"
+            );
+            eprintln!("fuzz failure reproducer: {line}");
+            let _ = std::fs::write("FUZZ_FAILURES.txt", &line);
+            std::panic::resume_unwind(payload);
+        }
+    }
+}
+
+/// The default battery: ~1k seeded cases on every `cargo test` run.
+#[test]
+fn fuzz_differential_battery() {
+    let base = env_u64("DSP_PACKING_FUZZ_SEED").unwrap_or(DEFAULT_SEED);
+    let cases = env_u64("DSP_PACKING_FUZZ_CASES").unwrap_or(1000);
+    fuzz(cases, base);
+}
+
+/// The exhaustive battery for the scheduled CI job: a much larger case
+/// budget (override with `DSP_PACKING_FUZZ_CASES`) over a shifted base
+/// seed, so the cron run explores different cases than the per-push run.
+#[test]
+#[ignore = "large case budget; run by the scheduled CI job or `cargo test -- --ignored`"]
+fn fuzz_differential_battery_exhaustive() {
+    let base = env_u64("DSP_PACKING_FUZZ_SEED").unwrap_or(DEFAULT_SEED ^ 0xEC5A_11DB);
+    let cases = env_u64("DSP_PACKING_FUZZ_CASES").unwrap_or(20_000);
+    fuzz(cases, base);
+}

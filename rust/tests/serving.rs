@@ -1,14 +1,18 @@
 //! Coordinator concurrency conformance: many producers, one shared
 //! weights-resident backend — every request answered exactly once, with
 //! the class the exact reference assigns, at reproducible DSP cost.
+//! Covers the plain packed backend (MLP) and the adaptive
+//! precision-routing backend serving a deep CNN across two fabrics.
 
 use dsp_packing::coordinator::{
-    BatcherConfig, Coordinator, InferenceBackend, PackedNnBackend, Request, ServerConfig,
+    AdaptiveBackend, BatcherConfig, BudgetChannelPolicy, Coordinator, InferenceBackend,
+    PackedNnBackend, PrecisionClass, PrecisionPolicy, Request, ServerConfig,
 };
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::GemmEngine;
-use dsp_packing::nn::{data, ExecMode, QuantMlp};
+use dsp_packing::nn::{data, ExecMode, NnModel, QuantCnn, QuantMlp, StageSpec};
 use dsp_packing::packing::PackingConfig;
+use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -120,4 +124,167 @@ fn repeated_identical_batches_consume_identical_dsp_cycles() {
     assert_eq!(stats_2.dsp_cycles, stats_3.dsp_cycles);
     assert_eq!(stats_1, stats_2, "all DSP counters identical, not just cycles");
     assert_eq!(stats_2, stats_3);
+}
+
+// --- adaptive precision routing over the deep CNN ----------------------
+
+/// A 3-conv-stage CNN behind the adaptive router: exact requests run the
+/// INT4-corrected fabric, approximate requests the MR-Overpacking fabric,
+/// with the error budget carried in an appended metadata channel.
+fn adaptive_cnn_backend(ds: &data::Dataset) -> Arc<AdaptiveBackend<BudgetChannelPolicy, QuantCnn>> {
+    let specs = [
+        StageSpec::conv3x3(4).with_pool(2, 2).unwrap(),
+        StageSpec::conv3x3(6),
+        StageSpec::conv3x3(8).with_pool(2, 2).unwrap(),
+    ];
+    let cnn = QuantCnn::deep(ds, 1, &specs, 4, 4, 17).unwrap();
+    let exact = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    let dense =
+        GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap();
+    Arc::new(AdaptiveBackend::new(
+        cnn,
+        ExecMode::Packed(exact),
+        ExecMode::Packed(dense),
+        BudgetChannelPolicy { threshold: 0.5 },
+        true,
+    ))
+}
+
+fn with_budget(img: &[f32], budget: f32) -> Vec<f32> {
+    let mut v = img.to_vec();
+    v.push(budget);
+    v
+}
+
+/// N producers hammer the coordinator over the adaptive CNN backend:
+/// every request is answered exactly once, and every request is routed
+/// to exactly one fabric (the routing counters add up to the request
+/// count, split deterministically by the budget channel).
+#[test]
+fn adaptive_cnn_concurrent_producers_exactly_once() {
+    let ds = data::synthetic(64, 3, 64, 0.12, 19);
+    let backend = adaptive_cnn_backend(&ds);
+    assert_eq!(backend.name(), "cnn:adaptive");
+    let coord = Coordinator::start(
+        backend.clone(),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 4096,
+            },
+            workers: 4,
+            dsp_budget: 64,
+        },
+    );
+    let handle = coord.handle();
+    let n_producers = 6u64;
+    let per_producer = 16u64;
+    let mut producers = Vec::new();
+    for p in 0..n_producers {
+        let handle = handle.clone();
+        let images = ds.images.clone();
+        producers.push(std::thread::spawn(move || {
+            let mut ids = Vec::new();
+            for i in 0..per_producer {
+                let global = p * per_producer + i;
+                let idx = (global % images.len() as u64) as usize;
+                // Alternate the error budget so both fabrics stay busy.
+                let img = with_budget(&images[idx], (global % 2) as f32);
+                let pred = handle
+                    .infer(Request { id: global, image: img })
+                    .expect("adaptive serving must not drop well-formed requests");
+                assert_eq!(pred.id, global, "response routed to its own request");
+                ids.push(pred.id);
+            }
+            ids
+        }));
+    }
+    let mut all_ids: Vec<u64> = Vec::new();
+    for pr in producers {
+        all_ids.extend(pr.join().unwrap());
+    }
+    all_ids.sort_unstable();
+    all_ids.dedup();
+    let total = n_producers * per_producer;
+    assert_eq!(all_ids.len(), total as usize, "every request answered exactly once");
+
+    let m = coord.shutdown();
+    assert_eq!(m.completed, total);
+    assert_eq!(m.rejected, 0);
+    // Exactly-once routing: the fabric counters partition the requests.
+    let exact_n = backend.exact_routed.load(Ordering::Relaxed);
+    let dense_n = backend.dense_routed.load(Ordering::Relaxed);
+    assert_eq!(exact_n + dense_n, total);
+    assert_eq!(exact_n, total / 2, "even budgets route exact");
+    assert_eq!(dense_n, total / 2, "odd budgets route dense");
+}
+
+/// With all-exact budgets, the adaptive backend's served classes are
+/// **bit-identical** to the exact reference — the INT4 + full-correction
+/// fabric reproduces exact logits, so agreement is equality, not
+/// tolerance, through all three conv stages and the head.
+#[test]
+fn adaptive_cnn_exact_route_is_bit_identical_to_exact_backend() {
+    let ds = data::synthetic(32, 3, 64, 0.12, 23);
+    let backend = adaptive_cnn_backend(&ds);
+    let batch: Vec<Vec<f32>> = ds.images.iter().map(|img| with_budget(img, 0.0)).collect();
+    let (preds, stats) = backend.infer(&batch).unwrap();
+    let (exact_preds, _) = backend
+        .exact_model()
+        .classify_images(&ds.images, &ExecMode::Exact)
+        .unwrap();
+    assert_eq!(preds, exact_preds, "packed classes equal exact classes bit for bit");
+    assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 0);
+    assert!((stats.utilization() - 4.0).abs() < 0.01, "pure int4 fabric: 4 mults/cycle");
+}
+
+/// Precision-class boundary cases: the threshold itself stays exact
+/// (routing is strictly-greater), budgets just above it go dense, and a
+/// missing budget channel defaults to exact.
+#[test]
+fn precision_class_boundary_cases() {
+    let policy = BudgetChannelPolicy { threshold: 0.5 };
+    assert_eq!(policy.classify(&[0.3, 0.5]), PrecisionClass::Exact);
+    assert_eq!(policy.classify(&[0.3, 0.5001]), PrecisionClass::Approximate);
+    assert_eq!(policy.classify(&[0.3, -1.0]), PrecisionClass::Exact);
+    assert_eq!(policy.classify(&[]), PrecisionClass::Exact, "no channel defaults exact");
+
+    // Through the backend: a batch pinned exactly at the threshold is
+    // all-exact; epsilon above is all-dense.
+    let ds = data::synthetic(8, 3, 64, 0.12, 41);
+    let backend = adaptive_cnn_backend(&ds);
+    let at: Vec<Vec<f32>> = ds.images.iter().map(|img| with_budget(img, 0.5)).collect();
+    backend.infer(&at).unwrap();
+    assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 0);
+    assert_eq!(backend.exact_routed.load(Ordering::Relaxed), 8);
+    let above: Vec<Vec<f32>> = ds.images.iter().map(|img| with_budget(img, 0.6)).collect();
+    backend.infer(&above).unwrap();
+    assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 8);
+}
+
+/// Repeated identical adaptive batches consume identical DSP work: both
+/// fabric replicas serve resident plans, so `dsp_cycles` (and every
+/// other counter) is deterministic across runs, with mixed utilization
+/// between the two fabrics' densities.
+#[test]
+fn adaptive_cnn_dsp_cycles_reproducible() {
+    let ds = data::synthetic(24, 3, 64, 0.12, 29);
+    let backend = adaptive_cnn_backend(&ds);
+    let batch: Vec<Vec<f32>> = ds
+        .images
+        .iter()
+        .enumerate()
+        .map(|(i, img)| with_budget(img, (i % 2) as f32))
+        .collect();
+    let (p1, s1) = backend.infer(&batch).unwrap();
+    let (p2, s2) = backend.infer(&batch).unwrap();
+    let (p3, s3) = backend.infer(&batch).unwrap();
+    assert_eq!(p1, p2);
+    assert_eq!(p2, p3);
+    assert_eq!(s1.dsp_cycles, s2.dsp_cycles, "resident plans: no DSP-cost drift");
+    assert_eq!(s1, s2, "all counters identical, not just cycles");
+    assert_eq!(s2, s3);
+    // Mixed routing: utilization sits between int4 (4) and overpack6 (6).
+    assert!(s1.utilization() > 4.0 && s1.utilization() < 6.0, "{}", s1.utilization());
 }
