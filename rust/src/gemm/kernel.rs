@@ -1,0 +1,276 @@
+//! The GEMM kernel layer: cache-blocked tile schedules and explicitly
+//! unrolled inner loops for the execute phase.
+//!
+//! ## Blocking (why tile order matters)
+//!
+//! An output tile `(rt, ct)` streams two operand planes: the row tile's
+//! packed activation plane (shared by every column tile of that row) and
+//! the column tile's weight-plane **stripe** (`k_dim` words per plane
+//! kind, shared by every row tile of that column). The naive row-major
+//! schedule revisits each stripe once per row tile with every *other*
+//! stripe streamed in between — on large GEMMs the stripe set outgrows
+//! L2 and each revisit comes from L3/DRAM. The blocked schedule groups
+//! column tiles into **macro blocks** sized by a small cache model
+//! ([`crate::gemm::GemmPlan::col_block_for`]) so one block's stripes fit
+//! the stripe budget, then sweeps all row tiles against the resident
+//! block (block-column outer loop). Worker chunks are aligned to whole
+//! column sweeps (`crate::util::parallel_map_with_aligned`), giving each
+//! worker stripe affinity: it re-reads a stripe from its own cache, not
+//! from memory.
+//!
+//! ## Unrolling (why the inner loop is written out)
+//!
+//! The cascade hot loop is a dot product of packed words. A scalar
+//! `p += plane[k] * stripe[k]` chains every add through one accumulator;
+//! the [`dot4_i64`]/[`dot4_i128`] kernels run **four independent
+//! accumulators** over `chunks_exact(4)` so LLVM reliably emits vector
+//! multiply-accumulates (AVX2/NEON) on stable Rust — no `std::simd`, no
+//! intrinsics. Integer addition is associative, so the re-association is
+//! bit-identical to the scalar sum (the conformance and fuzz batteries
+//! pin this against [`crate::gemm::KernelMode::Reference`]). The
+//! per-product path gets the same treatment: four independent P words
+//! per iteration ([`per_product_fused_i64`] / [`per_product_fused_i128`]),
+//! with drain boundaries untouched — every P word, [`DspOpStats`] counter
+//! and correction path is exactly the reference's.
+//!
+//! [`DspOpStats`]: crate::gemm::DspOpStats
+
+use crate::packing::{PackedMultiplier, Packer};
+
+/// Default stripe budget of the blocking cache model: the bytes of
+/// weight-plane stripes one macro block may pin, sized to sit well
+/// inside a typical per-core L2 (256 KiB leaves room for the activation
+/// plane, the accumulators and the other hyperthread). Overridable per
+/// engine via [`crate::gemm::GemmEngine::with_stripe_budget`].
+pub(super) const STRIPE_L2_BUDGET: usize = 256 * 1024;
+
+/// Row-major tile order — the reference (pre-blocking) schedule: all
+/// column tiles of row tile 0, then row tile 1, …
+pub(super) fn row_major_tile_order(row_tiles: usize, col_tiles: usize) -> Vec<(usize, usize)> {
+    let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
+    for rt in 0..row_tiles {
+        for ct in 0..col_tiles {
+            tiles.push((rt, ct));
+        }
+    }
+    tiles
+}
+
+/// Block-column tile order: column tiles are grouped into macro blocks
+/// of `col_block`, and within each block every row tile sweeps the
+/// block's columns before the next block starts. Returns the tile list
+/// plus the sweep length (the chunk-alignment unit for stripe-affine
+/// scheduling). Full blocks span `row_tiles · col_block` tiles — a
+/// multiple of the alignment — so chunk boundaries stay sweep-aligned
+/// through every full block; only the (at most one) trailing partial
+/// block has shorter sweeps that a chunk boundary can split, a bounded
+/// tail effect on cache affinity, never on results. When a **single
+/// block** covers every column tile the order degenerates to row-major
+/// and the returned alignment is 1: with nothing to keep resident
+/// per-block, sweep alignment would only coarsen worker chunks (it
+/// could serialize a batch-1 execute outright). Covers exactly the
+/// same `(rt, ct)` set as [`row_major_tile_order`] — only the order
+/// differs, which the assembly phase is insensitive to (tiles own
+/// disjoint output blocks).
+pub(super) fn blocked_tile_order(
+    row_tiles: usize,
+    col_tiles: usize,
+    col_block: usize,
+) -> (Vec<(usize, usize)>, usize) {
+    let cb = col_block.clamp(1, col_tiles.max(1));
+    let mut tiles = Vec::with_capacity(row_tiles * col_tiles);
+    let mut c0 = 0;
+    while c0 < col_tiles {
+        let c1 = (c0 + cb).min(col_tiles);
+        for rt in 0..row_tiles {
+            for ct in c0..c1 {
+                tiles.push((rt, ct));
+            }
+        }
+        c0 = c1;
+    }
+    let align = if cb >= col_tiles { 1 } else { cb };
+    (tiles, align)
+}
+
+/// 4-wide multi-accumulator dot product over `i64` words (the narrow
+/// cascade kernel). Bit-identical to the scalar left-to-right sum:
+/// two's-complement addition is associative and commutative, and the
+/// narrowness predicate bounds every partial sum below overflow.
+#[inline]
+pub(super) fn dot4_i64(x: &[i64], y: &[i64]) -> i64 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xc = x.chunks_exact(4);
+    let mut yc = y.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0i64, 0i64, 0i64, 0i64);
+    for (p, q) in (&mut xc).zip(&mut yc) {
+        a0 += p[0] * q[0];
+        a1 += p[1] * q[1];
+        a2 += p[2] * q[2];
+        a3 += p[3] * q[3];
+    }
+    let mut tail = 0i64;
+    for (p, q) in xc.remainder().iter().zip(yc.remainder()) {
+        tail += p * q;
+    }
+    a0 + a1 + a2 + a3 + tail
+}
+
+/// [`dot4_i64`] twin on `i128` words (the wide cascade kernel).
+#[inline]
+pub(super) fn dot4_i128(x: &[i128], y: &[i128]) -> i128 {
+    debug_assert_eq!(x.len(), y.len());
+    let mut xc = x.chunks_exact(4);
+    let mut yc = y.chunks_exact(4);
+    let (mut a0, mut a1, mut a2, mut a3) = (0i128, 0i128, 0i128, 0i128);
+    for (p, q) in (&mut xc).zip(&mut yc) {
+        a0 += p[0] * q[0];
+        a1 += p[1] * q[1];
+        a2 += p[2] * q[2];
+        a3 += p[3] * q[3];
+    }
+    let mut tail = 0i128;
+    for (p, q) in xc.remainder().iter().zip(yc.remainder()) {
+        tail += p * q;
+    }
+    a0 + a1 + a2 + a3 + tail
+}
+
+/// Unrolled fused per-product tile loop (narrow): four independent P
+/// words per iteration over a prepacked activation plane (`bplane`), the
+/// weight-word stripe and the optional C-word stripe (empty ⇒ zeros),
+/// each extracted straight into the tile accumulators. Drain order is
+/// the reference's (k ascending), so the accumulator updates are
+/// identical term by term.
+#[inline]
+pub(super) fn per_product_fused_i64(
+    mul: &PackedMultiplier,
+    packer: &Packer,
+    bplane: &[i64],
+    stripe: &[i64],
+    c_stripe: &[i64],
+    rhu: bool,
+    acc: &mut [i64],
+) {
+    debug_assert_eq!(bplane.len(), stripe.len());
+    let k_dim = stripe.len();
+    let mut k = 0;
+    while k + 4 <= k_dim {
+        let c0 = c_stripe.get(k).copied().unwrap_or(0);
+        let c1 = c_stripe.get(k + 1).copied().unwrap_or(0);
+        let c2 = c_stripe.get(k + 2).copied().unwrap_or(0);
+        let c3 = c_stripe.get(k + 3).copied().unwrap_or(0);
+        let p0 = mul.p_word_prepacked_i64(bplane[k], stripe[k], c0);
+        let p1 = mul.p_word_prepacked_i64(bplane[k + 1], stripe[k + 1], c1);
+        let p2 = mul.p_word_prepacked_i64(bplane[k + 2], stripe[k + 2], c2);
+        let p3 = mul.p_word_prepacked_i64(bplane[k + 3], stripe[k + 3], c3);
+        packer.extract_scatter_into_i64(p0, 0, rhu, acc);
+        packer.extract_scatter_into_i64(p1, 0, rhu, acc);
+        packer.extract_scatter_into_i64(p2, 0, rhu, acc);
+        packer.extract_scatter_into_i64(p3, 0, rhu, acc);
+        k += 4;
+    }
+    while k < k_dim {
+        let c = c_stripe.get(k).copied().unwrap_or(0);
+        let p = mul.p_word_prepacked_i64(bplane[k], stripe[k], c);
+        packer.extract_scatter_into_i64(p, 0, rhu, acc);
+        k += 1;
+    }
+}
+
+/// [`per_product_fused_i64`] twin on `i128` words (the wide backend).
+#[inline]
+pub(super) fn per_product_fused_i128(
+    mul: &PackedMultiplier,
+    packer: &Packer,
+    bplane: &[i128],
+    stripe: &[i128],
+    c_stripe: &[i128],
+    rhu: bool,
+    acc: &mut [i64],
+) {
+    debug_assert_eq!(bplane.len(), stripe.len());
+    let k_dim = stripe.len();
+    let mut k = 0;
+    while k + 4 <= k_dim {
+        let c0 = c_stripe.get(k).copied().unwrap_or(0);
+        let c1 = c_stripe.get(k + 1).copied().unwrap_or(0);
+        let c2 = c_stripe.get(k + 2).copied().unwrap_or(0);
+        let c3 = c_stripe.get(k + 3).copied().unwrap_or(0);
+        let p0 = mul.p_word_prepacked(bplane[k], stripe[k], c0);
+        let p1 = mul.p_word_prepacked(bplane[k + 1], stripe[k + 1], c1);
+        let p2 = mul.p_word_prepacked(bplane[k + 2], stripe[k + 2], c2);
+        let p3 = mul.p_word_prepacked(bplane[k + 3], stripe[k + 3], c3);
+        packer.extract_scatter_into(p0, 0, rhu, acc);
+        packer.extract_scatter_into(p1, 0, rhu, acc);
+        packer.extract_scatter_into(p2, 0, rhu, acc);
+        packer.extract_scatter_into(p3, 0, rhu, acc);
+        k += 4;
+    }
+    while k < k_dim {
+        let c = c_stripe.get(k).copied().unwrap_or(0);
+        let p = mul.p_word_prepacked(bplane[k], stripe[k], c);
+        packer.extract_scatter_into(p, 0, rhu, acc);
+        k += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn dot4_matches_scalar_reference() {
+        let mut rng = Rng::new(0xD074);
+        for len in [0usize, 1, 3, 4, 5, 7, 8, 17, 64, 129] {
+            let x: Vec<i64> = (0..len).map(|_| rng.range_i64(-1 << 20, 1 << 20)).collect();
+            let y: Vec<i64> = (0..len).map(|_| rng.range_i64(-1 << 20, 1 << 20)).collect();
+            let scalar: i64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+            assert_eq!(dot4_i64(&x, &y), scalar, "len {len}");
+            let xw: Vec<i128> = x.iter().map(|&v| v as i128).collect();
+            let yw: Vec<i128> = y.iter().map(|&v| v as i128).collect();
+            assert_eq!(dot4_i128(&xw, &yw), scalar as i128, "len {len} wide");
+        }
+    }
+
+    #[test]
+    fn blocked_order_covers_all_tiles_exactly_once() {
+        let cases = [(4usize, 7usize, 3usize), (1, 5, 2), (6, 1, 4), (3, 8, 8), (2, 6, 1)];
+        for (rts, cts, cb) in cases {
+            let (tiles, align) = blocked_tile_order(rts, cts, cb);
+            assert_eq!(tiles.len(), rts * cts);
+            let cbc = cb.clamp(1, cts.max(1));
+            // Sweep alignment only when there is more than one block.
+            assert_eq!(align, if cbc >= cts { 1 } else { cbc }, "{rts}x{cts}/{cb}");
+            let mut sorted = tiles.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, row_major_tile_order(rts, cts), "{rts}x{cts}/{cb}");
+        }
+    }
+
+    #[test]
+    fn blocked_order_reduces_to_row_major_when_one_block_suffices() {
+        // A single macro block degenerates to the row-major order and
+        // plain (align = 1) chunking — blocking has nothing to pin, so
+        // it must not coarsen worker chunks.
+        let (tiles, align) = blocked_tile_order(3, 4, 4);
+        assert_eq!(tiles, row_major_tile_order(3, 4));
+        assert_eq!(align, 1);
+        // Oversized block counts clamp to the column-tile count.
+        let (tiles, align) = blocked_tile_order(3, 4, 100);
+        assert_eq!(tiles, row_major_tile_order(3, 4));
+        assert_eq!(align, 1);
+    }
+
+    #[test]
+    fn blocked_order_sweeps_each_block_before_the_next() {
+        // 2 row tiles, 5 column tiles, blocks of 2: the first block's
+        // four tiles come before any column ≥ 2 appears.
+        let (tiles, _) = blocked_tile_order(2, 5, 2);
+        let expect = [
+            (0, 0), (0, 1), (1, 0), (1, 1), (0, 2), (0, 3), (1, 2), (1, 3), (0, 4), (1, 4),
+        ];
+        assert_eq!(tiles, expect);
+    }
+}

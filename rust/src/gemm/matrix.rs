@@ -173,6 +173,13 @@ impl MatI32 {
         &mut self.data
     }
 
+    /// Bytes of element storage (`rows · cols · 4`) — the accounting
+    /// unit for batch-resident matrix artifacts (e.g. cached im2col
+    /// patch matrices charged to a `nn` plan budget).
+    pub fn byte_len(&self) -> usize {
+        self.data.len() * std::mem::size_of::<i32>()
+    }
+
     /// Value range over all elements.
     pub fn min_max(&self) -> (i32, i32) {
         let mut lo = i32::MAX;
@@ -408,6 +415,7 @@ mod tests {
     #[test]
     fn stats() {
         let m = MatI32::from_vec(1, 4, vec![-3, 0, 5, 2]).unwrap();
+        assert_eq!(m.byte_len(), 16);
         assert_eq!(m.min_max(), (-3, 5));
         let n = MatI32::from_vec(1, 4, vec![-3, 1, 4, 2]).unwrap();
         assert!((m.mean_abs_diff(&n).unwrap() - 0.5).abs() < 1e-12);

@@ -48,6 +48,21 @@
 //! configuration × correction scheme; `benches/gemm_throughput.rs`
 //! measures the speedup and asserts the ≥ 2× floor on the INT4 cascade.
 //!
+//! ## Kernel micro-architecture
+//!
+//! The execute phase runs through an explicit kernel layer
+//! (`gemm::kernel`, selected by [`KernelMode`]): a **cache-blocked**
+//! block-column tile schedule whose geometry comes from a small cache
+//! model on [`GemmPlan`] (weight-plane stripes stay L2-resident across
+//! every row tile that consumes them, with worker chunks aligned to
+//! whole column sweeps for per-worker stripe affinity), **4-wide
+//! multi-accumulator unrolled** cascade/per-product inner loops
+//! (`chunks_exact`-shaped so LLVM emits vector MACs on stable Rust), and
+//! batch-resident packed activation planes on the per-product path. The
+//! pre-blocking scalar path survives as [`KernelMode::Reference`] — the
+//! pinned "before" side of `benches/gemm_throughput.rs`' kernel A/B and
+//! of the conformance/fuzz bit-identity batteries.
+//!
 //! The engine counts DSP work, so benchmarks can report the utilization
 //! gain over the one-multiply-per-DSP baseline (the paper's raison d'être).
 //!
@@ -57,9 +72,10 @@
 //! `execute` call — see [`crate::nn`]'s `Conv2dLayer`.
 
 mod engine;
+mod kernel;
 mod matrix;
 mod plan;
 
-pub use engine::{DspOpStats, GemmEngine, WordBackend};
+pub use engine::{DspOpStats, GemmEngine, KernelMode, WordBackend};
 pub use matrix::{Im2col, MatI32};
 pub use plan::{GemmPlan, PackedWeights};

@@ -36,7 +36,8 @@ use crate::packing::PackingConfig;
 use crate::Error;
 
 /// The activation-independent execution schedule of one packed GEMM:
-/// column tiling plus the drain rhythm over the reduction dimension.
+/// column tiling, the drain rhythm over the reduction dimension, and the
+/// cache-blocking geometry of the execute schedule.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct GemmPlan {
     /// Reduction depth (rows of the planned weight matrix).
@@ -48,11 +49,24 @@ pub struct GemmPlan {
     /// Drain segments `(k0, len)` covering `0..k_dim`: each segment is one
     /// uninterrupted cascade accumulation followed by a P-word drain.
     pub segments: Vec<(usize, usize)>,
+    /// Column tiles per macro block of the blocked execute schedule
+    /// (chosen by [`GemmPlan::col_block_for`] from this plan's stripe
+    /// bytes): the engine sweeps all row tiles against one block's weight
+    /// stripes before moving to the next block, keeping the stripes
+    /// cache-resident. Purely a performance hint — outputs and
+    /// [`crate::gemm::DspOpStats`] are identical for every value.
+    pub col_block: usize,
 }
 
 impl GemmPlan {
-    /// Schedule `k_dim` reduction steps with the given drain period.
-    pub(crate) fn new(k_dim: usize, col_tiles: usize, drain_period: usize) -> GemmPlan {
+    /// Schedule `k_dim` reduction steps with the given drain period and
+    /// blocking geometry.
+    pub(crate) fn new(
+        k_dim: usize,
+        col_tiles: usize,
+        drain_period: usize,
+        col_block: usize,
+    ) -> GemmPlan {
         debug_assert!(drain_period >= 1);
         let mut segments = Vec::with_capacity(k_dim.div_ceil(drain_period.max(1)));
         let mut k = 0;
@@ -61,7 +75,18 @@ impl GemmPlan {
             segments.push((k, len));
             k += len;
         }
-        GemmPlan { k_dim, col_tiles, drain_period, segments }
+        GemmPlan { k_dim, col_tiles, drain_period, segments, col_block }
+    }
+
+    /// The blocking **cache model**: how many column tiles may share one
+    /// macro block so that the block's weight-plane stripes
+    /// (`stripe_bytes` each) stay resident within `budget_bytes` of
+    /// cache while every row tile sweeps them. Always at least 1 (an
+    /// over-sized stripe still executes, it just streams), and never
+    /// more than the plan's column-tile count (a single block then
+    /// degenerates to the row-major schedule).
+    pub fn col_block_for(stripe_bytes: usize, budget_bytes: usize, col_tiles: usize) -> usize {
+        (budget_bytes / stripe_bytes.max(1)).clamp(1, col_tiles.max(1))
     }
 
     /// Accumulator drains each output tile performs (`⌈K / drain⌉`).
@@ -241,9 +266,22 @@ mod tests {
     use super::*;
 
     #[test]
+    fn cache_model_clamps_sanely() {
+        // Budget fits 4 stripes of 1 KiB.
+        assert_eq!(GemmPlan::col_block_for(1024, 4096, 100), 4);
+        // All stripes fit: one block, row-major degenerate case.
+        assert_eq!(GemmPlan::col_block_for(1024, 1 << 20, 16), 16);
+        // An over-sized stripe still gets a block of 1.
+        assert_eq!(GemmPlan::col_block_for(1 << 20, 1024, 8), 1);
+        // Degenerate inputs never panic or return 0.
+        assert_eq!(GemmPlan::col_block_for(0, 0, 0), 1);
+        assert_eq!(GemmPlan::col_block_for(1024, 4096, 0), 1);
+    }
+
+    #[test]
     fn plan_segments_cover_k_exactly() {
         for (k, drain) in [(0usize, 8usize), (1, 8), (8, 8), (9, 8), (33, 8), (7, 1), (5, 3)] {
-            let plan = GemmPlan::new(k, 2, drain);
+            let plan = GemmPlan::new(k, 2, drain, 1);
             let total: usize = plan.segments.iter().map(|&(_, len)| len).sum();
             assert_eq!(total, k, "k={k} drain={drain}");
             assert_eq!(plan.drains_per_tile(), k.div_ceil(drain));

@@ -14,6 +14,12 @@
 //! layer simply re-plans on its next forward (bit-identically, which
 //! `tests/conv.rs` pins).
 //!
+//! The accounting is not plan-specific: any `Mutex<Option<T>>`-shaped
+//! cache slot (the internal `EvictableSlot` trait) can attach — the
+//! conv layers' batch-resident im2col **patch buffers** ride the same
+//! byte accounting and LRU eviction as weight plans, via
+//! `Conv2dLayer::attach_patch_budget`.
+//!
 //! Locking contract (deadlock freedom): a plan cache never calls into the
 //! budget while holding its slot lock, and the budget never holds its own
 //! lock while clearing a victim slot. The cost is a benign race: a victim
@@ -25,8 +31,6 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
 
-use super::mlp::CacheSlot;
-
 /// Monotonic id source for plan-cache slots (process-wide).
 static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(0);
 
@@ -35,15 +39,33 @@ pub(super) fn next_cache_id() -> u64 {
     NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed)
 }
 
-/// One resident plan the budget knows about.
+/// A cache slot the budget can clear when it evicts the slot's resident
+/// artifact. Implemented blanketly for every `Mutex<Option<T>>`-shaped
+/// slot — the dense/conv plan caches and the conv patch buffers all use
+/// that shape — so one budget can account heterogeneous resident
+/// artifacts (weight planes, im2col patch matrices) uniformly.
+pub(super) trait EvictableSlot: Send + Sync {
+    /// Drop the resident entry; the owner rebuilds it (bit-identically)
+    /// on its next use.
+    fn evict(&self);
+}
+
+impl<T: Send> EvictableSlot for Mutex<Option<T>> {
+    fn evict(&self) {
+        *self.lock().unwrap_or_else(std::sync::PoisonError::into_inner) = None;
+    }
+}
+
+/// One resident artifact the budget knows about.
 struct BudgetEntry {
-    /// Exact `PackedWeights::plane_bytes` of the resident plan.
+    /// Exact byte size of the resident artifact (`plane_bytes` for weight
+    /// plans, `MatI32::byte_len` for patch matrices).
     bytes: usize,
     /// LRU clock stamp of the last use (hit or store).
     last_use: u64,
     /// The owning cache's slot, cleared on eviction. Weak: the budget
-    /// must not keep dropped layers (or their planes) alive.
-    slot: Weak<CacheSlot>,
+    /// must not keep dropped layers (or their artifacts) alive.
+    slot: Weak<dyn EvictableSlot>,
 }
 
 struct BudgetInner {
@@ -117,24 +139,23 @@ impl PlanBudget {
     }
 
     /// Record a use (cache hit or store) of cache `id` whose resident
-    /// plan occupies `bytes`, then enforce the limit by evicting the
-    /// least-recently-used *other* resident plans. Called by
-    /// `PlanCache::plan_for` after the slot lock is released.
-    pub(super) fn note_use(&self, id: u64, bytes: usize, slot: &Arc<CacheSlot>) {
+    /// artifact occupies `bytes`, then enforce the limit by evicting the
+    /// least-recently-used *other* resident artifacts. Called by
+    /// `PlanCache::plan_for` / `PatchBuffer::patches_for` after the slot
+    /// lock is released.
+    pub(super) fn note_use(&self, id: u64, bytes: usize, slot: Weak<dyn EvictableSlot>) {
         // Phase 1 (budget lock only): account, pick victims.
-        let victims: Vec<Arc<CacheSlot>> = {
+        let victims: Vec<Arc<dyn EvictableSlot>> = {
             let mut inner = self.inner.lock().expect("plan budget poisoned");
             inner.clock += 1;
             let stamp = inner.clock;
-            inner.entries.insert(
-                id,
-                BudgetEntry { bytes, last_use: stamp, slot: Arc::downgrade(slot) },
-            );
+            inner.entries.insert(id, BudgetEntry { bytes, last_use: stamp, slot });
             let mut victims = Vec::new();
             while inner.total_bytes() > self.limit {
-                // LRU among everything except the plan just used — the
-                // newest plan must be allowed to exceed the limit alone,
-                // otherwise an over-sized layer could never run at all.
+                // LRU among everything except the artifact just used —
+                // the newest one must be allowed to exceed the limit
+                // alone, otherwise an over-sized layer could never run at
+                // all.
                 let victim = inner
                     .entries
                     .iter()
@@ -149,9 +170,9 @@ impl PlanBudget {
             }
             victims
         };
-        // Phase 2 (victim slot locks only): drop the evicted planes.
+        // Phase 2 (victim slot locks only): drop the evicted artifacts.
         for victim_slot in victims {
-            *victim_slot.lock().expect("plan cache poisoned") = None;
+            victim_slot.evict();
             self.evictions.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -166,23 +187,29 @@ impl PlanBudget {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use std::sync::Mutex;
 
-    fn slot() -> Arc<CacheSlot> {
-        Arc::new(Mutex::new(None))
+    type Slot = Mutex<Option<u32>>;
+
+    fn slot() -> Arc<Slot> {
+        Arc::new(Mutex::new(Some(7)))
+    }
+
+    fn weak(s: &Arc<Slot>) -> Weak<dyn EvictableSlot> {
+        let dynamic: Arc<dyn EvictableSlot> = Arc::clone(s);
+        Arc::downgrade(&dynamic)
     }
 
     #[test]
     fn accounting_tracks_uses_and_release() {
         let b = PlanBudget::unbounded();
         let (s1, s2) = (slot(), slot());
-        b.note_use(1, 100, &s1);
-        b.note_use(2, 250, &s2);
+        b.note_use(1, 100, weak(&s1));
+        b.note_use(2, 250, weak(&s2));
         assert_eq!(b.resident_bytes(), 350);
         assert_eq!(b.resident_plans(), 2);
         // Re-using an id replaces its entry (a rebuilt plan may change
         // size, e.g. after a narrow/wide engine swap).
-        b.note_use(1, 60, &s1);
+        b.note_use(1, 60, weak(&s1));
         assert_eq!(b.resident_bytes(), 310);
         b.release(1);
         assert_eq!(b.resident_bytes(), 250);
@@ -193,13 +220,17 @@ mod tests {
     fn evicts_lru_first_and_clears_the_slot() {
         let b = PlanBudget::new(250);
         let (s1, s2, s3) = (slot(), slot(), slot());
-        b.note_use(1, 100, &s1);
-        b.note_use(2, 100, &s2);
-        b.note_use(1, 100, &s1); // 1 is now more recent than 2
-        b.note_use(3, 100, &s3); // 300 > 250: evict LRU = 2
+        b.note_use(1, 100, weak(&s1));
+        b.note_use(2, 100, weak(&s2));
+        b.note_use(1, 100, weak(&s1)); // 1 is now more recent than 2
+        b.note_use(3, 100, weak(&s3)); // 300 > 250: evict LRU = 2
         assert_eq!(b.evictions(), 1);
         assert_eq!(b.resident_bytes(), 200);
         assert_eq!(b.resident_plans(), 2);
+        // The victim's slot was actually cleared; the others survive.
+        assert!(s2.lock().unwrap().is_none(), "victim slot must be cleared");
+        assert!(s1.lock().unwrap().is_some());
+        assert!(s3.lock().unwrap().is_some());
     }
 
     #[test]
@@ -208,7 +239,7 @@ mod tests {
         let s = slot();
         // A single over-sized plan stays resident (the alternative is a
         // layer that can never execute).
-        b.note_use(7, 500, &s);
+        b.note_use(7, 500, weak(&s));
         assert_eq!(b.evictions(), 0);
         assert_eq!(b.resident_bytes(), 500);
     }
@@ -217,10 +248,10 @@ mod tests {
     fn dropped_slots_do_not_block_eviction() {
         let b = PlanBudget::new(150);
         let s1 = slot();
-        b.note_use(1, 100, &s1);
+        b.note_use(1, 100, weak(&s1));
         drop(s1); // layer dropped; Weak upgrade fails but entry clears
         let s2 = slot();
-        b.note_use(2, 100, &s2);
+        b.note_use(2, 100, weak(&s2));
         assert_eq!(b.resident_plans(), 1);
         assert_eq!(b.resident_bytes(), 100);
     }

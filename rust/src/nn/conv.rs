@@ -10,8 +10,13 @@
 //! bank is planned **once** into resident [`crate::gemm::PackedWeights`]
 //! (cached per layer, like dense layers), while every served batch only
 //! pays im2col plus one `execute` — thousands of activation streams
-//! against the same weight planes. `benches/conv_throughput.rs` measures
-//! the gap against per-call repacking.
+//! against the same weight planes. The im2col unroll itself is
+//! **batch-resident** too: each layer keeps its most recent patch matrix
+//! (keyed on an exact input snapshot + geometry, budget-accountable via
+//! [`Conv2dLayer::attach_patch_budget`]), so repeated batches in a
+//! served stream skip the rebuild entirely. `benches/conv_throughput.rs`
+//! measures both gaps — plan vs per-call repacking, and patch reuse vs
+//! rebuild-per-forward.
 //!
 //! [`Conv2dLayer`] supports stride and zero padding, per-layer weight
 //! quantization, bias, and ReLU requantization; [`MaxPool2d`] reduces the
@@ -25,14 +30,14 @@
 //! deep stacks cap their resident weight planes with
 //! [`QuantCnn::attach_plan_budget`] ([`super::budget`]).
 
-use super::budget::PlanBudget;
+use super::budget::{next_cache_id, EvictableSlot, PlanBudget};
 use super::data::Dataset;
 use super::mlp::{DenseLayer, ExecMode};
 use super::quantize;
 use super::NnModel;
 use crate::gemm::{DspOpStats, GemmEngine, Im2col, MatI32};
 use crate::{Error, Result};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Spatial geometry of a convolution layer: input channels, square kernel,
 /// stride and zero padding. The input height/width are supplied per batch
@@ -76,6 +81,160 @@ impl ConvGeometry {
     }
 }
 
+/// One resident im2col unroll of a [`PatchBuffer`]: the input batch it
+/// was built from (the hit key), the lowering geometry, and the patch
+/// matrix itself.
+#[derive(Debug)]
+struct PatchEntry {
+    /// Snapshot of the input batch the patches were unrolled from.
+    input: Arc<MatI32>,
+    /// The im2col geometry of the unroll (height/width dependent).
+    spec: Im2col,
+    /// The resident patch matrix.
+    patches: Arc<MatI32>,
+}
+
+/// The shared storage cell of one patch buffer (the budget holds a weak
+/// reference and clears it on eviction, like a plan-cache slot).
+type PatchSlot = Mutex<Option<PatchEntry>>;
+
+/// Batch-resident im2col patches for one conv layer.
+///
+/// The per-forward im2col rebuild is the activation-side analogue of
+/// per-call weight repacking: a served stream that presents the same
+/// batch to the same layer twice (repeated images, retried requests,
+/// A/B replays, calibration passes) pays the full unroll each time. The
+/// buffer keeps the most recent unroll resident, keyed on an exact input
+/// snapshot plus the [`Im2col`] spec — one equality scan of the input
+/// batch (cheap next to the K²-times-larger unroll it saves) decides hit
+/// or rebuild, so a changed batch or image size can never see stale
+/// patches. Within one forward the resident matrix is shared by every
+/// column tile of the stage's GEMM; across forwards it is reused whole.
+///
+/// Like weight plans, resident patches are budget-accountable
+/// ([`Conv2dLayer::attach_patch_budget`]): exact [`MatI32::byte_len`]
+/// accounting of everything the entry keeps alive (the unroll **and**
+/// the input snapshot keying it), LRU eviction, transparent
+/// bit-identical rebuild on the next forward.
+#[derive(Debug)]
+struct PatchBuffer {
+    slot: Arc<PatchSlot>,
+    /// Process-unique id this buffer is accounted under in a budget.
+    id: u64,
+    budget: Mutex<Option<Arc<PlanBudget>>>,
+}
+
+impl Default for PatchBuffer {
+    fn default() -> Self {
+        PatchBuffer {
+            slot: Arc::new(Mutex::new(None)),
+            id: next_cache_id(),
+            budget: Mutex::new(None),
+        }
+    }
+}
+
+impl Clone for PatchBuffer {
+    fn clone(&self) -> Self {
+        // Independent buffer with an **empty** slot (own id, same
+        // attached budget). Patches are per-batch artifacts, so a cloned
+        // layer (e.g. an adaptive backend's per-fabric replica) rebuilds
+        // on its first forward rather than carrying a resident entry its
+        // budget has never been told about — copying the entry would
+        // leave unaccounted, unevictable bytes until that first use.
+        PatchBuffer {
+            slot: Arc::new(Mutex::new(None)),
+            id: next_cache_id(),
+            budget: Mutex::new(self.budget.lock().expect("patch buffer poisoned").clone()),
+        }
+    }
+}
+
+impl Drop for PatchBuffer {
+    fn drop(&mut self) {
+        if let Some(budget) = self.budget.lock().expect("patch buffer poisoned").as_ref() {
+            budget.release(self.id);
+        }
+    }
+}
+
+impl PatchBuffer {
+    /// Attach a shared budget; the resident patches are accounted (and
+    /// evictable) from the next use on. Re-attaching releases the entry
+    /// from the previous budget.
+    fn attach(&self, budget: Arc<PlanBudget>) {
+        let mut slot = self.budget.lock().expect("patch buffer poisoned");
+        if let Some(old) = slot.as_ref() {
+            if !Arc::ptr_eq(old, &budget) {
+                old.release(self.id);
+            }
+        }
+        *slot = Some(budget);
+    }
+
+    /// Report a hit/store to the attached budget, if any. Called without
+    /// the slot lock held (the budget locking contract).
+    fn note_use(&self, bytes: usize) {
+        let budget = self.budget.lock().expect("patch buffer poisoned").clone();
+        if let Some(budget) = budget {
+            let slot: Arc<dyn EvictableSlot> = Arc::clone(&self.slot);
+            budget.note_use(self.id, bytes, Arc::downgrade(&slot));
+        }
+    }
+
+    /// The patch matrix for `(x, spec)`: served from the buffer when the
+    /// resident entry matches, unrolled (and stored) otherwise. Always
+    /// returns the patches for *this* call's input — a concurrent store
+    /// for a different batch can replace the resident entry but never
+    /// the returned matrix. The budget is charged for everything the
+    /// entry keeps alive: the patch matrix **plus** the input snapshot
+    /// that keys it.
+    fn patches_for(&self, x: &MatI32, spec: &Im2col) -> Result<Arc<MatI32>> {
+        let hit = {
+            let slot = self.slot.lock().expect("patch buffer poisoned");
+            match slot.as_ref() {
+                Some(e) if e.spec == *spec && e.input.as_ref() == x => Some(e.patches.clone()),
+                _ => None,
+            }
+        };
+        let patches = match hit {
+            Some(p) => p,
+            None => {
+                // Unroll outside the slot lock (im2col is the expensive
+                // part; the slot only guards the pointer swap).
+                let built = Arc::new(x.im2col(spec)?);
+                *self.slot.lock().expect("patch buffer poisoned") = Some(PatchEntry {
+                    input: Arc::new(x.clone()),
+                    spec: *spec,
+                    patches: built.clone(),
+                });
+                built
+            }
+        };
+        self.note_use(x.byte_len() + patches.byte_len());
+        Ok(patches)
+    }
+
+    /// Drop the resident patches and release their budget accounting.
+    fn clear(&self) {
+        *self.slot.lock().expect("patch buffer poisoned") = None;
+        if let Some(budget) = self.budget.lock().expect("patch buffer poisoned").as_ref() {
+            budget.release(self.id);
+        }
+    }
+
+    /// Bytes the resident entry keeps alive — the patch matrix plus the
+    /// input snapshot keying it (0 when empty). Matches what `note_use`
+    /// charges the budget.
+    fn resident_bytes(&self) -> usize {
+        self.slot
+            .lock()
+            .expect("patch buffer poisoned")
+            .as_ref()
+            .map_or(0, |e| e.input.byte_len() + e.patches.byte_len())
+    }
+}
+
 /// One quantized conv2d layer, lowered to the packed GEMM via im2col.
 ///
 /// The filter bank is a [`DenseLayer`] over the im2col patch space: its
@@ -83,7 +242,11 @@ impl ConvGeometry {
 /// `c·K² + ky·K + kx`, and forward is exactly the dense forward applied
 /// to the unrolled patches — same bias/requant tail, same plan cache
 /// (built on the first packed forward or by [`Conv2dLayer::prepare`],
-/// rebuilt when the engine or the public weights change).
+/// rebuilt when the engine or the public weights change). The unrolled
+/// patches themselves are **batch-resident** (an internal patch
+/// buffer): repeated forwards over the same batch reuse the im2col
+/// unroll instead of rebuilding it per call — see
+/// [`Conv2dLayer::attach_patch_budget`] and [`Conv2dLayer::clear_patches`].
 #[derive(Debug, Clone)]
 pub struct Conv2dLayer {
     /// The filter bank as a dense layer over patch space: `weights`
@@ -92,6 +255,8 @@ pub struct Conv2dLayer {
     pub dense: DenseLayer,
     /// Kernel/stride/padding geometry.
     pub geometry: ConvGeometry,
+    /// Batch-resident im2col patches (hit on identical input + spec).
+    patches: PatchBuffer,
 }
 
 impl Conv2dLayer {
@@ -111,7 +276,11 @@ impl Conv2dLayer {
                 geometry.patch_len()
             )));
         }
-        Ok(Conv2dLayer { dense: DenseLayer::new(weights, bias, requant)?, geometry })
+        Ok(Conv2dLayer {
+            dense: DenseLayer::new(weights, bias, requant)?,
+            geometry,
+            patches: PatchBuffer::default(),
+        })
     }
 
     /// Build from float filters, quantizing the weights to `w_bits`
@@ -131,7 +300,7 @@ impl Conv2dLayer {
         }
         let (dense, scale) =
             DenseLayer::from_f32(filters, taps, out_channels, bias, w_bits, requant)?;
-        Ok((Conv2dLayer { dense, geometry }, scale))
+        Ok((Conv2dLayer { dense, geometry, patches: PatchBuffer::default() }, scale))
     }
 
     /// Number of filters (output channels).
@@ -153,11 +322,40 @@ impl Conv2dLayer {
         self.dense.attach_budget(budget);
     }
 
+    /// Attach this layer's **patch buffer** to a shared [`PlanBudget`]:
+    /// the resident im2col unroll (patch matrix plus the input snapshot
+    /// keying it) is accounted by exact [`MatI32::byte_len`] and becomes
+    /// LRU-evictable exactly like a weight plan (an evicted buffer
+    /// rebuilds bit-identically on the next forward). Deliberately
+    /// separate from [`Conv2dLayer::attach_budget`]: weight plans are
+    /// per-model steady-state memory while patches are per-batch
+    /// activation artifacts, and deployments typically budget them
+    /// independently.
+    pub fn attach_patch_budget(&self, budget: &Arc<PlanBudget>) {
+        self.patches.attach(budget.clone());
+    }
+
+    /// Drop the resident im2col patches; the next forward rebuilds them
+    /// bit-identically. This is the rebuild-per-forward A/B lever of
+    /// `benches/conv_throughput.rs`.
+    pub fn clear_patches(&self) {
+        self.patches.clear();
+    }
+
+    /// Bytes the resident im2col entry keeps alive (patch matrix +
+    /// input snapshot; 0 when none) — capacity observability, mirroring
+    /// `PackedWeights::plane_bytes`.
+    pub fn patch_bytes(&self) -> usize {
+        self.patches.resident_bytes()
+    }
+
     /// Forward a batch: `x` is one image per row (channel-major pixels,
     /// `height`×`width`); the result is the feature map as a patch-row
-    /// matrix, `(batch·OH·OW) × out_channels`. Unrolls the batch via
-    /// [`MatI32::im2col`] and runs the dense forward (weights-resident
-    /// packed path, bias, optional ReLU requant) over the patches.
+    /// matrix, `(batch·OH·OW) × out_channels`. Serves the im2col unroll
+    /// from the layer's batch-resident patch buffer (rebuilt only when
+    /// the batch or geometry changed) and runs the dense forward
+    /// (weights-resident packed path, bias, optional ReLU requant) over
+    /// the patches.
     pub fn forward(
         &self,
         x: &MatI32,
@@ -167,7 +365,8 @@ impl Conv2dLayer {
         a_bits: u32,
         stats: &mut DspOpStats,
     ) -> Result<MatI32> {
-        let patches = x.im2col(&self.geometry.spec(height, width)?)?;
+        let spec = self.geometry.spec(height, width)?;
+        let patches = self.patches.patches_for(x, &spec)?;
         self.dense.forward(&patches, mode, a_bits, stats)
     }
 }
@@ -547,6 +746,31 @@ impl QuantCnn {
         self.head.attach_budget(budget);
     }
 
+    /// Attach every stage's batch-resident im2col patch buffer to one
+    /// shared [`PlanBudget`] (exact byte accounting + LRU eviction;
+    /// separate from [`QuantCnn::attach_plan_budget`] because patches are
+    /// per-batch activation artifacts, not per-model steady state — see
+    /// [`Conv2dLayer::attach_patch_budget`]).
+    pub fn attach_patch_budget(&self, budget: &Arc<PlanBudget>) {
+        for stage in &self.stages {
+            stage.conv.attach_patch_budget(budget);
+        }
+    }
+
+    /// Drop every stage's resident im2col patches (they rebuild
+    /// bit-identically on the next forward) — the rebuild-per-forward
+    /// A/B lever of `benches/conv_throughput.rs`.
+    pub fn clear_patches(&self) {
+        for stage in &self.stages {
+            stage.conv.clear_patches();
+        }
+    }
+
+    /// Total bytes of resident im2col patches across all stages.
+    pub fn patch_bytes(&self) -> usize {
+        self.stages.iter().map(|s| s.conv.patch_bytes()).sum()
+    }
+
     /// Feature-map layout `(batch·H·W) × channels` → image-row layout
     /// `batch × (channels·H·W)` (channel-major pixels): the input layout
     /// of the next conv stage, and the flattened feature layout
@@ -737,6 +961,77 @@ mod tests {
             .with_pool(4, 4)
             .unwrap()];
         assert!(QuantCnn::deep(&ds, 1, &bad, 4, 4, 1).is_err());
+    }
+
+    #[test]
+    fn patch_buffer_reuses_and_rebuilds_bit_identically() {
+        let mut rng = crate::util::Rng::new(0x9A7C);
+        let g = ConvGeometry::unit(3).unwrap();
+        let wq = MatI32::random_range(9, 4, -8, 7, &mut rng);
+        let conv = Conv2dLayer::new(wq, vec![0; 4], g, false).unwrap();
+        let x = MatI32::random_range(2, 36, 0, 15, &mut rng);
+        let mode = ExecMode::Packed(engine());
+        let mut stats = DspOpStats::default();
+
+        assert_eq!(conv.patch_bytes(), 0, "nothing resident before a forward");
+        let y1 = conv.forward(&x, 6, 6, &mode, 4, &mut stats).unwrap();
+        let resident = conv.patch_bytes();
+        // Patches (2 images × 4×4 output positions × 9 taps) plus the
+        // input snapshot keying them (2 × 36 pixels), 4 bytes each.
+        assert_eq!(resident, (2 * 16 * 9 + 2 * 36) * 4, "exact patch byte accounting");
+        // A repeated batch hits the buffer (resident bytes unchanged) and
+        // serves the identical unroll.
+        let y2 = conv.forward(&x, 6, 6, &mode, 4, &mut stats).unwrap();
+        assert_eq!(y1, y2);
+        assert_eq!(conv.patch_bytes(), resident);
+        // Clearing forces a rebuild; the rebuilt path is bit-identical.
+        conv.clear_patches();
+        assert_eq!(conv.patch_bytes(), 0);
+        let y3 = conv.forward(&x, 6, 6, &mode, 4, &mut stats).unwrap();
+        assert_eq!(y1, y3, "rebuilt patches must be bit-identical");
+        // A different batch replaces the resident unroll and still
+        // computes its own answer (never the stale one).
+        let x2 = MatI32::random_range(2, 36, 0, 15, &mut rng);
+        let y4 = conv.forward(&x2, 6, 6, &mode, 4, &mut stats).unwrap();
+        let y4_exact = conv.forward(&x2, 6, 6, &ExecMode::Exact, 4, &mut stats).unwrap();
+        assert_eq!(y4, y4_exact, "full correction stays exact through the buffer");
+        assert_ne!(y4, y1);
+    }
+
+    #[test]
+    fn patch_budget_accounts_and_evicts() {
+        let ds = data::synthetic(16, 3, 64, 0.12, 71);
+        let specs = [
+            StageSpec::conv3x3(4).with_pool(2, 2).unwrap(),
+            StageSpec::conv3x3(6),
+        ];
+        let cnn = QuantCnn::deep(&ds, 1, &specs, 4, 4, 13).unwrap();
+        let mode = ExecMode::Packed(engine());
+        let x = cnn.quantize_batch(&ds.images).unwrap();
+        let (unbudgeted, s0) = cnn.forward(&x, &mode).unwrap();
+
+        // Unbounded budget: resident bytes equal the layers' own
+        // patch-byte accounting, and plans are not in the ledger (patch
+        // budgets are attached separately from plan budgets).
+        let budget = crate::nn::PlanBudget::unbounded();
+        cnn.attach_patch_budget(&budget);
+        let (y1, s1) = cnn.forward(&x, &mode).unwrap();
+        assert_eq!(y1, unbudgeted);
+        assert_eq!(s0, s1);
+        assert!(cnn.patch_bytes() > 0);
+        assert_eq!(budget.resident_bytes(), cnn.patch_bytes());
+        assert_eq!(budget.resident_plans(), cnn.depth());
+        assert_eq!(budget.evictions(), 0);
+
+        // A one-byte budget thrashes (every stage evicts its
+        // predecessor's patches) yet stays bit-identical — stats too.
+        let tight = crate::nn::PlanBudget::new(1);
+        cnn.attach_patch_budget(&tight);
+        let (y2, s2) = cnn.forward(&x, &mode).unwrap();
+        assert_eq!(y2, unbudgeted, "patch eviction must not change outputs");
+        assert_eq!(s2, s0, "patch rebuilds never touch the DSP counters");
+        assert!(tight.evictions() > 0, "the tight budget must actually evict");
+        assert_eq!(tight.resident_plans(), 1, "only the newest unroll stays");
     }
 
     #[test]

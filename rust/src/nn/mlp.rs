@@ -7,7 +7,7 @@
 //! against the cached plan. [`QuantMlp::prepare`] builds all plans up
 //! front, which the serving backend does at construction.
 
-use super::budget::{next_cache_id, PlanBudget};
+use super::budget::{next_cache_id, EvictableSlot, PlanBudget};
 use super::data::Dataset;
 use super::quantize;
 use crate::gemm::{DspOpStats, GemmEngine, MatI32, PackedWeights};
@@ -114,7 +114,8 @@ impl PlanCache {
     fn note_use(&self, bytes: usize) {
         let budget = self.budget.lock().expect("plan cache poisoned").clone();
         if let Some(budget) = budget {
-            budget.note_use(self.id, bytes, &self.slot);
+            let slot: Arc<dyn EvictableSlot> = Arc::clone(&self.slot);
+            budget.note_use(self.id, bytes, Arc::downgrade(&slot));
         }
     }
 

@@ -239,6 +239,28 @@ impl PackingConfig {
         self.results.len()
     }
 
+    /// Inclusive value range accepted by **every** `a`-operand slot —
+    /// the intersection across fields. The GEMM tiling routes any
+    /// activation to any slot of the vector, so range checks must use
+    /// the tightest field; mixed-width `from_specs` layouts would
+    /// otherwise let a value wrap silently in a narrower slot. For the
+    /// uniform generated layouts this equals field 0's range.
+    pub fn a_value_range(&self) -> (i128, i128) {
+        Self::intersect_ranges(&self.a)
+    }
+
+    /// [`PackingConfig::a_value_range`] for the `w` side.
+    pub fn w_value_range(&self) -> (i128, i128) {
+        Self::intersect_ranges(&self.w)
+    }
+
+    fn intersect_ranges(specs: &[OperandSpec]) -> (i128, i128) {
+        specs
+            .iter()
+            .map(OperandSpec::range)
+            .fold((i128::MIN, i128::MAX), |(lo, hi), (l, h)| (lo.max(l), hi.min(h)))
+    }
+
     /// Width of the packed `a` port word.
     pub fn a_port_width(&self) -> u32 {
         self.a.iter().map(|o| o.offset + o.width).max().unwrap_or(0)
@@ -485,6 +507,19 @@ mod tests {
         // Overpacked: no cascade accumulation headroom.
         assert_eq!(c.max_accumulations(), 1);
         assert!(c.narrow_word_feasible());
+    }
+
+    #[test]
+    fn operand_value_ranges_intersect_fields() {
+        // Mixed-width layout: the intersection is the tightest field.
+        let a = vec![OperandSpec::unsigned(6, 0), OperandSpec::unsigned(2, 11)];
+        let w = vec![OperandSpec::signed(4, 0)];
+        let cfg = PackingConfig::from_specs("mixed", a, w, 1).unwrap();
+        assert_eq!(cfg.a_value_range(), (0, 3));
+        assert_eq!(cfg.w_value_range(), (-8, 7));
+        // Uniform presets degenerate to field 0's range.
+        assert_eq!(PackingConfig::int4().a_value_range(), (0, 15));
+        assert_eq!(PackingConfig::int4().w_value_range(), (-8, 7));
     }
 
     #[test]

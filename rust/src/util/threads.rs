@@ -192,6 +192,34 @@ where
     I: Fn() -> S + Sync,
     F: Fn(&mut S, &T) -> R + Sync,
 {
+    parallel_map_with_aligned(items, total_cost, 1, init, f)
+}
+
+/// [`parallel_map_with`] with **chunk alignment**: worker chunk
+/// boundaries are rounded up to multiples of `align` items.
+///
+/// This is the stripe-affinity hook of the blocked GEMM schedule: the
+/// engine orders output tiles so that each run of `align` consecutive
+/// items sweeps one macro block's column tiles, and aligned chunking
+/// keeps workers from starting mid-sweep (exactly, wherever the item
+/// order's sweep length equals `align` — the GEMM's trailing partial
+/// block has shorter sweeps, a bounded tail case) — so the weight-plane
+/// stripes of a block stay resident in the worker's cache across all
+/// the row tiles it processes, instead of being re-streamed per row
+/// tile. `align = 1` degenerates to plain static chunking.
+pub fn parallel_map_with_aligned<T, R, S, I, F>(
+    items: &[T],
+    total_cost: u64,
+    align: usize,
+    init: I,
+    f: F,
+) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, &T) -> R + Sync,
+{
     let inline = items.len() < 2
         || workers() <= 1
         || total_cost < PARALLEL_COST_THRESHOLD
@@ -202,7 +230,8 @@ where
     }
 
     let n_workers = workers().min(items.len());
-    let chunk = items.len().div_ceil(n_workers);
+    let align = align.max(1);
+    let chunk = items.len().div_ceil(n_workers).div_ceil(align) * align;
     let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
     out.resize_with(items.len(), || None);
 
@@ -362,6 +391,50 @@ mod tests {
         assert_eq!(out.len(), items.len());
         for (i, &(_, x)) in out.iter().enumerate() {
             assert_eq!(x, i as u64, "order preserved");
+        }
+    }
+
+    #[test]
+    fn aligned_chunks_preserve_order_and_coverage() {
+        // Alignments that do and don't divide the item count, including
+        // an alignment larger than the per-worker chunk and one larger
+        // than the whole input.
+        for (len, align) in [(257usize, 4usize), (64, 7), (100, 1), (30, 1000)] {
+            let items: Vec<u64> = (0..len as u64).collect();
+            let out = parallel_map_with_aligned(
+                &items,
+                u64::MAX,
+                align,
+                || (),
+                |_, &x| x * 3,
+            );
+            assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>(), "{len}/{align}");
+        }
+    }
+
+    #[test]
+    fn aligned_chunk_boundaries_are_multiples_of_align() {
+        // Record which chunk (scratch instance) processed each item: every
+        // chunk boundary (scratch counter reset) must land on a multiple
+        // of the alignment.
+        let items: Vec<u64> = (0..97).collect();
+        let align = 8usize;
+        let out = parallel_map_with_aligned(
+            &items,
+            u64::MAX,
+            align,
+            || 0u64,
+            |count, &x| {
+                *count += 1;
+                (*count, x)
+            },
+        );
+        for (i, pair) in out.windows(2).enumerate() {
+            let (c0, c1) = (pair[0].0, pair[1].0);
+            if c1 <= c0 {
+                // A new chunk started at item i + 1.
+                assert_eq!((i + 1) % align, 0, "chunk boundary at {} not aligned", i + 1);
+            }
         }
     }
 

@@ -14,7 +14,7 @@
 
 use dsp_packing::analysis::ErrorStats;
 use dsp_packing::correct::Correction;
-use dsp_packing::gemm::{GemmEngine, MatI32, WordBackend};
+use dsp_packing::gemm::{GemmEngine, KernelMode, MatI32, WordBackend};
 use dsp_packing::packing::{PackedMultiplier, Packer, PackingConfig};
 use dsp_packing::util::Rng;
 
@@ -205,6 +205,70 @@ fn prop_plan_execute_matmul_differential() {
     // 9 presets × 6 schemes minus the invalid combinations; make sure the
     // loop actually exercised a healthy cross-section.
     assert!(combos >= 30, "only {combos} engine combinations constructed");
+}
+
+/// **Kernel A/B pin** (blocked-vs-unblocked and unrolled-vs-scalar
+/// bit-identity): for every preset configuration × correction scheme
+/// that constructs — strict engines *and* the Fig. 9 logical sweeps,
+/// which the preset list includes — the default
+/// [`KernelMode::Blocked`] engine (cache-blocked block-column schedule,
+/// 4-wide unrolled kernels, batch-resident activation planes) must be
+/// **bit-identical** to the scalar [`KernelMode::Reference`] path (the
+/// PR-3 shape): outputs AND `DspOpStats`, through shared plans and
+/// through `matmul`. A 1-byte stripe budget forces `col_block = 1`, so
+/// the genuinely multi-block schedule is exercised even on small
+/// shapes.
+#[test]
+fn prop_blocked_unrolled_kernels_match_scalar_reference() {
+    let mut rng = Rng::new(0xB10C);
+    let mut combos = 0;
+    for (name, cfg) in presets() {
+        for corr in Correction::ALL {
+            let engine = match GemmEngine::new(cfg.clone(), corr) {
+                Ok(e) => e,
+                Err(_) => match GemmEngine::logical(cfg.clone(), corr) {
+                    Ok(e) => e,
+                    Err(_) => continue, // invalid combination
+                },
+            };
+            combos += 1;
+            assert_eq!(engine.kernel_mode(), KernelMode::Blocked, "blocked is the default");
+            let reference = engine.clone().with_kernel_mode(KernelMode::Reference);
+            let tiny = engine.clone().with_stripe_budget(1);
+            let (a_lo, a_hi) = engine.config().a[0].range();
+            let (w_lo, w_hi) = engine.config().w[0].range();
+            for _ in 0..3 {
+                let m = 1 + rng.below(12) as usize;
+                let k = 1 + rng.below(40) as usize;
+                let n = 1 + rng.below(12) as usize;
+                let a = MatI32::random_range(m, k, a_lo as i32, a_hi as i32, &mut rng);
+                let w = MatI32::random_range(k, n, w_lo as i32, w_hi as i32, &mut rng);
+
+                // Plans are kernel-agnostic: one plan serves both modes.
+                let plan = engine.plan(&w).unwrap();
+                let plan_tiny = tiny.plan(&w).unwrap();
+                assert_eq!(plan_tiny.plan().col_block, 1, "{name}+{corr:?}");
+                assert!(plan_tiny.plan().col_block <= plan.plan().col_block);
+
+                let (cb, sb) = engine.execute(&plan, &a).unwrap();
+                let (cr, sr) = reference.execute(&plan, &a).unwrap();
+                assert_eq!(cb, cr, "{name}+{corr:?} {m}x{k}x{n} blocked vs reference");
+                assert_eq!(sb, sr, "{name}+{corr:?} {m}x{k}x{n} DspOpStats");
+
+                let (ct, st) = tiny.execute(&plan_tiny, &a).unwrap();
+                assert_eq!(ct, cb, "{name}+{corr:?} {m}x{k}x{n} multi-block schedule");
+                assert_eq!(st, sb, "{name}+{corr:?} {m}x{k}x{n} multi-block DspOpStats");
+
+                // The matmul entry point agrees across kernel modes too.
+                let (mb, smb) = engine.matmul(&a, &w).unwrap();
+                let (mr, smr) = reference.matmul(&a, &w).unwrap();
+                assert_eq!(mb, cb, "{name}+{corr:?} blocked matmul == execute");
+                assert_eq!(mr, cb, "{name}+{corr:?} reference matmul == blocked");
+                assert_eq!(smb, smr);
+            }
+        }
+    }
+    assert!(combos >= 30, "kernel A/B coverage regressed: {combos} combos");
 }
 
 /// **Narrow/wide backend differential** (the i64 datapath acceptance):

@@ -424,6 +424,49 @@ fn deep_cnn_under_tight_budget_is_bit_identical() {
     assert_eq!(s1, s2);
 }
 
+/// Batch-resident im2col patch buffers: reuse is bit-identical to
+/// rebuild-per-forward (outputs and `DspOpStats`), resident bytes are
+/// accounted exactly in a separately attached budget, and a tight patch
+/// budget thrashes without changing a single bit.
+#[test]
+fn patch_buffers_reuse_account_and_evict_bit_identically() {
+    let ds = data::synthetic(24, 3, 64, 0.12, 83);
+    let cnn = deep_cnn(&ds, 19);
+    let mode = ExecMode::Packed(int4_engine());
+    let x = cnn.quantize_batch(&ds.images).unwrap();
+
+    // Warm (buffers resident from the first forward) vs forced rebuild.
+    let (warm, s1) = cnn.forward(&x, &mode).unwrap();
+    assert!(cnn.patch_bytes() > 0, "forward must leave patches resident");
+    let (hit, s2) = cnn.forward(&x, &mode).unwrap();
+    assert_eq!(warm, hit, "patch reuse must be bit-identical");
+    assert_eq!(s1, s2);
+    cnn.clear_patches();
+    assert_eq!(cnn.patch_bytes(), 0);
+    let (rebuilt, s3) = cnn.forward(&x, &mode).unwrap();
+    assert_eq!(warm, rebuilt, "rebuild-per-forward must be bit-identical");
+    assert_eq!(s1, s3);
+
+    // Patch budget (separate from the plan budget): byte-exact
+    // accounting against the layers' own residency counters.
+    let budget = PlanBudget::unbounded();
+    cnn.attach_patch_budget(&budget);
+    cnn.forward(&x, &mode).unwrap();
+    assert_eq!(budget.resident_bytes(), cnn.patch_bytes());
+    assert_eq!(budget.resident_plans(), cnn.depth(), "one buffer per conv stage");
+    assert_eq!(budget.evictions(), 0);
+
+    // A one-byte ceiling evicts every stage's predecessor yet stays
+    // bit-identical — and the DSP counters never see the difference.
+    let tight = PlanBudget::new(1);
+    cnn.attach_patch_budget(&tight);
+    let (thrashed, s4) = cnn.forward(&x, &mode).unwrap();
+    assert_eq!(warm, thrashed, "patch eviction must not change outputs");
+    assert_eq!(s1, s4, "im2col rebuilds never touch DspOpStats");
+    assert!(tight.evictions() > 0, "the tight budget must actually evict");
+    assert_eq!(tight.resident_plans(), 1, "only the newest unroll survives");
+}
+
 /// The coordinator serves the CNN backend end to end: batched predictions
 /// equal direct inference, and the packed fabric's utilization shows up
 /// in the metrics.

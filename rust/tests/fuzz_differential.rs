@@ -1,23 +1,37 @@
 //! Randomized differential fuzz battery: seeded random **DSP-feasible**
 //! packing configurations × random GEMM/conv shapes, every case checked
-//! three ways against independent references:
+//! four ways against independent references:
 //!
 //! * **narrow vs wide**: the auto-selected (`i64`) engine and the
 //!   pinned-wide (`i128`) engine must agree **bit for bit** — outputs
 //!   *and* [`DspOpStats`] — through both `plan`/`execute` and `matmul`;
+//! * **blocked vs reference kernels**: the default cache-blocked,
+//!   4-wide-unrolled execute path must be bit-identical to the
+//!   pre-block scalar reference ([`KernelMode::Reference`]), including
+//!   under a 1-byte stripe budget that forces a multi-block schedule;
 //! * **plan/execute vs matmul**: the two entry points must be
 //!   bit-identical (the weights-resident serving contract);
-//! * **exact oracle**: full round-half-up with δ ≥ 0 must equal the
-//!   exact `i32` reference everywhere (§V-A); every scheme must respect
-//!   the hard per-element bound `|err| < K·2^width` (each extracted
-//!   per-product field and its exact value both live in the field's
-//!   signed range); and the MR-Overpacking family must additionally meet
-//!   the provable near-precise bound in the wrap-free regime: the
-//!   residual per product is the below-neighbour's bleed into the
-//!   extraction window, `|e| ≤ 2^(|δ|−1) + 7` (bleed + lower-field floor
-//!   carries + the optional borrow fix), so `|err| ≤ K·e_max` whenever
-//!   `e_max` fits the product's `2^(w_width−1)` range headroom (no
-//!   two's-complement wrap possible).
+//! * **exact oracle** (generator-space draws): full round-half-up with
+//!   δ ≥ 0 must equal the exact `i32` reference everywhere (§V-A);
+//!   every scheme must respect the hard per-element bound
+//!   `|err| < K·2^width` (each extracted per-product field and its exact
+//!   value both live in the field's signed range); and the
+//!   MR-Overpacking family must additionally meet the provable
+//!   near-precise bound in the wrap-free regime: the residual per
+//!   product is the below-neighbour's bleed into the extraction window,
+//!   `|e| ≤ 2^(|δ|−1) + 7` (bleed + lower-field floor carries + the
+//!   optional borrow fix), so `|err| ≤ K·e_max` whenever `e_max` fits
+//!   the product's `2^(w_width−1)` range headroom (no two's-complement
+//!   wrap possible).
+//!
+//! The configuration space is drawn two ways: the §IV **generator**
+//! space (uniform spacing, as before), and hand-rolled
+//! [`PackingConfig::from_specs`] layouts with **irregular offsets**
+//! (non-uniform gaps between operand fields, δ set to the minimum
+//! result gap) that the generator can never produce. Both spaces are
+//! exercised across the **DSP48E2, DSP48E1 and DSP58 port geometries**
+//! (strict fit against the drawn geometry), so the narrow datapath's
+//! port-wrap replication is pinned off the default slice family too.
 //!
 //! Every case derives from a printed seed: on failure the assert message
 //! carries the case seed, the harness writes it to `FUZZ_FAILURES.txt`
@@ -29,9 +43,9 @@
 
 use dsp_packing::correct::Correction;
 use dsp_packing::dsp48::DspGeometry;
-use dsp_packing::gemm::{DspOpStats, GemmEngine, MatI32, WordBackend};
+use dsp_packing::gemm::{DspOpStats, GemmEngine, KernelMode, MatI32, WordBackend};
 use dsp_packing::nn::{Conv2dLayer, ConvGeometry, ExecMode};
-use dsp_packing::packing::PackingConfig;
+use dsp_packing::packing::{OperandSpec, PackingConfig};
 use dsp_packing::util::Rng;
 
 const DEFAULT_SEED: u64 = 0xD5B0_F022_2203_1102;
@@ -49,9 +63,9 @@ fn env_u64(key: &str) -> Option<u64> {
     parse_u64(&std::env::var(key).ok()?)
 }
 
-/// Draw a random packing configuration that fits the DSP48E2 strictly,
-/// plus a correction scheme valid for it.
-fn draw_feasible(rng: &mut Rng) -> (PackingConfig, Correction) {
+/// Draw a random generator-space packing configuration that fits `geom`
+/// strictly, plus a correction scheme valid for it.
+fn draw_feasible(rng: &mut Rng, geom: &DspGeometry) -> (PackingConfig, Correction) {
     loop {
         let n_a = rng.range_i64(1, 3) as usize;
         let n_w = rng.range_i64(1, 2) as usize;
@@ -64,7 +78,7 @@ fn draw_feasible(rng: &mut Rng) -> (PackingConfig, Correction) {
         let Ok(cfg) = PackingConfig::generate("fuzz", n_a, aw, n_w, ww, delta) else {
             continue;
         };
-        if cfg.fit(&DspGeometry::DSP48E2).is_err() {
+        if cfg.fit(geom).is_err() || !cfg.narrow_word_feasible() {
             continue;
         }
         let corr = Correction::ALL[rng.below(Correction::ALL.len() as u64) as usize];
@@ -75,12 +89,98 @@ fn draw_feasible(rng: &mut Rng) -> (PackingConfig, Correction) {
     }
 }
 
-/// One fuzz case: config + correction + shapes all derived from `seed`.
+/// Draw a hand-rolled [`PackingConfig::from_specs`] layout with
+/// **irregular offsets** — non-uniform gaps between operand fields that
+/// the §IV generator can never produce — fitting `geom` strictly and
+/// running narrow. δ is set to the minimum gap between adjacent result
+/// fields (capped at 3), so the cascade drain rhythm and the widened
+/// extraction windows stay consistent with the layout. Returns `None`
+/// when the draw produced colliding result fields; the caller retries.
+fn draw_irregular(rng: &mut Rng, geom: &DspGeometry) -> Option<(PackingConfig, Correction)> {
+    let n_a = 1 + rng.below(2) as usize;
+    let n_w = 1 + rng.below(2) as usize;
+    let mut a = Vec::with_capacity(n_a);
+    let mut off = 0u32;
+    for i in 0..n_a {
+        let width = 2 + rng.below(4) as u32;
+        if i > 0 {
+            off += rng.below(5) as u32; // irregular inter-field gap
+        }
+        a.push(OperandSpec::unsigned(width, off));
+        off += width;
+    }
+    let mut w = Vec::with_capacity(n_w);
+    let mut woff = 0u32;
+    for j in 0..n_w {
+        let width = 2 + rng.below(4) as u32;
+        if j > 0 {
+            // w fields must clear the whole a-span to keep result fields
+            // apart; the extra gap is the irregular part.
+            woff += off + rng.below(6) as u32;
+        }
+        w.push(OperandSpec::signed(width, woff));
+        woff += width;
+    }
+    // Result fields land at the pairwise offset sums (Eqn. (4)); the
+    // minimum gap between adjacent fields bounds the usable padding.
+    let mut results: Vec<(u32, u32)> = Vec::new();
+    for ws in &w {
+        for asp in &a {
+            results.push((asp.offset + ws.offset, asp.width + ws.width));
+        }
+    }
+    results.sort_unstable();
+    let mut min_gap = i64::MAX;
+    for pr in results.windows(2) {
+        min_gap = min_gap.min(pr[1].0 as i64 - (pr[0].0 + pr[0].1) as i64);
+    }
+    if min_gap < 0 {
+        return None; // overlapping result fields — redraw
+    }
+    let delta = if results.len() == 1 { 3 } else { min_gap.min(3) as i32 };
+    let cfg = PackingConfig::from_specs("fuzz-irregular", a, w, delta).ok()?;
+    if cfg.fit(geom).is_err() || !cfg.narrow_word_feasible() {
+        return None;
+    }
+    // δ ≥ 0 here, so the Overpacking-only corrections don't apply.
+    let corrs = [
+        Correction::None,
+        Correction::FullRoundHalfUp,
+        Correction::ApproxCPort,
+        Correction::ApproxPostSign,
+    ];
+    Some((cfg, corrs[rng.below(corrs.len() as u64) as usize]))
+}
+
+/// One fuzz case: geometry + config + correction + shapes all derived
+/// from `seed`.
 fn run_case(seed: u64) {
     let mut rng = Rng::new(seed);
-    let (cfg, corr) = draw_feasible(&mut rng);
+    // Port geometry: the default UltraScale slice plus the 7-series and
+    // Versal families (different pre-adder/B/P widths, so the narrow
+    // datapath's port-wrap replication is exercised at other widths).
+    let geoms = [
+        ("DSP48E2", DspGeometry::DSP48E2),
+        ("DSP48E1", DspGeometry::DSP48E1),
+        ("DSP58", DspGeometry::DSP58),
+    ];
+    let (geom_name, geom) = geoms[rng.below(geoms.len() as u64) as usize];
+    // Configuration space: the §IV generator (uniform spacing) or a
+    // hand-rolled irregular-offset from_specs layout.
+    let irregular = rng.chance(0.3);
+    let (cfg, corr) = if irregular {
+        loop {
+            if let Some(drawn) = draw_irregular(&mut rng, &geom) {
+                break drawn;
+            }
+        }
+    } else {
+        draw_feasible(&mut rng, &geom)
+    };
     let ctx = format!(
-        "DSP_PACKING_FUZZ_CASE_SEED={seed:#018x} [{}x u{} · {}x s{} δ={} {corr:?}]",
+        "DSP_PACKING_FUZZ_CASE_SEED={seed:#018x} [{} {} {}x u{} · {}x s{} δ={} {corr:?}]",
+        geom_name,
+        if irregular { "irregular" } else { "generated" },
         cfg.a.len(),
         cfg.a[0].width,
         cfg.w.len(),
@@ -88,15 +188,27 @@ fn run_case(seed: u64) {
         cfg.delta,
     );
 
-    let auto = GemmEngine::new(cfg.clone(), corr).expect("feasible combo constructs");
-    let wide = GemmEngine::new_wide(cfg.clone(), corr).expect("wide twin constructs");
-    // Every DSP-feasible configuration is narrow-feasible (the P word is
-    // 48 bits); the differential below is only meaningful if it is.
+    let auto = GemmEngine::with_dsp_geometry(cfg.clone(), corr, geom)
+        .expect("feasible combo constructs");
+    let wide = GemmEngine::with_dsp_geometry_wide(cfg.clone(), corr, geom)
+        .expect("wide twin constructs");
+    // Every drawn configuration passes the narrowness predicate (the
+    // draw filters on it) and every real slice family leaves i64
+    // headroom; the differential below is only meaningful if so.
     assert_eq!(auto.word_backend(), WordBackend::Narrow64, "{ctx}: backend selection");
     assert_eq!(wide.word_backend(), WordBackend::Wide128, "{ctx}");
+    // Kernel A/B twins: the scalar reference path and a 1-byte stripe
+    // budget (multi-block schedule) — both must be bit-identical to the
+    // default blocked engine.
+    let reference = auto.clone().with_kernel_mode(KernelMode::Reference);
+    let tiny = auto.clone().with_stripe_budget(1);
 
-    let (a_lo, a_hi) = cfg.a[0].range();
-    let (w_lo, w_hi) = cfg.w[0].range();
+    // Operand draw ranges: the per-field intersection — the same bound
+    // the engine's plan/execute range checks enforce, so every drawn
+    // matrix is accepted and no slot can wrap (irregular layouts mix
+    // field widths).
+    let (a_lo, a_hi) = cfg.a_value_range();
+    let (w_lo, w_hi) = cfg.w_value_range();
     let m = 1 + rng.below(6) as usize;
     let k = 1 + rng.below(24) as usize;
     let n = 1 + rng.below(6) as usize;
@@ -113,43 +225,59 @@ fn run_case(seed: u64) {
     assert_eq!(cn, cw, "{ctx}: narrow/wide outputs {m}x{k}x{n}");
     assert_eq!(sn, sw, "{ctx}: narrow/wide DspOpStats {m}x{k}x{n}");
 
+    // Blocked vs reference kernels: the unrolled/blocked path must stay
+    // bit-identical to the pre-block scalar path — over the shared plan
+    // and over a forced multi-block (col_block = 1) schedule.
+    let (cr, sr) = reference.execute(&plan_n, &a).unwrap();
+    assert_eq!(cr, cn, "{ctx}: blocked vs reference outputs {m}x{k}x{n}");
+    assert_eq!(sr, sn, "{ctx}: blocked vs reference DspOpStats {m}x{k}x{n}");
+    let plan_t = tiny.plan(&w).unwrap();
+    assert_eq!(plan_t.plan().col_block, 1, "{ctx}");
+    let (ct, st) = tiny.execute(&plan_t, &a).unwrap();
+    assert_eq!(ct, cn, "{ctx}: multi-block schedule outputs {m}x{k}x{n}");
+    assert_eq!(st, sn, "{ctx}: multi-block schedule DspOpStats {m}x{k}x{n}");
+
     // Plan/execute vs the one-shot matmul: bit-identical entry points.
     let (cm, sm) = auto.matmul(&a, &w).unwrap();
     assert_eq!(cm, cn, "{ctx}: matmul == plan/execute");
     assert_eq!(sm, sn, "{ctx}: matmul DspOpStats");
 
-    // Exact-oracle tier.
+    // Exact-oracle tier (generator-space draws: the bounds below are
+    // stated for uniform result spacing; irregular layouts are covered
+    // by the bit-identity tiers above).
     let exact = a.matmul_exact(&w).unwrap();
-    if corr == Correction::FullRoundHalfUp && cfg.delta >= 0 {
-        assert_eq!(cn, exact, "{ctx}: RHU must be exact for δ ≥ 0");
-    }
-    // Hard per-element bound, every scheme: each per-product extracted
-    // field and its exact product both lie in the field's signed range,
-    // so K accumulated products differ by strictly less than K·2^width.
-    let width = cfg.results[0].width;
-    let hard = (k as i128) << width;
-    for r in 0..m {
-        for c in 0..n {
-            let err = (cn.get(r, c) as i128 - exact.get(r, c) as i128).abs();
-            assert!(err < hard, "{ctx}: |err| {err} breaks the hard bound {hard}");
+    if !irregular {
+        if corr == Correction::FullRoundHalfUp && cfg.delta >= 0 {
+            assert_eq!(cn, exact, "{ctx}: RHU must be exact for δ ≥ 0");
         }
-    }
-    // Near-precise tier: the MR restore leaves only the below-neighbour
-    // bleed; in the wrap-free regime that bound is provable, not
-    // statistical (see the module docs), and it also bounds the MAE.
-    if matches!(corr, Correction::MrRestore | Correction::MrRestorePlusCPort) {
-        let overlap = (-cfg.delta) as u32; // δ < 0 for the MR family
-        let e_max = (1i128 << (overlap - 1)) + 7;
-        if e_max <= 1i128 << (cfg.w[0].width - 1) {
-            // Per-element bound; it implies the MAE bound a fortiori.
-            let bound = k as i128 * e_max;
-            for r in 0..m {
-                for c in 0..n {
-                    let err = (cn.get(r, c) as i128 - exact.get(r, c) as i128).abs();
-                    assert!(
-                        err <= bound,
-                        "{ctx}: MR residual {err} breaks the bound {bound} (K={k})"
-                    );
+        // Hard per-element bound, every scheme: each per-product extracted
+        // field and its exact product both lie in the field's signed range,
+        // so K accumulated products differ by strictly less than K·2^width.
+        let width = cfg.results[0].width;
+        let hard = (k as i128) << width;
+        for r in 0..m {
+            for c in 0..n {
+                let err = (cn.get(r, c) as i128 - exact.get(r, c) as i128).abs();
+                assert!(err < hard, "{ctx}: |err| {err} breaks the hard bound {hard}");
+            }
+        }
+        // Near-precise tier: the MR restore leaves only the below-neighbour
+        // bleed; in the wrap-free regime that bound is provable, not
+        // statistical (see the module docs), and it also bounds the MAE.
+        if matches!(corr, Correction::MrRestore | Correction::MrRestorePlusCPort) {
+            let overlap = (-cfg.delta) as u32; // δ < 0 for the MR family
+            let e_max = (1i128 << (overlap - 1)) + 7;
+            if e_max <= 1i128 << (cfg.w[0].width - 1) {
+                // Per-element bound; it implies the MAE bound a fortiori.
+                let bound = k as i128 * e_max;
+                for r in 0..m {
+                    for c in 0..n {
+                        let err = (cn.get(r, c) as i128 - exact.get(r, c) as i128).abs();
+                        assert!(
+                            err <= bound,
+                            "{ctx}: MR residual {err} breaks the bound {bound} (K={k})"
+                        );
+                    }
                 }
             }
         }
@@ -189,7 +317,15 @@ fn run_case(seed: u64) {
                 .unwrap();
             assert_eq!(out_n, out_w, "{ctx}: conv narrow/wide outputs");
             assert_eq!(s_n, s_w, "{ctx}: conv narrow/wide DspOpStats");
-            if corr == Correction::FullRoundHalfUp && cfg.delta >= 0 {
+            // Blocked vs reference kernels through the conv lowering too
+            // (patch buffer + dense plan cache + execute).
+            let mut s_r = DspOpStats::default();
+            let out_r = conv
+                .forward(&x, h, wimg, &ExecMode::Packed(reference.clone()), a_bits, &mut s_r)
+                .unwrap();
+            assert_eq!(out_r, out_n, "{ctx}: conv blocked vs reference outputs");
+            assert_eq!(s_r, s_n, "{ctx}: conv blocked vs reference DspOpStats");
+            if !irregular && corr == Correction::FullRoundHalfUp && cfg.delta >= 0 {
                 let mut s_e = DspOpStats::default();
                 let out_e = conv
                     .forward(&x, h, wimg, &ExecMode::Exact, a_bits, &mut s_e)
