@@ -16,6 +16,10 @@ use crate::bits::{field_unsigned, mask, wrap_unsigned};
 use crate::dsp48::{Dsp48E2, DspInputs, Opmode, SimdMode};
 use crate::{Error, Result};
 
+pub mod plan;
+
+pub use plan::{AccumBackend, AccumEngine, AccumPlan, AccumState, BankStateMut};
+
 /// One adder lane: an unsigned `width`-bit addition placed at `offset`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AdderLane {
@@ -83,6 +87,41 @@ impl AdditionPacking {
             offset += 9 + u32::from(i < 3);
         }
         Ok(AdditionPacking { lanes, guard_bits: 1 })
+    }
+
+    /// Structural validation of a (possibly hand-assembled) lane layout:
+    /// at least one lane, non-zero widths, offsets strictly increasing
+    /// with no overlap, and the top lane inside the 48-bit ALU word.
+    ///
+    /// [`Self::uniform`] / [`Self::mixed`] construct layouts that pass by
+    /// construction, but the `lanes` / `guard_bits` fields are `pub` (so
+    /// irregular layouts like [`Self::table3_guarded`] can exist), which
+    /// means a hand-built overlapping or >48-bit layout can bypass those
+    /// checks. Everything that makes a layout resident — in particular
+    /// [`plan::AccumPlan::new`] — must call this first.
+    pub fn validate(&self) -> Result<()> {
+        if self.lanes.is_empty() {
+            return Err(Error::InvalidConfig("no adder lanes".into()));
+        }
+        let mut prev_end = 0u32;
+        for (i, l) in self.lanes.iter().enumerate() {
+            if l.width == 0 {
+                return Err(Error::InvalidConfig(format!("zero-width adder lane {i}")));
+            }
+            if l.offset < prev_end {
+                return Err(Error::GeometryViolation(format!(
+                    "lane {i} at bit {} overlaps the previous lane (which ends at bit {prev_end})",
+                    l.offset
+                )));
+            }
+            prev_end = l.offset + l.width;
+            if prev_end > 48 {
+                return Err(Error::GeometryViolation(format!(
+                    "lane {i} ends at bit {prev_end} of a 48-bit ALU word"
+                )));
+            }
+        }
+        Ok(())
     }
 
     /// Number of lanes.

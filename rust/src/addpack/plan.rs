@@ -1,0 +1,471 @@
+//! Plan / execute split for §VII addition packing — the accumulate
+//! datapath analogue of the GEMM fabric's plan/engine pair.
+//!
+//! [`AccumPlan`] is the resident half: a **validated** lane layout
+//! ([`AdditionPacking::validate`] — hand-assembled layouts cannot sneak
+//! overlapping or >48-bit lanes past it), the derived guard map (per-lane
+//! *spans*: the bits a lane owns up to the next lane's offset, guards
+//! included), the bank schedule (`n` logical lanes striped
+//! `lanes_per_bank` to a 48-bit ALU word), and per-bank [`DspInputs`]
+//! templates so the execution loop only patches the A:B operand. Plans
+//! are built once and shared (`Arc`) across batches, exactly like the
+//! GEMM side's weight planes; [`crate::nn::PlanBudget`] accounts their
+//! resident bytes through the same eviction machinery.
+//!
+//! [`AccumEngine`] is the execution half, with twin datapaths:
+//!
+//! * **Narrow `i64`** ([`AccumBackend::Narrow64`], the default): a 48-bit
+//!   ALU word fits an `i64` with headroom, so each bank is one `i64` and
+//!   an accumulate is an add + mask. Signed two's-complement wrap and
+//!   unsigned wrap agree mod 2⁴⁸, so per-lane values — **including carry
+//!   leaks across unguarded boundaries** — are bit-identical to the
+//!   DSP simulation.
+//! * **Wide `i128`** ([`AccumBackend::Wide128`]): the original
+//!   [`Dsp48E2`] path (`P = A:B + C + P`, ALU-only), kept as the A/B
+//!   reference the narrow twin is pinned against in the fuzz battery.
+//!
+//! State ([`AccumState`]) is separate from both: callers hold one word
+//! (or simulated slice) per bank and hand the engine disjoint
+//! [`BankStateMut`] views, which is what lets the SNN layer advance its
+//! banks in parallel on the persistent worker pool
+//! ([`crate::util::parallel_map_mut`]).
+
+use super::{AdderLane, AdditionPacking};
+use crate::bits::{mask, wrap_unsigned};
+use crate::dsp48::{Dsp48E2, DspInputs, Opmode, SimdMode};
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// Full 48-bit ALU word mask for the narrow datapath.
+const WORD_MASK: i64 = (1i64 << 48) - 1;
+
+/// A resident, validated accumulate plan: `n_lanes` logical accumulator
+/// lanes striped across ⌈n_lanes / lanes_per_bank⌉ DSP banks under one
+/// lane layout. Built once via [`AccumPlan::new`], shared via `Arc`.
+#[derive(Debug)]
+pub struct AccumPlan {
+    packing: AdditionPacking,
+    n_lanes: usize,
+    n_banks: usize,
+    /// Per-slot bit offsets (copied out of the packing for the hot loop).
+    offsets: Vec<u32>,
+    /// Per-slot lane widths in bits.
+    widths: Vec<u32>,
+    /// Per-slot spans: bits from this lane's offset up to the next lane's
+    /// offset (48 for the top lane) — the lane's field plus its trailing
+    /// guard/headroom bits, which reload with it.
+    spans: Vec<u32>,
+    /// Per-bank input templates (ALU-only accumulate; execution patches
+    /// the A:B operand only).
+    templates: Vec<DspInputs>,
+}
+
+impl AccumPlan {
+    /// Build a plan for `n_lanes` logical lanes over `packing`. The
+    /// layout is structurally validated first; hand-built layouts that
+    /// overlap or overflow the 48-bit word are rejected here.
+    pub fn new(packing: AdditionPacking, n_lanes: usize) -> Result<Arc<AccumPlan>> {
+        packing.validate()?;
+        if n_lanes == 0 {
+            return Err(Error::InvalidConfig("no accumulator lanes requested".into()));
+        }
+        let per_bank = packing.num_lanes();
+        let n_banks = n_lanes.div_ceil(per_bank);
+        let offsets: Vec<u32> = packing.lanes.iter().map(|l| l.offset).collect();
+        let widths: Vec<u32> = packing.lanes.iter().map(|l| l.width).collect();
+        let spans: Vec<u32> = (0..per_bank)
+            .map(|i| {
+                let end = packing.lanes.get(i + 1).map(|n| n.offset).unwrap_or(48);
+                end - packing.lanes[i].offset
+            })
+            .collect();
+        let templates = vec![DspInputs::default(); n_banks];
+        Ok(Arc::new(AccumPlan { packing, n_lanes, n_banks, offsets, widths, spans, templates }))
+    }
+
+    /// The validated lane layout.
+    pub fn packing(&self) -> &AdditionPacking {
+        &self.packing
+    }
+
+    /// Logical accumulator lanes across all banks.
+    pub fn lanes(&self) -> usize {
+        self.n_lanes
+    }
+
+    /// DSP banks in the schedule (the §VII resource win: ⌈n/k⌉ ALUs
+    /// instead of n dedicated adders).
+    pub fn banks(&self) -> usize {
+        self.n_banks
+    }
+
+    /// Lane slots per bank.
+    pub fn lanes_per_bank(&self) -> usize {
+        self.packing.num_lanes()
+    }
+
+    /// Occupied slots in `bank` (the last bank may be partial).
+    pub fn bank_lanes(&self, bank: usize) -> usize {
+        let lo = bank * self.lanes_per_bank();
+        self.lanes_per_bank().min(self.n_lanes.saturating_sub(lo))
+    }
+
+    /// Width in bits of lane slot `slot`.
+    pub fn lane_width(&self, slot: usize) -> u32 {
+        self.widths[slot]
+    }
+
+    /// Span in bits of lane slot `slot` (field + trailing guard bits).
+    pub fn lane_span(&self, slot: usize) -> u32 {
+        self.spans[slot]
+    }
+
+    /// Whether slot `slot` has at least one trailing guard/headroom bit
+    /// (its overflow is absorbed instead of leaking into the next lane).
+    pub fn lane_guarded(&self, slot: usize) -> bool {
+        self.spans[slot] > self.widths[slot]
+    }
+
+    /// Resident size in bytes (for [`crate::nn::PlanBudget`] accounting).
+    pub fn bytes(&self) -> usize {
+        std::mem::size_of::<Self>()
+            + self.packing.lanes.len() * std::mem::size_of::<AdderLane>()
+            + (self.offsets.len() + self.widths.len() + self.spans.len())
+                * std::mem::size_of::<u32>()
+            + self.templates.len() * std::mem::size_of::<DspInputs>()
+    }
+
+    /// Pack one per-slot increment vector into a 48-bit word,
+    /// range-checking every slot (the fix for the old layer's silent
+    /// `& lane_mask` truncation): over-range increments are an
+    /// [`Error::OperandRange`], never a wrap.
+    fn pack_word(&self, incs: &[i64]) -> Result<i64> {
+        if incs.len() > self.lanes_per_bank() {
+            return Err(Error::OperandRange(format!(
+                "got {} increments for {} lane slots",
+                incs.len(),
+                self.lanes_per_bank()
+            )));
+        }
+        let mut word = 0i64;
+        for (slot, &v) in incs.iter().enumerate() {
+            let w = self.widths[slot];
+            if v < 0 || (v >> w) != 0 {
+                return Err(Error::OperandRange(format!(
+                    "{v} does not fit unsigned {w} bits"
+                )));
+            }
+            word |= v << self.offsets[slot];
+        }
+        Ok(word)
+    }
+
+    /// Instantiate the bank's input template with an A:B word.
+    fn bank_inputs(&self, bank: usize, word: i128) -> DspInputs {
+        let mut inp = self.templates[bank];
+        inp.a = word >> 18;
+        inp.b = word & mask(18);
+        inp
+    }
+}
+
+/// Which integer datapath executes accumulates (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccumBackend {
+    /// One `i64` word per bank; add + mask per accumulate. Bit-identical
+    /// to the DSP simulation, carry leaks included.
+    Narrow64,
+    /// One simulated [`Dsp48E2`] per bank — the A/B reference path.
+    Wide128,
+}
+
+/// Per-bank accumulator words for one plan, on one backend. Created by
+/// [`AccumEngine::new_state`]; banks are advanced through disjoint
+/// [`BankStateMut`] views (see [`AccumState::banks_mut`]).
+#[derive(Debug, Clone)]
+pub struct AccumState {
+    words: Words,
+}
+
+#[derive(Debug, Clone)]
+enum Words {
+    Narrow(Vec<i64>),
+    Wide(Vec<Dsp48E2>),
+}
+
+impl AccumState {
+    /// Exclusive per-bank views, one per bank in order — disjoint, so
+    /// each can go to a different pool worker.
+    pub fn banks_mut(&mut self) -> Vec<BankStateMut<'_>> {
+        match &mut self.words {
+            Words::Narrow(v) => v.iter_mut().map(BankStateMut::Narrow).collect(),
+            Words::Wide(v) => v.iter_mut().map(BankStateMut::Wide).collect(),
+        }
+    }
+
+    /// Number of banks.
+    pub fn banks(&self) -> usize {
+        match &self.words {
+            Words::Narrow(v) => v.len(),
+            Words::Wide(v) => v.len(),
+        }
+    }
+}
+
+/// Exclusive view of one bank's accumulator word.
+#[derive(Debug)]
+pub enum BankStateMut<'a> {
+    /// Narrow path: the bank's 48-bit word in an `i64`.
+    Narrow(&'a mut i64),
+    /// Wide path: the bank's simulated slice (the P register is the
+    /// word).
+    Wide(&'a mut Dsp48E2),
+}
+
+impl BankStateMut<'_> {
+    /// The bank's current 48-bit word, as an unsigned value in an `i64`.
+    fn word(&self) -> i64 {
+        match self {
+            BankStateMut::Narrow(w) => **w,
+            BankStateMut::Wide(dsp) => wrap_unsigned(dsp.p(), 48) as i64,
+        }
+    }
+}
+
+/// The execution half: stateless apart from the backend choice. All
+/// methods take the plan and a bank view, so callers control residency
+/// and parallelism.
+#[derive(Debug, Clone)]
+pub struct AccumEngine {
+    backend: AccumBackend,
+}
+
+impl Default for AccumEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AccumEngine {
+    /// Engine on the narrow `i64` datapath (the serving default).
+    pub fn new() -> Self {
+        AccumEngine { backend: AccumBackend::Narrow64 }
+    }
+
+    /// Engine on the wide simulated-DSP datapath (the A/B reference).
+    pub fn new_wide() -> Self {
+        AccumEngine { backend: AccumBackend::Wide128 }
+    }
+
+    /// The active datapath.
+    pub fn backend(&self) -> AccumBackend {
+        self.backend
+    }
+
+    /// Fresh all-zero state for `plan` on this backend.
+    pub fn new_state(&self, plan: &AccumPlan) -> AccumState {
+        let words = match self.backend {
+            AccumBackend::Narrow64 => Words::Narrow(vec![0i64; plan.banks()]),
+            AccumBackend::Wide128 => Words::Wide(
+                (0..plan.banks())
+                    .map(|_| Dsp48E2::new(Opmode::add_ab_accumulate(SimdMode::One48)))
+                    .collect(),
+            ),
+        };
+        AccumState { words }
+    }
+
+    /// Zero every bank word.
+    pub fn reset(&self, state: &mut AccumState) {
+        match &mut state.words {
+            Words::Narrow(v) => v.iter_mut().for_each(|w| *w = 0),
+            Words::Wide(v) => v.iter_mut().for_each(Dsp48E2::reset),
+        }
+    }
+
+    /// One ALU pass on bank `bank`: pack `incs` (range-checked per slot)
+    /// and accumulate the word. Trailing slots beyond `incs.len()` get no
+    /// increment. Carries crossing unguarded slot boundaries leak exactly
+    /// as on the DSP — identically on both backends.
+    pub fn bank_accumulate(
+        &self,
+        plan: &AccumPlan,
+        bank: usize,
+        state: &mut BankStateMut<'_>,
+        incs: &[i64],
+    ) -> Result<()> {
+        let word = plan.pack_word(incs)?;
+        match state {
+            BankStateMut::Narrow(w) => **w = (**w + word) & WORD_MASK,
+            BankStateMut::Wide(dsp) => {
+                dsp.eval_update(&plan.bank_inputs(bank, word as i128));
+            }
+        }
+        Ok(())
+    }
+
+    /// Read the first `out.len()` lane fields of a bank into `out`.
+    pub fn bank_values_into(&self, plan: &AccumPlan, state: &BankStateMut<'_>, out: &mut [i64]) {
+        let word = state.word();
+        for (slot, v) in out.iter_mut().enumerate() {
+            *v = (word >> plan.offsets[slot]) & ((1i64 << plan.widths[slot]) - 1);
+        }
+    }
+
+    /// Overwrite one lane slot — field **and** trailing guard bits — with
+    /// `value`: a register reload, as a hardware membrane reset would be
+    /// (an ALU subtract would push a borrow across the boundary and
+    /// defeat the guard). Other lanes, including carries already leaked
+    /// into them, are untouched. On the wide path this is a reset +
+    /// replay of the patched word; the narrow path's masked write is
+    /// bit-identical.
+    pub fn bank_set_lane(
+        &self,
+        plan: &AccumPlan,
+        bank: usize,
+        state: &mut BankStateMut<'_>,
+        slot: usize,
+        value: i64,
+    ) -> Result<()> {
+        let w = *plan.widths.get(slot).ok_or_else(|| {
+            Error::OperandRange(format!("lane slot {slot} of {}", plan.lanes_per_bank()))
+        })?;
+        if value < 0 || (value >> w) != 0 {
+            return Err(Error::OperandRange(format!(
+                "{value} does not fit unsigned {w} bits"
+            )));
+        }
+        let offset = plan.offsets[slot];
+        let span_mask = ((1i64 << plan.spans[slot]) - 1) << offset;
+        let next = (state.word() & !span_mask) | (value << offset);
+        match state {
+            BankStateMut::Narrow(word) => **word = next,
+            BankStateMut::Wide(dsp) => {
+                dsp.reset();
+                dsp.eval_update(&plan.bank_inputs(bank, next as i128));
+            }
+        }
+        Ok(())
+    }
+
+    /// All logical lane values across the state's banks, in lane order.
+    pub fn lane_values(&self, plan: &AccumPlan, state: &AccumState) -> Vec<i64> {
+        let mut out = Vec::with_capacity(plan.lanes());
+        for bank in 0..plan.banks() {
+            let word = match &state.words {
+                Words::Narrow(v) => v[bank],
+                Words::Wide(v) => wrap_unsigned(v[bank].p(), 48) as i64,
+            };
+            for slot in 0..plan.bank_lanes(bank) {
+                out.push((word >> plan.offsets[slot]) & ((1i64 << plan.widths[slot]) - 1));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn both_engines() -> [AccumEngine; 2] {
+        [AccumEngine::new(), AccumEngine::new_wide()]
+    }
+
+    #[test]
+    fn plan_rejects_invalid_layouts() {
+        // Overlapping hand-built layout bypasses mixed()'s checks…
+        let overlap = AdditionPacking {
+            lanes: vec![AdderLane { width: 9, offset: 0 }, AdderLane { width: 9, offset: 5 }],
+            guard_bits: 0,
+        };
+        assert!(AccumPlan::new(overlap, 4).is_err());
+        // …as does a 49-bit layout.
+        let wide = AdditionPacking {
+            lanes: vec![AdderLane { width: 30, offset: 0 }, AdderLane { width: 19, offset: 30 }],
+            guard_bits: 0,
+        };
+        assert!(AccumPlan::new(wide, 4).is_err());
+        // Zero lanes requested.
+        assert!(AccumPlan::new(AdditionPacking::table3(), 0).is_err());
+    }
+
+    #[test]
+    fn spans_cover_guards_and_headroom() {
+        let plan = AccumPlan::new(AdditionPacking::table3_guarded().unwrap(), 5).unwrap();
+        // Guards after lanes 0..3, lane 4 unguarded but owns the headroom
+        // to bit 48 (none: 39 + 9 = 48).
+        assert_eq!(
+            (0..5).map(|s| plan.lane_span(s)).collect::<Vec<_>>(),
+            vec![10, 10, 10, 9, 9]
+        );
+        assert_eq!(
+            (0..5).map(|s| plan.lane_guarded(s)).collect::<Vec<_>>(),
+            vec![true, true, true, false, false]
+        );
+        // Table III: five 9-bit lanes in 45 bits; the top lane owns the
+        // 3 spare high bits.
+        let t3 = AccumPlan::new(AdditionPacking::table3(), 11).unwrap();
+        assert_eq!(t3.banks(), 3);
+        assert_eq!(t3.bank_lanes(2), 1);
+        assert_eq!(t3.lane_span(4), 12);
+    }
+
+    #[test]
+    fn narrow_matches_wide_with_leaks() {
+        // Drive both backends with wrapping increments: values must agree
+        // bit for bit, carry leaks included.
+        let plan = AccumPlan::new(AdditionPacking::table3(), 5).unwrap();
+        let [narrow, wide] = both_engines();
+        let mut sn = narrow.new_state(&plan);
+        let mut sw = wide.new_state(&plan);
+        for step in 0..200i64 {
+            let incs: Vec<i64> = (0..5).map(|l| (step * 37 + l * 101) % 512).collect();
+            {
+                let mut bn = sn.banks_mut();
+                narrow.bank_accumulate(&plan, 0, &mut bn[0], &incs).unwrap();
+            }
+            {
+                let mut bw = sw.banks_mut();
+                wide.bank_accumulate(&plan, 0, &mut bw[0], &incs).unwrap();
+            }
+            assert_eq!(
+                narrow.lane_values(&plan, &sn),
+                wide.lane_values(&plan, &sw),
+                "step {step}"
+            );
+        }
+    }
+
+    #[test]
+    fn set_lane_reloads_identically() {
+        let plan = AccumPlan::new(AdditionPacking::table3_guarded().unwrap(), 5).unwrap();
+        let [narrow, wide] = both_engines();
+        let mut sn = narrow.new_state(&plan);
+        let mut sw = wide.new_state(&plan);
+        let incs = vec![300i64, 400, 200, 500, 100];
+        for eng_state in [(&narrow, &mut sn), (&wide, &mut sw)] {
+            let (eng, state) = eng_state;
+            let mut banks = state.banks_mut();
+            for _ in 0..3 {
+                eng.bank_accumulate(&plan, 0, &mut banks[0], &incs).unwrap();
+            }
+            eng.bank_set_lane(&plan, 0, &mut banks[0], 1, 7).unwrap();
+        }
+        let vn = narrow.lane_values(&plan, &sn);
+        assert_eq!(vn, wide.lane_values(&plan, &sw));
+        assert_eq!(vn[1], 7, "reloaded lane reads the reload value");
+    }
+
+    #[test]
+    fn over_range_increment_is_an_error() {
+        let plan = AccumPlan::new(AdditionPacking::table3(), 5).unwrap();
+        let eng = AccumEngine::new();
+        let mut state = eng.new_state(&plan);
+        let mut banks = state.banks_mut();
+        let err = eng.bank_accumulate(&plan, 0, &mut banks[0], &[512, 0, 0, 0, 0]);
+        assert!(matches!(err, Err(Error::OperandRange(_))));
+        let err = eng.bank_set_lane(&plan, 0, &mut banks[0], 0, -1);
+        assert!(matches!(err, Err(Error::OperandRange(_))));
+    }
+}

@@ -21,6 +21,7 @@ mod adaptive;
 mod batcher;
 mod metrics;
 mod server;
+mod spiking;
 
 pub use adaptive::{AdaptiveBackend, BudgetChannelPolicy, PrecisionClass, PrecisionPolicy};
 pub use batcher::{BatcherConfig, DynamicBatcher};
@@ -29,3 +30,4 @@ pub use server::{
     Coordinator, CoordinatorHandle, InferenceBackend, PackedNnBackend, Prediction, Request,
     ServerConfig,
 };
+pub use spiking::SpikingBackend;

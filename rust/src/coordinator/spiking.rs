@@ -1,0 +1,110 @@
+//! The spiking (event-stream) serving backend: spike-train inference
+//! through the coordinator, on the packed accumulate datapath.
+//!
+//! [`SpikingBackend`] adapts a [`SpikingDense`] layer to
+//! [`InferenceBackend`]: each float image in a served batch is
+//! rate-coded into a binary spike train and run through the layer's
+//! stateless [`SpikingDense::infer_train`] entry point; the class with
+//! the most output spikes wins. Accumulate work is reported through the
+//! same [`DspOpStats`] channel the GEMM backends use (`dsp_cycles` = ALU
+//! passes + membrane reloads, `multiplications` = 0), so the
+//! coordinator's metrics cover adder-bound and multiplier-bound backends
+//! uniformly.
+
+use super::server::InferenceBackend;
+use crate::gemm::DspOpStats;
+use crate::nn::SpikingDense;
+use crate::util::{parallel_map_cost, Rng};
+use crate::Result;
+
+/// Serves spike-train classification over a [`SpikingDense`] layer (one
+/// neuron per class). Batches fan out image-parallel on the persistent
+/// worker pool; the layer's own bank parallelism then runs inline on the
+/// worker (nested pool calls always do).
+pub struct SpikingBackend {
+    layer: SpikingDense,
+    steps: usize,
+    label: String,
+}
+
+impl SpikingBackend {
+    /// Wrap a layer; every request is rate-coded into `steps` timesteps
+    /// (clamped to ≥ 1).
+    pub fn new(layer: SpikingDense, steps: usize) -> Self {
+        let steps = steps.max(1);
+        let label = format!(
+            "snn:{}lanes:{}bits:{}steps",
+            layer.packing().num_lanes(),
+            layer.packing().bits_used(),
+            steps
+        );
+        SpikingBackend { layer, steps, label }
+    }
+
+    /// The served layer.
+    pub fn layer(&self) -> &SpikingDense {
+        &self.layer
+    }
+
+    /// Timesteps each request is rate-coded into.
+    pub fn steps(&self) -> usize {
+        self.steps
+    }
+
+    /// Bernoulli rate-coding of one image (pixel intensity = spike
+    /// probability), seeded from the image *content* (FNV-1a over the
+    /// pixel bit patterns) — deterministic per image and independent of
+    /// batch composition, so a request's prediction never depends on its
+    /// batch neighbours.
+    fn encode(&self, image: &[f32]) -> Vec<Vec<u8>> {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for v in image {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        let mut rng = Rng::new(h);
+        (0..self.steps)
+            .map(|_| {
+                image
+                    .iter()
+                    .map(|&p| u8::from(rng.chance(f64::from(p.clamp(0.0, 1.0)))))
+                    .collect()
+            })
+            .collect()
+    }
+}
+
+impl InferenceBackend for SpikingBackend {
+    fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
+        let cost = (batch.len() as u64)
+            .saturating_mul(self.steps as u64)
+            .saturating_mul(self.layer.neurons() as u64 * 4);
+        let results = parallel_map_cost(batch, cost, |image| -> Result<(usize, DspOpStats)> {
+            let train = self.encode(image);
+            let (counts, stats) = self.layer.infer_train(&train)?;
+            // Argmax over spike counts; ties break toward the higher
+            // class index, matching `NnModel::classify`.
+            let class = counts
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, &c)| c)
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            Ok((class, stats.dsp))
+        });
+        let mut classes = Vec::with_capacity(batch.len());
+        let mut dsp = DspOpStats::default();
+        for r in results {
+            let (class, stats) = r?;
+            classes.push(class);
+            dsp.merge(&stats);
+        }
+        Ok((classes, dsp))
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}

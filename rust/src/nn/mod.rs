@@ -11,10 +11,14 @@
 //!   its convolution to the same packed GEMM via im2col
 //!   ([`Conv2dLayer`], [`MaxPool2d`] in [`conv`]).
 //! * [`SpikingDense`] — integrate-and-fire layer whose membrane
-//!   accumulators are packed into 48-bit DSP ALUs
-//!   ([`crate::addpack::PackedAccumulator`]); since spikes are binary,
-//!   the weighted sum is a pure addition stream, which is exactly the
-//!   §VII workload.
+//!   accumulators are packed into 48-bit DSP ALUs on the plan/execute
+//!   accumulate datapath ([`crate::addpack::plan`]): resident
+//!   budget-accounted [`crate::addpack::AccumPlan`]s, a narrow-`i64`
+//!   execution twin pinned against the simulated DSP, bank-parallel
+//!   execution, and bias-corrected membrane dynamics whose sizing rule
+//!   guarantees lanes never wrap. Since spikes are binary, the weighted
+//!   sum is a pure addition stream — exactly the §VII workload
+//!   ([`crate::coordinator::SpikingBackend`] serves it).
 //! * [`data`] — deterministic synthetic classification datasets for the
 //!   end-to-end examples and tests.
 //! * [`NnModel`] — the model interface the serving layer hosts
@@ -34,7 +38,7 @@ pub mod weights;
 pub use budget::PlanBudget;
 pub use conv::{Conv2dLayer, ConvGeometry, ConvStage, MaxPool2d, QuantCnn, StageSpec};
 pub use mlp::{DenseLayer, ExecMode, QuantMlp};
-pub use snn::{SnnStats, SpikingDense};
+pub use snn::{SnnStats, SpikingDense, REBIAS_SLACK};
 
 use crate::gemm::{DspOpStats, MatI32};
 use crate::Result;

@@ -1,25 +1,78 @@
-//! Spiking (integrate-and-fire) dense layer over packed addition (§VII).
+//! Spiking (integrate-and-fire) dense layer over packed addition (§VII),
+//! on the plan/execute accumulate datapath.
 //!
 //! SNN accelerators are adder-bound: per timestep each neuron adds the
-//! weights of its spiking inputs to a membrane potential. This layer packs
-//! several neurons' membranes into single 48-bit DSP accumulators via
-//! [`crate::addpack`], with or without guard bits, and tracks an exact
-//! shadow to quantify the carry-leak approximation.
+//! weights of its spiking inputs to a membrane potential. This layer
+//! packs several neurons' membranes into single 48-bit DSP ALU words via
+//! [`crate::addpack::plan`] — a resident [`AccumPlan`] (built once,
+//! budget-accounted, rebuilt bit-identically after eviction) executed by
+//! an [`AccumEngine`] on either the narrow `i64` or the wide simulated
+//! datapath, bank-parallel on the persistent worker pool.
+//!
+//! # Membrane arithmetic (the drift fix)
+//!
+//! Weights are signed but packed lanes are unsigned, so each neuron `j`
+//! stores a **biased** membrane: every timestep adds
+//! `inc_j = Σ_{active i} w_ji + bias_j`, where
+//! `bias_j = Σ_i max(0, -w_ji)` makes the increment non-negative. The
+//! old layer compared that biased, wrapping value against the raw
+//! threshold — so a silent network drifted up by `bias_j` per step and
+//! eventually fired. Here the layer tracks the accumulated bias
+//! `B_j = Σ bias_j` since the lane's last reload and fires on the
+//! **corrected** membrane `m_j = lane_j - B_j`; a silent train leaves
+//! `m_j = 0` forever. Two reload events (hardware register reloads, not
+//! ALU passes — an ALU subtract would push a borrow across the lane
+//! boundary and defeat any guard) keep the stored value inside the lane:
+//!
+//! * **fire** (`m_j ≥ threshold`): reload to `m_j - threshold`, zero
+//!   `B_j`;
+//! * **rebias** (`B_j ≥ rebias_limit_j`): reload to `max(m_j, 0)` (the
+//!   membrane floor, applied at reload boundaries), zero `B_j`.
+//!
+//! `rebias_limit_j = 2^{w_j} - threshold - maxpos_j - bias_j -`
+//! [`REBIAS_SLACK`] (with `maxpos_j = Σ_i max(0, w_ji)`) guarantees the
+//! stored value never reaches `2^{w_j}`: a validly constructed layer's
+//! lanes **never wrap, so never leak carries**, making packed spiking
+//! exact on guarded *and* unguarded layouts — the layout choice buys
+//! density (lanes per DSP), not accuracy. The carry-leak approximation
+//! itself (WCE = 1 per unguarded boundary) is a property of deliberately
+//! wrapping accumulate streams and is pinned at the
+//! [`crate::addpack::plan`] / [`crate::addpack::AdditionPacking`] level.
+//! The exact dedicated-adder shadow is still simulated and compared
+//! every step; [`SnnStats::divergent_steps`] ≠ 0 now indicates an
+//! implementation bug, which the test battery asserts never happens.
 
-use crate::addpack::{AdditionPacking, PackedAccumulator};
+use super::budget::{next_cache_id, EvictableSlot, PlanBudget};
+use super::data::{self, Dataset};
+use crate::addpack::{AccumEngine, AccumPlan, AccumState, AdditionPacking, BankStateMut};
+use crate::gemm::DspOpStats;
+use crate::util::parallel_map_mut;
 use crate::{Error, Result};
+use std::sync::{Arc, Mutex};
+
+/// Headroom (in membrane units) the rebias schedule leaves unused at the
+/// top of every lane, so the no-wrap guarantee survives rounding in the
+/// schedule itself (reloads trigger *after* the step that crosses the
+/// limit).
+pub const REBIAS_SLACK: i64 = 32;
 
 /// Spike statistics from a run.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct SnnStats {
-    /// Spikes emitted by the packed (approximate) membranes.
+    /// Spikes emitted by the packed membranes.
     pub packed_spikes: u64,
-    /// Spikes emitted by the exact shadow membranes.
+    /// Spikes emitted by the exact dedicated-adder shadow membranes.
     pub exact_spikes: u64,
-    /// Timesteps where packed and exact spike vectors disagreed.
+    /// Timesteps where packed and exact spike vectors disagreed. Always 0
+    /// for a validly constructed layer (see the module docs); the shadow
+    /// runs as a permanent invariant check.
     pub divergent_steps: u64,
     /// Total timesteps simulated.
     pub steps: u64,
+    /// DSP work counters: `dsp_cycles` counts ALU passes (one per bank
+    /// per timestep) plus membrane-register reloads; `multiplications`
+    /// stays 0 — this is the adder-bound datapath.
+    pub dsp: DspOpStats,
 }
 
 impl SnnStats {
@@ -33,31 +86,339 @@ impl SnnStats {
     }
 }
 
-/// An integrate-and-fire layer of `n` neurons with signed integer weights,
-/// membranes packed `lanes_per_dsp` to a DSP.
+/// The shared storage cell of the accumulate plan cache (`Arc`'d so an
+/// attached [`PlanBudget`] can hold a `Weak` reference and clear it).
+type AccumSlot = Mutex<Option<Arc<AccumPlan>>>;
+
+/// Cached resident [`AccumPlan`] for one layer, attachable to a shared
+/// [`PlanBudget`] — the accumulate-side sibling of the GEMM layers'
+/// plan caches: every hit or store is reported to the budget (exact byte
+/// accounting, LRU stamps) and the budget may clear the slot to enforce
+/// its ceiling; the next run re-plans bit-identically.
+#[derive(Debug)]
+struct AccumPlanCache {
+    slot: Arc<AccumSlot>,
+    /// Process-unique id this cache is accounted under in a budget.
+    id: u64,
+    budget: Mutex<Option<Arc<PlanBudget>>>,
+}
+
+impl Default for AccumPlanCache {
+    fn default() -> Self {
+        AccumPlanCache {
+            slot: Arc::new(Mutex::new(None)),
+            id: next_cache_id(),
+            budget: Mutex::new(None),
+        }
+    }
+}
+
+impl Drop for AccumPlanCache {
+    fn drop(&mut self) {
+        if let Some(budget) = self.budget.lock().expect("plan cache poisoned").as_ref() {
+            budget.release(self.id);
+        }
+    }
+}
+
+impl AccumPlanCache {
+    /// Attach a shared budget; re-attaching releases the entry from the
+    /// previous budget so no phantom bytes linger there.
+    fn attach(&self, budget: Arc<PlanBudget>) {
+        let mut slot = self.budget.lock().expect("plan cache poisoned");
+        if let Some(old) = slot.as_ref() {
+            if !Arc::ptr_eq(old, &budget) {
+                old.release(self.id);
+            }
+        }
+        *slot = Some(budget);
+    }
+
+    /// Report a hit/store to the attached budget, if any. Called
+    /// **without** the slot lock held (the locking contract of
+    /// [`super::budget`]).
+    fn note_use(&self, bytes: usize) {
+        let budget = self.budget.lock().expect("plan cache poisoned").clone();
+        if let Some(budget) = budget {
+            let slot: Arc<dyn EvictableSlot> = Arc::clone(&self.slot);
+            budget.note_use(self.id, bytes, Arc::downgrade(&slot));
+        }
+    }
+
+    /// The plan for `packing` × `n_lanes`: served from the cache when
+    /// resident, (re)built — deterministically, so bit-identically —
+    /// otherwise.
+    fn plan_for(&self, packing: &AdditionPacking, n_lanes: usize) -> Result<Arc<AccumPlan>> {
+        let plan = {
+            let mut slot = self.slot.lock().expect("plan cache poisoned");
+            let hit = match slot.as_ref() {
+                Some(plan) if plan.packing() == packing && plan.lanes() == n_lanes => {
+                    Some(Arc::clone(plan))
+                }
+                _ => None,
+            };
+            match hit {
+                Some(plan) => plan,
+                None => {
+                    let plan = AccumPlan::new(packing.clone(), n_lanes)?;
+                    *slot = Some(Arc::clone(&plan));
+                    plan
+                }
+            }
+        };
+        self.note_use(plan.bytes());
+        Ok(plan)
+    }
+}
+
+/// Mutable run state: one accumulator word per bank plus the per-neuron
+/// reload bookkeeping and the exact shadow.
+#[derive(Debug)]
+struct RunState {
+    /// Packed accumulator words (one per bank, backend-specific).
+    accum: AccumState,
+    /// Per-neuron accumulated bias since the lane's last reload.
+    bias_accum: Vec<i64>,
+    /// Exact shadow membranes (dedicated-adder oracle, corrected scale).
+    exact: Vec<i64>,
+    /// The shadow's reload counter (same schedule as `bias_accum`).
+    exact_bias: Vec<i64>,
+}
+
+impl RunState {
+    fn new(engine: &AccumEngine, plan: &AccumPlan, neurons: usize) -> RunState {
+        RunState {
+            accum: engine.new_state(plan),
+            bias_accum: vec![0; neurons],
+            exact: vec![0; neurons],
+            exact_bias: vec![0; neurons],
+        }
+    }
+}
+
+/// Borrowed layer parameters handed to the bank-parallel core (grouped so
+/// the per-bank worker closure captures one reference).
+struct LayerRef<'a> {
+    plan: &'a AccumPlan,
+    engine: &'a AccumEngine,
+    weights: &'a [Vec<i32>],
+    threshold: i64,
+    step_bias: &'a [i64],
+    rebias_limit: &'a [i64],
+}
+
+/// One bank's slice of the run state (disjoint per bank, so banks advance
+/// in parallel on the pool).
+struct BankJob<'a> {
+    bank: usize,
+    /// First logical neuron of this bank.
+    lo: usize,
+    state: BankStateMut<'a>,
+    bias_accum: &'a mut [i64],
+    exact: &'a mut [i64],
+    exact_bias: &'a mut [i64],
+}
+
+/// Per-bank results of one train: spike counts plus per-step fire masks
+/// (bit `l` = lane slot `l` fired at that step) for both paths.
+struct BankOut {
+    counts: Vec<u64>,
+    packed_marks: Vec<u64>,
+    exact_marks: Vec<u64>,
+    dsp: DspOpStats,
+}
+
+/// Advance one bank through the whole train. Keeping a bank's full
+/// time loop on one worker is what makes the parallelism cheap: the
+/// bank word and its bookkeeping stay in that worker's cache for all
+/// timesteps.
+fn run_one_bank(
+    layer: &LayerRef<'_>,
+    active: &[Vec<u32>],
+    job: &mut BankJob<'_>,
+) -> Result<BankOut> {
+    let slots = layer.plan.lanes_per_bank();
+    let lanes_here = job.bias_accum.len();
+    let steps = active.len();
+    let mut counts = vec![0u64; lanes_here];
+    let mut packed_marks = vec![0u64; steps];
+    let mut exact_marks = vec![0u64; steps];
+    let mut inc = vec![0i64; slots];
+    let mut vals = vec![0i64; slots];
+    let mut dsp = DspOpStats::default();
+    for (t, act) in active.iter().enumerate() {
+        // Per-neuron biased increments (≥ 0 by construction of the bias).
+        for (l, slot_inc) in inc.iter_mut().enumerate().take(lanes_here) {
+            let j = job.lo + l;
+            let row = &layer.weights[j];
+            let mut acc = 0i64;
+            for &i in act {
+                acc += i64::from(row[i as usize]);
+            }
+            *slot_inc = acc + layer.step_bias[j];
+        }
+        // One ALU pass accumulates the whole bank.
+        layer.engine.bank_accumulate(layer.plan, job.bank, &mut job.state, &inc[..lanes_here])?;
+        dsp.dsp_cycles += 1;
+        layer.engine.bank_values_into(layer.plan, &job.state, &mut vals[..lanes_here]);
+        for l in 0..lanes_here {
+            let j = job.lo + l;
+            // Packed path: bias-corrected membrane, fire / rebias reload.
+            job.bias_accum[l] += layer.step_bias[j];
+            let m = vals[l] - job.bias_accum[l];
+            if m >= layer.threshold {
+                counts[l] += 1;
+                packed_marks[t] |= 1 << l;
+                layer.engine.bank_set_lane(
+                    layer.plan,
+                    job.bank,
+                    &mut job.state,
+                    l,
+                    m - layer.threshold,
+                )?;
+                job.bias_accum[l] = 0;
+                dsp.dsp_cycles += 1;
+            } else if job.bias_accum[l] >= layer.rebias_limit[j] {
+                layer.engine.bank_set_lane(layer.plan, job.bank, &mut job.state, l, m.max(0))?;
+                job.bias_accum[l] = 0;
+                dsp.dsp_cycles += 1;
+            }
+            // Exact shadow: same dynamics on a dedicated i64 adder.
+            job.exact[l] += inc[l] - layer.step_bias[j];
+            job.exact_bias[l] += layer.step_bias[j];
+            if job.exact[l] >= layer.threshold {
+                exact_marks[t] |= 1 << l;
+                job.exact[l] -= layer.threshold;
+                job.exact_bias[l] = 0;
+            } else if job.exact_bias[l] >= layer.rebias_limit[j] {
+                job.exact[l] = job.exact[l].max(0);
+                job.exact_bias[l] = 0;
+            }
+        }
+    }
+    Ok(BankOut { counts, packed_marks, exact_marks, dsp })
+}
+
+/// Run a train over all banks in parallel; returns per-neuron packed
+/// spike counts and the per-step packed spike vectors.
+fn run_banks(
+    layer: &LayerRef<'_>,
+    state: &mut RunState,
+    train: &[&[u8]],
+    stats: &mut SnnStats,
+) -> Result<(Vec<u64>, Vec<Vec<u8>>)> {
+    let n = layer.weights.len();
+    let inputs = layer.weights.first().map(|r| r.len()).unwrap_or(0);
+    for (t, spikes) in train.iter().enumerate() {
+        if spikes.len() != inputs {
+            return Err(Error::Shape(format!(
+                "timestep {t}: {} input spikes for {inputs} inputs",
+                spikes.len()
+            )));
+        }
+    }
+    let steps = train.len();
+    if steps == 0 {
+        return Ok((vec![0; n], Vec::new()));
+    }
+    // The active-input list of a step is shared by every neuron: gather
+    // once instead of scanning the (mostly silent) spike vector per
+    // neuron.
+    let active: Vec<Vec<u32>> = train
+        .iter()
+        .map(|s| {
+            s.iter()
+                .enumerate()
+                .filter(|(_, &v)| v != 0)
+                .map(|(i, _)| i as u32)
+                .collect()
+        })
+        .collect();
+    let lanes = layer.plan.lanes_per_bank();
+    debug_assert_eq!(state.accum.banks(), layer.plan.banks());
+
+    let mut jobs: Vec<BankJob<'_>> = state
+        .accum
+        .banks_mut()
+        .into_iter()
+        .zip(state.bias_accum.chunks_mut(lanes))
+        .zip(state.exact.chunks_mut(lanes))
+        .zip(state.exact_bias.chunks_mut(lanes))
+        .enumerate()
+        .map(|(bank, (((bank_state, bias_accum), exact), exact_bias))| BankJob {
+            bank,
+            lo: bank * lanes,
+            state: bank_state,
+            bias_accum,
+            exact,
+            exact_bias,
+        })
+        .collect();
+
+    let total_active: u64 = active.iter().map(|a| a.len() as u64).sum();
+    let cost = total_active
+        .saturating_mul(n as u64)
+        .saturating_add((steps as u64).saturating_mul(n as u64) * 4);
+    let outs = parallel_map_mut(&mut jobs, cost, |job| run_one_bank(layer, &active, job));
+
+    let mut counts = vec![0u64; n];
+    let mut out = vec![vec![0u8; n]; steps];
+    let mut divergent = vec![false; steps];
+    for (bank, res) in outs.into_iter().enumerate() {
+        let o = res?;
+        let lo = bank * lanes;
+        for (l, c) in o.counts.iter().enumerate() {
+            counts[lo + l] = *c;
+        }
+        for t in 0..steps {
+            let (pm, em) = (o.packed_marks[t], o.exact_marks[t]);
+            if pm != em {
+                divergent[t] = true;
+            }
+            stats.packed_spikes += u64::from(pm.count_ones());
+            stats.exact_spikes += u64::from(em.count_ones());
+            for l in 0..o.counts.len() {
+                if (pm >> l) & 1 == 1 {
+                    out[t][lo + l] = 1;
+                }
+            }
+        }
+        stats.dsp.merge(&o.dsp);
+    }
+    stats.steps += steps as u64;
+    stats.divergent_steps += divergent.iter().filter(|&&d| d).count() as u64;
+    Ok((counts, out))
+}
+
+/// An integrate-and-fire layer of `n` neurons with signed integer
+/// weights, membranes packed several to a 48-bit DSP ALU word (see the
+/// module docs for the arithmetic).
 #[derive(Debug)]
 pub struct SpikingDense {
     /// Weights: `weights[j][i]` = contribution of input i to neuron j.
     weights: Vec<Vec<i32>>,
-    /// Firing threshold (membrane units).
+    /// Firing threshold (corrected-membrane units).
     threshold: i64,
-    /// Packed membrane banks (one [`PackedAccumulator`] per DSP).
-    banks: Vec<PackedAccumulator>,
-    /// Exact membranes (oracle).
-    exact: Vec<i64>,
-    /// Membrane lane width in bits.
-    lane_width: u32,
-    /// Lanes per DSP bank.
-    lanes_per_dsp: usize,
-    /// Weight offset: membranes store `m + bias` per step so lanes stay
-    /// unsigned (weights are signed; the offset keeps increments ≥ 0).
-    step_bias: i64,
+    /// The validated lane layout neurons are striped over.
+    packing: AdditionPacking,
+    /// The accumulate execution engine (narrow by default).
+    engine: AccumEngine,
+    /// Resident plan cache (budget-attachable).
+    plan_cache: AccumPlanCache,
+    /// Per-neuron `Σ_i max(0, w_ji)` (worst-case positive step).
+    max_pos: Vec<i64>,
+    /// Per-neuron bias `Σ_i max(0, -w_ji)` added every step.
+    step_bias: Vec<i64>,
+    /// Per-neuron rebias ceiling (see the module docs).
+    rebias_limit: Vec<i64>,
+    /// Streaming state for the `step`/`run` API (`None` until first use;
+    /// `infer_train` never touches it).
+    state: Option<RunState>,
 }
 
 impl SpikingDense {
-    /// Build a layer. `lane_width` bounds the membrane range; neurons are
-    /// packed `lanes_per_dsp` per 48-bit accumulator with `guard_bits`
-    /// between lanes (0 = the approximate §VII scheme).
+    /// Build a layer over `lanes_per_dsp` uniform `lane_width`-bit lanes
+    /// with `guard_bits` zeros between them (0 = the Table III scheme).
     pub fn new(
         weights: Vec<Vec<i32>>,
         threshold: i64,
@@ -65,30 +426,110 @@ impl SpikingDense {
         lanes_per_dsp: usize,
         guard_bits: u32,
     ) -> Result<Self> {
+        let packing = AdditionPacking::uniform(lanes_per_dsp, lane_width, guard_bits)?;
+        Self::with_packing(weights, threshold, packing)
+    }
+
+    /// Build a layer over an explicit (possibly irregular) lane layout,
+    /// e.g. [`AdditionPacking::table3_guarded`]. The layout is validated
+    /// structurally, then every neuron's dynamics are validated against
+    /// its lane: `threshold + maxpos_j + 2·bias_j +` [`REBIAS_SLACK`]
+    /// must fit in the lane's `2^width` range, which is exactly the
+    /// condition under which the stored membrane can never wrap (and so
+    /// never leak a carry) — see the module docs.
+    pub fn with_packing(
+        weights: Vec<Vec<i32>>,
+        threshold: i64,
+        packing: AdditionPacking,
+    ) -> Result<Self> {
+        packing.validate()?;
         if weights.is_empty() {
             return Err(Error::InvalidConfig("no neurons".into()));
         }
+        let inputs = weights[0].len();
+        if let Some(bad) = weights.iter().find(|r| r.len() != inputs) {
+            return Err(Error::Shape(format!(
+                "ragged weight rows: expected {inputs} inputs, got {}",
+                bad.len()
+            )));
+        }
+        if threshold < 1 {
+            return Err(Error::InvalidConfig(format!(
+                "firing threshold must be ≥ 1, got {threshold}"
+            )));
+        }
+        let lanes = packing.num_lanes();
         let n = weights.len();
-        // Per-step increment = Σ_i w_ji s_i; bias by the most negative
-        // possible single-step sum so packed lane increments are unsigned.
-        let worst_neg: i64 = weights
-            .iter()
-            .map(|row| row.iter().map(|&w| (w.min(0)) as i64).sum::<i64>())
-            .min()
-            .unwrap_or(0);
-        let step_bias = -worst_neg;
-        let n_banks = n.div_ceil(lanes_per_dsp);
-        let packing = AdditionPacking::uniform(lanes_per_dsp, lane_width, guard_bits)?;
-        let banks = (0..n_banks).map(|_| PackedAccumulator::new(packing.clone())).collect();
+        let mut max_pos = Vec::with_capacity(n);
+        let mut step_bias = Vec::with_capacity(n);
+        let mut rebias_limit = Vec::with_capacity(n);
+        for (j, row) in weights.iter().enumerate() {
+            let pos: i64 = row.iter().map(|&w| i64::from(w.max(0))).sum();
+            let neg: i64 = row.iter().map(|&w| i64::from(-w.min(0))).sum();
+            let width = packing.lanes[j % lanes].width;
+            let cap = 1i64 << width;
+            let limit = cap - threshold - pos - neg - REBIAS_SLACK;
+            if limit < neg.max(1) {
+                return Err(Error::InvalidConfig(format!(
+                    "neuron {j}: threshold {threshold} + worst-case step sums (+{pos}/-{neg}) \
+                     leave no reload headroom in its {width}-bit lane — widen the lane or \
+                     lower the threshold/weight magnitudes"
+                )));
+            }
+            max_pos.push(pos);
+            step_bias.push(neg);
+            rebias_limit.push(limit);
+        }
         Ok(SpikingDense {
             weights,
             threshold,
-            banks,
-            exact: vec![0; n],
-            lane_width,
-            lanes_per_dsp,
+            packing,
+            engine: AccumEngine::new(),
+            plan_cache: AccumPlanCache::default(),
+            max_pos,
             step_bias,
+            rebias_limit,
+            state: None,
         })
+    }
+
+    /// A one-layer prototype classifier over a dataset: one neuron per
+    /// class, weights = the class prototype's contrast (pixel minus the
+    /// prototype mean, scaled ×4 and rounded). Spike counts then vote:
+    /// inputs firing at a class's bright pixels drive that neuron up and
+    /// the others down. The serving demos and benches use this.
+    pub fn prototype_classifier(
+        ds: &Dataset,
+        threshold: i64,
+        lane_width: u32,
+        lanes_per_dsp: usize,
+        guard_bits: u32,
+    ) -> Result<Self> {
+        let protos = data::prototypes(ds.classes, ds.dim, ds.proto_seed);
+        let weights: Vec<Vec<i32>> = protos
+            .iter()
+            .map(|p| {
+                let mean: f32 = p.iter().sum::<f32>() / p.len().max(1) as f32;
+                p.iter().map(|&v| ((v - mean) * 4.0).round() as i32).collect()
+            })
+            .collect();
+        Self::new(weights, threshold, lane_width, lanes_per_dsp, guard_bits)
+    }
+
+    /// Switch the layer to the wide simulated-DSP datapath (the A/B
+    /// reference the narrow default is pinned against). Clears streaming
+    /// state.
+    pub fn use_wide_backend(mut self) -> Self {
+        self.engine = AccumEngine::new_wide();
+        self.state = None;
+        self
+    }
+
+    /// Attach the layer's plan cache to a shared [`PlanBudget`]: the
+    /// resident [`AccumPlan`] is accounted by exact bytes and may be
+    /// LRU-evicted; the next run re-plans bit-identically.
+    pub fn attach_plan_budget(&self, budget: &Arc<PlanBudget>) {
+        self.plan_cache.attach(Arc::clone(budget));
     }
 
     /// Number of neurons.
@@ -99,104 +540,101 @@ impl SpikingDense {
     /// Number of DSP accumulators used (the §VII resource win: ⌈n/lanes⌉
     /// DSPs instead of n fabric adders).
     pub fn dsps_used(&self) -> usize {
-        self.banks.len()
+        self.weights.len().div_ceil(self.packing.num_lanes())
     }
 
-    /// Reset all membranes.
+    /// The firing threshold (corrected-membrane units).
+    pub fn threshold(&self) -> i64 {
+        self.threshold
+    }
+
+    /// The lane layout neurons are striped over.
+    pub fn packing(&self) -> &AdditionPacking {
+        &self.packing
+    }
+
+    /// Worst-case single-step membrane rise of neuron `j`
+    /// (`Σ_i max(0, w_ji)`) — exposed for sizing diagnostics.
+    pub fn max_pos(&self, j: usize) -> i64 {
+        self.max_pos[j]
+    }
+
+    /// Reset all membranes and reload bookkeeping.
     pub fn reset(&mut self) {
-        for b in &mut self.banks {
-            b.reset();
+        if let Some(state) = &mut self.state {
+            self.engine.reset(&mut state.accum);
+            state.bias_accum.iter_mut().for_each(|b| *b = 0);
+            state.exact.iter_mut().for_each(|m| *m = 0);
+            state.exact_bias.iter_mut().for_each(|b| *b = 0);
         }
-        self.exact.iter_mut().for_each(|m| *m = 0);
+    }
+
+    /// The resident plan (building and caching it if needed).
+    fn plan(&self) -> Result<Arc<AccumPlan>> {
+        self.plan_cache.plan_for(&self.packing, self.weights.len())
     }
 
     /// Advance one timestep with binary input `spikes_in`; returns the
     /// packed-membrane output spike vector and updates stats.
     pub fn step(&mut self, spikes_in: &[u8], stats: &mut SnnStats) -> Result<Vec<u8>> {
-        let n = self.neurons();
-        // Plan the step once: the active-input list is shared by every
-        // neuron, so gather it up front instead of scanning the full
-        // (mostly silent) spike vector once per neuron.
-        let active: Vec<usize> = spikes_in
-            .iter()
-            .enumerate()
-            .filter(|(_, &s)| s != 0)
-            .map(|(i, _)| i)
-            .collect();
-        // Per-neuron increment (plus bias to stay unsigned).
-        let mut incs = vec![0i64; n];
-        for (j, row) in self.weights.iter().enumerate() {
-            let mut acc = 0i64;
-            for &i in &active {
-                acc += row[i] as i64;
-            }
-            incs[j] = acc + self.step_bias;
-            debug_assert!(incs[j] >= 0);
+        let train = [spikes_in];
+        let plan = self.plan()?;
+        if self.state.is_none() {
+            self.state = Some(RunState::new(&self.engine, &plan, self.weights.len()));
         }
-        // Packed accumulate per bank.
-        let lane_mask = (1i64 << self.lane_width) - 1;
-        let mut out = vec![0u8; n];
-        let mut exact_out = vec![0u8; n];
-        for (bi, bank) in self.banks.iter_mut().enumerate() {
-            let lo = bi * self.lanes_per_dsp;
-            let hi = ((bi + 1) * self.lanes_per_dsp).min(n);
-            let mut inc_vec = vec![0i128; self.lanes_per_dsp];
-            for (lane, j) in (lo..hi).enumerate() {
-                inc_vec[lane] = (incs[j] & lane_mask) as i128;
-            }
-            let vals = bank.accumulate(&inc_vec)?;
-            for (lane, j) in (lo..hi).enumerate() {
-                if vals[lane] as i64 >= self.threshold {
-                    out[j] = 1;
-                }
-            }
-        }
-        // Exact shadow (unpacked membranes, same wrap semantics).
-        for j in 0..n {
-            self.exact[j] = (self.exact[j] + incs[j]) & lane_mask;
-            if self.exact[j] >= self.threshold {
-                exact_out[j] = 1;
-            }
-        }
-        // Fire-and-reset on both paths. Reset is a membrane-register
-        // reload (subtract the threshold), not an ALU pass — a packed add
-        // of the two's complement would push a carry into the guard bit on
-        // every fire and defeat the guard (see addpack::set_lane).
-        for (bi, bank) in self.banks.iter_mut().enumerate() {
-            let lo = bi * self.lanes_per_dsp;
-            let hi = ((bi + 1) * self.lanes_per_dsp).min(n);
-            let vals = bank.values();
-            for (lane, j) in (lo..hi).enumerate() {
-                if out[j] != 0 {
-                    let m = (vals[lane] as i64 - self.threshold).max(0);
-                    bank.set_lane(lane, m as i128)?;
-                }
-            }
-        }
-        for j in 0..n {
-            if exact_out[j] != 0 {
-                self.exact[j] = (self.exact[j] - self.threshold) & lane_mask;
-            }
-        }
-        stats.steps += 1;
-        stats.packed_spikes += out.iter().map(|&s| s as u64).sum::<u64>();
-        stats.exact_spikes += exact_out.iter().map(|&s| s as u64).sum::<u64>();
-        if out != exact_out {
-            stats.divergent_steps += 1;
-        }
-        Ok(out)
+        let layer = LayerRef {
+            plan: &plan,
+            engine: &self.engine,
+            weights: &self.weights,
+            threshold: self.threshold,
+            step_bias: &self.step_bias,
+            rebias_limit: &self.rebias_limit,
+        };
+        let state = self.state.as_mut().expect("state initialised above");
+        let (_, mut out) = run_banks(&layer, state, &train, stats)?;
+        Ok(out.remove(0))
     }
 
-    /// Run a whole spike train; returns per-neuron packed spike counts.
+    /// Run a whole spike train on the persistent streaming state; returns
+    /// per-neuron packed spike counts.
     pub fn run(&mut self, train: &[Vec<u8>], stats: &mut SnnStats) -> Result<Vec<u64>> {
-        let mut counts = vec![0u64; self.neurons()];
-        for spikes in train {
-            let out = self.step(spikes, stats)?;
-            for (c, s) in counts.iter_mut().zip(&out) {
-                *c += *s as u64;
-            }
+        let plan = self.plan()?;
+        if self.state.is_none() {
+            self.state = Some(RunState::new(&self.engine, &plan, self.weights.len()));
         }
+        let layer = LayerRef {
+            plan: &plan,
+            engine: &self.engine,
+            weights: &self.weights,
+            threshold: self.threshold,
+            step_bias: &self.step_bias,
+            rebias_limit: &self.rebias_limit,
+        };
+        let state = self.state.as_mut().expect("state initialised above");
+        let refs: Vec<&[u8]> = train.iter().map(|s| s.as_slice()).collect();
+        let (counts, _) = run_banks(&layer, state, &refs, stats)?;
         Ok(counts)
+    }
+
+    /// Run a spike train on **fresh** state (the streaming state is
+    /// untouched), returning per-neuron spike counts and the run's stats.
+    /// This is the serving entry point: it takes `&self`, so one layer
+    /// can serve concurrent requests.
+    pub fn infer_train(&self, train: &[Vec<u8>]) -> Result<(Vec<u64>, SnnStats)> {
+        let plan = self.plan()?;
+        let mut state = RunState::new(&self.engine, &plan, self.weights.len());
+        let layer = LayerRef {
+            plan: &plan,
+            engine: &self.engine,
+            weights: &self.weights,
+            threshold: self.threshold,
+            step_bias: &self.step_bias,
+            rebias_limit: &self.rebias_limit,
+        };
+        let mut stats = SnnStats::default();
+        let refs: Vec<&[u8]> = train.iter().map(|s| s.as_slice()).collect();
+        let (counts, _) = run_banks(&layer, &mut state, &refs, &mut stats)?;
+        Ok((counts, stats))
     }
 }
 
@@ -208,7 +646,7 @@ mod tests {
     fn random_weights(n: usize, inputs: usize, seed: u64) -> Vec<Vec<i32>> {
         let mut rng = Rng::new(seed);
         (0..n)
-            .map(|_| (0..inputs).map(|_| rng.range_i64(-3, 4) as i32).collect())
+            .map(|_| (0..inputs).map(|_| rng.range_i64(-2, 5) as i32).collect())
             .collect()
     }
 
@@ -221,32 +659,60 @@ mod tests {
 
     #[test]
     fn guarded_snn_matches_exact() {
-        // 4 lanes of 11 bits + guards = 47 bits: exact by Fig. 8.
-        let mut layer =
-            SpikingDense::new(random_weights(8, 16, 3), 900, 11, 4, 1).unwrap();
+        // 4 lanes of 11 bits + guards = 47 bits.
+        let mut layer = SpikingDense::new(random_weights(8, 16, 3), 300, 11, 4, 1).unwrap();
         let mut stats = SnnStats::default();
         let train = random_train(200, 16, 0.3, 5);
         layer.run(&train, &mut stats).unwrap();
-        assert_eq!(stats.divergent_steps, 0, "guarded lanes must agree");
+        assert_eq!(stats.divergent_steps, 0, "packed must track the exact shadow");
         assert_eq!(stats.packed_spikes, stats.exact_spikes);
         assert!(stats.packed_spikes > 0, "the network should actually spike");
+        assert!(stats.dsp.dsp_cycles > 0);
+        assert_eq!(stats.dsp.multiplications, 0, "accumulates never multiply");
     }
 
     #[test]
-    fn unguarded_snn_stays_close() {
+    fn unguarded_table3_is_exact_when_sized() {
         // 5 lanes of 9 bits, no guards — the Table III configuration.
-        let mut layer =
-            SpikingDense::new(random_weights(10, 16, 7), 220, 9, 5, 0).unwrap();
+        // Correct sizing (checked at construction) means the stored
+        // membranes never wrap, so even the unguarded layout never leaks.
+        let mut layer = SpikingDense::new(random_weights(10, 16, 7), 150, 9, 5, 0).unwrap();
         let mut stats = SnnStats::default();
         let train = random_train(300, 16, 0.3, 11);
         layer.run(&train, &mut stats).unwrap();
         assert!(stats.packed_spikes > 0);
-        // Carry leaks perturb the LSB only: spike counts stay within a few
-        // percent of exact.
-        let diff = (stats.packed_spikes as f64 - stats.exact_spikes as f64).abs()
-            / stats.exact_spikes.max(1) as f64;
-        assert!(diff < 0.05, "spike count divergence {diff}");
-        assert!(stats.agreement() > 0.8, "agreement {}", stats.agreement());
+        assert_eq!(stats.divergent_steps, 0);
+        assert_eq!(stats.packed_spikes, stats.exact_spikes);
+        assert!((stats.agreement() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn silent_train_never_fires() {
+        // The membrane-drift regression: with zero input spikes the old
+        // layer climbed by step_bias per step and eventually fired.
+        for (guard, lanes, width) in [(0u32, 5usize, 9u32), (1, 4, 11)] {
+            let mut layer =
+                SpikingDense::new(random_weights(8, 16, 13), 100, width, lanes, guard).unwrap();
+            let mut stats = SnnStats::default();
+            let silent = vec![vec![0u8; 16]; 500];
+            let counts = layer.run(&silent, &mut stats).unwrap();
+            assert!(counts.iter().all(|&c| c == 0), "silent train must not fire (g={guard})");
+            assert_eq!(stats.packed_spikes, 0);
+            assert_eq!(stats.exact_spikes, 0);
+        }
+    }
+
+    #[test]
+    fn oversized_dynamics_rejected_at_construction() {
+        // 5×9 lanes + 4 guard bits = 49 > 48: a geometry error (this is
+        // the old example's broken "exact" configuration).
+        let geom = SpikingDense::new(random_weights(8, 64, 3), 480, 9, 5, 1);
+        assert!(matches!(geom, Err(Error::GeometryViolation(_))), "got {geom:?}");
+        // Fits geometrically, but threshold + worst-case step sums
+        // overflow a 9-bit lane: the old layer silently truncated the
+        // increments; now it's a construction error.
+        let dynamics = SpikingDense::new(random_weights(8, 64, 3), 480, 9, 5, 0);
+        assert!(matches!(dynamics, Err(Error::InvalidConfig(_))), "got {dynamics:?}");
     }
 
     #[test]
@@ -268,5 +734,41 @@ mod tests {
         let mut s3 = SnnStats::default();
         let c2 = layer.run(&random_train(50, 8, 0.5, 2), &mut s3).unwrap();
         assert_eq!(c1, c2, "reset makes runs reproducible");
+    }
+
+    #[test]
+    fn step_matches_run() {
+        let train = random_train(60, 16, 0.3, 21);
+        let weights = random_weights(7, 16, 22);
+        let mut by_steps = SpikingDense::new(weights.clone(), 120, 9, 5, 0).unwrap();
+        let mut whole = SpikingDense::new(weights, 120, 9, 5, 0).unwrap();
+        let mut s1 = SnnStats::default();
+        let mut counts = vec![0u64; 7];
+        for spikes in &train {
+            let out = by_steps.step(spikes, &mut s1).unwrap();
+            for (c, s) in counts.iter_mut().zip(&out) {
+                *c += u64::from(*s);
+            }
+        }
+        let mut s2 = SnnStats::default();
+        let counts_run = whole.run(&train, &mut s2).unwrap();
+        assert_eq!(counts, counts_run);
+        assert_eq!(s1, s2, "per-step and whole-train stats agree");
+    }
+
+    #[test]
+    fn infer_train_is_stateless_and_matches_run() {
+        let train = random_train(80, 16, 0.3, 31);
+        let weights = random_weights(9, 16, 32);
+        let layer = SpikingDense::new(weights.clone(), 120, 9, 5, 0).unwrap();
+        let (c1, s1) = layer.infer_train(&train).unwrap();
+        let (c2, s2) = layer.infer_train(&train).unwrap();
+        assert_eq!(c1, c2, "infer_train never carries state across calls");
+        assert_eq!(s1, s2);
+        let mut fresh = SpikingDense::new(weights, 120, 9, 5, 0).unwrap();
+        let mut stats = SnnStats::default();
+        let c3 = fresh.run(&train, &mut stats).unwrap();
+        assert_eq!(c1, c3);
+        assert_eq!(s1, stats);
     }
 }

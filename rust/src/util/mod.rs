@@ -10,6 +10,6 @@ mod threads;
 pub use json::Json;
 pub use rng::Rng;
 pub use threads::{
-    parallel_jobs, parallel_map, parallel_map_cost, parallel_map_with,
+    parallel_jobs, parallel_map, parallel_map_cost, parallel_map_mut, parallel_map_with,
     parallel_map_with_aligned, parallel_reduce, workers, PARALLEL_COST_THRESHOLD,
 };

@@ -276,6 +276,72 @@ where
     out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
 }
 
+/// Map `f` over **mutable** items in parallel on the persistent pool,
+/// preserving order, with the same inline fallback as
+/// [`parallel_map_cost`].
+///
+/// This is the bank-schedule hook of the packed-accumulate datapath: each
+/// item owns a disjoint slice of mutable state (a DSP bank plus its lane
+/// bookkeeping), workers advance their banks independently, and the
+/// per-item results carry whatever summary the caller wants merged. `T`
+/// only needs `Send` (items move to a worker, they are never shared).
+pub fn parallel_map_mut<T, R, F>(items: &mut [T], total_cost: u64, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut T) -> R + Sync,
+{
+    let inline = items.len() < 2
+        || workers() <= 1
+        || total_cost < PARALLEL_COST_THRESHOLD
+        || IN_POOL_WORKER.with(std::cell::Cell::get);
+    if inline {
+        return items.iter_mut().map(f).collect();
+    }
+
+    let n_workers = workers().min(items.len());
+    let chunk = items.len().div_ceil(n_workers);
+    let mut out: Vec<Option<R>> = Vec::with_capacity(items.len());
+    out.resize_with(items.len(), || None);
+
+    let pairs: Vec<(&mut [T], &mut [Option<R>])> =
+        items.chunks_mut(chunk).zip(out.chunks_mut(chunk)).collect();
+    let latch = Latch::new(pairs.len().saturating_sub(1));
+    {
+        // Waits for all submitted jobs even if the local chunk below
+        // panics — see `erase_lifetime`'s safety contract.
+        let _waiter = WaitOnDrop(&latch);
+        let mut local: Option<(&mut [T], &mut [Option<R>])> = None;
+        for (idx, (slice_in, slice_out)) in pairs.into_iter().enumerate() {
+            if idx == 0 {
+                local = Some((slice_in, slice_out));
+                continue;
+            }
+            let latch = Arc::clone(&latch);
+            let f = &f;
+            let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                let result = catch_unwind(AssertUnwindSafe(|| {
+                    for (slot, item) in slice_out.iter_mut().zip(slice_in.iter_mut()) {
+                        *slot = Some(f(item));
+                    }
+                }));
+                latch.complete(result.err());
+            });
+            // SAFETY: `_waiter` + `wait_and_check` below block until every
+            // submitted job reported completion, so the borrows of
+            // `items`/`out`/`f` cannot outlive this call.
+            submit(unsafe { erase_lifetime(job) });
+        }
+        if let Some((slice_in, slice_out)) = local {
+            for (slot, item) in slice_out.iter_mut().zip(slice_in.iter_mut()) {
+                *slot = Some(f(item));
+            }
+        }
+    }
+    latch.wait_and_check();
+    out.into_iter().map(|o| o.expect("worker filled every slot")).collect()
+}
+
 /// [`parallel_map_with`] without scratch: parallel map with an inline
 /// fallback for small workloads. `total_cost` is the caller's estimate of
 /// the whole call's work in per-element operation units (for a GEMM:
@@ -449,6 +515,31 @@ mod tests {
             let expect: u64 = (0..8).map(|y| y + i as u64).sum();
             assert_eq!(*v, expect);
         }
+    }
+
+    #[test]
+    fn map_mut_mutates_and_preserves_order() {
+        let mut items: Vec<u64> = (0..513).collect();
+        let out = parallel_map_mut(&mut items, u64::MAX, |x| {
+            *x += 1;
+            *x * 2
+        });
+        for (i, v) in items.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1, "mutation applied in place");
+        }
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_mut_below_threshold_runs_inline() {
+        let mut items: Vec<u64> = (0..50).collect();
+        let me = std::thread::current().id();
+        let ids = parallel_map_mut(&mut items, PARALLEL_COST_THRESHOLD - 1, |x| {
+            *x = 7;
+            std::thread::current().id()
+        });
+        assert!(ids.iter().all(|&id| id == me), "tiny workloads must stay inline");
+        assert!(items.iter().all(|&x| x == 7));
     }
 
     #[test]

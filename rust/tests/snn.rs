@@ -1,0 +1,334 @@
+//! SNN / addition-packing battery (§VII) over the plan/execute
+//! accumulate datapath:
+//!
+//! * **silent-train regression**: a network that receives no input spikes
+//!   must emit none, on every lane layout (the old biased-membrane layer
+//!   drifted up by its bias every step and eventually fired);
+//! * **narrow vs wide**: the `i64` execution twin must match the
+//!   simulated-DSP path bit for bit — *including* carries leaked across
+//!   unguarded lane boundaries — under fuzzed mixed-width layouts,
+//!   deliberately wrapping increment streams and mid-stream lane
+//!   reloads, at the engine level and through the whole layer;
+//! * **guard structure**: per-lane single-add error is exactly 0 on
+//!   guarded boundaries and ∈ {0, +1, 1−2^w} on unguarded ones (WCE = 1
+//!   before lane wrap, the paper's Fig. 7/8 trade-off);
+//! * **validation**: hand-assembled layouts that overlap or overflow the
+//!   48-bit ALU word are rejected wherever they could become resident,
+//!   and out-of-range increments error instead of silently wrapping;
+//! * **budget**: LRU-evicted accumulate plans rebuild bit-identically;
+//! * **serving**: [`SpikingBackend`] answers every coordinator request
+//!   exactly once, with the class and DSP cost direct inference assigns.
+
+use dsp_packing::addpack::{AccumEngine, AccumPlan, AdderLane, AdditionPacking};
+use dsp_packing::coordinator::{
+    Coordinator, InferenceBackend, Request, ServerConfig, SpikingBackend,
+};
+use dsp_packing::nn::{data, PlanBudget, SnnStats, SpikingDense, REBIAS_SLACK};
+use dsp_packing::util::Rng;
+use dsp_packing::Error;
+use std::sync::Arc;
+
+fn random_weights(n: usize, inputs: usize, rng: &mut Rng) -> Vec<Vec<i32>> {
+    (0..n)
+        .map(|_| (0..inputs).map(|_| rng.range_i64(-1, 3) as i32).collect())
+        .collect()
+}
+
+fn random_train(steps: usize, inputs: usize, rate: f64, rng: &mut Rng) -> Vec<Vec<u8>> {
+    (0..steps)
+        .map(|_| (0..inputs).map(|_| u8::from(rng.chance(rate))).collect())
+        .collect()
+}
+
+/// A random DSP-feasible lane layout: 2–5 lanes of 5–10 bits, guarded or
+/// not (redrawn until the widths fit the 48-bit ALU word).
+fn random_layout(rng: &mut Rng) -> AdditionPacking {
+    loop {
+        let n = 2 + rng.below(4) as usize;
+        let guard = rng.below(2) as u32;
+        let widths: Vec<u32> = (0..n).map(|_| 5 + rng.below(6) as u32).collect();
+        if let Ok(p) = AdditionPacking::mixed(&widths, guard) {
+            return p;
+        }
+    }
+}
+
+/// The silent-network regression: with zero input spikes the membranes
+/// must stay at rest forever — across unguarded, guarded, irregular and
+/// mixed-width layouts, on a long train (the old layer's bias drift made
+/// every neuron fire eventually).
+#[test]
+fn silent_trains_never_fire_on_any_layout() {
+    let mut rng = Rng::new(41);
+    let inputs = 24;
+    let layouts = vec![
+        AdditionPacking::uniform(5, 9, 0).unwrap(),
+        AdditionPacking::uniform(4, 9, 1).unwrap(),
+        AdditionPacking::table3_guarded().unwrap(),
+        AdditionPacking::mixed(&[8, 9, 10, 11], 1).unwrap(),
+    ];
+    for packing in layouts {
+        let neurons = packing.num_lanes() * 2 + 1;
+        let weights = random_weights(neurons, inputs, &mut rng);
+        let mut layer = SpikingDense::with_packing(weights, 100, packing).unwrap();
+        let silent = vec![vec![0u8; inputs]; 500];
+        let mut stats = SnnStats::default();
+        let counts = layer.run(&silent, &mut stats).unwrap();
+        assert!(
+            counts.iter().all(|&c| c == 0),
+            "silent network fired: {counts:?}"
+        );
+        assert_eq!(stats.packed_spikes, 0);
+        assert_eq!(stats.exact_spikes, 0);
+        assert_eq!(stats.divergent_steps, 0);
+    }
+}
+
+/// Engine-level narrow-vs-wide fuzz: random mixed-width layouts ×
+/// deliberately wrapping increment streams × mid-stream register
+/// reloads. Every lane value must match bit for bit after every step —
+/// the leaks themselves included.
+#[test]
+fn engine_fuzz_narrow_matches_wide_bit_for_bit() {
+    let mut rng = Rng::new(0x5eed_0001);
+    let narrow = AccumEngine::new();
+    let wide = AccumEngine::new_wide();
+    for case in 0..40u64 {
+        let packing = random_layout(&mut rng);
+        let per_bank = packing.num_lanes();
+        let n_lanes = 1 + rng.below(3 * per_bank as u64) as usize;
+        let plan = AccumPlan::new(packing, n_lanes).unwrap();
+        let mut sn = narrow.new_state(&plan);
+        let mut sw = wide.new_state(&plan);
+        for step in 0..120 {
+            for bank in 0..plan.banks() {
+                // Full-range increments: lane sums wrap constantly, so
+                // carries leak across every unguarded boundary.
+                let incs: Vec<i64> = (0..plan.bank_lanes(bank))
+                    .map(|slot| rng.range_i64(0, 1i64 << plan.lane_width(slot)))
+                    .collect();
+                narrow
+                    .bank_accumulate(&plan, bank, &mut sn.banks_mut()[bank], &incs)
+                    .unwrap();
+                wide.bank_accumulate(&plan, bank, &mut sw.banks_mut()[bank], &incs).unwrap();
+            }
+            if rng.chance(0.15) {
+                let bank = rng.below(plan.banks() as u64) as usize;
+                let slot = rng.below(plan.bank_lanes(bank) as u64) as usize;
+                let v = rng.range_i64(0, 1i64 << plan.lane_width(slot));
+                narrow.bank_set_lane(&plan, bank, &mut sn.banks_mut()[bank], slot, v).unwrap();
+                wide.bank_set_lane(&plan, bank, &mut sw.banks_mut()[bank], slot, v).unwrap();
+            }
+            assert_eq!(
+                narrow.lane_values(&plan, &sn),
+                wide.lane_values(&plan, &sw),
+                "case {case} step {step}: narrow and wide lane values diverged"
+            );
+        }
+    }
+}
+
+/// Single packed addition vs the dedicated-adder oracle over random
+/// layouts and full-range operands: guarded boundaries are exact, and an
+/// unguarded lane's error is exactly the incoming carry — 0 or +1 (or
+/// 1−2^w when that +1 wraps the lane), the paper's WCE = 1.
+#[test]
+fn single_add_errors_match_guard_structure() {
+    let mut rng = Rng::new(0x5eed_0002);
+    let mut leaks = 0u64;
+    for _ in 0..150 {
+        let packing = random_layout(&mut rng);
+        let draw = |rng: &mut Rng| -> Vec<i128> {
+            packing.lanes.iter().map(|l| rng.range_i128(0, 1i128 << l.width)).collect()
+        };
+        let (x, y) = (draw(&mut rng), draw(&mut rng));
+        let got = packing.add(&x, &y).unwrap();
+        let exp = packing.expected(&x, &y);
+        let fallible = packing.fallible_lanes();
+        for (i, lane) in packing.lanes.iter().enumerate() {
+            let err = got[i] - exp[i];
+            if fallible.contains(&i) {
+                let wrap = 1i128 << lane.width;
+                assert!(
+                    err == 0 || err == 1 || err == 1 - wrap,
+                    "lane {i}: error {err} outside the carry-leak envelope"
+                );
+                if err != 0 {
+                    leaks += 1;
+                }
+            } else {
+                assert_eq!(err, 0, "guarded/bottom lane {i} must be exact");
+            }
+        }
+    }
+    assert!(leaks > 0, "fuzz never exercised a carry leak");
+}
+
+/// Whole-layer narrow-vs-wide fuzz: random valid configurations (layout,
+/// weights, threshold drawn inside the sizing rule), identical spike
+/// trains — spike counts and the full stats block (ALU passes, reloads)
+/// must be identical, and the exact shadow must never diverge.
+#[test]
+fn layer_fuzz_narrow_and_wide_twins_agree() {
+    let mut rng = Rng::new(0x5eed_0003);
+    for case in 0..12u64 {
+        let n_lanes = 2 + rng.below(3) as usize;
+        let guard = rng.below(2) as u32;
+        let widths: Vec<u32> = (0..n_lanes).map(|_| 8 + rng.below(4) as u32).collect();
+        let Ok(packing) = AdditionPacking::mixed(&widths, guard) else {
+            continue;
+        };
+        let inputs = 12 + rng.below(20) as usize;
+        let neurons = n_lanes + rng.below(8) as usize + 1;
+        // Redraw weights until some threshold satisfies the sizing rule
+        // for every neuron, then draw the threshold inside that bound.
+        let mut attempts = 0;
+        let (weights, threshold) = loop {
+            attempts += 1;
+            assert!(attempts < 100, "case {case}: no feasible weights found");
+            let w = random_weights(neurons, inputs, &mut rng);
+            let th_max = (0..neurons)
+                .map(|j| {
+                    let pos: i64 = w[j].iter().map(|&v| i64::from(v.max(0))).sum();
+                    let neg: i64 = w[j].iter().map(|&v| i64::from(-v.min(0))).sum();
+                    let cap = 1i64 << packing.lanes[j % n_lanes].width;
+                    cap - pos - neg - REBIAS_SLACK - neg.max(1)
+                })
+                .min()
+                .unwrap();
+            if th_max >= 1 {
+                break (w, 1 + rng.below(th_max as u64) as i64);
+            }
+        };
+        let mut narrow =
+            SpikingDense::with_packing(weights.clone(), threshold, packing.clone()).unwrap();
+        let mut wide =
+            SpikingDense::with_packing(weights, threshold, packing).unwrap().use_wide_backend();
+        let train = random_train(48, inputs, 0.3, &mut rng);
+        let (mut sn, mut sw) = (SnnStats::default(), SnnStats::default());
+        let counts_n = narrow.run(&train, &mut sn).unwrap();
+        let counts_w = wide.run(&train, &mut sw).unwrap();
+        assert_eq!(counts_n, counts_w, "case {case}: spike counts diverged");
+        assert_eq!(sn, sw, "case {case}: stats diverged");
+        assert_eq!(sn.divergent_steps, 0, "case {case}: packed left the exact shadow");
+    }
+}
+
+/// The `lanes`/`guard_bits` fields are `pub`, so hand-assembled layouts
+/// bypass the constructors' checks — everything that could make one
+/// resident must validate structurally and reject.
+#[test]
+fn hand_built_layouts_are_validated_everywhere() {
+    let overlapping = AdditionPacking {
+        lanes: vec![AdderLane { width: 9, offset: 0 }, AdderLane { width: 9, offset: 4 }],
+        guard_bits: 0,
+    };
+    assert!(matches!(
+        AccumPlan::new(overlapping.clone(), 2),
+        Err(Error::GeometryViolation(_))
+    ));
+    assert!(matches!(
+        SpikingDense::with_packing(vec![vec![1; 4]; 2], 10, overlapping),
+        Err(Error::GeometryViolation(_))
+    ));
+    let too_wide = AdditionPacking {
+        lanes: vec![AdderLane { width: 40, offset: 0 }, AdderLane { width: 9, offset: 40 }],
+        guard_bits: 0,
+    };
+    assert!(matches!(AccumPlan::new(too_wide, 2), Err(Error::GeometryViolation(_))));
+    let empty = AdditionPacking { lanes: vec![], guard_bits: 0 };
+    assert!(matches!(AccumPlan::new(empty, 1), Err(Error::InvalidConfig(_))));
+    let zero_width = AdditionPacking {
+        lanes: vec![AdderLane { width: 0, offset: 0 }],
+        guard_bits: 0,
+    };
+    assert!(matches!(AccumPlan::new(zero_width, 1), Err(Error::InvalidConfig(_))));
+}
+
+/// Out-of-range increments and reload values must surface as
+/// [`Error::OperandRange`] — the old accumulator masked them into the
+/// lane silently — and a failed pass must leave the word untouched.
+#[test]
+fn out_of_range_operands_error_instead_of_wrapping() {
+    let plan = AccumPlan::new(AdditionPacking::table3(), 5).unwrap();
+    let engine = AccumEngine::new();
+    let mut state = engine.new_state(&plan);
+    {
+        let mut banks = state.banks_mut();
+        assert!(matches!(
+            engine.bank_accumulate(&plan, 0, &mut banks[0], &[512, 0, 0, 0, 0]),
+            Err(Error::OperandRange(_))
+        ));
+        assert!(matches!(
+            engine.bank_accumulate(&plan, 0, &mut banks[0], &[0, -1, 0, 0, 0]),
+            Err(Error::OperandRange(_))
+        ));
+        assert!(matches!(
+            engine.bank_set_lane(&plan, 0, &mut banks[0], 2, 512),
+            Err(Error::OperandRange(_))
+        ));
+        assert!(matches!(
+            engine.bank_set_lane(&plan, 0, &mut banks[0], 2, -1),
+            Err(Error::OperandRange(_))
+        ));
+    }
+    assert_eq!(engine.lane_values(&plan, &state), vec![0; 5]);
+}
+
+/// Two layers sharing a 1-byte [`PlanBudget`] evict each other's
+/// resident [`AccumPlan`] on every alternation; each rebuild must be
+/// bit-identical (same spike counts and stats as unbudgeted twins).
+#[test]
+fn budget_evicted_plans_rebuild_bit_identically() {
+    let mut rng = Rng::new(0x5eed_0004);
+    let inputs = 16;
+    let (wa, wb) = (random_weights(10, inputs, &mut rng), random_weights(7, inputs, &mut rng));
+    let mut a = SpikingDense::new(wa.clone(), 80, 9, 5, 0).unwrap();
+    let mut b = SpikingDense::new(wb.clone(), 80, 10, 4, 1).unwrap();
+    let mut a_ref = SpikingDense::new(wa, 80, 9, 5, 0).unwrap();
+    let mut b_ref = SpikingDense::new(wb, 80, 10, 4, 1).unwrap();
+    let budget = PlanBudget::new(1);
+    a.attach_plan_budget(&budget);
+    b.attach_plan_budget(&budget);
+    let train = random_train(64, inputs, 0.35, &mut rng);
+    for round in 0..3 {
+        for (layer, twin) in [(&mut a, &mut a_ref), (&mut b, &mut b_ref)] {
+            layer.reset();
+            twin.reset();
+            let (mut s, mut s_ref) = (SnnStats::default(), SnnStats::default());
+            let counts = layer.run(&train, &mut s).unwrap();
+            let expected = twin.run(&train, &mut s_ref).unwrap();
+            assert_eq!(counts, expected, "round {round}: replanned run diverged");
+            assert_eq!(s, s_ref, "round {round}: replanned stats diverged");
+        }
+    }
+    assert!(budget.evictions() > 0, "alternating layers never evicted each other");
+}
+
+/// Serving conformance: the backend's spike-train inference is
+/// deterministic (identical classes *and* DSP cost on repeat), and the
+/// coordinator answers every request exactly once with the class direct
+/// inference assigns.
+#[test]
+fn spiking_backend_serves_exactly_once_with_deterministic_cost() {
+    let ds = data::synthetic(32, 4, 16, 0.15, 7);
+    let layer = SpikingDense::prototype_classifier(&ds, 60, 9, 5, 0).unwrap();
+    let backend = Arc::new(SpikingBackend::new(layer, 16));
+    let (direct, stats1) = backend.infer(&ds.images).unwrap();
+    let (again, stats2) = backend.infer(&ds.images).unwrap();
+    assert_eq!(direct, again, "repeat inference changed its classes");
+    assert_eq!(stats1, stats2, "repeat inference changed its DSP cost");
+    assert!(stats1.dsp_cycles > 0, "accumulate work must be accounted");
+    assert_eq!(stats1.multiplications, 0, "the adder-bound path multiplies nothing");
+
+    let coord = Coordinator::start(Arc::clone(&backend), ServerConfig::default());
+    let handle = coord.handle();
+    for (i, image) in ds.images.iter().enumerate() {
+        let pred = handle.infer(Request { id: 1000 + i as u64, image: image.clone() }).unwrap();
+        assert_eq!(pred.id, 1000 + i as u64);
+        assert_eq!(pred.class, direct[i], "served class must match direct inference");
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, ds.images.len() as u64);
+    assert_eq!(m.rejected, 0);
+}
