@@ -10,6 +10,21 @@ use dsp_packing::correct::Correction;
 use dsp_packing::packing::{PackedMultiplier, PackingConfig};
 use dsp_packing::synth;
 
+/// Metric key for a Table I resource-row name: lowercase, runs of
+/// non-alphanumerics collapsed to single underscores (`"MR-Overpacking
+/// d=-3"` → `mr_overpacking_d_3`).
+fn slugify(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for c in name.chars() {
+        if c.is_ascii_alphanumeric() {
+            out.push(c.to_ascii_lowercase());
+        } else if !out.is_empty() && !out.ends_with('_') {
+            out.push('_');
+        }
+    }
+    out.trim_end_matches('_').to_string()
+}
+
 fn rows() -> Vec<(&'static str, PackingConfig, Correction)> {
     vec![
         ("xilinx_int4", PackingConfig::int4(), Correction::None),
@@ -65,6 +80,13 @@ fn main() {
     println!("\n=== Table I resource columns (built-in 6-LUT mapper) ===");
     for (name, est) in synth::table1_resources() {
         println!("{:<28} LUTs={:<4} FFs={}", name, est.luts, est.ffs);
+        // Record the resource columns alongside the error metrics, so
+        // the archived JSON carries the whole of Table I and CI can
+        // gate on the keys (a mapper regression that stops producing
+        // them fails bench-smoke, not just the pinned test).
+        let slug = slugify(&name);
+        json.metric(&format!("{slug}_luts"), est.luts as f64);
+        json.metric(&format!("{slug}_ffs"), est.ffs as f64);
     }
     json.write().expect("write BENCH_table1.json");
 }

@@ -11,6 +11,11 @@
 //! (`TWO24`/`FOUR12`) as the built-in baseline: exact, but fixed to 2×24 or
 //! 4×12 lanes — coarser than e.g. the paper's five 9-bit lanes, or its
 //! max-utilization two 9-bit + three 10-bit mix.
+//!
+//! The accumulate step has a gate-level twin,
+//! [`crate::synth::AccumNetlist`]: lanes and guard bits as wiring,
+//! carry leaks and SIMD segment cuts as the presence or absence of a
+//! carry wire. Differential tests pin this module against it.
 
 use crate::bits::{field_unsigned, mask, wrap_unsigned};
 use crate::dsp48::{Dsp48E2, DspInputs, Opmode, SimdMode};

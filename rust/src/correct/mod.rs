@@ -20,6 +20,12 @@
 //! (EP 0.00 %), slightly better than the 3.13 % the paper reports; the
 //! [`Correction::ApproxPostSign`] variant reproduces the residual-error
 //! class the paper describes ("when one operand is zero").
+//!
+//! Every scheme here operates on *values* after extraction. The same
+//! schemes also exist as literal Fig. 3/6 gate circuits inside
+//! [`crate::synth`] (both in isolation, for the Table I resource
+//! columns, and wired into the full-datapath netlist twin), and the
+//! two forms are differentially verified against each other.
 
 use crate::bits::{mask, wrap_signed, wrap_unsigned};
 use crate::packing::PackingConfig;

@@ -1,4 +1,10 @@
 //! The DSP48E2 slice model: ports, datapath, SIMD ALU, pipeline registers.
+//!
+//! This is the *software* twin — `i128` arithmetic with explicit port
+//! wraps. [`crate::synth`] carries the gate-level twin (shift-add
+//! multiplier, ripple-carry ALU) that the differential tests hold this
+//! model against, so "bit-accurate" is a machine-checked property, not
+//! an asserted one.
 
 use crate::bits::{fits_signed, wrap_signed, wrap_unsigned};
 

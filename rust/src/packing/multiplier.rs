@@ -10,6 +10,12 @@ use crate::{Error, Result};
 /// through one simulated DSP48E2 slice, extracts and corrects the outer
 /// product. This is the object the analysis engine, the GEMM engine and
 /// the examples all build on.
+///
+/// Its gate-level hardware twin is [`crate::synth::NetlistOracle`]: the
+/// same configuration × correction × geometry assembled as a Boolean
+/// netlist and evaluated by pure simulation. The two are differentially
+/// verified bit-for-bit (`tests/netlist_differential.rs` and the fuzz
+/// battery's netlist tier).
 #[derive(Debug, Clone)]
 pub struct PackedMultiplier {
     packer: Packer,

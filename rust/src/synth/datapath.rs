@@ -1,0 +1,597 @@
+//! Gate-accurate netlist model of the **full packed-multiplier datapath**
+//! — the hardware twin of [`crate::packing::PackedMultiplier`].
+//!
+//! [`super::full_correction_circuit`] and friends build the paper's
+//! *correction* circuits in isolation (for the Table I resource
+//! columns). This module goes the rest of the way: it assembles the **entire** datapath out of
+//! [`Netlist`] gates — operand packing (B-port composition and the
+//! A/D-port pre-adder sum with sign extension and shifts), the DSP
+//! multiplier and ALU at bit level, P-word segment extraction, and the
+//! Fig. 3 (round-half-up) / Fig. 4 (C-port) / Fig. 6 (MR restore)
+//! correction circuits — parameterized over [`DspGeometry`], so one
+//! [`NetlistOracle`] evaluates a [`PackingConfig`] + operand set purely
+//! by Boolean simulation.
+//!
+//! **Oracle independence.** The software twin computes with `i128`
+//! arithmetic: machine multiplies, arithmetic shifts, `wrap_signed`
+//! masks. The netlist oracle shares none of that — operands enter as
+//! individual bits, the multiplier is a shift-add partial-product array,
+//! every wrap is the natural modulo of a fixed-width ripple adder, and
+//! the corrections are the literal incrementer/subtractor circuits of
+//! Figs. 3 and 6. Agreement between the two is therefore evidence about
+//! the *datapath semantics*, not about one implementation copied twice.
+//! Width congruence makes the comparison exact rather than approximate:
+//! every extracted bit lies below `p_bits_used`, and all DSP wraps
+//! happen at widths ≥ `p_bits_used`, so the netlist carries the P word
+//! at exactly `p_bits_used` bits and is bit-identical to the wider
+//! hardware word on every bit any result reads.
+//!
+//! [`AccumNetlist`] is the §VII counterpart: one accumulate step of the
+//! SIMD addition-packing datapath (`P ← P + inc`), with guard-bit carry
+//! absorption and `TWO24`/`FOUR12` carry-chain cuts realized as actual
+//! gates rather than masks.
+
+use super::netlist::{Net, Netlist};
+use crate::addpack::AdditionPacking;
+use crate::correct::Correction;
+use crate::dsp48::{DspGeometry, SimdMode};
+use crate::packing::{OperandSpec, PackingConfig};
+use crate::{Error, Result};
+
+/// Pad or truncate `bus` to `width` bits: sign-extended when `signed`,
+/// zero-extended otherwise.
+fn to_width(nl: &mut Netlist, bus: &[Net], width: usize, signed: bool) -> Vec<Net> {
+    let mut out: Vec<Net> = bus.iter().copied().take(width).collect();
+    let pad = if signed && !bus.is_empty() {
+        *bus.last().expect("non-empty")
+    } else {
+        nl.constant(false)
+    };
+    out.resize(width, pad);
+    out
+}
+
+/// The term `field · 2^offset` as a `width`-bit two's-complement bus
+/// (`signed` selects sign- vs zero-extension above the field).
+fn shifted_term(
+    nl: &mut Netlist,
+    field: &[Net],
+    offset: u32,
+    width: usize,
+    signed: bool,
+) -> Vec<Net> {
+    let zero = nl.constant(false);
+    let mut out = vec![zero; (offset as usize).min(width)];
+    if out.len() < width {
+        let top = width - out.len();
+        let ext = to_width(nl, field, top, signed);
+        out.extend(ext);
+    }
+    out
+}
+
+/// Two's-complement negation, mod `2^bus.len()`.
+fn negate(nl: &mut Netlist, bus: &[Net]) -> Vec<Net> {
+    let inv: Vec<Net> = bus.iter().map(|&b| nl.not(b)).collect();
+    let one = nl.constant(true);
+    nl.incrementer(&inv, one)
+}
+
+/// Shift-add multiplier: `x · y mod 2^x.len()`, with `x` the multiplicand
+/// at full accumulator width and `y` the multiplier bus.
+///
+/// A signed `y` narrower than the accumulator uses the signed-top
+/// decomposition: bits `0..len−1` contribute unsigned partial products
+/// and the sign bit contributes `(−x) · 2^(len−1)` — one extra negation
+/// instead of sign-extending `y` to full width (which would square the
+/// partial-product count). A `y` at least as wide as the accumulator is
+/// truncated and treated unsigned: `x·y ≡ x·(y mod 2^n) (mod 2^n)`, and
+/// at `len = n` the sign weight `−2^(n−1)` is itself congruent to
+/// `+2^(n−1)`.
+fn mul_mod(nl: &mut Netlist, x: &[Net], y: &[Net], y_signed: bool) -> Vec<Net> {
+    let n = x.len();
+    let zero = nl.constant(false);
+    let mut acc = vec![zero; n];
+    let top_is_sign = y_signed && !y.is_empty() && y.len() < n;
+    let plain_bits = if top_is_sign { y.len() - 1 } else { y.len().min(n) };
+    let add_pp = |nl: &mut Netlist, acc: &[Net], mcand: &[Net], ybit: Net, i: usize| {
+        let mut pp = vec![zero; i];
+        for &xb in mcand.iter().take(n - i) {
+            let t = nl.and(xb, ybit);
+            pp.push(t);
+        }
+        nl.adder(acc, &pp, zero).0
+    };
+    for (i, &yb) in y.iter().take(plain_bits).enumerate() {
+        acc = add_pp(nl, &acc, x, yb, i);
+    }
+    if top_is_sign {
+        let neg = negate(nl, x);
+        acc = add_pp(nl, &acc, &neg, y[y.len() - 1], y.len() - 1);
+    }
+    acc
+}
+
+/// The sign net of w-operand `j`: its top field bit if the field is
+/// signed, constant 0 otherwise (an unsigned field is never negative —
+/// the same predicate [`Correction::c_word`] evaluates on values).
+fn w_sign_net(nl: &mut Netlist, w_in: &[Vec<Net>], cfg: &PackingConfig, j: usize) -> Net {
+    if cfg.w[j].signed {
+        *w_in[j].last().expect("fields have width >= 1")
+    } else {
+        nl.constant(false)
+    }
+}
+
+/// Build the complete packed-multiplier netlist for one configuration ×
+/// correction × geometry. Inputs are the operand field bits (`a` vector
+/// then `w` vector, LSB first); outputs are the corrected result fields
+/// `r0, r1, …` in result (offset) order.
+fn build_multiplier(
+    cfg: &PackingConfig,
+    correction: Correction,
+    geometry: &DspGeometry,
+    strict: bool,
+) -> Netlist {
+    let mut nl = Netlist::new();
+    let n_bits = cfg.p_bits_used() as usize;
+
+    // Primary inputs: every operand field bit — the bits the physical
+    // ports receive (and that the Fig. 6 LSB-calc taps re-use; in the
+    // real slice, too, the correction fabric sees the same nets).
+    let a_in: Vec<Vec<Net>> = cfg
+        .a
+        .iter()
+        .enumerate()
+        .map(|(i, s)| (0..s.width).map(|b| nl.input(format!("a{i}[{b}]"))).collect())
+        .collect();
+    let w_in: Vec<Vec<Net>> = cfg
+        .w
+        .iter()
+        .enumerate()
+        .map(|(j, s)| (0..s.width).map(|b| nl.input(format!("w{j}[{b}]"))).collect())
+        .collect();
+    let zero = nl.constant(false);
+
+    // B port: the packed `a` word. Operand fields are disjoint and
+    // unsigned, so packing is pure wiring — field bits at their offsets,
+    // constant 0 in the padding. Strict mode wires the physical port
+    // width (the signed port's range check happened at construction);
+    // logical mode uses the exact word width.
+    let b_width = if strict { geometry.b_width } else { cfg.a_port_width() };
+    let b_width = b_width as usize;
+    let mut b_bus = vec![zero; b_width];
+    for (bus, s) in a_in.iter().zip(&cfg.a) {
+        for (b, &net) in bus.iter().enumerate() {
+            let pos = s.offset as usize + b;
+            if pos < b_width {
+                b_bus[pos] = net;
+            }
+        }
+    }
+
+    // Multiplier-side word Σ_j w_j·2^off_j. Strict mode models the
+    // pre-adder: every term sign-extends into the AD width and the
+    // ripple sum wraps there, exactly like the port-truncating software
+    // chain (all its wraps are congruent mod 2^ad_width). Logical mode
+    // keeps the exact value — one bit above the packed span covers the
+    // worst-case signed sum of disjoint fields.
+    let w_width = if strict {
+        geometry.ad_width() as usize
+    } else {
+        cfg.w_port_width() as usize + 1
+    };
+    let mut w_bus: Option<Vec<Net>> = None;
+    for (bus, s) in w_in.iter().zip(&cfg.w) {
+        let term = shifted_term(&mut nl, bus, s.offset, w_width, s.signed);
+        w_bus = Some(match w_bus {
+            None => term,
+            Some(acc) => nl.adder(&acc, &term, zero).0,
+        });
+    }
+    let w_bus = w_bus.expect("configs have at least one w field");
+
+    // M = B × (A + D) mod 2^p_bits_used: the multiplicand is the
+    // pre-adder word extended to the P working width; the multiplier is
+    // the B-port bus. The packed `a` word is a sum of disjoint unsigned
+    // fields and (in strict mode) the fit check keeps it below the
+    // signed port's top bit, so it is non-negative in both modes —
+    // unsigned partial products suffice.
+    let x = to_width(&mut nl, &w_bus, n_bits, true);
+    let m = mul_mod(&mut nl, &x, &b_bus, false);
+
+    // C port (§V-B, Fig. 4): predecessor w-sign bits at `off_n − 1`.
+    // Result offsets are unique, so the word is pure wiring; for every
+    // other scheme the bus is constant 0 and the ALU adder folds away.
+    let mut c_bus = vec![zero; n_bits];
+    if correction.uses_c_port() {
+        for n in 1..cfg.results.len() {
+            let pred = &cfg.results[n - 1];
+            let sign = w_sign_net(&mut nl, &w_in, cfg, pred.w_idx);
+            c_bus[cfg.results[n].offset as usize - 1] = sign;
+        }
+    }
+
+    // ALU: P = M + C (MultAdd), modulo the working width.
+    let (p_bus, _) = nl.adder(&m, &c_bus, zero);
+
+    // Per-result extraction + correction circuits.
+    let overlap = (-cfg.delta).max(0) as u32;
+    for (n, r) in cfg.results.iter().enumerate() {
+        let off = r.offset as usize;
+        let width = r.width as usize;
+        let mut field: Vec<Net> = if correction == Correction::FullRoundHalfUp && off > 0 {
+            // Fig. 3 round-half-up: increment the (round bit ∥ field)
+            // window and drop the round bit — the gate form of
+            // `((P >> (off−1)) + 1) >> 1`, with the adder's dropped
+            // carry supplying the field-width wrap.
+            let window = &p_bus[off - 1..off + width];
+            let one = nl.constant(true);
+            let rounded = nl.incrementer(window, one);
+            rounded[1..].to_vec()
+        } else {
+            p_bus[off..off + width].to_vec()
+        };
+        if correction.requires_overpacking() && overlap > 0 {
+            // Fig. 6 MR restore: recompute the above-neighbour's low
+            // product bits from the operand nets and subtract them from
+            // the contaminated MSB slice. `lsb_count` can exceed the
+            // 4-bit `lsb_calc_circuit` limit (int8-tiled needs 7), so
+            // the general partial-product array serves here; for ≤ 2
+            // bits it degenerates to the paper's Eqns. (8)/(9) gates.
+            if let Some(above) = cfg.results.get(n + 1) {
+                if above.offset < r.offset + r.width {
+                    let lsb_count = (r.offset + r.width - above.offset) as usize;
+                    let xa = to_width(&mut nl, &a_in[above.a_idx], lsb_count, false);
+                    let lsbs =
+                        mul_mod(&mut nl, &xa, &w_in[above.w_idx], cfg.w[above.w_idx].signed);
+                    field = nl.subtract_msbs(&field, &lsbs);
+                }
+            }
+        }
+        if matches!(correction, Correction::ApproxPostSign | Correction::MrRestorePlusCPort)
+            && n >= 1
+        {
+            // Post-extraction borrow fix: +1 when the predecessor's w
+            // operand is negative — one incrementer gated by its sign
+            // net, the carry dropped at field width.
+            let pred = &cfg.results[n - 1];
+            let sign = w_sign_net(&mut nl, &w_in, cfg, pred.w_idx);
+            field = nl.incrementer(&field, sign);
+        }
+        nl.output_bus(&format!("r{n}"), &field);
+    }
+    nl
+}
+
+/// A packed multiplier evaluated **purely by netlist simulation** — the
+/// gate-level oracle the differential tests and the fuzz battery hold
+/// [`crate::packing::PackedMultiplier`] against.
+///
+/// Construction mirrors the software twin's validation exactly
+/// ([`PackingConfig::fit`] / [`PackingConfig::fit_relaxed`], and the
+/// MR-requires-Overpacking check), so every configuration the software
+/// accepts has a gate-level twin and vice versa.
+#[derive(Debug, Clone)]
+pub struct NetlistOracle {
+    netlist: Netlist,
+    cfg: PackingConfig,
+    correction: Correction,
+    strict: bool,
+    /// Total primary-input bits (Σ operand field widths).
+    input_bits: usize,
+}
+
+impl NetlistOracle {
+    /// Gate-level twin of [`crate::packing::PackedMultiplier::new`]
+    /// (strict DSP48E2 datapath).
+    pub fn new(cfg: PackingConfig, correction: Correction) -> Result<Self> {
+        Self::with_geometry(cfg, correction, DspGeometry::DSP48E2)
+    }
+
+    /// Gate-level twin of
+    /// [`crate::packing::PackedMultiplier::with_geometry`]: the strict
+    /// datapath against an explicit port geometry.
+    pub fn with_geometry(
+        cfg: PackingConfig,
+        correction: Correction,
+        geometry: DspGeometry,
+    ) -> Result<Self> {
+        cfg.fit(&geometry)?;
+        Self::build(cfg, correction, geometry, true)
+    }
+
+    /// Gate-level twin of [`crate::packing::PackedMultiplier::logical`]:
+    /// the architecture-independent §IV datapath (exact product, no port
+    /// truncation) for configurations that pass only the relaxed fit.
+    pub fn logical(cfg: PackingConfig, correction: Correction) -> Result<Self> {
+        cfg.fit_relaxed(&DspGeometry::DSP48E2)?;
+        Self::build(cfg, correction, DspGeometry::DSP48E2, false)
+    }
+
+    fn build(
+        cfg: PackingConfig,
+        correction: Correction,
+        geometry: DspGeometry,
+        strict: bool,
+    ) -> Result<Self> {
+        if correction.requires_overpacking() && cfg.delta >= 0 {
+            return Err(Error::InvalidConfig(format!(
+                "{correction:?} requires negative padding, config has delta = {}",
+                cfg.delta
+            )));
+        }
+        let netlist = build_multiplier(&cfg, correction, &geometry, strict);
+        let input_bits =
+            cfg.a.iter().chain(&cfg.w).map(|s| s.width as usize).sum::<usize>();
+        Ok(NetlistOracle { netlist, cfg, correction, strict, input_bits })
+    }
+
+    /// The packing configuration.
+    pub fn config(&self) -> &PackingConfig {
+        &self.cfg
+    }
+
+    /// The correction scheme baked into the gates.
+    pub fn correction(&self) -> Correction {
+        self.correction
+    }
+
+    /// Is this the strict (port-accurate) datapath rather than the
+    /// logical §IV one?
+    pub fn is_strict(&self) -> bool {
+        self.strict
+    }
+
+    /// The underlying netlist (for gate counts and LUT/FF estimates).
+    pub fn netlist(&self) -> &Netlist {
+        &self.netlist
+    }
+
+    fn check(vals: &[i128], specs: &[OperandSpec], label: &str) -> Result<()> {
+        if vals.len() != specs.len() {
+            return Err(Error::OperandRange(format!(
+                "{label}: got {} values for {} fields",
+                vals.len(),
+                specs.len()
+            )));
+        }
+        for (k, (&v, s)) in vals.iter().zip(specs).enumerate() {
+            let (lo, hi) = s.range();
+            if v < lo || v > hi {
+                return Err(Error::OperandRange(format!(
+                    "{label}[{k}] = {v} outside [{lo}, {hi}]"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize one operand-vector pair into the netlist's primary-input
+    /// order: `a` fields then `w` fields, LSB first, two's complement.
+    fn encode(&self, a: &[i128], w: &[i128], bits: &mut Vec<bool>) {
+        for (specs, vals) in [(&self.cfg.a, a), (&self.cfg.w, w)] {
+            for (s, &v) in specs.iter().zip(vals) {
+                let u = crate::bits::wrap_unsigned(v, s.width);
+                for b in 0..s.width {
+                    bits.push((u >> b) & 1 == 1);
+                }
+            }
+        }
+    }
+
+    /// Decode the output bits back into result values (result order,
+    /// sign-extended per field).
+    fn decode(&self, bits: &[bool]) -> Vec<i128> {
+        let mut out = Vec::with_capacity(self.cfg.results.len());
+        let mut idx = 0;
+        for r in &self.cfg.results {
+            let mut v = 0i128;
+            for b in 0..r.width {
+                v |= (bits[idx] as i128) << b;
+                idx += 1;
+            }
+            out.push(if r.signed { crate::bits::wrap_signed(v, r.width) } else { v });
+        }
+        out
+    }
+
+    /// Multiply one operand-vector pair by Boolean simulation. Returns
+    /// the corrected outer product in result (offset) order — the same
+    /// contract as [`crate::packing::PackedMultiplier::multiply`].
+    pub fn multiply(&self, a: &[i128], w: &[i128]) -> Result<Vec<i128>> {
+        Self::check(a, &self.cfg.a, "a")?;
+        Self::check(w, &self.cfg.w, "w")?;
+        let mut bits = Vec::with_capacity(self.input_bits);
+        self.encode(a, w, &mut bits);
+        Ok(self.decode(&self.netlist.eval(&bits)))
+    }
+
+    /// Batched multiply via the 64-way bit-parallel simulator
+    /// ([`Netlist::eval_u64`]): up to 64 operand pairs per netlist pass.
+    /// This is what makes exhaustive sweeps (65 536 INT4 combinations
+    /// per scheme) affordable in the per-push test budget.
+    pub fn multiply_many(&self, cases: &[(Vec<i128>, Vec<i128>)]) -> Result<Vec<Vec<i128>>> {
+        let mut out = Vec::with_capacity(cases.len());
+        let mut bits = Vec::with_capacity(self.input_bits);
+        for chunk in cases.chunks(64) {
+            let mut lanes = vec![0u64; self.input_bits];
+            for (l, (a, w)) in chunk.iter().enumerate() {
+                Self::check(a, &self.cfg.a, "a")?;
+                Self::check(w, &self.cfg.w, "w")?;
+                bits.clear();
+                self.encode(a, w, &mut bits);
+                for (i, &bit) in bits.iter().enumerate() {
+                    lanes[i] |= (bit as u64) << l;
+                }
+            }
+            let words = self.netlist.eval_u64(&lanes);
+            for l in 0..chunk.len() {
+                let sample: Vec<bool> = words.iter().map(|&w| (w >> l) & 1 == 1).collect();
+                out.push(self.decode(&sample));
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One accumulate step of the §VII SIMD accumulator datapath, as gates:
+/// `P ← P + inc_word`, where `inc_word` places each lane's increment at
+/// its offset with **constant-0 guard bits** between lanes. Carry leaks
+/// (Fig. 7), guard-bit absorption (Fig. 8) and the native `TWO24` /
+/// `FOUR12` segment cuts all emerge from the ripple-carry structure —
+/// nothing is masked arithmetically.
+#[derive(Debug, Clone)]
+pub struct AccumNetlist {
+    netlist: Netlist,
+    packing: AdditionPacking,
+}
+
+impl AccumNetlist {
+    /// Build the step netlist for a lane packing × SIMD mode. `One48` is
+    /// a single 48-bit ripple adder (the paper's shared carry chain);
+    /// `Two24`/`Four12` cut the carry at segment boundaries exactly
+    /// where [`crate::dsp48::Dsp48E2`]'s SIMD ALU does.
+    pub fn new(packing: AdditionPacking, simd: SimdMode) -> Result<Self> {
+        packing.validate()?;
+        let mut nl = Netlist::new();
+        let p_bus: Vec<Net> = (0..48).map(|i| nl.input(format!("p[{i}]"))).collect();
+        let zero = nl.constant(false);
+        let mut inc_bus = vec![zero; 48];
+        for (k, l) in packing.lanes.iter().enumerate() {
+            for b in 0..l.width as usize {
+                inc_bus[l.offset as usize + b] = nl.input(format!("inc{k}[{b}]"));
+            }
+        }
+        let sw = simd.segment_width() as usize;
+        let mut next = Vec::with_capacity(48);
+        for s in 0..simd.segments() as usize {
+            let lo = s * sw;
+            let (sum, _) = nl.adder(&p_bus[lo..lo + sw], &inc_bus[lo..lo + sw], zero);
+            next.extend(sum);
+        }
+        nl.output_bus("p_next", &next);
+        Ok(AccumNetlist { netlist: nl, packing })
+    }
+
+    /// The lane packing.
+    pub fn packing(&self) -> &AdditionPacking {
+        &self.packing
+    }
+
+    /// The underlying netlist.
+    pub fn netlist(&self) -> &Netlist {
+        &self.netlist
+    }
+
+    /// Advance one accumulate step: current P word + per-lane increments
+    /// → next P word (unsigned 48-bit). Lane values are range-checked
+    /// against their widths, like [`AdditionPacking::pack`].
+    pub fn step(&self, p: i128, inc: &[i128]) -> Result<i128> {
+        if inc.len() != self.packing.num_lanes() {
+            return Err(Error::OperandRange(format!(
+                "got {} increments for {} lanes",
+                inc.len(),
+                self.packing.num_lanes()
+            )));
+        }
+        let mut bits = Vec::with_capacity(48 + self.packing.bits_used() as usize);
+        let pw = crate::bits::wrap_unsigned(p, 48);
+        for i in 0..48 {
+            bits.push((pw >> i) & 1 == 1);
+        }
+        for (l, &v) in self.packing.lanes.iter().zip(inc) {
+            if !crate::bits::fits_unsigned(v, l.width) {
+                return Err(Error::OperandRange(format!(
+                    "{v} does not fit unsigned {} bits",
+                    l.width
+                )));
+            }
+            for b in 0..l.width {
+                bits.push((v >> b) & 1 == 1);
+            }
+        }
+        let out = self.netlist.eval(&bits);
+        Ok(out.iter().enumerate().map(|(i, &b)| (b as i128) << i).sum())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::packing::PackedMultiplier;
+
+    #[test]
+    fn int4_rhu_netlist_is_exact_on_the_worked_example() {
+        let o = NetlistOracle::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        assert_eq!(o.multiply(&[3, 10], &[-7, 5]).unwrap(), vec![-21, -70, 15, 50]);
+    }
+
+    #[test]
+    fn int4_raw_netlist_shows_the_floor_error() {
+        let o = NetlistOracle::new(PackingConfig::int4(), Correction::None).unwrap();
+        let r = o.multiply(&[3, 10], &[-7, 5]).unwrap();
+        assert_eq!(r[0], -21);
+        assert_eq!(r[1], -70 - 1, "§V floor error must reproduce in gates");
+    }
+
+    #[test]
+    fn mr_netlist_restores_the_paper_vi_b_example() {
+        let cfg = PackingConfig::overpack_int4(-2).unwrap();
+        let raw = NetlistOracle::new(cfg.clone(), Correction::None).unwrap();
+        assert_eq!(raw.multiply(&[10, 3], &[-7, -4]).unwrap()[0], 122);
+        let mr = NetlistOracle::new(cfg, Correction::MrRestore).unwrap();
+        assert_eq!(mr.multiply(&[10, 3], &[-7, -4]).unwrap()[0], -70);
+    }
+
+    #[test]
+    fn construction_mirrors_the_software_twin() {
+        // Same accept/reject surface as PackedMultiplier.
+        assert!(NetlistOracle::new(PackingConfig::int4(), Correction::MrRestore).is_err());
+        assert!(PackedMultiplier::new(PackingConfig::int4(), Correction::MrRestore).is_err());
+        // intn_fig9 spans the full B port: strict rejects, logical accepts.
+        assert!(NetlistOracle::new(PackingConfig::intn_fig9(), Correction::None).is_err());
+        assert!(NetlistOracle::logical(PackingConfig::intn_fig9(), Correction::None).is_ok());
+    }
+
+    #[test]
+    fn batched_multiply_matches_scalar() {
+        let o = NetlistOracle::new(PackingConfig::int4(), Correction::ApproxCPort).unwrap();
+        let cases: Vec<(Vec<i128>, Vec<i128>)> = (0..100)
+            .map(|k: i128| (vec![k % 16, (k * 7) % 16], vec![k % 8 - 4, 3 - k % 7]))
+            .collect();
+        let batched = o.multiply_many(&cases).unwrap();
+        for ((a, w), got) in cases.iter().zip(&batched) {
+            assert_eq!(*got, o.multiply(a, w).unwrap(), "a={a:?} w={w:?}");
+        }
+    }
+
+    #[test]
+    fn accum_netlist_reproduces_fig7_and_fig8() {
+        // Fig. 7: unguarded lanes share the carry chain — the lower
+        // lane's carry corrupts the upper LSB.
+        let p = AdditionPacking::uniform(2, 8, 0).unwrap();
+        let nl = AccumNetlist::new(p.clone(), SimdMode::One48).unwrap();
+        let word = nl.step(p.pack(&[200, 10]).unwrap(), &[100, 20]).unwrap();
+        let got = p.extract(word);
+        assert_eq!(got[0], (200 + 100) & 0xFF);
+        assert_eq!(got[1], 30 + 1, "carry leak must emerge from the gates");
+        // Fig. 8: a constant-0 guard bit absorbs the carry.
+        let g = AdditionPacking::uniform(2, 8, 1).unwrap();
+        let gnl = AccumNetlist::new(g.clone(), SimdMode::One48).unwrap();
+        let word = gnl.step(g.pack(&[200, 10]).unwrap(), &[100, 20]).unwrap();
+        assert_eq!(g.extract(word), vec![(200 + 100) & 0xFF, 30]);
+    }
+
+    #[test]
+    fn accum_netlist_four12_cuts_the_carry_chain() {
+        let p = AdditionPacking::uniform(4, 12, 0).unwrap();
+        let nl = AccumNetlist::new(p.clone(), SimdMode::Four12).unwrap();
+        let word = nl.step(p.pack(&[0xFFF, 0, 0, 0]).unwrap(), &[1, 0, 0, 0]).unwrap();
+        assert_eq!(p.extract(word), vec![0, 0, 0, 0], "segment cut blocks the carry");
+        // The same step on the shared chain leaks the carry into lane 1.
+        let one = AccumNetlist::new(p.clone(), SimdMode::One48).unwrap();
+        let word = one.step(p.pack(&[0xFFF, 0, 0, 0]).unwrap(), &[1, 0, 0, 0]).unwrap();
+        assert_eq!(p.extract(word), vec![0, 1, 0, 0]);
+    }
+}

@@ -11,6 +11,13 @@
 //!   under a 1-byte stripe budget that forces a multi-block schedule;
 //! * **plan/execute vs matmul**: the two entry points must be
 //!   bit-identical (the weights-resident serving contract);
+//! * **gate-level oracle** (subsampled): the drawn configuration ×
+//!   correction × geometry is rebuilt as a [`NetlistOracle`] — a pure
+//!   Boolean-simulation twin sharing no arithmetic with the engine —
+//!   and checked against [`PackedMultiplier`] on random operand
+//!   vectors. A deterministic ~5% of cases run this tier per push;
+//!   `DSP_PACKING_FUZZ_NETLIST=full` (set by the scheduled CI job)
+//!   runs it on every case;
 //! * **exact oracle** (generator-space draws): full round-half-up with
 //!   δ ≥ 0 must equal the exact `i32` reference everywhere (§V-A);
 //!   every scheme must respect the hard per-element bound
@@ -45,7 +52,8 @@ use dsp_packing::correct::Correction;
 use dsp_packing::dsp48::DspGeometry;
 use dsp_packing::gemm::{DspOpStats, GemmEngine, KernelMode, MatI32, WordBackend};
 use dsp_packing::nn::{Conv2dLayer, ConvGeometry, ExecMode};
-use dsp_packing::packing::{OperandSpec, PackingConfig};
+use dsp_packing::packing::{OperandSpec, PackedMultiplier, PackingConfig};
+use dsp_packing::synth::NetlistOracle;
 use dsp_packing::util::Rng;
 
 const DEFAULT_SEED: u64 = 0xD5B0_F022_2203_1102;
@@ -332,6 +340,43 @@ fn run_case(seed: u64) {
                     .unwrap();
                 assert_eq!(out_n, out_e, "{ctx}: conv RHU must equal the exact path");
             }
+        }
+    }
+
+    // Gate-level oracle tier: rebuild this case's datapath as a netlist
+    // (synth::NetlistOracle — shift-add multiplier + ripple adders, no
+    // shared arithmetic) and check it against the per-product software
+    // twin. Netlist construction dominates the cost, so per-push runs
+    // subsample a deterministic fraction; the scheduled exhaustive job
+    // sets DSP_PACKING_FUZZ_NETLIST=full to cover every case. A sub-rng
+    // keyed off the case seed keeps the main stream — and with it every
+    // recorded reproducer seed — byte-identical either way.
+    let mut nrng = Rng::new(seed ^ 0x4E45_544C_4953_5431);
+    let full = std::env::var("DSP_PACKING_FUZZ_NETLIST").as_deref() == Ok("full");
+    // Always consume the subsample draw so the operand draws below are
+    // the same whether or not the full tier is enabled (replays of a
+    // full-mode failure stay exact).
+    let sampled = nrng.chance(0.05);
+    if full || sampled {
+        let sw = PackedMultiplier::with_geometry(cfg.clone(), corr, geom)
+            .expect("feasible combo constructs");
+        let hw = NetlistOracle::with_geometry(cfg.clone(), corr, geom)
+            .expect("netlist twin constructs");
+        let draw = |rng: &mut Rng, specs: &[OperandSpec]| -> Vec<i128> {
+            specs
+                .iter()
+                .map(|s| {
+                    let (lo, hi) = s.range();
+                    rng.range_i128(lo, hi)
+                })
+                .collect()
+        };
+        for _ in 0..8 {
+            let a = draw(&mut nrng, &cfg.a);
+            let w = draw(&mut nrng, &cfg.w);
+            let want = sw.multiply(&a, &w).unwrap();
+            let got = hw.multiply(&a, &w).unwrap();
+            assert_eq!(got, want, "{ctx}: netlist oracle disagrees on a={a:?} w={w:?}");
         }
     }
 }
