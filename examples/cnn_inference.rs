@@ -63,9 +63,9 @@ fn serve(backend: Arc<dyn InferenceBackend>, ds: &data::Dataset) -> dsp_packing:
             for i in 0..per_client {
                 let idx = (c * per_client + i) % images.len();
                 let pred = handle
-                    .infer(Request { id: (c * per_client + i) as u64, image: images[idx].clone() })
+                    .infer(Request::new((c * per_client + i) as u64, images[idx].clone()))
                     .expect("infer");
-                if pred.class == labels[idx] {
+                if pred.class() == Some(labels[idx]) {
                     correct += 1;
                 }
             }

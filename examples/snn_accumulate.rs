@@ -114,8 +114,8 @@ fn main() -> dsp_packing::Result<()> {
     let handle = coord.handle();
     let mut correct = 0usize;
     for (i, image) in ds.images.iter().enumerate() {
-        let pred = handle.infer(Request { id: i as u64, image: image.clone() })?;
-        if pred.class == ds.labels[i] {
+        let pred = handle.infer(Request::new(i as u64, image.clone()))?;
+        if pred.class() == Some(ds.labels[i]) {
             correct += 1;
         }
     }

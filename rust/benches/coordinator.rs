@@ -30,7 +30,7 @@ fn run_serving(json: &mut JsonReport, label: &str, cfg: ServerConfig, n_requests
                 for i in 0..n_requests / 4 {
                     let idx = (c * 31 + i) % imgs.len();
                     handle
-                        .infer(Request { id: i as u64, image: imgs[idx].clone() })
+                        .infer(Request::new(i as u64, imgs[idx].clone()))
                         .unwrap();
                 }
             })
@@ -77,6 +77,7 @@ fn main() {
                 },
                 workers,
                 dsp_budget: 128,
+                ..ServerConfig::default()
             },
             n,
         );

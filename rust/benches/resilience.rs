@@ -1,0 +1,211 @@
+//! Resilience bench: serving goodput, shed rate and timeout rate under
+//! seeded fault injection, against a fault-free baseline — the
+//! machine-readable record of what the failure-domain machinery costs
+//! and recovers (`BENCH_resilience.json`).
+//!
+//! Scenario: windowed clients keep a deep backlog against a small worker
+//! pool while a [`FaultInjectingBackend`] injects backend errors, panics
+//! and latency spikes. Every request still gets exactly one typed
+//! outcome (asserted); the report records how much goodput survives,
+//! how much load the admission policy sheds, how many deadlines expire,
+//! and how many panicked workers the supervisor replaced.
+
+use dsp_packing::bench::JsonReport;
+use dsp_packing::coordinator::{
+    AdmissionPolicy, BatcherConfig, Coordinator, FaultInjectingBackend, FaultSpec, Outcome,
+    PackedNnBackend, Request, ServerConfig,
+};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::GemmEngine;
+use dsp_packing::nn::{data, ExecMode, QuantMlp};
+use dsp_packing::packing::PackingConfig;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const WORKERS: u64 = 3;
+
+/// Silence the stack traces of the panics this bench injects on purpose;
+/// everything else still reaches the default hook.
+fn quiet_injected_panics() {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let msg = info
+            .payload()
+            .downcast_ref::<&str>()
+            .map(|s| (*s).to_string())
+            .or_else(|| info.payload().downcast_ref::<String>().cloned())
+            .unwrap_or_default();
+        if !msg.contains("injected panic") {
+            prev(info);
+        }
+    }));
+}
+
+struct ScenarioOutcome {
+    goodput: f64,
+    ok: u64,
+    failed: u64,
+    shed: u64,
+    deadline: u64,
+    panics_caught: u64,
+    panics_recovered: u64,
+    poison_isolated: u64,
+}
+
+/// Run one serving scenario: `n_clients` windowed clients × `per_client`
+/// requests, every 4th request carrying a short deadline. Returns the
+/// observed outcome mix and goodput (Ok responses per second).
+fn run_scenario(label: &str, spec: Option<FaultSpec>, n_requests: u64) -> ScenarioOutcome {
+    let ds = data::synthetic(96, 4, 64, 0.15, 7);
+    let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+    let engine = GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    let inner = PackedNnBackend::new(mlp, ExecMode::Packed(engine));
+    let backend: Arc<dyn dsp_packing::coordinator::InferenceBackend> = match spec {
+        Some(spec) => Arc::new(FaultInjectingBackend::new(inner, spec)),
+        None => Arc::new(inner),
+    };
+    let coord = Coordinator::start(
+        backend,
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(500),
+                queue_cap: 512,
+            },
+            workers: WORKERS as usize,
+            admission: AdmissionPolicy::depth(64, 16),
+            ..ServerConfig::default()
+        },
+    );
+    let handle = coord.handle();
+
+    let n_clients = 4u64;
+    let per_client = n_requests / n_clients;
+    let window = 32u64;
+    let start = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..n_clients {
+        let handle = handle.clone();
+        let images = ds.images.clone();
+        clients.push(std::thread::spawn(move || {
+            let (mut ok, mut failed, mut shed, mut deadline) = (0u64, 0u64, 0u64, 0u64);
+            let mut sent = 0u64;
+            while sent < per_client {
+                let burst = window.min(per_client - sent);
+                let rxs: Vec<_> = (0..burst)
+                    .map(|i| {
+                        let id = c * 1_000_000 + sent + i;
+                        let idx = ((c * per_client + sent + i) % images.len() as u64) as usize;
+                        let mut req = Request::new(id, images[idx].clone());
+                        if (sent + i) % 4 == 0 {
+                            req = req.with_timeout(Duration::from_millis(3));
+                        }
+                        handle.submit(req).expect("coordinator is up")
+                    })
+                    .collect();
+                for rx in rxs {
+                    match rx.recv().expect("exactly one typed outcome").outcome {
+                        Outcome::Ok(_) => ok += 1,
+                        Outcome::Failed(_) => failed += 1,
+                        Outcome::Shed(_) => shed += 1,
+                        Outcome::DeadlineExceeded => deadline += 1,
+                    }
+                }
+                sent += burst;
+            }
+            (ok, failed, shed, deadline)
+        }));
+    }
+    let (mut ok, mut failed, mut shed, mut deadline) = (0u64, 0u64, 0u64, 0u64);
+    for cl in clients {
+        let (o, f, s, d) = cl.join().unwrap();
+        ok += o;
+        failed += f;
+        shed += s;
+        deadline += d;
+    }
+    let elapsed = start.elapsed();
+
+    // Exactly-once accounting: every submitted request landed in exactly
+    // one outcome bucket.
+    let total = n_clients * per_client;
+    assert_eq!(ok + failed + shed + deadline, total, "no request lost or double-answered");
+
+    // The pool must be back at full strength before we read the gauges.
+    let strength_deadline = Instant::now() + Duration::from_secs(10);
+    while coord.metrics().workers_alive < WORKERS {
+        assert!(Instant::now() < strength_deadline, "supervisor must restore the pool");
+        std::thread::yield_now();
+    }
+    let m = coord.shutdown();
+    assert_eq!(m.completed, ok);
+    assert_eq!(m.failed, failed);
+    assert_eq!(m.deadline_exceeded, deadline);
+    assert_eq!(m.shed + m.rejected, shed);
+
+    let goodput = ok as f64 / elapsed.as_secs_f64();
+    println!(
+        "{label:<28} goodput={goodput:>8.0} ok/s  ok={ok} failed={failed} shed={shed} \
+         deadline={deadline}  panics={} respawns={}",
+        m.worker_panics, m.workers_respawned
+    );
+    ScenarioOutcome {
+        goodput,
+        ok,
+        failed,
+        shed,
+        deadline,
+        panics_caught: m.worker_panics,
+        panics_recovered: m.workers_respawned,
+        poison_isolated: m.poison_isolated,
+    }
+}
+
+fn main() {
+    quiet_injected_panics();
+    let fast = std::env::var("DSP_PACKING_BENCH_FAST").as_deref() == Ok("1");
+    let n: u64 = if fast { 512 } else { 4096 };
+    let mut json = JsonReport::new("resilience");
+
+    println!("=== serving resilience: goodput under seeded fault injection ===");
+    let baseline = run_scenario("baseline (no faults)", None, n);
+
+    let spec = FaultSpec {
+        seed: std::env::var("DSP_PACKING_CHAOS_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC4A0_5EED),
+        error_rate: 0.06,
+        panic_rate: 0.05,
+        delay_rate: 0.08,
+        delay: Duration::from_millis(2),
+    };
+    println!("fault spec: seed {:#x} (replay via DSP_PACKING_CHAOS_SEED)", spec.seed);
+    let faulty = run_scenario("chaos (errors+panics+spikes)", Some(spec), n);
+
+    let total = n as f64;
+    json.metric("requests", n);
+    json.metric("goodput_baseline", baseline.goodput);
+    json.metric("goodput_under_fault", faulty.goodput);
+    json.metric(
+        "goodput_retained",
+        if baseline.goodput > 0.0 { faulty.goodput / baseline.goodput } else { 0.0 },
+    );
+    json.metric("shed_rate", faulty.shed as f64 / total);
+    json.metric("timeout_rate", faulty.deadline as f64 / total);
+    json.metric("failed_rate", faulty.failed as f64 / total);
+    json.metric("ok_rate", faulty.ok as f64 / total);
+    json.metric("baseline_shed_rate", baseline.shed as f64 / total);
+    json.metric("baseline_timeout_rate", baseline.deadline as f64 / total);
+    json.metric("worker_panics_caught", faulty.panics_caught);
+    json.metric("worker_panics_recovered", faulty.panics_recovered);
+    json.metric("poison_isolated", faulty.poison_isolated);
+
+    // The fault-free baseline must not fail or poison anything — if it
+    // does, the harness itself is broken, not the backend.
+    assert_eq!(baseline.failed, 0, "baseline must be fault-free");
+    assert_eq!(baseline.panics_caught, 0);
+    assert!(faulty.ok > 0, "chaos must not collapse goodput to zero");
+
+    json.write().expect("write BENCH_resilience.json");
+}

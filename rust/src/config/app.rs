@@ -153,6 +153,25 @@ impl AppConfig {
             if let Some(v) = s.get("dsp_budget").and_then(|v| v.as_int()) {
                 cfg.server.dsp_budget = v as usize;
             }
+            // Admission-control knobs. `shed_*` alone gets a degenerate
+            // (zero-gap) hysteresis band; add the `resume_*` key to widen
+            // it. Absent keys leave admission disabled (queue_cap only).
+            if let Some(v) = s.get("shed_depth").and_then(|v| v.as_int()) {
+                cfg.server.admission.shed_depth = v as usize;
+                cfg.server.admission.resume_depth = v as usize;
+            }
+            if let Some(v) = s.get("resume_depth").and_then(|v| v.as_int()) {
+                cfg.server.admission.resume_depth =
+                    (v as usize).min(cfg.server.admission.shed_depth);
+            }
+            if let Some(v) = s.get("shed_p99_us").and_then(|v| v.as_int()) {
+                cfg.server.admission.shed_p99_us = v as u64;
+                cfg.server.admission.resume_p99_us = v as u64;
+            }
+            if let Some(v) = s.get("resume_p99_us").and_then(|v| v.as_int()) {
+                cfg.server.admission.resume_p99_us =
+                    (v as u64).min(cfg.server.admission.shed_p99_us);
+            }
         }
         if let Some(d) = sections.get("data") {
             if let Some(v) = d.get("classes").and_then(|v| v.as_int()) {
@@ -202,6 +221,8 @@ max_wait_ms = 1.5
 workers = 8
 queue_cap = 512
 dsp_budget = 96
+shed_depth = 256
+resume_depth = 64
 
 [data]
 classes = 10
@@ -214,6 +235,8 @@ seed = 3
         assert_eq!(c.server.batcher.max_batch, 32);
         assert_eq!(c.server.batcher.max_wait, Duration::from_micros(1500));
         assert_eq!(c.server.workers, 8);
+        assert_eq!(c.server.admission.shed_depth, 256);
+        assert_eq!(c.server.admission.resume_depth, 64);
         assert_eq!(c.classes, 10);
         let built = c.packing.build().unwrap();
         assert_eq!(built.delta, -2);

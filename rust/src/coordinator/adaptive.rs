@@ -250,7 +250,7 @@ mod tests {
         let coord = Coordinator::start(backend, ServerConfig::default());
         let handle = coord.handle();
         for (i, img) in ds.images.iter().enumerate() {
-            let req = Request { id: i as u64, image: with_budget(img, (i % 2) as f32) };
+            let req = Request::new(i as u64, with_budget(img, (i % 2) as f32));
             let p = handle.infer(req).unwrap();
             assert_eq!(p.id, i as u64);
         }

@@ -1,6 +1,13 @@
 //! Dynamic batching: group queued requests up to a max batch size or a
 //! max queueing delay, whichever comes first (the classic serving
 //! trade-off between throughput and tail latency).
+//!
+//! Every entry is timestamped at enqueue and may carry a client
+//! deadline: [`DynamicBatcher::pop_batch`] propagates the enqueue
+//! [`Instant`] (so latency accounting starts at submission, not at batch
+//! execution) and sweeps deadline-expired entries out of the queue at
+//! batch formation — expired entries are returned separately, exactly
+//! once, instead of wasting execution cycles inside a batch.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -27,6 +34,37 @@ impl Default for BatcherConfig {
     }
 }
 
+/// Why a [`DynamicBatcher::push`] was refused.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PushError {
+    /// The queue is at `queue_cap` (backpressure; retryable).
+    Full,
+    /// The batcher is closed (shutdown; not retryable).
+    Closed,
+}
+
+/// One dequeued entry: the item plus the instant it was enqueued, so the
+/// consumer can account queue wait separately from service time.
+#[derive(Debug)]
+pub struct Entry<T> {
+    /// The queued item.
+    pub item: T,
+    /// When [`DynamicBatcher::push`] accepted it.
+    pub enqueued_at: Instant,
+}
+
+/// One formed batch: the live entries to execute plus the entries whose
+/// deadline expired while queued (swept exactly once, at batch
+/// formation — they never occupy a batch slot).
+#[derive(Debug)]
+pub struct PoppedBatch<T> {
+    /// Entries to execute, oldest first, at most `max_batch`.
+    pub batch: Vec<Entry<T>>,
+    /// Entries whose deadline passed while queued; answer without
+    /// executing.
+    pub expired: Vec<Entry<T>>,
+}
+
 /// A blocking MPMC queue with deadline-driven batch pop.
 #[derive(Debug)]
 pub struct DynamicBatcher<T> {
@@ -36,8 +74,18 @@ pub struct DynamicBatcher<T> {
 }
 
 #[derive(Debug)]
+struct Queued<T> {
+    item: T,
+    enqueued_at: Instant,
+    deadline: Option<Instant>,
+}
+
+#[derive(Debug)]
 struct Inner<T> {
-    queue: VecDeque<(T, Instant)>,
+    queue: VecDeque<Queued<T>>,
+    /// Any queued entry carries a deadline → pop must sweep. Tracked so
+    /// deadline-free workloads skip the sweep scan entirely.
+    deadlines_queued: usize,
     closed: bool,
 }
 
@@ -46,7 +94,11 @@ impl<T> DynamicBatcher<T> {
     pub fn new(cfg: BatcherConfig) -> Self {
         DynamicBatcher {
             cfg,
-            inner: Mutex::new(Inner { queue: VecDeque::new(), closed: false }),
+            inner: Mutex::new(Inner {
+                queue: VecDeque::new(),
+                deadlines_queued: 0,
+                closed: false,
+            }),
             cv: Condvar::new(),
         }
     }
@@ -56,16 +108,34 @@ impl<T> DynamicBatcher<T> {
         &self.cfg
     }
 
-    /// Enqueue a request. Returns `false` when the queue is full
-    /// (backpressure) or the batcher is closed.
-    pub fn push(&self, item: T) -> bool {
+    /// Enqueue a request with no deadline. On rejection the item is
+    /// handed back alongside the reason, so the caller can still answer
+    /// its response channel (a shed must never silently drop a request).
+    pub fn push(&self, item: T) -> Result<(), (PushError, T)> {
+        self.push_with_deadline(item, None)
+    }
+
+    /// Enqueue a request, optionally carrying a client deadline. Entries
+    /// whose deadline passes while queued are swept (returned via
+    /// [`PoppedBatch::expired`]) instead of executed.
+    pub fn push_with_deadline(
+        &self,
+        item: T,
+        deadline: Option<Instant>,
+    ) -> Result<(), (PushError, T)> {
         let mut inner = self.inner.lock().unwrap();
-        if inner.closed || inner.queue.len() >= self.cfg.queue_cap {
-            return false;
+        if inner.closed {
+            return Err((PushError::Closed, item));
         }
-        inner.queue.push_back((item, Instant::now()));
+        if inner.queue.len() >= self.cfg.queue_cap {
+            return Err((PushError::Full, item));
+        }
+        if deadline.is_some() {
+            inner.deadlines_queued += 1;
+        }
+        inner.queue.push_back(Queued { item, enqueued_at: Instant::now(), deadline });
         self.cv.notify_one();
-        true
+        Ok(())
     }
 
     /// Current queue depth.
@@ -76,7 +146,12 @@ impl<T> DynamicBatcher<T> {
     /// Pop the next batch: blocks until at least one request is queued,
     /// then waits up to `max_wait` (measured from the oldest request) for
     /// the batch to fill. Returns `None` once closed and drained.
-    pub fn pop_batch(&self) -> Option<Vec<T>> {
+    ///
+    /// At batch formation, entries whose deadline has passed are swept
+    /// out of the whole queue (each exactly once) into
+    /// [`PoppedBatch::expired`]; they do not count toward `max_batch`, so
+    /// a burst of expired entries never starves live ones of batch slots.
+    pub fn pop_batch(&self) -> Option<PoppedBatch<T>> {
         let mut inner = self.inner.lock().unwrap();
         loop {
             if !inner.queue.is_empty() {
@@ -88,21 +163,47 @@ impl<T> DynamicBatcher<T> {
             inner = self.cv.wait(inner).unwrap();
         }
         // Wait for the batch to fill or the oldest request to expire.
-        let oldest = inner.queue.front().expect("nonempty").1;
-        let deadline = oldest + self.cfg.max_wait;
+        let oldest = inner.queue.front().expect("nonempty").enqueued_at;
+        let wait_deadline = oldest + self.cfg.max_wait;
         while inner.queue.len() < self.cfg.max_batch && !inner.closed {
             let now = Instant::now();
-            if now >= deadline {
+            if now >= wait_deadline {
                 break;
             }
-            let (guard, timeout) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            let (guard, timeout) =
+                self.cv.wait_timeout(inner, wait_deadline - now).unwrap();
             inner = guard;
             if timeout.timed_out() {
                 break;
             }
         }
+        // Deadline sweep: remove every expired entry (exactly once), then
+        // form the batch from the live front of the queue.
+        let mut expired = Vec::new();
+        if inner.deadlines_queued > 0 {
+            let now = Instant::now();
+            let live = VecDeque::with_capacity(inner.queue.len());
+            for q in std::mem::replace(&mut inner.queue, live) {
+                if q.deadline.is_some_and(|d| d <= now) {
+                    inner.deadlines_queued -= 1;
+                    expired.push(Entry { item: q.item, enqueued_at: q.enqueued_at });
+                } else {
+                    inner.queue.push_back(q);
+                }
+            }
+        }
         let n = inner.queue.len().min(self.cfg.max_batch);
-        Some(inner.queue.drain(..n).map(|(t, _)| t).collect())
+        let batch = inner
+            .queue
+            .drain(..n)
+            .map(|q| {
+                if q.deadline.is_some() {
+                    inner.deadlines_queued -= 1;
+                }
+                Entry { item: q.item, enqueued_at: q.enqueued_at }
+            })
+            .collect();
+        Some(PoppedBatch { batch, expired })
     }
 
     /// Close the batcher: pending items still drain, new pushes fail.
@@ -121,15 +222,20 @@ mod tests {
         BatcherConfig { max_batch, max_wait: Duration::from_millis(5), queue_cap: cap }
     }
 
+    fn items<T>(p: PoppedBatch<T>) -> Vec<T> {
+        assert!(p.expired.is_empty(), "no deadlines in this test");
+        p.batch.into_iter().map(|e| e.item).collect()
+    }
+
     #[test]
     fn batches_up_to_max() {
         let b = DynamicBatcher::new(quick_cfg(4, 64));
         for i in 0..10 {
-            assert!(b.push(i));
+            assert!(b.push(i).is_ok());
         }
-        assert_eq!(b.pop_batch().unwrap(), vec![0, 1, 2, 3]);
-        assert_eq!(b.pop_batch().unwrap(), vec![4, 5, 6, 7]);
-        assert_eq!(b.pop_batch().unwrap(), vec![8, 9]);
+        assert_eq!(items(b.pop_batch().unwrap()), vec![0, 1, 2, 3]);
+        assert_eq!(items(b.pop_batch().unwrap()), vec![4, 5, 6, 7]);
+        assert_eq!(items(b.pop_batch().unwrap()), vec![8, 9]);
     }
 
     #[test]
@@ -138,29 +244,161 @@ mod tests {
         let b2 = b.clone();
         let t = std::thread::spawn(move || b2.pop_batch());
         std::thread::sleep(Duration::from_millis(1));
-        b.push(42u64);
-        // Only one item arrives; the deadline must release the batch.
-        let batch = t.join().unwrap().unwrap();
+        b.push(42u64).unwrap();
+        // Only one item arrives; the max_wait deadline must release it.
+        let batch = items(t.join().unwrap().unwrap());
         assert_eq!(batch, vec![42]);
     }
 
     #[test]
     fn backpressure_rejects_when_full() {
         let b = DynamicBatcher::new(quick_cfg(4, 2));
-        assert!(b.push(1));
-        assert!(b.push(2));
-        assert!(!b.push(3), "queue at capacity");
+        assert!(b.push(1).is_ok());
+        assert!(b.push(2).is_ok());
+        assert_eq!(b.push(3), Err((PushError::Full, 3)), "queue at capacity");
         assert_eq!(b.depth(), 2);
     }
 
     #[test]
     fn close_drains_then_none() {
         let b = DynamicBatcher::new(quick_cfg(4, 8));
-        b.push(7);
+        b.push(7).unwrap();
         b.close();
-        assert!(!b.push(8), "closed rejects");
-        assert_eq!(b.pop_batch().unwrap(), vec![7]);
+        assert_eq!(b.push(8), Err((PushError::Closed, 8)), "closed rejects");
+        assert_eq!(items(b.pop_batch().unwrap()), vec![7]);
         assert!(b.pop_batch().is_none());
+    }
+
+    #[test]
+    fn enqueue_instant_propagates_to_pop() {
+        let b = DynamicBatcher::new(quick_cfg(4, 8));
+        let before = Instant::now();
+        b.push(1u32).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        let after = Instant::now();
+        let p = b.pop_batch().unwrap();
+        let e = &p.batch[0];
+        assert!(e.enqueued_at >= before && e.enqueued_at <= after);
+        assert!(
+            after.duration_since(e.enqueued_at) >= Duration::from_millis(2),
+            "queue wait is measured from enqueue, not from pop"
+        );
+    }
+
+    /// Deadline-expired entries are swept out at batch formation —
+    /// returned exactly once via `expired`, never re-surfaced, and never
+    /// consuming a batch slot.
+    #[test]
+    fn expired_entries_swept_exactly_once() {
+        let b = DynamicBatcher::new(BatcherConfig {
+            max_batch: 2,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 64,
+        });
+        let past = Instant::now() - Duration::from_millis(5);
+        let future = Instant::now() + Duration::from_secs(60);
+        // Interleave expired and live entries; expired ones sit at the
+        // front AND behind live ones.
+        b.push_with_deadline(0u32, Some(past)).unwrap();
+        b.push_with_deadline(1, Some(future)).unwrap();
+        b.push_with_deadline(2, Some(past)).unwrap();
+        b.push(3).unwrap();
+        b.push_with_deadline(4, Some(past)).unwrap();
+
+        let p = b.pop_batch().unwrap();
+        let mut expired: Vec<u32> = p.expired.iter().map(|e| e.item).collect();
+        expired.sort_unstable();
+        assert_eq!(expired, vec![0, 2, 4], "every expired entry swept in one pop");
+        let batch: Vec<u32> = p.batch.iter().map(|e| e.item).collect();
+        assert_eq!(batch, vec![1, 3], "live entries fill the batch, order kept");
+
+        // Nothing left: the swept entries must not reappear.
+        b.close();
+        assert!(b.pop_batch().is_none(), "queue fully drained in one pop");
+    }
+
+    /// Pushes racing `close()`: every push either lands (and is drained
+    /// exactly once) or reports `Closed`/`Full` — no accepted item is
+    /// ever lost, no refused item ever surfaces.
+    #[test]
+    fn push_racing_close_loses_nothing() {
+        for round in 0..20u64 {
+            let b = Arc::new(DynamicBatcher::new(quick_cfg(8, 4096)));
+            let mut pushers = Vec::new();
+            for p in 0..4u64 {
+                let b = b.clone();
+                pushers.push(std::thread::spawn(move || {
+                    let mut accepted = Vec::new();
+                    for i in 0..50 {
+                        let v = p * 1000 + i;
+                        if b.push(v).is_ok() {
+                            accepted.push(v);
+                        }
+                    }
+                    accepted
+                }));
+            }
+            let closer = {
+                let b = b.clone();
+                std::thread::spawn(move || {
+                    // Vary the close point across rounds to move the race.
+                    if round % 3 == 0 {
+                        std::thread::yield_now();
+                    }
+                    b.close();
+                })
+            };
+            closer.join().unwrap();
+            let mut accepted: Vec<u64> = Vec::new();
+            for h in pushers {
+                accepted.extend(h.join().unwrap());
+            }
+            let mut drained = Vec::new();
+            while let Some(p) = b.pop_batch() {
+                drained.extend(p.batch.into_iter().map(|e| e.item));
+                assert!(p.expired.is_empty());
+            }
+            accepted.sort_unstable();
+            drained.sort_unstable();
+            assert_eq!(accepted, drained, "accepted set == drained set (round {round})");
+        }
+    }
+
+    /// A full queue shedding pushes while a consumer drains: the accepted
+    /// set and the drained set must stay identical under the race, and
+    /// shed pushes must actually have been refused (Full), not dropped.
+    #[test]
+    fn full_queue_shed_racing_drain() {
+        let b = Arc::new(DynamicBatcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(100),
+            queue_cap: 8,
+        }));
+        let consumer = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let mut drained = Vec::new();
+                while let Some(p) = b.pop_batch() {
+                    drained.extend(p.batch.into_iter().map(|e| e.item));
+                }
+                drained
+            })
+        };
+        let mut accepted = Vec::new();
+        let mut shed = 0u64;
+        for i in 0..2000u64 {
+            match b.push(i) {
+                Ok(()) => accepted.push(i),
+                Err((PushError::Full, _)) => shed += 1,
+                Err((PushError::Closed, _)) => unreachable!("not closed yet"),
+            }
+        }
+        b.close();
+        let mut drained = consumer.join().unwrap();
+        drained.sort_unstable();
+        accepted.sort_unstable();
+        assert_eq!(accepted, drained, "no accepted item lost, no shed item surfaced");
+        assert!(shed > 0, "tiny queue under a hot producer must shed");
     }
 
     #[test]
@@ -171,7 +409,7 @@ mod tests {
             let b = b.clone();
             handles.push(std::thread::spawn(move || {
                 for i in 0..100 {
-                    while !b.push(p * 1000 + i) {
+                    while b.push(p * 1000 + i).is_err() {
                         std::thread::yield_now();
                     }
                 }
@@ -182,8 +420,8 @@ mod tests {
             std::thread::spawn(move || {
                 let mut got = Vec::new();
                 while got.len() < 400 {
-                    if let Some(batch) = b.pop_batch() {
-                        got.extend(batch);
+                    if let Some(p) = b.pop_batch() {
+                        got.extend(p.batch.into_iter().map(|e| e.item));
                     }
                 }
                 got

@@ -1,0 +1,273 @@
+//! Seeded fault injection for the serving core: a wrapper backend that
+//! turns a healthy [`InferenceBackend`] into one that errors, panics and
+//! stalls at configured rates — the chaos substrate behind the soak test
+//! in `tests/serving.rs` and `benches/resilience.rs`.
+//!
+//! Error and panic faults are **deterministic per request**: the decision
+//! is drawn from a [`Rng`] seeded by the fault seed and an FNV-1a hash of
+//! the image bits, not from call order. That mirrors how real poison
+//! requests behave (the same malformed input fails every time) and is
+//! exactly what the coordinator's bisection needs — a poison request
+//! keeps failing while it is being isolated, and its healthy batchmates
+//! keep succeeding bit-identically to a fault-free run. Latency spikes
+//! are drawn per batch from a separate stream (they model environment
+//! jitter, not input poison).
+
+use super::server::InferenceBackend;
+use crate::gemm::DspOpStats;
+use crate::util::Rng;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// What the injector does to a request it poisons.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InjectedFault {
+    /// The batch containing this request returns an `Err`.
+    Error,
+    /// The batch containing this request panics (exercises the worker's
+    /// panic shield and the supervisor respawn path).
+    Panic,
+}
+
+/// Injection rates and the seed that makes a run replayable.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultSpec {
+    /// Seed for both the per-request poison hash and the per-batch delay
+    /// stream. Same seed + same requests → same faults.
+    pub seed: u64,
+    /// Fraction of requests that are error-poison.
+    pub error_rate: f64,
+    /// Fraction of requests that are panic-poison.
+    pub panic_rate: f64,
+    /// Fraction of batch executions delayed by `delay` (latency spike).
+    pub delay_rate: f64,
+    /// The injected latency spike.
+    pub delay: Duration,
+}
+
+impl FaultSpec {
+    /// No injection (the wrapper becomes transparent).
+    pub fn none(seed: u64) -> Self {
+        FaultSpec {
+            seed,
+            error_rate: 0.0,
+            panic_rate: 0.0,
+            delay_rate: 0.0,
+            delay: Duration::ZERO,
+        }
+    }
+
+    /// Scale every rate by `mult` (clamped below 1.0 so a healthy
+    /// residual always exists) — used by the scheduled chaos job to run
+    /// the same soak at 10× injection pressure.
+    pub fn scaled(mut self, mult: f64) -> Self {
+        self.error_rate = (self.error_rate * mult).min(0.45);
+        self.panic_rate = (self.panic_rate * mult).min(0.45);
+        self.delay_rate = (self.delay_rate * mult).min(0.9);
+        self
+    }
+}
+
+/// A fault-injecting wrapper around any [`InferenceBackend`].
+pub struct FaultInjectingBackend<B: InferenceBackend> {
+    inner: B,
+    spec: FaultSpec,
+    /// Per-batch delay stream (environment jitter; deliberately not
+    /// request-deterministic).
+    delay_rng: Mutex<Rng>,
+    /// Batches that returned an injected error.
+    pub injected_errors: AtomicU64,
+    /// Batches that panicked by injection.
+    pub injected_panics: AtomicU64,
+    /// Batches delayed by an injected latency spike.
+    pub injected_delays: AtomicU64,
+    label: String,
+}
+
+impl<B: InferenceBackend> FaultInjectingBackend<B> {
+    /// Wrap a backend with the given injection spec.
+    pub fn new(inner: B, spec: FaultSpec) -> Self {
+        let label = format!("faulty:{}", inner.name());
+        FaultInjectingBackend {
+            inner,
+            spec,
+            delay_rng: Mutex::new(Rng::new(spec.seed ^ 0xDE1A_FDE1_AFDE_1AFD)),
+            injected_errors: AtomicU64::new(0),
+            injected_panics: AtomicU64::new(0),
+            injected_delays: AtomicU64::new(0),
+            label,
+        }
+    }
+
+    /// The injection spec in effect.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// The wrapped backend.
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    /// The deterministic fault assigned to one request image, if any —
+    /// public so tests can compute the expected [`super::Outcome`] of
+    /// every request up front.
+    pub fn fault_for(&self, image: &[f32]) -> Option<InjectedFault> {
+        // FNV-1a over the image bit patterns, mixed with the seed: the
+        // fault assignment depends on request content only, never on
+        // batch composition or call order.
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.spec.seed;
+        for v in image {
+            for b in v.to_bits().to_le_bytes() {
+                h ^= u64::from(b);
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        let x = Rng::new(h).f64();
+        if x < self.spec.panic_rate {
+            Some(InjectedFault::Panic)
+        } else if x < self.spec.panic_rate + self.spec.error_rate {
+            Some(InjectedFault::Error)
+        } else {
+            None
+        }
+    }
+}
+
+impl<B: InferenceBackend> InferenceBackend for FaultInjectingBackend<B> {
+    fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
+        // Latency spike first (drawn per batch, lock released before any
+        // injected panic can unwind through it).
+        let spike = {
+            let mut rng = self.delay_rng.lock().unwrap();
+            self.spec.delay_rate > 0.0 && rng.chance(self.spec.delay_rate)
+        };
+        if spike {
+            self.injected_delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.spec.delay);
+        }
+        // Poison scan: panic-poison outranks error-poison so a mixed
+        // batch faults deterministically.
+        let mut error_poison = false;
+        for image in batch {
+            match self.fault_for(image) {
+                Some(InjectedFault::Panic) => {
+                    self.injected_panics.fetch_add(1, Ordering::Relaxed);
+                    panic!("injected panic (seed {:#x})", self.spec.seed);
+                }
+                Some(InjectedFault::Error) => error_poison = true,
+                None => {}
+            }
+        }
+        if error_poison {
+            self.injected_errors.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::Runtime(format!(
+                "injected backend error (seed {:#x})",
+                self.spec.seed
+            )));
+        }
+        self.inner.infer(batch)
+    }
+
+    fn name(&self) -> &str {
+        &self.label
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Echo;
+    impl InferenceBackend for Echo {
+        fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
+            Ok((vec![0; batch.len()], DspOpStats::default()))
+        }
+        fn name(&self) -> &str {
+            "echo"
+        }
+    }
+
+    fn spec(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            error_rate: 0.2,
+            panic_rate: 0.1,
+            delay_rate: 0.0,
+            delay: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn fault_assignment_is_deterministic_per_request() {
+        let b = FaultInjectingBackend::new(Echo, spec(42));
+        let images: Vec<Vec<f32>> = (0..256)
+            .map(|i| vec![i as f32 / 256.0, (i * 7 % 31) as f32 / 31.0])
+            .collect();
+        let first: Vec<_> = images.iter().map(|i| b.fault_for(i)).collect();
+        let second: Vec<_> = images.iter().map(|i| b.fault_for(i)).collect();
+        assert_eq!(first, second, "same request, same fault — always");
+        let errors = first.iter().filter(|f| **f == Some(InjectedFault::Error)).count();
+        let panics = first.iter().filter(|f| **f == Some(InjectedFault::Panic)).count();
+        assert!(errors > 20 && errors < 90, "error rate in the ballpark: {errors}");
+        assert!(panics > 5 && panics < 60, "panic rate in the ballpark: {panics}");
+    }
+
+    #[test]
+    fn seeds_move_the_fault_set() {
+        let a = FaultInjectingBackend::new(Echo, spec(1));
+        let b = FaultInjectingBackend::new(Echo, spec(2));
+        let images: Vec<Vec<f32>> =
+            (0..256).map(|i| vec![i as f32 / 256.0, i as f32]).collect();
+        let fa: Vec<_> = images.iter().map(|i| a.fault_for(i)).collect();
+        let fb: Vec<_> = images.iter().map(|i| b.fault_for(i)).collect();
+        assert_ne!(fa, fb, "different seeds poison different requests");
+    }
+
+    #[test]
+    fn healthy_batches_pass_through() {
+        let b = FaultInjectingBackend::new(Echo, FaultSpec::none(7));
+        let images: Vec<Vec<f32>> = (0..16).map(|i| vec![i as f32]).collect();
+        let (classes, _) = b.infer(&images).unwrap();
+        assert_eq!(classes.len(), 16);
+        assert_eq!(b.injected_errors.load(Ordering::Relaxed), 0);
+        assert_eq!(b.injected_panics.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn error_poison_fails_the_batch_it_rides_in() {
+        let b = FaultInjectingBackend::new(Echo, spec(42));
+        let images: Vec<Vec<f32>> = (0..64)
+            .map(|i| vec![i as f32 / 64.0, (i * 3 % 17) as f32])
+            .collect();
+        // Keep panic-poison out of the batch (it would unwind, not err —
+        // that path is covered by the serving tests); what remains must
+        // still contain error-poison at these rates.
+        let with: Vec<Vec<f32>> = images
+            .iter()
+            .filter(|img| b.fault_for(img) != Some(InjectedFault::Panic))
+            .cloned()
+            .collect();
+        let errors = with
+            .iter()
+            .filter(|img| b.fault_for(img) == Some(InjectedFault::Error))
+            .count();
+        assert!(errors > 0, "spec must error-poison something at these rates");
+        assert!(b.infer(&with).is_err(), "error poison fails the batch it rides in");
+        let without: Vec<Vec<f32>> = images
+            .iter()
+            .filter(|img| b.fault_for(img).is_none())
+            .cloned()
+            .collect();
+        assert!(b.infer(&without).is_ok(), "healthy sub-batch passes through");
+    }
+
+    #[test]
+    fn scaled_spec_multiplies_rates_with_a_healthy_residual() {
+        let s = spec(1).scaled(10.0);
+        assert!(s.error_rate <= 0.45 && s.panic_rate <= 0.45);
+        assert!(s.error_rate + s.panic_rate < 1.0, "healthy requests must remain");
+    }
+}

@@ -1,4 +1,10 @@
-//! Lock-free serving metrics: counters + a log-bucketed latency histogram.
+//! Lock-free serving metrics: counters + log-bucketed latency histograms.
+//!
+//! Three histograms cover the request lifecycle: `queue_wait` (enqueue →
+//! batch formation), `service` (batch execution → answer) and `latency`
+//! (enqueue-inclusive end to end — the signal the admission policy's p99
+//! threshold reads, so queue buildup is visible to shedding, not just
+//! execution time).
 
 use crate::util::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -59,12 +65,29 @@ impl LatencyHistogram {
 /// Serving metrics for one coordinator.
 #[derive(Debug, Default)]
 pub struct Metrics {
-    /// Requests accepted.
+    /// Requests accepted into the queue.
     pub accepted: AtomicU64,
-    /// Requests rejected by backpressure.
+    /// Requests shed at the hard `queue_cap` (backpressure).
     pub rejected: AtomicU64,
-    /// Requests completed.
+    /// Requests shed early by the admission policy (depth/p99 thresholds).
+    pub shed: AtomicU64,
+    /// Requests answered `Ok`.
     pub completed: AtomicU64,
+    /// Requests answered `Failed` (backend error or panic, after poison
+    /// isolation).
+    pub failed: AtomicU64,
+    /// Requests answered `DeadlineExceeded` (swept at batch formation).
+    pub deadline_exceeded: AtomicU64,
+    /// Requests isolated as poison by batch bisection.
+    pub poison_isolated: AtomicU64,
+    /// Backend panics caught by the worker's `catch_unwind` shield.
+    pub worker_panics: AtomicU64,
+    /// Workers respawned by the supervisor after a panic.
+    pub workers_respawned: AtomicU64,
+    /// Gauge: workers currently alive (maintained by the supervisor).
+    pub workers_alive: AtomicU64,
+    /// Gauge: requests popped from the queue but not yet answered.
+    pub inflight: AtomicU64,
     /// Batches executed.
     pub batches: AtomicU64,
     /// Sum of batch sizes (for mean batch size).
@@ -73,8 +96,12 @@ pub struct Metrics {
     pub dsp_cycles: AtomicU64,
     /// Logical multiplications performed.
     pub multiplications: AtomicU64,
-    /// End-to-end request latency.
+    /// End-to-end request latency, **enqueue-inclusive** (submit → answer).
     pub latency: LatencyHistogram,
+    /// Queue wait (enqueue → batch formation).
+    pub queue_wait: LatencyHistogram,
+    /// Service time (batch execution start → answer).
+    pub service: LatencyHistogram,
 }
 
 /// A point-in-time copy of [`Metrics`] for reporting.
@@ -82,26 +109,55 @@ pub struct Metrics {
 pub struct MetricsSnapshot {
     /// Requests accepted.
     pub accepted: u64,
-    /// Requests rejected by backpressure.
+    /// Requests shed at the hard `queue_cap` (backpressure).
     pub rejected: u64,
-    /// Requests completed.
+    /// Requests shed early by the admission policy.
+    pub shed: u64,
+    /// Requests answered `Ok`.
     pub completed: u64,
+    /// Requests answered `Failed`.
+    pub failed: u64,
+    /// Requests answered `DeadlineExceeded`.
+    pub deadline_exceeded: u64,
+    /// Requests isolated as poison by batch bisection.
+    pub poison_isolated: u64,
+    /// Backend panics caught by the worker shield.
+    pub worker_panics: u64,
+    /// Workers respawned by the supervisor.
+    pub workers_respawned: u64,
+    /// Gauge: workers alive at snapshot time.
+    pub workers_alive: u64,
+    /// Gauge: requests popped but not yet answered at snapshot time.
+    pub inflight: u64,
+    /// Gauge: queue depth at snapshot time (filled by the coordinator;
+    /// 0 when the snapshot is taken from a bare [`Metrics`]).
+    pub queue_depth: u64,
     /// Batches executed.
     pub batches: u64,
     /// Mean batch size.
     pub mean_batch: f64,
-    /// Mean request latency (µs).
+    /// Mean enqueue-inclusive request latency (µs).
     pub mean_latency_us: f64,
-    /// p50 latency (µs, bucket upper bound).
+    /// p50 enqueue-inclusive latency (µs, bucket upper bound).
     pub p50_latency_us: u64,
-    /// p99 latency (µs, bucket upper bound).
+    /// p99 enqueue-inclusive latency (µs, bucket upper bound).
     pub p99_latency_us: u64,
+    /// p50 queue wait (µs, bucket upper bound).
+    pub p50_queue_wait_us: u64,
+    /// p99 queue wait (µs, bucket upper bound).
+    pub p99_queue_wait_us: u64,
+    /// p50 service time (µs, bucket upper bound).
+    pub p50_service_us: u64,
+    /// p99 service time (µs, bucket upper bound).
+    pub p99_service_us: u64,
     /// Packed-backend DSP utilization (mults per DSP cycle).
     pub dsp_utilization: f64,
 }
 
 impl Metrics {
-    /// Take a snapshot.
+    /// Take a snapshot. `queue_depth` is a gauge the [`Metrics`] struct
+    /// does not own — [`crate::coordinator::Coordinator::metrics`] fills
+    /// it from the live batcher; here it is 0.
     pub fn snapshot(&self) -> MetricsSnapshot {
         let batches = self.batches.load(Ordering::Relaxed);
         let batched = self.batched_requests.load(Ordering::Relaxed);
@@ -110,29 +166,62 @@ impl Metrics {
         MetricsSnapshot {
             accepted: self.accepted.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            poison_isolated: self.poison_isolated.load(Ordering::Relaxed),
+            worker_panics: self.worker_panics.load(Ordering::Relaxed),
+            workers_respawned: self.workers_respawned.load(Ordering::Relaxed),
+            workers_alive: self.workers_alive.load(Ordering::Relaxed),
+            inflight: self.inflight.load(Ordering::Relaxed),
+            queue_depth: 0,
             batches,
             mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
             mean_latency_us: self.latency.mean_us(),
             p50_latency_us: self.latency.percentile_us(50.0),
             p99_latency_us: self.latency.percentile_us(99.0),
+            p50_queue_wait_us: self.queue_wait.percentile_us(50.0),
+            p99_queue_wait_us: self.queue_wait.percentile_us(99.0),
+            p50_service_us: self.service.percentile_us(50.0),
+            p99_service_us: self.service.percentile_us(99.0),
             dsp_utilization: if cycles == 0 { 0.0 } else { mults as f64 / cycles as f64 },
         }
     }
 }
 
 impl MetricsSnapshot {
+    /// Requests answered with some typed outcome (the exactly-once
+    /// accounting identity: every accepted request lands in exactly one
+    /// of these buckets, and submit-time sheds add `rejected + shed`).
+    pub fn answered(&self) -> u64 {
+        self.completed + self.failed + self.deadline_exceeded
+    }
+
     /// JSON rendering for reports.
     pub fn to_json(&self) -> Json {
         Json::obj([
             ("accepted", self.accepted.into()),
             ("rejected", self.rejected.into()),
+            ("shed", self.shed.into()),
             ("completed", self.completed.into()),
+            ("failed", self.failed.into()),
+            ("deadline_exceeded", self.deadline_exceeded.into()),
+            ("poison_isolated", self.poison_isolated.into()),
+            ("worker_panics", self.worker_panics.into()),
+            ("workers_respawned", self.workers_respawned.into()),
+            ("workers_alive", self.workers_alive.into()),
+            ("inflight", self.inflight.into()),
+            ("queue_depth", self.queue_depth.into()),
             ("batches", self.batches.into()),
             ("mean_batch", self.mean_batch.into()),
             ("mean_latency_us", self.mean_latency_us.into()),
             ("p50_latency_us", self.p50_latency_us.into()),
             ("p99_latency_us", self.p99_latency_us.into()),
+            ("p50_queue_wait_us", self.p50_queue_wait_us.into()),
+            ("p99_queue_wait_us", self.p99_queue_wait_us.into()),
+            ("p50_service_us", self.p50_service_us.into()),
+            ("p99_service_us", self.p99_service_us.into()),
             ("dsp_utilization", self.dsp_utilization.into()),
         ])
     }
@@ -165,5 +254,30 @@ mod tests {
         assert_eq!(s.mean_batch, 5.0);
         assert_eq!(s.dsp_utilization, 4.0);
         assert!(s.to_json().to_string().contains("\"dsp_utilization\":4"));
+    }
+
+    #[test]
+    fn outcome_accounting_identity() {
+        let m = Metrics::default();
+        m.completed.store(7, Ordering::Relaxed);
+        m.failed.store(2, Ordering::Relaxed);
+        m.deadline_exceeded.store(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.answered(), 10);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"failed\":2"), "{j}");
+        assert!(j.contains("\"deadline_exceeded\":1"), "{j}");
+        assert!(j.contains("\"p99_queue_wait_us\":"), "{j}");
+    }
+
+    #[test]
+    fn separate_queue_wait_and_service_histograms() {
+        let m = Metrics::default();
+        m.queue_wait.record(Duration::from_micros(1000));
+        m.service.record(Duration::from_micros(10));
+        m.latency.record(Duration::from_micros(1010));
+        let s = m.snapshot();
+        assert!(s.p99_queue_wait_us > s.p99_service_us);
+        assert!(s.p99_latency_us >= s.p99_queue_wait_us);
     }
 }

@@ -16,18 +16,29 @@
 //! [`crate::util::parallel_map`] — batch-1 requests no longer pay a
 //! `thread::scope` spawn per layer, and layers below the dispatch cost
 //! threshold run inline on the worker.
+//!
+//! Failure domains: every submitted request is answered with exactly one
+//! typed [`Outcome`] — `Ok(class)`, `Failed(error)`, `Shed(reason)` or
+//! `DeadlineExceeded`. Batch failures are bisected to isolate poison
+//! requests (server.rs), backend panics are caught per batch and the
+//! worker pool is resupplied by a supervisor, and admission control sheds
+//! load before the queue saturates. [`FaultInjectingBackend`] provides
+//! the seeded chaos substrate the soak tests drive all of this with. See
+//! `ARCHITECTURE.md` § "Failure domains & the request lifecycle".
 
 mod adaptive;
 mod batcher;
+mod fault;
 mod metrics;
 mod server;
 mod spiking;
 
 pub use adaptive::{AdaptiveBackend, BudgetChannelPolicy, PrecisionClass, PrecisionPolicy};
-pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use batcher::{BatcherConfig, DynamicBatcher, Entry, PoppedBatch, PushError};
+pub use fault::{FaultInjectingBackend, FaultSpec, InjectedFault};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use server::{
-    Coordinator, CoordinatorHandle, InferenceBackend, PackedNnBackend, Prediction, Request,
-    ServerConfig,
+    AdmissionPolicy, Coordinator, CoordinatorHandle, InferenceBackend, Outcome, PackedNnBackend,
+    Request, Response, RetryPolicy, ServerConfig, ShedReason,
 };
 pub use spiking::SpikingBackend;

@@ -1,36 +1,134 @@
 //! The coordinator proper: backends, worker pool, request lifecycle.
+//!
+//! The lifecycle is built around **typed failure domains**: every
+//! submitted request receives exactly one [`Response`] carrying an
+//! [`Outcome`] — `Ok(class)`, `Failed(err)`, `Shed(reason)` or
+//! `DeadlineExceeded` — so no failure mode ever manifests as a silent
+//! hang or a disconnected channel. Batch failures are bisected to
+//! isolate the poison request(s) (healthy batchmates still get answers),
+//! backend panics are caught per execution and the panicked worker is
+//! respawned by a supervisor, expired requests are swept at batch
+//! formation, and an [`AdmissionPolicy`] sheds early — with hysteresis —
+//! before the hard `queue_cap` backpressure kicks in. See
+//! ARCHITECTURE.md, "Failure domains & the request lifecycle".
 
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::{BatcherConfig, DynamicBatcher, Entry, PushError};
 use super::metrics::{Metrics, MetricsSnapshot};
 use crate::gemm::DspOpStats;
 use crate::nn::{ExecMode, NnModel, QuantMlp};
+use crate::util::Rng;
 use crate::{Error, Result};
-use std::sync::atomic::Ordering;
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::Arc;
-use std::time::Instant;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 /// An inference request: one flattened image in `[0, 1]`.
 #[derive(Debug, Clone)]
 pub struct Request {
-    /// Caller-chosen id, echoed in the prediction.
+    /// Caller-chosen id, echoed in the response.
     pub id: u64,
     /// Flattened image.
     pub image: Vec<f32>,
+    /// Optional client deadline: if the request is still queued when it
+    /// passes, the batcher sweeps it at batch formation and it is
+    /// answered [`Outcome::DeadlineExceeded`] instead of executed.
+    pub deadline: Option<Instant>,
 }
 
-/// The response to a [`Request`].
-#[derive(Debug, Clone, PartialEq, Eq)]
-pub struct Prediction {
+impl Request {
+    /// A request with no deadline.
+    pub fn new(id: u64, image: Vec<f32>) -> Self {
+        Request { id, image, deadline: None }
+    }
+
+    /// Attach an absolute deadline.
+    pub fn with_deadline(mut self, deadline: Instant) -> Self {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Attach a deadline `timeout` from now.
+    pub fn with_timeout(self, timeout: Duration) -> Self {
+        self.with_deadline(Instant::now() + timeout)
+    }
+}
+
+/// Why a request was shed instead of queued.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShedReason {
+    /// The queue hit the hard `queue_cap` (backpressure of last resort).
+    QueueFull,
+    /// The admission policy's queue-depth threshold engaged.
+    QueueDepth,
+    /// The admission policy's enqueue-inclusive p99 threshold engaged.
+    LatencyP99,
+}
+
+impl std::fmt::Display for ShedReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ShedReason::QueueFull => write!(f, "queue full"),
+            ShedReason::QueueDepth => write!(f, "queue depth threshold"),
+            ShedReason::LatencyP99 => write!(f, "p99 latency threshold"),
+        }
+    }
+}
+
+/// The typed outcome of one request — exactly one per submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Outcome {
+    /// Predicted class.
+    Ok(usize),
+    /// The backend failed (or panicked) on this request; after poison
+    /// isolation the error is pinned to the request that caused it.
+    Failed(Error),
+    /// Shed before execution (admission policy or hard backpressure).
+    /// Retryable: see [`CoordinatorHandle::infer_with_retry`].
+    Shed(ShedReason),
+    /// The request's deadline passed while it was queued; it was swept
+    /// at batch formation without spending DSP cycles.
+    DeadlineExceeded,
+}
+
+impl Outcome {
+    /// The predicted class, if the request succeeded.
+    pub fn class(&self) -> Option<usize> {
+        match self {
+            Outcome::Ok(c) => Some(*c),
+            _ => None,
+        }
+    }
+
+    /// Did the request succeed?
+    pub fn is_ok(&self) -> bool {
+        matches!(self, Outcome::Ok(_))
+    }
+}
+
+/// The response to a [`Request`]: its id plus the typed [`Outcome`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Response {
     /// Echoed request id.
     pub id: u64,
-    /// Predicted class.
-    pub class: usize,
+    /// What happened to the request.
+    pub outcome: Outcome,
+}
+
+impl Response {
+    /// The predicted class, if the request succeeded.
+    pub fn class(&self) -> Option<usize> {
+        self.outcome.class()
+    }
 }
 
 /// Anything that can classify a batch of images. Implementations: the
-/// packed virtual accelerator ([`PackedNnBackend`]) and the PJRT artifact
-/// backend (constructed in the examples from [`crate::runtime`]).
+/// packed virtual accelerator ([`PackedNnBackend`]), the adaptive router,
+/// the spiking backend, the fault-injection wrapper
+/// ([`super::FaultInjectingBackend`]) and the PJRT artifact backend
+/// (constructed in the examples from [`crate::runtime`]).
 pub trait InferenceBackend: Send + Sync + 'static {
     /// Classify a batch; returns one class per image plus DSP work stats
     /// (zero for non-DSP backends).
@@ -52,31 +150,131 @@ pub struct PackedNnBackend<M: NnModel = QuantMlp> {
     /// Execution mode (packed engine or exact reference).
     pub mode: ExecMode,
     label: String,
+    /// A planning failure deferred from [`PackedNnBackend::new`]: every
+    /// `infer` surfaces it as the batch error (→ `Failed` outcomes)
+    /// instead of silently re-planning or swallowing it.
+    plan_error: Option<Error>,
 }
 
 impl<M: NnModel> PackedNnBackend<M> {
-    /// Wrap a model + execution mode, pre-planning the packed weight
-    /// planes so the first request pays no build cost. A planning failure
-    /// (weights outside the packing's operand range) is deferred: the
-    /// first `infer` surfaces it through the same path.
-    pub fn new(model: M, mode: ExecMode) -> Self {
-        let fabric = match &mode {
+    fn fabric_label(model: &M, mode: &ExecMode) -> String {
+        let fabric = match mode {
             ExecMode::Exact => "exact".to_string(),
             ExecMode::Packed(e) => format!("packed:{}", e.config().name),
         };
-        let label = model.label(&fabric);
-        let _ = model.prepare(&mode);
-        PackedNnBackend { model, mode, label }
+        model.label(&fabric)
+    }
+
+    /// Wrap a model + execution mode, pre-planning the packed weight
+    /// planes so the first request pays no build cost. A planning failure
+    /// (weights outside the packing's operand range) is stored and
+    /// surfaced by the first `infer` as a `Failed` outcome; use
+    /// [`PackedNnBackend::try_new`] to get it eagerly instead.
+    pub fn new(model: M, mode: ExecMode) -> Self {
+        let label = Self::fabric_label(&model, &mode);
+        let plan_error = model.prepare(&mode).err();
+        PackedNnBackend { model, mode, label, plan_error }
+    }
+
+    /// Like [`PackedNnBackend::new`], but a planning failure is returned
+    /// eagerly instead of deferred to the first `infer`.
+    pub fn try_new(model: M, mode: ExecMode) -> Result<Self> {
+        let label = Self::fabric_label(&model, &mode);
+        model.prepare(&mode)?;
+        Ok(PackedNnBackend { model, mode, label, plan_error: None })
+    }
+
+    /// The deferred planning error, if construction via
+    /// [`PackedNnBackend::new`] failed to plan.
+    pub fn plan_error(&self) -> Option<&Error> {
+        self.plan_error.as_ref()
     }
 }
 
 impl<M: NnModel> InferenceBackend for PackedNnBackend<M> {
     fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
+        if let Some(e) = &self.plan_error {
+            return Err(e.clone());
+        }
         self.model.classify_images(batch, &self.mode)
     }
 
     fn name(&self) -> &str {
         &self.label
+    }
+}
+
+/// Early load-shedding thresholds, applied on `submit` *before* the hard
+/// `queue_cap` backpressure. Engages when queue depth or the
+/// enqueue-inclusive p99 (over a rolling window of recent answers)
+/// crosses the shed threshold; disengages only once the signal falls
+/// back under the (lower) resume threshold — the hysteresis gap keeps
+/// shedding from flapping on a noisy signal.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// Engage shedding when queue depth reaches this.
+    pub shed_depth: usize,
+    /// Disengage once depth is back at or below this (≤ `shed_depth`).
+    pub resume_depth: usize,
+    /// Engage shedding when the rolling enqueue-inclusive p99 exceeds
+    /// this many µs. 0 disables the latency trigger.
+    pub shed_p99_us: u64,
+    /// Disengage once the rolling p99 is back at or below this.
+    pub resume_p99_us: u64,
+}
+
+impl AdmissionPolicy {
+    /// No early shedding: only the hard `queue_cap` applies.
+    pub fn disabled() -> Self {
+        AdmissionPolicy {
+            shed_depth: usize::MAX,
+            resume_depth: usize::MAX,
+            shed_p99_us: 0,
+            resume_p99_us: 0,
+        }
+    }
+
+    /// Depth-only policy with a hysteresis gap.
+    pub fn depth(shed_depth: usize, resume_depth: usize) -> Self {
+        AdmissionPolicy {
+            shed_depth,
+            resume_depth: resume_depth.min(shed_depth),
+            shed_p99_us: 0,
+            resume_p99_us: 0,
+        }
+    }
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy::disabled()
+    }
+}
+
+/// Bounded retry with jittered exponential backoff for
+/// [`CoordinatorHandle::infer_with_retry`]. Only [`Outcome::Shed`] is
+/// retried — failures and deadline misses are terminal by design.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    /// Total attempts (≥ 1), including the first.
+    pub max_attempts: u32,
+    /// Backoff before the second attempt; doubles per retry.
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Seed for the jitter stream (mixed with the request id, so
+    /// concurrent clients desynchronize deterministically).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_micros(200),
+            max_backoff: Duration::from_millis(20),
+            seed: 0x5EED_BACC,
+        }
     }
 }
 
@@ -90,117 +288,472 @@ pub struct ServerConfig {
     /// Virtual DSP budget (informational; reported in metrics as the
     /// fabric the packed backend is sized for).
     pub dsp_budget: usize,
+    /// Early load-shedding thresholds (default: disabled — only the hard
+    /// `queue_cap` sheds).
+    pub admission: AdmissionPolicy,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { batcher: BatcherConfig::default(), workers: 2, dsp_budget: 128 }
+        ServerConfig {
+            batcher: BatcherConfig::default(),
+            workers: 2,
+            dsp_budget: 128,
+            admission: AdmissionPolicy::disabled(),
+        }
     }
 }
 
-type Job = (Request, SyncSender<Prediction>);
+type Job = (Request, SyncSender<Response>);
 
-/// A running coordinator. Dropping the handle shuts it down.
+/// Rolling window of recent enqueue-inclusive latencies (µs): the
+/// admission policy's p99 signal. A cumulative histogram can never
+/// recover after a spike, so hysteresis needs a windowed quantile.
+#[derive(Debug)]
+struct RollingLatency {
+    samples: Mutex<VecDeque<u64>>,
+    cap: usize,
+}
+
+impl RollingLatency {
+    fn new(cap: usize) -> Self {
+        RollingLatency { samples: Mutex::new(VecDeque::with_capacity(cap)), cap }
+    }
+
+    fn record(&self, us: u64) {
+        let mut s = self.samples.lock().unwrap();
+        if s.len() == self.cap {
+            s.pop_front();
+        }
+        s.push_back(us);
+    }
+
+    fn p99_us(&self) -> u64 {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return 0;
+        }
+        let mut v: Vec<u64> = s.iter().copied().collect();
+        drop(s);
+        v.sort_unstable();
+        v[((v.len() - 1) as f64 * 0.99) as usize]
+    }
+}
+
+/// State shared by the coordinator, its handles and its workers.
+struct Shared {
+    queue: DynamicBatcher<Job>,
+    metrics: Metrics,
+    admission: AdmissionPolicy,
+    /// Hysteresis state: currently shedding?
+    shedding: AtomicBool,
+    /// Rolling enqueue-inclusive latency window feeding the p99 trigger.
+    recent: RollingLatency,
+}
+
+impl Shared {
+    /// One admission decision, updating the hysteresis state.
+    fn admission_decision(&self) -> Option<ShedReason> {
+        let pol = &self.admission;
+        if pol.shed_depth == usize::MAX && pol.shed_p99_us == 0 {
+            return None; // disabled: skip the signal reads entirely
+        }
+        let depth = self.queue.depth();
+        let p99 = if pol.shed_p99_us == 0 { 0 } else { self.recent.p99_us() };
+        if self.shedding.load(Ordering::Acquire) {
+            let depth_high = depth > pol.resume_depth.min(pol.shed_depth);
+            let p99_high = pol.shed_p99_us != 0 && p99 > pol.resume_p99_us;
+            if depth_high {
+                Some(ShedReason::QueueDepth)
+            } else if p99_high {
+                Some(ShedReason::LatencyP99)
+            } else {
+                self.shedding.store(false, Ordering::Release);
+                None
+            }
+        } else if depth >= pol.shed_depth {
+            self.shedding.store(true, Ordering::Release);
+            Some(ShedReason::QueueDepth)
+        } else if pol.shed_p99_us != 0 && p99 > pol.shed_p99_us {
+            self.shedding.store(true, Ordering::Release);
+            Some(ShedReason::LatencyP99)
+        } else {
+            None
+        }
+    }
+}
+
+/// Why a worker thread exited.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum WorkerFate {
+    /// Queue closed and drained: clean shutdown.
+    Closed,
+    /// A backend panic was caught; the batch was answered, but the
+    /// worker retires (its state is suspect) and must be respawned.
+    Panicked,
+    /// The worker unwound outside the panic shield (a coordinator bug,
+    /// not a backend fault); must be respawned.
+    Abandoned,
+}
+
+/// Sends the worker's fate to the supervisor from `Drop`, so even an
+/// unwind outside the shield is reported (and the pool respawned).
+struct ExitNotice {
+    tx: Sender<(usize, WorkerFate)>,
+    id: usize,
+    fate: WorkerFate,
+}
+
+impl Drop for ExitNotice {
+    fn drop(&mut self) {
+        let _ = self.tx.send((self.id, self.fate));
+    }
+}
+
+/// A running coordinator. `shutdown` (or drop) closes the queue, drains
+/// pending requests and joins the supervisor + workers.
 pub struct Coordinator {
-    queue: Arc<DynamicBatcher<Job>>,
-    metrics: Arc<Metrics>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    shared: Arc<Shared>,
+    shutdown: Arc<AtomicBool>,
+    supervisor: Option<std::thread::JoinHandle<()>>,
 }
 
 /// Cloneable client handle for submitting requests.
 #[derive(Clone)]
 pub struct CoordinatorHandle {
-    queue: Arc<DynamicBatcher<Job>>,
-    metrics: Arc<Metrics>,
+    shared: Arc<Shared>,
+}
+
+fn spawn_worker(
+    id: usize,
+    shared: &Arc<Shared>,
+    backend: &Arc<dyn InferenceBackend>,
+    exit_tx: &Sender<(usize, WorkerFate)>,
+) -> std::thread::JoinHandle<()> {
+    let shared = shared.clone();
+    let backend = backend.clone();
+    let exit_tx = exit_tx.clone();
+    std::thread::spawn(move || {
+        let mut notice = ExitNotice { tx: exit_tx, id, fate: WorkerFate::Abandoned };
+        notice.fate = worker_loop(&shared, backend.as_ref());
+    })
 }
 
 impl Coordinator {
-    /// Start the worker pool over a backend.
+    /// Start the worker pool over a backend, supervised: a worker that
+    /// retires after a caught panic (or dies unexpectedly) is respawned,
+    /// so pool capacity never silently decays.
     pub fn start(backend: Arc<dyn InferenceBackend>, cfg: ServerConfig) -> Coordinator {
-        let queue = Arc::new(DynamicBatcher::new(cfg.batcher));
-        let metrics = Arc::new(Metrics::default());
-        let workers = (0..cfg.workers.max(1))
-            .map(|_| {
-                let queue = queue.clone();
-                let metrics = metrics.clone();
-                let backend = backend.clone();
-                std::thread::spawn(move || worker_loop(&queue, &metrics, backend.as_ref()))
+        let workers = cfg.workers.max(1);
+        let shared = Arc::new(Shared {
+            queue: DynamicBatcher::new(cfg.batcher),
+            metrics: Metrics::default(),
+            admission: cfg.admission,
+            shedding: AtomicBool::new(false),
+            recent: RollingLatency::new(256),
+        });
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let (exit_tx, exit_rx) = std::sync::mpsc::channel();
+        for id in 0..workers {
+            spawn_worker(id, &shared, &backend, &exit_tx);
+        }
+        shared.metrics.workers_alive.store(workers as u64, Ordering::Relaxed);
+
+        let supervisor = {
+            let shared = shared.clone();
+            let shutdown = shutdown.clone();
+            std::thread::spawn(move || {
+                let mut alive = workers;
+                while alive > 0 {
+                    let (id, fate) = exit_rx.recv().expect("workers hold the exit channel");
+                    shared.metrics.workers_alive.fetch_sub(1, Ordering::Relaxed);
+                    let respawn = fate != WorkerFate::Closed
+                        && !shutdown.load(Ordering::Acquire);
+                    if respawn {
+                        shared.metrics.workers_respawned.fetch_add(1, Ordering::Relaxed);
+                        spawn_worker(id, &shared, &backend, &exit_tx);
+                        shared.metrics.workers_alive.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        alive -= 1;
+                    }
+                }
             })
-            .collect();
-        Coordinator { queue, metrics, workers }
+        };
+        Coordinator { shared, shutdown, supervisor: Some(supervisor) }
     }
 
     /// A client handle.
     pub fn handle(&self) -> CoordinatorHandle {
-        CoordinatorHandle { queue: self.queue.clone(), metrics: self.metrics.clone() }
+        CoordinatorHandle { shared: self.shared.clone() }
     }
 
-    /// Snapshot the metrics.
+    /// Snapshot the metrics (queue-depth gauge filled from the live
+    /// batcher).
     pub fn metrics(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+        let mut s = self.shared.metrics.snapshot();
+        s.queue_depth = self.shared.queue.depth() as u64;
+        s
     }
 
-    /// Graceful shutdown: drain the queue, join the workers.
-    pub fn shutdown(mut self) -> MetricsSnapshot {
-        self.queue.close();
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+    fn stop(&mut self) {
+        self.shutdown.store(true, Ordering::Release);
+        self.shared.queue.close();
+        if let Some(s) = self.supervisor.take() {
+            let _ = s.join();
         }
-        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: drain the queue, retire the workers, join the
+    /// supervisor.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.stop();
+        self.shared.metrics.snapshot()
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.stop();
     }
 }
 
 impl CoordinatorHandle {
-    /// Submit a request; returns a receiver for the prediction, or a
-    /// backpressure error when the queue is full.
-    pub fn submit(&self, req: Request) -> Result<Receiver<Prediction>> {
+    /// Submit a request; returns a receiver that delivers **exactly one**
+    /// [`Response`]. Sheds (admission policy or hard `queue_cap`) are
+    /// answered immediately through the same channel as
+    /// [`Outcome::Shed`]; `Err` is returned only when the coordinator is
+    /// shut down.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
         let (tx, rx) = sync_channel(1);
-        if self.queue.push((req, tx)) {
-            self.metrics.accepted.fetch_add(1, Ordering::Relaxed);
-            Ok(rx)
-        } else {
-            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            Err(Error::Coordinator("queue full (backpressure)".into()))
+        if let Some(reason) = self.shared.admission_decision() {
+            self.shared.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            let _ = tx.send(Response { id: req.id, outcome: Outcome::Shed(reason) });
+            return Ok(rx);
+        }
+        let deadline = req.deadline;
+        match self.shared.queue.push_with_deadline((req, tx), deadline) {
+            Ok(()) => {
+                self.shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                Ok(rx)
+            }
+            Err((PushError::Full, (req, tx))) => {
+                self.shared.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Response {
+                    id: req.id,
+                    outcome: Outcome::Shed(ShedReason::QueueFull),
+                });
+                Ok(rx)
+            }
+            Err((PushError::Closed, _)) => {
+                Err(Error::Coordinator("coordinator is shut down".into()))
+            }
         }
     }
 
-    /// Submit and wait for the result.
-    pub fn infer(&self, req: Request) -> Result<Prediction> {
+    /// Submit and wait for the typed outcome. A request with a deadline
+    /// waits at most until its deadline plus a grace period (covering
+    /// in-flight execution); an answer always arrives — the deadline
+    /// sweep, the panic shield and the shed paths each produce one.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        let deadline = req.deadline;
         let rx = self.submit(req)?;
-        rx.recv().map_err(|_| Error::Coordinator("worker dropped request".into()))
+        let got = match deadline {
+            None => rx.recv().ok(),
+            Some(d) => {
+                // Anti-hang backstop only: the typed answer normally
+                // arrives via the sweep (queued past deadline) or via
+                // execution (in flight at deadline).
+                let grace = Duration::from_secs(30);
+                let wait = d.saturating_duration_since(Instant::now()) + grace;
+                rx.recv_timeout(wait).ok()
+            }
+        };
+        got.ok_or_else(|| Error::Coordinator("response channel disconnected".into()))
+    }
+
+    /// [`CoordinatorHandle::infer`] with bounded, jittered-backoff
+    /// retries of [`Outcome::Shed`] responses only — failures and
+    /// deadline misses are returned as-is (retrying a poison request
+    /// would just poison another batch).
+    pub fn infer_with_retry(&self, req: Request, retry: &RetryPolicy) -> Result<Response> {
+        let mut rng = Rng::new(retry.seed ^ req.id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let attempts = retry.max_attempts.max(1);
+        let mut backoff = retry.base_backoff;
+        for attempt in 0..attempts {
+            let resp = self.infer(req.clone())?;
+            if !matches!(resp.outcome, Outcome::Shed(_)) || attempt + 1 == attempts {
+                return Ok(resp);
+            }
+            // Full jitter over [backoff/2, backoff], then double.
+            let ns = backoff.as_nanos().min(u128::from(u64::MAX)) as u64;
+            let jittered = ns / 2 + (rng.f64() * (ns as f64) / 2.0) as u64;
+            std::thread::sleep(Duration::from_nanos(jittered));
+            backoff = (backoff * 2).min(retry.max_backoff);
+        }
+        unreachable!("loop returns on the last attempt")
     }
 
     /// Current queue depth (for clients implementing their own pacing).
     pub fn queue_depth(&self) -> usize {
-        self.queue.depth()
+        self.shared.queue.depth()
+    }
+
+    /// Is the admission policy currently shedding?
+    pub fn shedding(&self) -> bool {
+        self.shared.shedding.load(Ordering::Acquire)
     }
 }
 
-fn worker_loop(queue: &DynamicBatcher<Job>, metrics: &Metrics, backend: &dyn InferenceBackend) {
-    while let Some(jobs) = queue.pop_batch() {
-        let start = Instant::now();
-        let images: Vec<Vec<f32>> = jobs.iter().map(|(r, _)| r.image.clone()).collect();
-        match backend.infer(&images) {
-            Ok((classes, stats)) => {
-                metrics.batches.fetch_add(1, Ordering::Relaxed);
-                metrics.batched_requests.fetch_add(jobs.len() as u64, Ordering::Relaxed);
-                metrics.dsp_cycles.fetch_add(stats.dsp_cycles, Ordering::Relaxed);
-                metrics
-                    .multiplications
-                    .fetch_add(stats.multiplications, Ordering::Relaxed);
-                for ((req, tx), class) in jobs.into_iter().zip(classes) {
-                    let _ = tx.send(Prediction { id: req.id, class });
-                    metrics.completed.fetch_add(1, Ordering::Relaxed);
-                    metrics.latency.record(start.elapsed());
+/// Render a panic payload for the `Failed` error message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Run the backend on one (sub-)batch behind the panic shield: a panic
+/// becomes an `Err` (so bisection can isolate panic-poison requests just
+/// like error-poison ones) and is counted in `worker_panics`.
+fn shielded_infer(
+    backend: &dyn InferenceBackend,
+    batch: &[Vec<f32>],
+    metrics: &Metrics,
+    panicked: &mut bool,
+) -> Result<(Vec<usize>, DspOpStats)> {
+    match catch_unwind(AssertUnwindSafe(|| backend.infer(batch))) {
+        Ok(Ok((classes, stats))) => {
+            if classes.len() != batch.len() {
+                return Err(Error::Coordinator(format!(
+                    "backend returned {} classes for a batch of {}",
+                    classes.len(),
+                    batch.len()
+                )));
+            }
+            Ok((classes, stats))
+        }
+        Ok(Err(e)) => Err(e),
+        Err(payload) => {
+            metrics.worker_panics.fetch_add(1, Ordering::Relaxed);
+            *panicked = true;
+            Err(Error::Coordinator(format!(
+                "backend panicked: {}",
+                panic_message(payload.as_ref())
+            )))
+        }
+    }
+}
+
+/// Execute a batch with poison isolation: try the whole batch first (the
+/// fault-free path costs exactly one execution); on failure, bisect —
+/// log₂(n) re-executions against the already-resident plans — until the
+/// poison request(s) are pinned. Healthy requests get their `Ok` class
+/// (bit-identical to a fault-free run: per-image results don't depend on
+/// batch composition), poison requests get `Failed` with the real error.
+fn execute_isolating(
+    backend: &dyn InferenceBackend,
+    images: &[Vec<f32>],
+    metrics: &Metrics,
+    panicked: &mut bool,
+) -> (Vec<Outcome>, DspOpStats) {
+    let n = images.len();
+    let mut outcomes: Vec<Option<Outcome>> = vec![None; n];
+    let mut stats = DspOpStats::default();
+    let mut ranges = vec![0..n];
+    while let Some(r) = ranges.pop() {
+        match shielded_infer(backend, &images[r.clone()], metrics, panicked) {
+            Ok((classes, s)) => {
+                stats.merge(&s);
+                for (i, class) in r.clone().zip(classes) {
+                    outcomes[i] = Some(Outcome::Ok(class));
                 }
             }
+            Err(e) if r.len() == 1 => {
+                metrics.poison_isolated.fetch_add(1, Ordering::Relaxed);
+                outcomes[r.start] = Some(Outcome::Failed(e));
+            }
             Err(_) => {
-                // Drop the batch; senders see a disconnected channel.
-                // (Inference over validated synthetic inputs cannot fail in
-                // practice; this path covers malformed client images.)
+                let mid = r.start + r.len() / 2;
+                ranges.push(mid..r.end);
+                ranges.push(r.start..mid);
             }
         }
     }
+    let outcomes = outcomes
+        .into_iter()
+        .map(|o| o.expect("every index covered by the bisection"))
+        .collect();
+    (outcomes, stats)
+}
+
+/// Answer one request with its typed outcome, recording the lifecycle
+/// metrics (enqueue-inclusive latency always; service time only when the
+/// request was executed).
+fn answer(shared: &Shared, entry: Entry<Job>, outcome: Outcome, exec_start: Option<Instant>) {
+    let m = &shared.metrics;
+    let now = Instant::now();
+    let counter = match &outcome {
+        Outcome::Ok(_) => &m.completed,
+        Outcome::Failed(_) => &m.failed,
+        Outcome::DeadlineExceeded => &m.deadline_exceeded,
+        // Sheds are answered on the submit path, never by a worker.
+        Outcome::Shed(_) => unreachable!("workers never shed"),
+    };
+    counter.fetch_add(1, Ordering::Relaxed);
+    let latency = now.duration_since(entry.enqueued_at);
+    m.latency.record(latency);
+    shared.recent.record(latency.as_micros().max(1) as u64);
+    if let Some(s) = exec_start {
+        m.service.record(now.duration_since(s));
+    }
+    let (req, tx) = entry.item;
+    let _ = tx.send(Response { id: req.id, outcome });
+    m.inflight.fetch_sub(1, Ordering::Relaxed);
+}
+
+fn worker_loop(shared: &Shared, backend: &dyn InferenceBackend) -> WorkerFate {
+    let m = &shared.metrics;
+    while let Some(popped) = shared.queue.pop_batch() {
+        let total = popped.batch.len() + popped.expired.len();
+        m.inflight.fetch_add(total as u64, Ordering::Relaxed);
+
+        // Deadline sweep first: expired entries are answered without
+        // spending any DSP cycles on them.
+        let formed = Instant::now();
+        for e in popped.expired {
+            m.queue_wait.record(formed.duration_since(e.enqueued_at));
+            answer(shared, e, Outcome::DeadlineExceeded, None);
+        }
+        if popped.batch.is_empty() {
+            continue;
+        }
+
+        let exec_start = Instant::now();
+        for e in &popped.batch {
+            m.queue_wait.record(exec_start.duration_since(e.enqueued_at));
+        }
+        let images: Vec<Vec<f32>> =
+            popped.batch.iter().map(|e| e.item.0.image.clone()).collect();
+        let mut panicked = false;
+        let (outcomes, stats) = execute_isolating(backend, &images, m, &mut panicked);
+        m.batches.fetch_add(1, Ordering::Relaxed);
+        m.batched_requests.fetch_add(popped.batch.len() as u64, Ordering::Relaxed);
+        m.dsp_cycles.fetch_add(stats.dsp_cycles, Ordering::Relaxed);
+        m.multiplications.fetch_add(stats.multiplications, Ordering::Relaxed);
+        for (entry, outcome) in popped.batch.into_iter().zip(outcomes) {
+            answer(shared, entry, outcome, Some(exec_start));
+        }
+        if panicked {
+            // The in-flight batch is fully answered, but this worker's
+            // state is suspect after an unwind through the backend —
+            // retire and let the supervisor respawn a fresh one.
+            return WorkerFate::Panicked;
+        }
+    }
+    WorkerFate::Closed
 }
 
 #[cfg(test)]
@@ -210,7 +763,6 @@ mod tests {
     use crate::gemm::GemmEngine;
     use crate::nn::data;
     use crate::packing::PackingConfig;
-    use std::time::Duration;
 
     fn test_setup() -> (Arc<dyn InferenceBackend>, data::Dataset) {
         let ds = data::synthetic(64, 4, 64, 0.15, 77);
@@ -228,15 +780,16 @@ mod tests {
         let handle = coord.handle();
         let mut preds = Vec::new();
         for (i, img) in ds.images.iter().enumerate() {
-            preds.push(handle.infer(Request { id: i as u64, image: img.clone() }).unwrap());
+            preds.push(handle.infer(Request::new(i as u64, img.clone())).unwrap());
         }
         for (i, p) in preds.iter().enumerate() {
             assert_eq!(p.id, i as u64);
-            assert_eq!(p.class, direct[i], "batched result equals direct");
+            assert_eq!(p.class(), Some(direct[i]), "batched result equals direct");
         }
         let m = coord.shutdown();
         assert_eq!(m.completed, 64);
         assert_eq!(m.rejected, 0);
+        assert_eq!(m.failed, 0);
         assert!(m.dsp_utilization > 3.9, "int4 packs 4 mults/cycle");
     }
 
@@ -252,7 +805,7 @@ mod tests {
                     queue_cap: 4096,
                 },
                 workers: 4,
-                dsp_budget: 64,
+                ..ServerConfig::default()
             },
         );
         let handle = coord.handle();
@@ -264,7 +817,7 @@ mod tests {
                 (0..32u64)
                     .map(|i| {
                         let img = imgs[((c * 32 + i) % imgs.len() as u64) as usize].clone();
-                        handle.infer(Request { id: c * 1000 + i, image: img }).unwrap().id
+                        handle.infer(Request::new(c * 1000 + i, img)).unwrap().id
                     })
                     .collect::<Vec<_>>()
             }));
@@ -280,25 +833,114 @@ mod tests {
         assert_eq!(m.completed, 256);
         assert!(m.mean_batch >= 1.0);
         assert!(m.p99_latency_us >= m.p50_latency_us);
+        assert!(
+            m.p99_latency_us >= m.p99_service_us,
+            "end-to-end latency includes queue wait"
+        );
+    }
+
+    /// The hard `queue_cap` now sheds with a typed outcome instead of a
+    /// submit error: the channel still delivers exactly one response.
+    #[test]
+    fn queue_full_sheds_with_typed_outcome() {
+        let shared = Arc::new(Shared {
+            queue: DynamicBatcher::new(BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 2,
+            }),
+            metrics: Metrics::default(),
+            admission: AdmissionPolicy::disabled(),
+            shedding: AtomicBool::new(false),
+            recent: RollingLatency::new(16),
+        });
+        let handle = CoordinatorHandle { shared: shared.clone() };
+        let img = vec![0.5f32; 4];
+        assert!(handle.submit(Request::new(0, img.clone())).is_ok());
+        assert!(handle.submit(Request::new(1, img.clone())).is_ok());
+        let rx = handle.submit(Request::new(2, img)).unwrap();
+        let resp = rx.recv().expect("shed answered immediately");
+        assert_eq!(resp.id, 2);
+        assert_eq!(resp.outcome, Outcome::Shed(ShedReason::QueueFull));
+        assert_eq!(shared.metrics.snapshot().rejected, 1);
+    }
+
+    /// Admission hysteresis: shedding engages at `shed_depth`, stays
+    /// engaged through the gap (no flap), and disengages only at or
+    /// below `resume_depth`.
+    #[test]
+    fn admission_hysteresis_engages_and_releases() {
+        let shared = Arc::new(Shared {
+            queue: DynamicBatcher::new(BatcherConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+            }),
+            metrics: Metrics::default(),
+            admission: AdmissionPolicy::depth(4, 1),
+            shedding: AtomicBool::new(false),
+            recent: RollingLatency::new(16),
+        });
+        let handle = CoordinatorHandle { shared: shared.clone() };
+        let img = vec![0.5f32; 4];
+        // Fill to depth 4: the 5th submit trips the threshold.
+        for id in 0..4 {
+            handle.submit(Request::new(id, img.clone())).unwrap();
+        }
+        let rx = handle.submit(Request::new(4, img.clone())).unwrap();
+        assert_eq!(
+            rx.recv().unwrap().outcome,
+            Outcome::Shed(ShedReason::QueueDepth),
+            "threshold engages"
+        );
+        assert!(handle.shedding());
+        // Drain to depth 2 — inside the hysteresis gap (resume_depth=1):
+        // still shedding, no flap.
+        assert_eq!(shared.queue.pop_batch().unwrap().batch.len(), 2);
+        let rx = handle.submit(Request::new(5, img.clone())).unwrap();
+        assert_eq!(
+            rx.recv().unwrap().outcome,
+            Outcome::Shed(ShedReason::QueueDepth),
+            "gap holds: depth 2 > resume_depth 1"
+        );
+        assert!(handle.shedding());
+        // Drain to depth 0 — at/below resume_depth: shedding releases
+        // and the next submit is admitted.
+        assert_eq!(shared.queue.pop_batch().unwrap().batch.len(), 2);
+        let rx = handle.submit(Request::new(6, img)).unwrap();
+        assert!(!handle.shedding(), "hysteresis released at resume_depth");
+        drop(rx);
+        let m = shared.metrics.snapshot();
+        assert_eq!(m.accepted, 5, "ids 0..4 and id 6 admitted");
+        assert_eq!(m.shed, 2, "ids 4 and 5 shed by the admission policy");
     }
 
     #[test]
-    fn backpressure_surfaces_as_error() {
-        let (backend, ds) = test_setup();
-        // Tiny queue + zero workers cannot drain.
-        let queue = Arc::new(DynamicBatcher::new(BatcherConfig {
-            max_batch: 1,
-            max_wait: Duration::from_millis(1),
-            queue_cap: 2,
-        }));
-        let metrics = Arc::new(Metrics::default());
-        let _ = backend; // backend unused: we only exercise the handle.
-        let handle = CoordinatorHandle { queue, metrics: metrics.clone() };
-        let img = ds.images[0].clone();
-        assert!(handle.submit(Request { id: 0, image: img.clone() }).is_ok());
-        assert!(handle.submit(Request { id: 1, image: img.clone() }).is_ok());
-        let err = handle.submit(Request { id: 2, image: img }).unwrap_err();
-        assert!(matches!(err, Error::Coordinator(_)));
-        assert_eq!(metrics.snapshot().rejected, 1);
+    fn rolling_latency_window_recovers() {
+        let r = RollingLatency::new(8);
+        for _ in 0..8 {
+            r.record(10_000);
+        }
+        assert!(r.p99_us() >= 10_000, "spike visible");
+        for _ in 0..8 {
+            r.record(10);
+        }
+        assert!(r.p99_us() <= 10, "window forgets the spike — hysteresis can release");
+    }
+
+    #[test]
+    fn deferred_plan_error_surfaces_on_infer() {
+        let ds = data::synthetic(16, 4, 64, 0.15, 7);
+        let mlp = QuantMlp::centroid_classifier(&ds, 8, 8).unwrap();
+        // INT4 packing holds 4-bit weights; 8-bit quantization overflows
+        // the operand range, so planning must fail.
+        let engine =
+            GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+        let backend = PackedNnBackend::new(mlp.clone(), ExecMode::Packed(engine.clone()));
+        assert!(backend.plan_error().is_some(), "planning failure stored, not swallowed");
+        let err = backend.infer(&ds.images).unwrap_err();
+        assert_eq!(Some(&err), backend.plan_error(), "infer surfaces the stored error");
+        // try_new surfaces the same failure eagerly.
+        assert!(PackedNnBackend::try_new(mlp, ExecMode::Packed(engine)).is_err());
     }
 }

@@ -82,8 +82,10 @@ pub use packing::{PackedMultiplier, PackingConfig};
 /// Crate-wide error type. `Display` and `std::error::Error` are
 /// implemented by hand — the build environment is offline, so derive
 /// crates like `thiserror` are off the table (see [`util`] for the other
-/// dependency stand-ins).
-#[derive(Debug)]
+/// dependency stand-ins). `Clone`/`PartialEq` are derived so an error can
+/// travel inside a [`coordinator::Outcome`] response channel (every
+/// variant is a plain message string).
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Error {
     /// A packing configuration violates a structural invariant (overlapping
     /// inputs, zero-width operand, ...).

@@ -385,9 +385,9 @@ fn serve(flags: &HashMap<String, String>) -> i32 {
     for i in 0..n_requests {
         let idx = i % ds.images.len();
         let pred = handle
-            .infer(Request { id: i as u64, image: ds.images[idx].clone() })
+            .infer(Request::new(i as u64, ds.images[idx].clone()))
             .expect("infer");
-        if pred.class == ds.labels[idx] {
+        if pred.class() == Some(ds.labels[idx]) {
             correct += 1;
         }
     }

@@ -490,9 +490,9 @@ fn coordinator_serves_the_cnn_backend() {
     let coord = Coordinator::start(backend, ServerConfig::default());
     let handle = coord.handle();
     for (i, img) in ds.images.iter().enumerate() {
-        let pred = handle.infer(Request { id: i as u64, image: img.clone() }).unwrap();
+        let pred = handle.infer(Request::new(i as u64, img.clone())).unwrap();
         assert_eq!(pred.id, i as u64);
-        assert_eq!(pred.class, direct[i], "batched CNN result equals direct");
+        assert_eq!(pred.class(), Some(direct[i]), "batched CNN result equals direct");
     }
     let m = coord.shutdown();
     assert_eq!(m.completed, 64);

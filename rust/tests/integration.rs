@@ -3,7 +3,7 @@
 //! regression suite that pins every deterministic table cell.
 
 use dsp_packing::analysis::exhaustive;
-use dsp_packing::coordinator::{Coordinator, PackedNnBackend, Request, ServerConfig};
+use dsp_packing::coordinator::{Coordinator, Outcome, PackedNnBackend, Request, ServerConfig};
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::{GemmEngine, MatI32};
 use dsp_packing::nn::{data, ExecMode, QuantMlp};
@@ -122,8 +122,8 @@ fn full_stack_gemm_nn_coordinator() {
     let coord = Coordinator::start(backend, ServerConfig::default());
     let handle = coord.handle();
     for (i, img) in ds.images.iter().enumerate() {
-        let p = handle.infer(Request { id: i as u64, image: img.clone() }).unwrap();
-        assert_eq!(p.class, direct[i]);
+        let p = handle.infer(Request::new(i as u64, img.clone())).unwrap();
+        assert_eq!(p.class(), Some(direct[i]));
     }
     let m = coord.shutdown();
     assert_eq!(m.completed, 96);
@@ -202,8 +202,10 @@ fn gemm_matches_scalar_dsp_walk() {
     }
 }
 
-/// Failure injection: a worker panic must not wedge the coordinator
-/// (remaining requests get disconnect errors, shutdown still works).
+/// Failure injection: a malformed input must not wedge the coordinator —
+/// it gets a **typed** `Failed` outcome (the backend's shape error pinned
+/// to that request by the poison bisection), and well-formed requests
+/// keep being served.
 #[test]
 fn coordinator_survives_malformed_inputs() {
     let ds = data::synthetic(16, 4, 64, 0.15, 7);
@@ -211,12 +213,20 @@ fn coordinator_survives_malformed_inputs() {
     let backend = Arc::new(PackedNnBackend::new(mlp, ExecMode::Exact));
     let coord = Coordinator::start(backend, ServerConfig::default());
     let handle = coord.handle();
-    // Wrong-dimension image: backend rejects the batch; the client sees a
-    // dropped channel rather than a hang.
-    let rx = handle.submit(Request { id: 0, image: vec![0.5; 3] }).unwrap();
-    assert!(rx.recv().is_err(), "malformed request must not produce a prediction");
+    // Wrong-dimension image: the backend rejects the batch and the client
+    // sees the typed failure — not a dropped channel, not a hang.
+    let rx = handle.submit(Request::new(0, vec![0.5; 3])).unwrap();
+    let resp = rx.recv().expect("malformed request still gets a typed outcome");
+    assert!(
+        matches!(resp.outcome, Outcome::Failed(_)),
+        "shape error surfaces as Failed, got {:?}",
+        resp.outcome
+    );
     // Well-formed requests continue to be served afterwards.
-    let p = handle.infer(Request { id: 1, image: ds.images[0].clone() }).unwrap();
+    let p = handle.infer(Request::new(1, ds.images[0].clone())).unwrap();
     assert_eq!(p.id, 1);
-    coord.shutdown();
+    assert!(p.outcome.is_ok());
+    let m = coord.shutdown();
+    assert_eq!(m.failed, 1);
+    assert_eq!(m.completed, 1);
 }

@@ -324,9 +324,9 @@ fn spiking_backend_serves_exactly_once_with_deterministic_cost() {
     let coord = Coordinator::start(Arc::clone(&backend), ServerConfig::default());
     let handle = coord.handle();
     for (i, image) in ds.images.iter().enumerate() {
-        let pred = handle.infer(Request { id: 1000 + i as u64, image: image.clone() }).unwrap();
+        let pred = handle.infer(Request::new(1000 + i as u64, image.clone())).unwrap();
         assert_eq!(pred.id, 1000 + i as u64);
-        assert_eq!(pred.class, direct[i], "served class must match direct inference");
+        assert_eq!(pred.class(), Some(direct[i]), "served class must match direct inference");
     }
     let m = coord.shutdown();
     assert_eq!(m.completed, ds.images.len() as u64);
