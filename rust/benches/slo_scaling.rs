@@ -1,0 +1,212 @@
+//! SLO-aware precision scaling bench: bursty open-loop load against a
+//! fixed-exact backend, a fixed-overpacked backend, and the governed
+//! adaptive backend (`BENCH_slo_scaling.json`).
+//!
+//! The paper's MR-Overpacking trades bounded error (Table I: MAE 0.47)
+//! for 6 mults/DSP instead of 4 — a throughput reserve. This bench
+//! measures what spending that reserve under load buys: the governed
+//! backend degrades tolerant traffic to the overpacked fabric while the
+//! queue is deep and returns to the corrected-exact fabric when the
+//! burst ends, so its throughput approaches the fixed-overpacked bound
+//! while `Exact`-class requests stay bit-identical to a fault-free
+//! exact run in every governor state.
+
+use dsp_packing::bench::JsonReport;
+use dsp_packing::coordinator::{
+    AdaptiveBackend, BatcherConfig, BudgetChannelPolicy, Coordinator, GovernorConfig, Request,
+    RoutingGovernor, ServerConfig,
+};
+use dsp_packing::correct::Correction;
+use dsp_packing::gemm::GemmEngine;
+use dsp_packing::nn::{data, ExecMode, NnModel, QuantMlp};
+use dsp_packing::packing::PackingConfig;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One request in eight demands bit-exactness (budget 0.0); the rest
+/// tolerate the overpacked fabric's bounded error (budget 1.0).
+fn budget_of(id: u64) -> f32 {
+    if id % 8 == 0 {
+        0.0
+    } else {
+        1.0
+    }
+}
+
+fn with_budget(img: &[f32], budget: f32) -> Vec<f32> {
+    let mut v = img.to_vec();
+    v.push(budget);
+    v
+}
+
+struct Scenario {
+    throughput: f64,
+    ok: u64,
+    p99_latency_us: u64,
+    /// Exact-class responses disagreeing with the exact reference.
+    exact_mismatches: u64,
+}
+
+/// Drive one backend through a bursty open-loop load: `bursts` waves of
+/// `burst` requests are submitted back to back (the whole wave enqueued
+/// before any response is read), so queue depth spikes to `burst` and
+/// drains to zero every wave. With a governor, a post-burst trickle then
+/// gives the hysteresis a calm signal to resume on.
+fn run_scenario(
+    label: &str,
+    ds: &data::Dataset,
+    reference: &[usize],
+    threshold: f32,
+    governor: Option<Arc<RoutingGovernor>>,
+    bursts: u64,
+    burst: u64,
+) -> Scenario {
+    let mlp = QuantMlp::centroid_classifier(ds, 4, 4).unwrap();
+    let exact_engine =
+        GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    let dense_engine =
+        GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap();
+    let mut backend = AdaptiveBackend::new(
+        mlp,
+        ExecMode::Packed(exact_engine),
+        ExecMode::Packed(dense_engine),
+        BudgetChannelPolicy { threshold },
+        true,
+    );
+    if let Some(g) = &governor {
+        backend = backend.with_governor(g.clone());
+    }
+    let coord = Coordinator::start(
+        Arc::new(backend),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(200),
+                queue_cap: 4096,
+            },
+            workers: 2,
+            governor: governor.clone(),
+            ..ServerConfig::default()
+        },
+    );
+    let handle = coord.handle();
+
+    let n_images = ds.images.len() as u64;
+    let total = bursts * burst;
+    let mut ok = 0u64;
+    let mut exact_mismatches = 0u64;
+    let start = Instant::now();
+    for b in 0..bursts {
+        let wave: Vec<_> = (0..burst)
+            .map(|i| {
+                let id = b * burst + i;
+                let idx = (id % n_images) as usize;
+                let budget = budget_of(id);
+                let rx = handle
+                    .submit(Request::new(id, with_budget(&ds.images[idx], budget)))
+                    .expect("coordinator is up");
+                (rx, idx, budget <= threshold)
+            })
+            .collect();
+        for (rx, idx, exact_class) in wave {
+            let resp = rx.recv().expect("exactly one typed outcome");
+            match resp.outcome.class() {
+                Some(c) => {
+                    ok += 1;
+                    if exact_class && c != reference[idx] {
+                        exact_mismatches += 1;
+                    }
+                }
+                None => panic!("bursty load within queue_cap must serve Ok: {resp:?}"),
+            }
+        }
+    }
+    let elapsed = start.elapsed();
+    assert_eq!(ok, total, "every request served");
+
+    // Post-burst trickle: sparse tolerant traffic polls the governor
+    // against a drained queue, so the calm dwell can elapse and routing
+    // can return to the exact fabric.
+    if governor.is_some() {
+        for i in 0..30u64 {
+            let idx = (i % n_images) as usize;
+            let resp = handle
+                .infer(Request::new(total + i, with_budget(&ds.images[idx], 1.0)))
+                .expect("coordinator is up");
+            assert!(resp.outcome.is_ok());
+            std::thread::sleep(Duration::from_millis(3));
+        }
+    }
+
+    let m = coord.shutdown();
+    let throughput = ok as f64 / elapsed.as_secs_f64();
+    println!(
+        "{label:<14} throughput={throughput:>9.0} req/s  p99={}us  degraded_routed={}",
+        m.p99_latency_us, m.degraded_routed
+    );
+    Scenario { throughput, ok, p99_latency_us: m.p99_latency_us, exact_mismatches }
+}
+
+fn main() {
+    let fast = std::env::var("DSP_PACKING_BENCH_FAST").as_deref() == Ok("1");
+    let (dim, bursts) = if fast { (128, 6) } else { (512, 32) };
+    let burst = 64u64;
+    let total = bursts * burst;
+    let ds = data::synthetic(64, 8, dim, 0.15, 7);
+    // The fault-free exact reference every Exact-class answer must equal.
+    let mlp = QuantMlp::centroid_classifier(&ds, 4, 4).unwrap();
+    let (reference, _) = mlp.classify_images(&ds.images, &ExecMode::Exact).unwrap();
+
+    println!("=== SLO-aware precision scaling: bursty open-loop load ===");
+    println!("{total} requests/scenario in {bursts} bursts of {burst}, dim {dim}");
+    // Fixed routing: threshold 2.0 classifies every budget as Exact,
+    // threshold -1.0 classifies every budget as Approximate (always
+    // dense without a governor).
+    let fixed_exact = run_scenario("fixed-exact", &ds, &reference, 2.0, None, bursts, burst);
+    let fixed_dense = run_scenario("fixed-dense", &ds, &reference, -1.0, None, bursts, burst);
+    let governor = Arc::new(RoutingGovernor::new(GovernorConfig {
+        engage_depth: 32,
+        resume_depth: 4,
+        min_calm: Duration::from_millis(10),
+        ..GovernorConfig::default()
+    }));
+    let governed =
+        run_scenario("governed", &ds, &reference, 0.5, Some(governor.clone()), bursts, burst);
+    let resumed = !governor.is_degraded();
+
+    let mut json = JsonReport::new("slo_scaling");
+    json.metric("requests", total);
+    json.metric("governed_throughput", governed.throughput);
+    json.metric("fixed_exact_throughput", fixed_exact.throughput);
+    json.metric("fixed_dense_throughput", fixed_dense.throughput);
+    json.metric("degraded_fraction", governor.degraded_routed() as f64 / total as f64);
+    json.metric("governed_engagements", governor.engagements());
+    json.metric("resumed_after_burst", u64::from(resumed));
+    json.metric(
+        "exact_bit_identical",
+        u64::from(governed.exact_mismatches == 0 && fixed_exact.exact_mismatches == 0),
+    );
+    json.metric("governed_p99_latency_us", governed.p99_latency_us);
+    json.metric("fixed_exact_p99_latency_us", fixed_exact.p99_latency_us);
+    json.metric("fixed_dense_p99_latency_us", fixed_dense.p99_latency_us);
+    json.metric("governed_ok", governed.ok);
+
+    // The envelope's hard guarantees hold at every bench size:
+    assert_eq!(governed.exact_mismatches, 0, "Exact-class bit-identity while governed");
+    assert_eq!(fixed_exact.exact_mismatches, 0, "exact fabric reproduces the reference");
+    assert!(governor.degraded_routed() > 0, "bursts must engage degraded routing");
+    assert!(governor.engagements() >= 1);
+    assert!(resumed, "governor must return to Calm after the bursts end");
+    // The throughput claim is asserted on full runs only: FAST sizes are
+    // too small for a stable wall-clock ordering in CI smoke.
+    if !fast {
+        assert!(
+            governed.throughput > fixed_exact.throughput,
+            "governed ({:.0} req/s) must beat fixed-exact ({:.0} req/s) under bursts",
+            governed.throughput,
+            fixed_exact.throughput
+        );
+    }
+
+    json.write().expect("write BENCH_slo_scaling.json");
+}

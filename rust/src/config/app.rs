@@ -1,7 +1,7 @@
 //! Typed application configuration over the TOML-subset parser.
 
 use super::parse::{parse, Sections};
-use crate::coordinator::{BatcherConfig, ServerConfig};
+use crate::coordinator::{BatcherConfig, GovernorConfig, ServerConfig};
 use crate::correct::Correction;
 use crate::packing::PackingConfig;
 use crate::{Error, Result};
@@ -101,6 +101,12 @@ pub struct AppConfig {
     pub correction: Correction,
     /// Server settings.
     pub server: ServerConfig,
+    /// Routing-governor thresholds, when a `[governor]` section is
+    /// present: the caller builds a
+    /// [`crate::coordinator::RoutingGovernor`] from them and shares it
+    /// between the server config and the adaptive backend. `None` (no
+    /// section) means no load-aware precision scaling.
+    pub governor: Option<GovernorConfig>,
     /// Dataset: number of classes.
     pub classes: usize,
     /// Dataset: flattened image dimension.
@@ -115,6 +121,7 @@ impl Default for AppConfig {
             packing: PackingKind::Int4,
             correction: Correction::FullRoundHalfUp,
             server: ServerConfig::default(),
+            governor: None,
             classes: 4,
             dim: 64,
             seed: 7,
@@ -172,6 +179,35 @@ impl AppConfig {
                 cfg.server.admission.resume_p99_us =
                     (v as u64).min(cfg.server.admission.shed_p99_us);
             }
+            if let Some(v) = s.get("p99_sample_ttl_ms").and_then(|v| v.as_int()) {
+                cfg.server.admission.sample_ttl = Duration::from_millis(v as u64);
+            }
+        }
+        if let Some(g) = sections.get("governor") {
+            // Mirror the admission knobs: `engage_*` alone gets a
+            // zero-gap band; `resume_*` widens it (clamped ≤ engage).
+            let mut gc = GovernorConfig::default();
+            if let Some(v) = g.get("engage_depth").and_then(|v| v.as_int()) {
+                gc.engage_depth = v as usize;
+                gc.resume_depth = v as usize;
+            }
+            if let Some(v) = g.get("resume_depth").and_then(|v| v.as_int()) {
+                gc.resume_depth = (v as usize).min(gc.engage_depth);
+            }
+            if let Some(v) = g.get("engage_p99_us").and_then(|v| v.as_int()) {
+                gc.engage_p99_us = v as u64;
+                gc.resume_p99_us = v as u64;
+            }
+            if let Some(v) = g.get("resume_p99_us").and_then(|v| v.as_int()) {
+                gc.resume_p99_us = (v as u64).min(gc.engage_p99_us);
+            }
+            if let Some(v) = g.get("min_calm_ms").and_then(|v| v.as_int()) {
+                gc.min_calm = Duration::from_millis(v as u64);
+            }
+            if let Some(v) = g.get("p99_ttl_ms").and_then(|v| v.as_int()) {
+                gc.p99_ttl = Duration::from_millis(v as u64);
+            }
+            cfg.governor = Some(gc);
         }
         if let Some(d) = sections.get("data") {
             if let Some(v) = d.get("classes").and_then(|v| v.as_int()) {
@@ -223,6 +259,15 @@ queue_cap = 512
 dsp_budget = 96
 shed_depth = 256
 resume_depth = 64
+p99_sample_ttl_ms = 250
+
+[governor]
+engage_depth = 48
+resume_depth = 6
+engage_p99_us = 20000
+resume_p99_us = 5000
+min_calm_ms = 80
+p99_ttl_ms = 400
 
 [data]
 classes = 10
@@ -237,9 +282,31 @@ seed = 3
         assert_eq!(c.server.workers, 8);
         assert_eq!(c.server.admission.shed_depth, 256);
         assert_eq!(c.server.admission.resume_depth, 64);
+        assert_eq!(c.server.admission.sample_ttl, Duration::from_millis(250));
+        let g = c.governor.expect("[governor] section parsed");
+        assert_eq!(g.engage_depth, 48);
+        assert_eq!(g.resume_depth, 6);
+        assert_eq!(g.engage_p99_us, 20_000);
+        assert_eq!(g.resume_p99_us, 5_000);
+        assert_eq!(g.min_calm, Duration::from_millis(80));
+        assert_eq!(g.p99_ttl, Duration::from_millis(400));
         assert_eq!(c.classes, 10);
         let built = c.packing.build().unwrap();
         assert_eq!(built.delta, -2);
+    }
+
+    /// `engage_*` alone yields a zero-gap band; `resume_*` above its
+    /// engage threshold clamps down; no `[governor]` section → `None`.
+    #[test]
+    fn governor_section_defaults_and_clamps() {
+        assert!(AppConfig::from_str("[server]\nworkers = 2").unwrap().governor.is_none());
+        let c = AppConfig::from_str("[governor]\nengage_depth = 32").unwrap();
+        let g = c.governor.unwrap();
+        assert_eq!(g.engage_depth, 32);
+        assert_eq!(g.resume_depth, 32, "zero-gap band without resume_depth");
+        assert_eq!(g.min_calm, GovernorConfig::default().min_calm);
+        let c = AppConfig::from_str("[governor]\nengage_depth = 16\nresume_depth = 99").unwrap();
+        assert_eq!(c.governor.unwrap().resume_depth, 16, "resume clamped to engage");
     }
 
     #[test]

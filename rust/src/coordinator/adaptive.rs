@@ -15,12 +15,20 @@
 //! fabrics' weight planes resident, so routing a mixed batch never
 //! re-plans (a shared [`crate::nn::PlanBudget`] can cap the combined
 //! resident bytes across both replicas).
+//!
+//! With an attached [`RoutingGovernor`]
+//! ([`AdaptiveBackend::with_governor`]) the routing becomes
+//! **load-aware**: tolerant traffic runs on the exact fabric while the
+//! coordinator's load signal is calm and degrades to the overpacked
+//! fabric only under queue pressure — see [`super::load`].
 
+use super::load::{GovernorState, RoutingGovernor};
 use super::server::InferenceBackend;
 use crate::gemm::DspOpStats;
 use crate::nn::{ExecMode, NnModel, QuantMlp};
-use crate::Result;
+use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Precision demanded by a request class.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,13 +86,23 @@ pub struct AdaptiveBackend<P: PrecisionPolicy, M: NnModel = QuantMlp> {
     pub exact_routed: AtomicU64,
     /// Strip the budget channel before inference?
     strip_last_feature: bool,
+    /// Load-aware routing governor (see [`RoutingGovernor`]): when
+    /// present, tolerant traffic runs exact while the governor is calm
+    /// and degrades to the dense fabric only under pressure.
+    governor: Option<Arc<RoutingGovernor>>,
+    /// A planning failure deferred from [`AdaptiveBackend::new`]:
+    /// every `infer` surfaces it as the batch error (→ `Failed`
+    /// outcomes) instead of silently swallowing it.
+    plan_error: Option<Error>,
     label: String,
 }
 
 impl<P: PrecisionPolicy, M: NnModel + Clone> AdaptiveBackend<P, M> {
     /// Build from a model plus the two execution modes. Both fabric
-    /// replicas are pre-planned here (a planning failure is deferred to
-    /// the first `infer`, like [`super::PackedNnBackend::new`]).
+    /// replicas are pre-planned here; a planning failure (on either
+    /// fabric) is stored and surfaced by every `infer` as a `Failed`
+    /// outcome, like [`super::PackedNnBackend::new`] — use
+    /// [`AdaptiveBackend::try_new`] to get it eagerly instead.
     pub fn new(
         model: M,
         exact_mode: ExecMode,
@@ -94,8 +112,8 @@ impl<P: PrecisionPolicy, M: NnModel + Clone> AdaptiveBackend<P, M> {
     ) -> Self {
         let label = model.label("adaptive");
         let dense_model = model.clone();
-        let _ = model.prepare(&exact_mode);
-        let _ = dense_model.prepare(&dense_mode);
+        let exact_err = model.prepare(&exact_mode).err();
+        let dense_err = dense_model.prepare(&dense_mode).err();
         AdaptiveBackend {
             exact_model: model,
             dense_model,
@@ -105,8 +123,48 @@ impl<P: PrecisionPolicy, M: NnModel + Clone> AdaptiveBackend<P, M> {
             dense_routed: AtomicU64::new(0),
             exact_routed: AtomicU64::new(0),
             strip_last_feature,
+            governor: None,
+            plan_error: exact_err.or(dense_err),
             label,
         }
+    }
+
+    /// Like [`AdaptiveBackend::new`], but a planning failure on either
+    /// fabric is returned eagerly instead of deferred to the first
+    /// `infer`.
+    pub fn try_new(
+        model: M,
+        exact_mode: ExecMode,
+        dense_mode: ExecMode,
+        policy: P,
+        strip_last_feature: bool,
+    ) -> Result<Self> {
+        let backend = Self::new(model, exact_mode, dense_mode, policy, strip_last_feature);
+        match &backend.plan_error {
+            Some(e) => Err(e.clone()),
+            None => Ok(backend),
+        }
+    }
+
+    /// Attach a load-aware routing governor. With a governor, tolerant
+    /// ([`PrecisionClass::Approximate`]) traffic runs on the exact
+    /// fabric while the governor is calm and degrades to the dense
+    /// fabric only while it is degraded; [`PrecisionClass::Exact`]
+    /// requests stay on the exact fabric in every governor state.
+    pub fn with_governor(mut self, governor: Arc<RoutingGovernor>) -> Self {
+        self.governor = Some(governor);
+        self
+    }
+
+    /// The attached routing governor, if any.
+    pub fn governor(&self) -> Option<&Arc<RoutingGovernor>> {
+        self.governor.as_ref()
+    }
+
+    /// The deferred planning error, if construction via
+    /// [`AdaptiveBackend::new`] failed to plan either fabric.
+    pub fn plan_error(&self) -> Option<&Error> {
+        self.plan_error.as_ref()
     }
 
     /// The model replica serving the exact fabric.
@@ -119,41 +177,60 @@ impl<P: PrecisionPolicy, M: NnModel + Clone> AdaptiveBackend<P, M> {
         &self.dense_model
     }
 
-    fn run(
-        &self,
-        model: &M,
-        images: &[Vec<f32>],
-        mode: &ExecMode,
-    ) -> Result<(Vec<usize>, DspOpStats)> {
-        let stripped: Vec<Vec<f32>> = if self.strip_last_feature {
-            // saturating: an empty (malformed) image has no budget channel
-            // to strip — let the model's shape validation reject it as an
-            // Err instead of panicking the serving worker.
-            images.iter().map(|i| i[..i.len().saturating_sub(1)].to_vec()).collect()
-        } else {
-            images.to_vec()
-        };
-        let x = model.quantize_batch(&stripped)?;
-        model.classify(&x, mode)
+    /// Gather the routed sub-batch, stripping the budget channel if
+    /// configured — exactly one copy per routed request.
+    fn sub_batch(&self, batch: &[Vec<f32>], idx: &[usize]) -> Vec<Vec<f32>> {
+        idx.iter()
+            .map(|&i| {
+                let img = &batch[i];
+                if self.strip_last_feature {
+                    // saturating: an empty (malformed) image has no budget
+                    // channel to strip — let the model's shape validation
+                    // reject it as an Err instead of panicking the worker.
+                    img[..img.len().saturating_sub(1)].to_vec()
+                } else {
+                    img.clone()
+                }
+            })
+            .collect()
     }
 }
 
 impl<P: PrecisionPolicy, M: NnModel + Clone> InferenceBackend for AdaptiveBackend<P, M> {
     fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
+        if let Some(e) = &self.plan_error {
+            return Err(e.clone());
+        }
+        // One governor poll per batch: the signal reads are lock-free
+        // and the hysteresis update is a short critical section.
+        let degraded = self
+            .governor
+            .as_ref()
+            .is_some_and(|g| g.poll() == GovernorState::Degraded);
         // Split the batch by class, run each sub-batch on its fabric,
-        // merge results in the original order.
-        let classes: Vec<PrecisionClass> =
-            batch.iter().map(|img| self.policy.classify(img)).collect();
+        // merge results in the original order. Without a governor,
+        // tolerant traffic always takes the dense fabric (per-request
+        // budget routing); with one, it degrades only under load.
         let mut exact_idx = Vec::new();
         let mut dense_idx = Vec::new();
-        for (i, c) in classes.iter().enumerate() {
-            match c {
-                PrecisionClass::Exact => exact_idx.push(i),
-                PrecisionClass::Approximate => dense_idx.push(i),
+        for (i, img) in batch.iter().enumerate() {
+            let dense = match self.policy.classify(img) {
+                PrecisionClass::Exact => false,
+                PrecisionClass::Approximate => self.governor.is_none() || degraded,
+            };
+            if dense {
+                dense_idx.push(i);
+            } else {
+                exact_idx.push(i);
             }
         }
         self.exact_routed.fetch_add(exact_idx.len() as u64, Ordering::Relaxed);
         self.dense_routed.fetch_add(dense_idx.len() as u64, Ordering::Relaxed);
+        if degraded && !dense_idx.is_empty() {
+            if let Some(g) = &self.governor {
+                g.note_degraded_routed(dense_idx.len() as u64);
+            }
+        }
 
         let mut preds = vec![0usize; batch.len()];
         let mut stats = DspOpStats::default();
@@ -164,8 +241,9 @@ impl<P: PrecisionPolicy, M: NnModel + Clone> InferenceBackend for AdaptiveBacken
             if idx.is_empty() {
                 continue;
             }
-            let sub: Vec<Vec<f32>> = idx.iter().map(|&i| batch[i].clone()).collect();
-            let (p, s) = self.run(model, &sub, mode)?;
+            let sub = self.sub_batch(batch, idx);
+            let x = model.quantize_batch(&sub)?;
+            let (p, s) = model.classify(&x, mode)?;
             stats.merge(&s);
             for (&i, pred) in idx.iter().zip(p) {
                 preds[i] = pred;
@@ -182,27 +260,26 @@ impl<P: PrecisionPolicy, M: NnModel + Clone> InferenceBackend for AdaptiveBacken
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::{Coordinator, Request, ServerConfig};
+    use crate::coordinator::{Coordinator, GovernorConfig, Request, ServerConfig};
     use crate::correct::Correction;
     use crate::gemm::GemmEngine;
     use crate::nn::data;
     use crate::packing::PackingConfig;
-    use std::sync::Arc;
+    use std::time::Duration;
 
-    fn adaptive_backend(ds: &data::Dataset) -> AdaptiveBackend<BudgetChannelPolicy> {
-        let mlp = QuantMlp::centroid_classifier(ds, 4, 4).unwrap();
+    fn fabric_modes() -> (ExecMode, ExecMode) {
         let exact =
             GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
         let dense =
             GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
                 .unwrap();
-        AdaptiveBackend::new(
-            mlp,
-            ExecMode::Packed(exact),
-            ExecMode::Packed(dense),
-            BudgetChannelPolicy { threshold: 0.5 },
-            true,
-        )
+        (ExecMode::Packed(exact), ExecMode::Packed(dense))
+    }
+
+    fn adaptive_backend(ds: &data::Dataset) -> AdaptiveBackend<BudgetChannelPolicy> {
+        let mlp = QuantMlp::centroid_classifier(ds, 4, 4).unwrap();
+        let (exact, dense) = fabric_modes();
+        AdaptiveBackend::new(mlp, exact, dense, BudgetChannelPolicy { threshold: 0.5 }, true)
     }
 
     fn with_budget(img: &[f32], budget: f32) -> Vec<f32> {
@@ -241,6 +318,78 @@ mod tests {
         let (_, stats) = backend.infer(&batch).unwrap();
         assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 0);
         assert!((stats.utilization() - 4.0).abs() < 0.01);
+    }
+
+    /// With a governor attached, tolerant traffic runs exact while the
+    /// signal is calm, degrades to the dense fabric under pressure, and
+    /// returns to exact when the signal drops — `Exact`-class requests
+    /// stay on the exact fabric throughout.
+    #[test]
+    fn governor_degrades_and_resumes_routing() {
+        let ds = data::synthetic(16, 4, 64, 0.15, 7);
+        let governor = Arc::new(RoutingGovernor::new(GovernorConfig {
+            min_calm: Duration::ZERO,
+            ..GovernorConfig::depth(8, 2)
+        }));
+        let backend = adaptive_backend(&ds).with_governor(governor.clone());
+        let batch: Vec<Vec<f32>> = ds
+            .images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| with_budget(img, if i % 4 == 0 { 0.0 } else { 1.0 }))
+            .collect();
+        // Calm: even budget-tolerant requests run on the exact fabric.
+        backend.infer(&batch).unwrap();
+        assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 0);
+        assert_eq!(governor.degraded_routed(), 0);
+        // Pressure: tolerant requests degrade, Exact-class ones do not.
+        governor.signal().publish_depth(64);
+        backend.infer(&batch).unwrap();
+        assert!(governor.is_degraded());
+        assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 12);
+        assert_eq!(governor.degraded_routed(), 12);
+        // Signal drops: routing returns to the exact fabric.
+        governor.signal().publish_depth(0);
+        backend.infer(&batch).unwrap();
+        assert!(!governor.is_degraded());
+        assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 12, "no new dense routes");
+        assert_eq!(backend.exact_routed.load(Ordering::Relaxed), 16 + 4 + 16);
+    }
+
+    /// Regression alongside `deferred_plan_error_surfaces_on_infer`
+    /// (coordinator/server.rs): `AdaptiveBackend::new` must store the
+    /// `prepare()` failure and surface it on every `infer`, not swallow
+    /// it; `try_new` surfaces it eagerly.
+    #[test]
+    fn adaptive_plan_error_deferred_and_surfaced() {
+        let ds = data::synthetic(16, 4, 64, 0.15, 7);
+        // 8-bit weights overflow the INT4 packing's operand range, so
+        // planning the exact fabric must fail.
+        let mlp = QuantMlp::centroid_classifier(&ds, 8, 8).unwrap();
+        let (exact, dense) = fabric_modes();
+        let backend = AdaptiveBackend::new(
+            mlp.clone(),
+            exact.clone(),
+            dense.clone(),
+            BudgetChannelPolicy { threshold: 0.5 },
+            true,
+        );
+        assert!(backend.plan_error().is_some(), "planning failure stored, not swallowed");
+        let batch: Vec<Vec<f32>> =
+            ds.images.iter().map(|img| with_budget(img, 0.0)).collect();
+        let err = backend.infer(&batch).unwrap_err();
+        assert_eq!(Some(&err), backend.plan_error(), "infer surfaces the stored error");
+        assert!(
+            AdaptiveBackend::try_new(
+                mlp,
+                exact,
+                dense,
+                BudgetChannelPolicy { threshold: 0.5 },
+                true,
+            )
+            .is_err(),
+            "try_new surfaces the same failure eagerly"
+        );
     }
 
     #[test]

@@ -1,0 +1,422 @@
+//! Load-aware precision scaling: the coordinator-exported load signal
+//! and the routing governor that spends the paper's Overpacking
+//! throughput reserve under queue pressure.
+//!
+//! The paper's MR-Overpacking trades a bounded error (Table I: MAE
+//! 0.47) for 6 mults/DSP instead of 4 — exactly the reserve a loaded
+//! server should spend. [`LoadSignal`] carries the coordinator's live
+//! load observations (queue depth, rolling p99, service rate) to a
+//! [`RoutingGovernor`], which [`super::AdaptiveBackend`] polls once per
+//! batch: under pressure, approximation-tolerant traffic degrades to
+//! the overpacked fabric; when the signal calms, routing returns to the
+//! corrected-exact fabric. Requests that demand
+//! [`super::PrecisionClass::Exact`] never degrade — their bit-exactness
+//! guarantee holds in every governor state.
+//!
+//! Two guards keep the loop stable where a naive threshold would not:
+//!
+//! - **Engage/resume hysteresis** — the governor engages at
+//!   `engage_depth`/`engage_p99_us` but resumes only at the (lower)
+//!   `resume_*` thresholds, so a signal hovering near one threshold
+//!   cannot flap routing per batch.
+//! - **Calm dwell + signal expiry** — resuming additionally requires
+//!   the signal to stay below the resume thresholds for `min_calm`,
+//!   and a published p99 older than `p99_ttl` counts as zero. The
+//!   expiry mirrors the admission policy's rolling-window fix: a p99
+//!   frozen at its last loaded value (no answers → no new samples)
+//!   must not pin the governor in the degraded state forever.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Live load observations exported by the coordinator (lock-free
+/// gauges). The coordinator publishes queue depth at submit and batch
+/// formation and the rolling enqueue-inclusive p99 at every answer;
+/// external drivers (or tests) may publish into it directly.
+#[derive(Debug)]
+pub struct LoadSignal {
+    /// Epoch every published timestamp is measured against.
+    epoch: Instant,
+    queue_depth: AtomicU64,
+    p99_us: AtomicU64,
+    answered: AtomicU64,
+    /// µs since `epoch` of the last `publish_answer` (0 = never).
+    last_answer_us: AtomicU64,
+}
+
+impl LoadSignal {
+    /// A fresh signal with all gauges at zero.
+    pub fn new() -> Self {
+        LoadSignal {
+            epoch: Instant::now(),
+            queue_depth: AtomicU64::new(0),
+            p99_us: AtomicU64::new(0),
+            answered: AtomicU64::new(0),
+            last_answer_us: AtomicU64::new(0),
+        }
+    }
+
+    fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Publish the current queue depth.
+    pub fn publish_depth(&self, depth: usize) {
+        self.queue_depth.store(depth as u64, Ordering::Release);
+    }
+
+    /// Publish one answered request along with the rolling
+    /// enqueue-inclusive p99 observed at answer time.
+    pub fn publish_answer(&self, p99_us: u64) {
+        self.p99_us.store(p99_us, Ordering::Release);
+        self.last_answer_us.store(self.now_us().max(1), Ordering::Release);
+        self.answered.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Last published queue depth.
+    pub fn queue_depth(&self) -> usize {
+        self.queue_depth.load(Ordering::Acquire) as usize
+    }
+
+    /// Last published rolling p99 (µs); see [`LoadSignal::p99_age`] for
+    /// how stale it is.
+    pub fn p99_us(&self) -> u64 {
+        self.p99_us.load(Ordering::Acquire)
+    }
+
+    /// Requests answered since the signal was created.
+    pub fn answered(&self) -> u64 {
+        self.answered.load(Ordering::Relaxed)
+    }
+
+    /// Time since the last [`LoadSignal::publish_answer`] (time since
+    /// creation if nothing was ever published) — the staleness of the
+    /// p99 gauge.
+    pub fn p99_age(&self) -> Duration {
+        let last = self.last_answer_us.load(Ordering::Acquire);
+        Duration::from_micros(self.now_us().saturating_sub(last))
+    }
+}
+
+impl Default for LoadSignal {
+    fn default() -> Self {
+        LoadSignal::new()
+    }
+}
+
+/// Routing state reported by [`RoutingGovernor::poll`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GovernorState {
+    /// Headroom available: tolerant traffic runs on the exact fabric.
+    Calm,
+    /// Under pressure: tolerant traffic degrades to the overpacked
+    /// approximate fabric (6 mults/DSP, bounded MAE).
+    Degraded,
+}
+
+/// Engage/resume thresholds and stability guards for the governor.
+#[derive(Debug, Clone, Copy)]
+pub struct GovernorConfig {
+    /// Engage degradation when queue depth reaches this
+    /// (`usize::MAX` disables the depth trigger).
+    pub engage_depth: usize,
+    /// Resume requires depth at or below this (≤ `engage_depth`).
+    pub resume_depth: usize,
+    /// Engage when the published rolling p99 exceeds this many µs
+    /// (0 disables the latency trigger).
+    pub engage_p99_us: u64,
+    /// Resume requires the p99 at or below this (≤ `engage_p99_us`).
+    pub resume_p99_us: u64,
+    /// The signal must stay below the resume thresholds this long
+    /// before the governor returns to [`GovernorState::Calm`].
+    pub min_calm: Duration,
+    /// A published p99 older than this counts as zero — without the
+    /// expiry, the last loaded p99 (frozen once answers stop) would
+    /// pin the governor degraded forever.
+    pub p99_ttl: Duration,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            engage_depth: 64,
+            resume_depth: 8,
+            engage_p99_us: 0,
+            resume_p99_us: 0,
+            min_calm: Duration::from_millis(100),
+            p99_ttl: Duration::from_secs(1),
+        }
+    }
+}
+
+impl GovernorConfig {
+    /// Depth-only governor with an engage/resume hysteresis band.
+    pub fn depth(engage_depth: usize, resume_depth: usize) -> Self {
+        GovernorConfig {
+            engage_depth,
+            resume_depth: resume_depth.min(engage_depth),
+            ..GovernorConfig::default()
+        }
+    }
+}
+
+#[derive(Debug)]
+struct GovState {
+    degraded: bool,
+    /// Set when the signal first drops below the resume thresholds
+    /// while degraded; cleared whenever it rises above them again.
+    calm_since: Option<Instant>,
+    /// Service-rate sampling: last poll instant and answered count.
+    rate_at: Instant,
+    rate_answered: u64,
+}
+
+/// Hysteresis governor between the exact and the overpacked fabric,
+/// polled by [`super::AdaptiveBackend`] once per batch. Degradation
+/// engages immediately when the [`LoadSignal`] crosses an engage
+/// threshold; resuming requires the signal below the (lower) resume
+/// thresholds continuously for `min_calm` — degrade fast, recover
+/// deliberately, never flap.
+#[derive(Debug)]
+pub struct RoutingGovernor {
+    cfg: GovernorConfig,
+    signal: LoadSignal,
+    state: Mutex<GovState>,
+    /// Lock-free mirror of the degraded flag for gauges.
+    degraded: AtomicBool,
+    /// Calm → Degraded transitions.
+    engagements: AtomicU64,
+    /// Requests routed to the approximate fabric *because* the
+    /// governor was degraded (tolerant traffic that would have run
+    /// exact under a calm signal).
+    degraded_routed: AtomicU64,
+    /// Observed service rate, milli-answers per second.
+    service_rate_milli: AtomicU64,
+}
+
+impl RoutingGovernor {
+    /// New governor (starts [`GovernorState::Calm`]) with its own
+    /// fresh [`LoadSignal`].
+    pub fn new(cfg: GovernorConfig) -> Self {
+        RoutingGovernor {
+            cfg,
+            signal: LoadSignal::new(),
+            state: Mutex::new(GovState {
+                degraded: false,
+                calm_since: None,
+                rate_at: Instant::now(),
+                rate_answered: 0,
+            }),
+            degraded: AtomicBool::new(false),
+            engagements: AtomicU64::new(0),
+            degraded_routed: AtomicU64::new(0),
+            service_rate_milli: AtomicU64::new(0),
+        }
+    }
+
+    /// The configuration in effect.
+    pub fn config(&self) -> &GovernorConfig {
+        &self.cfg
+    }
+
+    /// The load signal this governor reads (the coordinator publishes
+    /// into it; see [`super::ServerConfig::governor`]).
+    pub fn signal(&self) -> &LoadSignal {
+        &self.signal
+    }
+
+    /// One routing decision from the current signal, updating the
+    /// hysteresis state. Cheap enough to call per batch: two atomic
+    /// reads plus one short critical section.
+    pub fn poll(&self) -> GovernorState {
+        let depth = self.signal.queue_depth();
+        let p99 = if self.signal.p99_age() >= self.cfg.p99_ttl {
+            0 // stale: no recent answers, the last loaded value is dead
+        } else {
+            self.signal.p99_us()
+        };
+        let now = Instant::now();
+        let mut st = self.state.lock().unwrap();
+
+        // Service-rate gauge: answers per second between polls, sampled
+        // at most every 10 ms so a per-batch poll stays noise-free.
+        let answered = self.signal.answered();
+        let dt = now.duration_since(st.rate_at);
+        if dt >= Duration::from_millis(10) {
+            let per_s = (answered - st.rate_answered) as f64 / dt.as_secs_f64();
+            self.service_rate_milli.store((per_s * 1000.0) as u64, Ordering::Relaxed);
+            st.rate_at = now;
+            st.rate_answered = answered;
+        }
+
+        // A disabled trigger (depth: usize::MAX, p99: 0) participates in
+        // neither engagement nor resume-blocking.
+        let depth_enabled = self.cfg.engage_depth != usize::MAX;
+        let depth_engage = depth_enabled && depth >= self.cfg.engage_depth;
+        let depth_above_resume = depth_enabled && depth > self.cfg.resume_depth;
+        let p99_engage = self.cfg.engage_p99_us != 0 && p99 > self.cfg.engage_p99_us;
+        let p99_above_resume = self.cfg.engage_p99_us != 0 && p99 > self.cfg.resume_p99_us;
+        if st.degraded {
+            if depth_above_resume || p99_above_resume {
+                st.calm_since = None;
+            } else {
+                let since = *st.calm_since.get_or_insert(now);
+                if now.duration_since(since) >= self.cfg.min_calm {
+                    st.degraded = false;
+                    st.calm_since = None;
+                }
+            }
+        } else if depth_engage || p99_engage {
+            st.degraded = true;
+            st.calm_since = None;
+            self.engagements.fetch_add(1, Ordering::Relaxed);
+        }
+        self.degraded.store(st.degraded, Ordering::Release);
+        if st.degraded {
+            GovernorState::Degraded
+        } else {
+            GovernorState::Calm
+        }
+    }
+
+    /// Is the governor currently degraded? (Gauge: reflects the last
+    /// [`RoutingGovernor::poll`], lock-free.)
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.load(Ordering::Acquire)
+    }
+
+    /// Calm → Degraded transitions so far.
+    pub fn engagements(&self) -> u64 {
+        self.engagements.load(Ordering::Relaxed)
+    }
+
+    /// Requests routed to the approximate fabric because the governor
+    /// was degraded.
+    pub fn degraded_routed(&self) -> u64 {
+        self.degraded_routed.load(Ordering::Relaxed)
+    }
+
+    /// Record `n` requests degraded to the approximate fabric (called
+    /// by the routing backend).
+    pub fn note_degraded_routed(&self, n: u64) {
+        self.degraded_routed.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Observed service rate (answers per second), sampled by
+    /// [`RoutingGovernor::poll`].
+    pub fn service_rate_per_s(&self) -> f64 {
+        self.service_rate_milli.load(Ordering::Relaxed) as f64 / 1000.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn depth_cfg(engage: usize, resume: usize, min_calm: Duration) -> GovernorConfig {
+        GovernorConfig { min_calm, ..GovernorConfig::depth(engage, resume) }
+    }
+
+    #[test]
+    fn load_signal_gauges_roundtrip() {
+        let s = LoadSignal::new();
+        assert_eq!(s.queue_depth(), 0);
+        assert_eq!(s.p99_us(), 0);
+        s.publish_depth(17);
+        s.publish_answer(4200);
+        assert_eq!(s.queue_depth(), 17);
+        assert_eq!(s.p99_us(), 4200);
+        assert_eq!(s.answered(), 1);
+        assert!(s.p99_age() < Duration::from_secs(1), "just published");
+    }
+
+    /// Signal alternating *inside* the hysteresis band (between resume
+    /// and engage) never changes state — from either side.
+    #[test]
+    fn hysteresis_band_holds_without_flapping() {
+        let g = RoutingGovernor::new(depth_cfg(8, 2, Duration::ZERO));
+        // Calm side: depth below engage_depth never engages.
+        for _ in 0..20 {
+            g.signal().publish_depth(7);
+            assert_eq!(g.poll(), GovernorState::Calm);
+            g.signal().publish_depth(3);
+            assert_eq!(g.poll(), GovernorState::Calm);
+        }
+        assert_eq!(g.engagements(), 0);
+        // Engage once, then alternate inside the band: depth above
+        // resume_depth never resumes.
+        g.signal().publish_depth(9);
+        assert_eq!(g.poll(), GovernorState::Degraded);
+        for _ in 0..20 {
+            g.signal().publish_depth(3);
+            assert_eq!(g.poll(), GovernorState::Degraded);
+            g.signal().publish_depth(7);
+            assert_eq!(g.poll(), GovernorState::Degraded);
+        }
+        assert_eq!(g.engagements(), 1, "one engagement, no oscillation");
+        // Fully calm signal with zero dwell resumes immediately.
+        g.signal().publish_depth(1);
+        assert_eq!(g.poll(), GovernorState::Calm);
+        assert!(!g.is_degraded());
+        assert_eq!(g.engagements(), 1);
+    }
+
+    /// Load alternating *around* both thresholds per poll must not
+    /// oscillate routing per batch: the calm dwell holds the degraded
+    /// state until the signal is continuously quiet.
+    #[test]
+    fn calm_dwell_prevents_per_batch_oscillation() {
+        let g = RoutingGovernor::new(depth_cfg(8, 2, Duration::from_millis(40)));
+        g.signal().publish_depth(9);
+        assert_eq!(g.poll(), GovernorState::Degraded);
+        // Alternate high/low every poll (a bursty open loop): each high
+        // sample clears the calm dwell, so the state never flaps.
+        for _ in 0..50 {
+            g.signal().publish_depth(1);
+            assert_eq!(g.poll(), GovernorState::Degraded);
+            g.signal().publish_depth(9);
+            assert_eq!(g.poll(), GovernorState::Degraded);
+        }
+        assert_eq!(g.engagements(), 1, "re-engagement never fired: state never left");
+        // Continuously quiet: still degraded inside the dwell window...
+        g.signal().publish_depth(1);
+        assert_eq!(g.poll(), GovernorState::Degraded);
+        // ...and calm once the dwell elapses.
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(g.poll(), GovernorState::Calm);
+        assert_eq!(g.engagements(), 1);
+    }
+
+    /// A p99 frozen at its last loaded value (answers stopped) expires
+    /// after `p99_ttl` instead of pinning the governor degraded — the
+    /// governor-side twin of the admission-window lockout fix.
+    #[test]
+    fn stale_p99_expires_and_releases() {
+        let cfg = GovernorConfig {
+            engage_depth: usize::MAX,
+            resume_depth: 0,
+            engage_p99_us: 1000,
+            resume_p99_us: 500,
+            min_calm: Duration::ZERO,
+            p99_ttl: Duration::from_millis(50),
+        };
+        let g = RoutingGovernor::new(cfg);
+        g.signal().publish_answer(5000);
+        assert_eq!(g.poll(), GovernorState::Degraded, "p99 5000 > engage 1000");
+        // No further answers: the gauge stays 5000 but goes stale.
+        assert_eq!(g.poll(), GovernorState::Degraded, "fresh gauge still holds");
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(g.poll(), GovernorState::Calm, "stale p99 counts as zero");
+        assert!(!g.is_degraded());
+    }
+
+    #[test]
+    fn degraded_routed_counter_accumulates() {
+        let g = RoutingGovernor::new(GovernorConfig::default());
+        assert_eq!(g.degraded_routed(), 0);
+        g.note_degraded_routed(5);
+        g.note_degraded_routed(3);
+        assert_eq!(g.degraded_routed(), 8);
+    }
+}

@@ -10,7 +10,9 @@ use crate::util::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
-/// Log₂-bucketed latency histogram (1 µs … ~1 s), lock-free.
+/// Log₂-bucketed latency histogram, lock-free. Bucket `i` spans
+/// `[2^i, 2^{i+1})` µs; with 30 buckets the range is 1 µs … 2³⁰ µs
+/// (≈ 18 minutes), with everything slower clamped into the top bucket.
 #[derive(Debug, Default)]
 pub struct LatencyHistogram {
     /// bucket i counts latencies in [2^i, 2^{i+1}) µs; 30 buckets.
@@ -132,6 +134,16 @@ pub struct MetricsSnapshot {
     /// Gauge: queue depth at snapshot time (filled by the coordinator;
     /// 0 when the snapshot is taken from a bare [`Metrics`]).
     pub queue_depth: u64,
+    /// Requests routed to the degraded (overpacked) fabric by the
+    /// routing governor (filled by the coordinator from its governor,
+    /// if any; 0 from a bare [`Metrics`]).
+    pub degraded_routed: u64,
+    /// Gauge: 1 while the routing governor is degraded, else 0 (filled
+    /// by the coordinator; 0 from a bare [`Metrics`]).
+    pub governor_degraded: u64,
+    /// Times the routing governor engaged degraded routing (filled by
+    /// the coordinator; 0 from a bare [`Metrics`]).
+    pub governor_engagements: u64,
     /// Batches executed.
     pub batches: u64,
     /// Mean batch size.
@@ -176,6 +188,9 @@ impl Metrics {
             workers_alive: self.workers_alive.load(Ordering::Relaxed),
             inflight: self.inflight.load(Ordering::Relaxed),
             queue_depth: 0,
+            degraded_routed: 0,
+            governor_degraded: 0,
+            governor_engagements: 0,
             batches,
             mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
             mean_latency_us: self.latency.mean_us(),
@@ -213,6 +228,9 @@ impl MetricsSnapshot {
             ("workers_alive", self.workers_alive.into()),
             ("inflight", self.inflight.into()),
             ("queue_depth", self.queue_depth.into()),
+            ("degraded_routed", self.degraded_routed.into()),
+            ("governor_degraded", self.governor_degraded.into()),
+            ("governor_engagements", self.governor_engagements.into()),
             ("batches", self.batches.into()),
             ("mean_batch", self.mean_batch.into()),
             ("mean_latency_us", self.mean_latency_us.into()),
@@ -268,6 +286,18 @@ mod tests {
         assert!(j.contains("\"failed\":2"), "{j}");
         assert!(j.contains("\"deadline_exceeded\":1"), "{j}");
         assert!(j.contains("\"p99_queue_wait_us\":"), "{j}");
+    }
+
+    #[test]
+    fn governor_gauges_zero_in_bare_snapshot() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.degraded_routed, 0);
+        assert_eq!(s.governor_degraded, 0);
+        assert_eq!(s.governor_engagements, 0);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"degraded_routed\":0"), "{j}");
+        assert!(j.contains("\"governor_degraded\":0"), "{j}");
+        assert!(j.contains("\"governor_engagements\":0"), "{j}");
     }
 
     #[test]

@@ -25,10 +25,18 @@
 //! load before the queue saturates. [`FaultInjectingBackend`] provides
 //! the seeded chaos substrate the soak tests drive all of this with. See
 //! `ARCHITECTURE.md` § "Failure domains & the request lifecycle".
+//!
+//! Load-aware precision scaling: the coordinator publishes a
+//! [`LoadSignal`] (queue depth, rolling p99, service rate) that a
+//! [`RoutingGovernor`] turns — with engage/resume hysteresis — into a
+//! degrade decision the [`AdaptiveBackend`] uses to route tolerant
+//! traffic onto the overpacked approximate fabric under pressure. See
+//! `ARCHITECTURE.md` § "Load-aware precision scaling".
 
 mod adaptive;
 mod batcher;
 mod fault;
+mod load;
 mod metrics;
 mod server;
 mod spiking;
@@ -36,6 +44,7 @@ mod spiking;
 pub use adaptive::{AdaptiveBackend, BudgetChannelPolicy, PrecisionClass, PrecisionPolicy};
 pub use batcher::{BatcherConfig, DynamicBatcher, Entry, PoppedBatch, PushError};
 pub use fault::{FaultInjectingBackend, FaultSpec, InjectedFault};
+pub use load::{GovernorConfig, GovernorState, LoadSignal, RoutingGovernor};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use server::{
     AdmissionPolicy, Coordinator, CoordinatorHandle, InferenceBackend, Outcome, PackedNnBackend,

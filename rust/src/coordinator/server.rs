@@ -13,6 +13,7 @@
 //! ARCHITECTURE.md, "Failure domains & the request lifecycle".
 
 use super::batcher::{BatcherConfig, DynamicBatcher, Entry, PushError};
+use super::load::RoutingGovernor;
 use super::metrics::{Metrics, MetricsSnapshot};
 use crate::gemm::DspOpStats;
 use crate::nn::{ExecMode, NnModel, QuantMlp};
@@ -221,7 +222,17 @@ pub struct AdmissionPolicy {
     pub shed_p99_us: u64,
     /// Disengage once the rolling p99 is back at or below this.
     pub resume_p99_us: u64,
+    /// Samples in the rolling p99 window expire after this long. Shed
+    /// responses are answered on the submit path and never touch the
+    /// window, so without expiry a policy shedding 100% of traffic
+    /// would freeze the window above `resume_p99_us` and shed forever
+    /// once the queue drained (the p99 lockout).
+    pub sample_ttl: Duration,
 }
+
+/// Default rolling-window sample expiry (see
+/// [`AdmissionPolicy::sample_ttl`]).
+const DEFAULT_SAMPLE_TTL: Duration = Duration::from_secs(1);
 
 impl AdmissionPolicy {
     /// No early shedding: only the hard `queue_cap` applies.
@@ -231,6 +242,7 @@ impl AdmissionPolicy {
             resume_depth: usize::MAX,
             shed_p99_us: 0,
             resume_p99_us: 0,
+            sample_ttl: DEFAULT_SAMPLE_TTL,
         }
     }
 
@@ -241,6 +253,7 @@ impl AdmissionPolicy {
             resume_depth: resume_depth.min(shed_depth),
             shed_p99_us: 0,
             resume_p99_us: 0,
+            sample_ttl: DEFAULT_SAMPLE_TTL,
         }
     }
 }
@@ -291,6 +304,13 @@ pub struct ServerConfig {
     /// Early load-shedding thresholds (default: disabled — only the hard
     /// `queue_cap` sheds).
     pub admission: AdmissionPolicy,
+    /// Optional routing governor shared with an
+    /// [`super::AdaptiveBackend`]: when set, the coordinator publishes
+    /// its load signal (queue depth on every submit/pop, rolling p99 and
+    /// answer count on every answer) into the governor's
+    /// [`super::LoadSignal`], and the governor's gauges are folded into
+    /// [`Coordinator::metrics`] snapshots.
+    pub governor: Option<Arc<RoutingGovernor>>,
 }
 
 impl Default for ServerConfig {
@@ -300,43 +320,85 @@ impl Default for ServerConfig {
             workers: 2,
             dsp_budget: 128,
             admission: AdmissionPolicy::disabled(),
+            governor: None,
         }
     }
 }
 
 type Job = (Request, SyncSender<Response>);
 
+/// Interior of [`RollingLatency`], guarded by one mutex so the cached
+/// quantile can never go stale relative to the samples it summarizes.
+#[derive(Debug)]
+struct LatencyWindow {
+    /// `(recorded_at, latency_us)` in arrival order.
+    samples: VecDeque<(Instant, u64)>,
+    /// Quantile memoized since the last mutation.
+    cached_p99: u64,
+    /// Has the window changed since `cached_p99` was computed?
+    dirty: bool,
+}
+
 /// Rolling window of recent enqueue-inclusive latencies (µs): the
 /// admission policy's p99 signal. A cumulative histogram can never
 /// recover after a spike, so hysteresis needs a windowed quantile.
+///
+/// Two properties keep the signal honest and cheap:
+/// - samples **expire** after `ttl`, so a window frozen by 100% shedding
+///   (shed answers never record) cannot hold the p99 above the resume
+///   threshold forever — the lockout bugfix;
+/// - the quantile is **cached** between mutations, so the per-submit
+///   admission check is a lock + a flag test, not a copy-and-sort of the
+///   whole window.
 #[derive(Debug)]
 struct RollingLatency {
-    samples: Mutex<VecDeque<u64>>,
+    window: Mutex<LatencyWindow>,
     cap: usize,
+    ttl: Duration,
 }
 
 impl RollingLatency {
-    fn new(cap: usize) -> Self {
-        RollingLatency { samples: Mutex::new(VecDeque::with_capacity(cap)), cap }
+    fn new(cap: usize, ttl: Duration) -> Self {
+        RollingLatency {
+            window: Mutex::new(LatencyWindow {
+                samples: VecDeque::with_capacity(cap),
+                cached_p99: 0,
+                dirty: false,
+            }),
+            cap,
+            ttl,
+        }
     }
 
     fn record(&self, us: u64) {
-        let mut s = self.samples.lock().unwrap();
-        if s.len() == self.cap {
-            s.pop_front();
+        let mut w = self.window.lock().unwrap();
+        if w.samples.len() == self.cap {
+            w.samples.pop_front();
         }
-        s.push_back(us);
+        w.samples.push_back((Instant::now(), us));
+        w.dirty = true;
     }
 
     fn p99_us(&self) -> u64 {
-        let s = self.samples.lock().unwrap();
-        if s.is_empty() {
-            return 0;
+        let mut w = self.window.lock().unwrap();
+        let cutoff = Instant::now().checked_sub(self.ttl);
+        if let Some(cutoff) = cutoff {
+            while w.samples.front().is_some_and(|(at, _)| *at < cutoff) {
+                w.samples.pop_front();
+                w.dirty = true;
+            }
         }
-        let mut v: Vec<u64> = s.iter().copied().collect();
-        drop(s);
-        v.sort_unstable();
-        v[((v.len() - 1) as f64 * 0.99) as usize]
+        if w.dirty {
+            w.cached_p99 = if w.samples.is_empty() {
+                0
+            } else {
+                let mut v: Vec<u64> = w.samples.iter().map(|(_, us)| *us).collect();
+                v.sort_unstable();
+                v[((v.len() - 1) as f64 * 0.99) as usize]
+            };
+            w.dirty = false;
+        }
+        w.cached_p99
     }
 }
 
@@ -349,6 +411,9 @@ struct Shared {
     shedding: AtomicBool,
     /// Rolling enqueue-inclusive latency window feeding the p99 trigger.
     recent: RollingLatency,
+    /// Routing governor whose [`super::LoadSignal`] the coordinator
+    /// feeds (none → no load publication, zero overhead).
+    governor: Option<Arc<RoutingGovernor>>,
 }
 
 impl Shared {
@@ -450,7 +515,8 @@ impl Coordinator {
             metrics: Metrics::default(),
             admission: cfg.admission,
             shedding: AtomicBool::new(false),
-            recent: RollingLatency::new(256),
+            recent: RollingLatency::new(256, cfg.admission.sample_ttl),
+            governor: cfg.governor.clone(),
         });
         let shutdown = Arc::new(AtomicBool::new(false));
         let (exit_tx, exit_rx) = std::sync::mpsc::channel();
@@ -488,10 +554,11 @@ impl Coordinator {
     }
 
     /// Snapshot the metrics (queue-depth gauge filled from the live
-    /// batcher).
+    /// batcher, governor gauges from the attached governor, if any).
     pub fn metrics(&self) -> MetricsSnapshot {
         let mut s = self.shared.metrics.snapshot();
         s.queue_depth = self.shared.queue.depth() as u64;
+        fill_governor_gauges(&mut s, self.shared.governor.as_deref());
         s
     }
 
@@ -507,7 +574,19 @@ impl Coordinator {
     /// supervisor.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.stop();
-        self.shared.metrics.snapshot()
+        let mut s = self.shared.metrics.snapshot();
+        fill_governor_gauges(&mut s, self.shared.governor.as_deref());
+        s
+    }
+}
+
+/// Copy the routing governor's gauges into a snapshot (no-op without a
+/// governor: the snapshot keeps its zeroed defaults).
+fn fill_governor_gauges(s: &mut MetricsSnapshot, governor: Option<&RoutingGovernor>) {
+    if let Some(g) = governor {
+        s.degraded_routed = g.degraded_routed();
+        s.governor_degraded = u64::from(g.is_degraded());
+        s.governor_engagements = g.engagements();
     }
 }
 
@@ -534,6 +613,9 @@ impl CoordinatorHandle {
         match self.shared.queue.push_with_deadline((req, tx), deadline) {
             Ok(()) => {
                 self.shared.metrics.accepted.fetch_add(1, Ordering::Relaxed);
+                if let Some(g) = &self.shared.governor {
+                    g.signal().publish_depth(self.shared.queue.depth());
+                }
                 Ok(rx)
             }
             Err((PushError::Full, (req, tx))) => {
@@ -706,6 +788,9 @@ fn answer(shared: &Shared, entry: Entry<Job>, outcome: Outcome, exec_start: Opti
     let latency = now.duration_since(entry.enqueued_at);
     m.latency.record(latency);
     shared.recent.record(latency.as_micros().max(1) as u64);
+    if let Some(g) = &shared.governor {
+        g.signal().publish_answer(shared.recent.p99_us());
+    }
     if let Some(s) = exec_start {
         m.service.record(now.duration_since(s));
     }
@@ -719,6 +804,9 @@ fn worker_loop(shared: &Shared, backend: &dyn InferenceBackend) -> WorkerFate {
     while let Some(popped) = shared.queue.pop_batch() {
         let total = popped.batch.len() + popped.expired.len();
         m.inflight.fetch_add(total as u64, Ordering::Relaxed);
+        if let Some(g) = &shared.governor {
+            g.signal().publish_depth(shared.queue.depth());
+        }
 
         // Deadline sweep first: expired entries are answered without
         // spending any DSP cycles on them.
@@ -852,7 +940,8 @@ mod tests {
             metrics: Metrics::default(),
             admission: AdmissionPolicy::disabled(),
             shedding: AtomicBool::new(false),
-            recent: RollingLatency::new(16),
+            recent: RollingLatency::new(16, DEFAULT_SAMPLE_TTL),
+            governor: None,
         });
         let handle = CoordinatorHandle { shared: shared.clone() };
         let img = vec![0.5f32; 4];
@@ -879,7 +968,8 @@ mod tests {
             metrics: Metrics::default(),
             admission: AdmissionPolicy::depth(4, 1),
             shedding: AtomicBool::new(false),
-            recent: RollingLatency::new(16),
+            recent: RollingLatency::new(16, DEFAULT_SAMPLE_TTL),
+            governor: None,
         });
         let handle = CoordinatorHandle { shared: shared.clone() };
         let img = vec![0.5f32; 4];
@@ -917,7 +1007,7 @@ mod tests {
 
     #[test]
     fn rolling_latency_window_recovers() {
-        let r = RollingLatency::new(8);
+        let r = RollingLatency::new(8, DEFAULT_SAMPLE_TTL);
         for _ in 0..8 {
             r.record(10_000);
         }
@@ -926,6 +1016,69 @@ mod tests {
             r.record(10);
         }
         assert!(r.p99_us() <= 10, "window forgets the spike — hysteresis can release");
+    }
+
+    /// Samples past `sample_ttl` expire even when nothing new is
+    /// recorded: the p99 signal decays to 0 instead of freezing at the
+    /// spike value.
+    #[test]
+    fn rolling_latency_samples_expire_after_ttl() {
+        let r = RollingLatency::new(8, Duration::from_millis(40));
+        for _ in 0..8 {
+            r.record(50_000);
+        }
+        assert!(r.p99_us() >= 50_000, "spike visible while fresh");
+        std::thread::sleep(Duration::from_millis(60));
+        assert_eq!(r.p99_us(), 0, "idle window expires instead of freezing");
+    }
+
+    /// Regression for the p99 shed lockout: shed responses are answered
+    /// on the submit path and never touch `RollingLatency`, so without
+    /// sample expiry a policy driven into 100% shedding would hold the
+    /// frozen p99 above `resume_p99_us` forever. With expiry, stopping
+    /// the load lets the window drain and admission resume.
+    #[test]
+    fn p99_shed_lockout_releases_after_ttl() {
+        let shared = Arc::new(Shared {
+            queue: DynamicBatcher::new(BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+            }),
+            metrics: Metrics::default(),
+            admission: AdmissionPolicy {
+                shed_depth: usize::MAX,
+                resume_depth: usize::MAX,
+                shed_p99_us: 1_000,
+                resume_p99_us: 1_000,
+                sample_ttl: Duration::from_millis(50),
+            },
+            shedding: AtomicBool::new(false),
+            recent: RollingLatency::new(16, Duration::from_millis(50)),
+            governor: None,
+        });
+        let handle = CoordinatorHandle { shared: shared.clone() };
+        let img = vec![0.5f32; 4];
+        // A latency spike pushes the rolling p99 over the threshold...
+        for _ in 0..16 {
+            shared.recent.record(50_000);
+        }
+        let rx = handle.submit(Request::new(0, img.clone())).unwrap();
+        assert_eq!(
+            rx.recv().unwrap().outcome,
+            Outcome::Shed(ShedReason::LatencyP99),
+            "p99 threshold engages"
+        );
+        assert!(handle.shedding());
+        // ...and because the shed answer never recorded a sample, the
+        // window would stay frozen forever without expiry. Wait out the
+        // TTL: the stale spike drains and admission resumes.
+        std::thread::sleep(Duration::from_millis(70));
+        let _rx = handle.submit(Request::new(1, img)).unwrap();
+        assert!(!handle.shedding(), "lockout released once stale samples expired");
+        let m = shared.metrics.snapshot();
+        assert_eq!(m.accepted, 1, "id 1 admitted after the TTL");
+        assert_eq!(m.shed, 1, "id 0 shed during the spike");
     }
 
     #[test]

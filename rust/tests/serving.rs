@@ -9,8 +9,9 @@
 
 use dsp_packing::coordinator::{
     AdaptiveBackend, AdmissionPolicy, BatcherConfig, BudgetChannelPolicy, Coordinator,
-    FaultInjectingBackend, FaultSpec, InferenceBackend, InjectedFault, Outcome, PackedNnBackend,
-    PrecisionClass, PrecisionPolicy, Request, RetryPolicy, ServerConfig, ShedReason,
+    FaultInjectingBackend, FaultSpec, GovernorConfig, GovernorState, InferenceBackend,
+    InjectedFault, Outcome, PackedNnBackend, PrecisionClass, PrecisionPolicy, Request,
+    RetryPolicy, RoutingGovernor, ServerConfig, ShedReason,
 };
 use dsp_packing::correct::Correction;
 use dsp_packing::gemm::{DspOpStats, GemmEngine};
@@ -690,6 +691,141 @@ fn admission_policy_sheds_before_queue_cap() {
     assert_eq!(m.shed, 1, "the admission policy shed id 4");
     assert_eq!(m.rejected, 0, "the hard cap was never reached");
     assert_eq!(m.completed, 5);
+}
+
+/// A backend with a fixed per-batch service delay — the deterministic
+/// way to push the rolling p99 over a latency threshold.
+struct SlowBackend {
+    delay: Duration,
+}
+
+impl InferenceBackend for SlowBackend {
+    fn infer(&self, batch: &[Vec<f32>]) -> Result<(Vec<usize>, DspOpStats)> {
+        std::thread::sleep(self.delay);
+        Ok((vec![0; batch.len()], DspOpStats::default()))
+    }
+
+    fn name(&self) -> &str {
+        "slow"
+    }
+}
+
+/// Regression for the p99 shed lockout: a latency burst drives the
+/// admission policy into p99 shedding; shed answers never record into
+/// the rolling window, so without time-based sample expiry the frozen
+/// p99 would stay above `resume_p99_us` and the coordinator would shed
+/// forever. With expiry, admission resumes once the burst ends.
+#[test]
+fn p99_shedding_resumes_after_burst_ends() {
+    let coord = Coordinator::start(
+        Arc::new(SlowBackend { delay: Duration::from_millis(5) }),
+        ServerConfig {
+            batcher: BatcherConfig {
+                max_batch: 1,
+                max_wait: Duration::from_micros(100),
+                queue_cap: 64,
+            },
+            workers: 1,
+            admission: AdmissionPolicy {
+                shed_depth: usize::MAX,
+                resume_depth: usize::MAX,
+                shed_p99_us: 1_000,
+                resume_p99_us: 1_000,
+                sample_ttl: Duration::from_millis(100),
+            },
+            ..ServerConfig::default()
+        },
+    );
+    let handle = coord.handle();
+    // Burst: sequential infers each take ~5 ms end to end, pushing the
+    // rolling p99 far above the 1 ms shed threshold.
+    for id in 0..8 {
+        assert!(handle.infer(Request::new(id, vec![0.0])).unwrap().outcome.is_ok());
+    }
+    let resp = handle.submit(Request::new(8, vec![0.0])).unwrap().recv().unwrap();
+    assert_eq!(resp.outcome, Outcome::Shed(ShedReason::LatencyP99), "p99 threshold engages");
+    assert!(handle.shedding());
+    // Burst over: nothing records new samples (the shed above certainly
+    // did not). Once the stale ones expire, admission must resume.
+    std::thread::sleep(Duration::from_millis(150));
+    let resp = handle.infer(Request::new(9, vec![0.0])).unwrap();
+    assert!(resp.outcome.is_ok(), "admission resumed after the burst: {resp:?}");
+    assert!(!handle.shedding());
+    let m = coord.shutdown();
+    assert_eq!(m.shed, 1, "id 8 shed during the burst");
+    assert_eq!(m.completed, 9);
+}
+
+/// While the governor is degraded, tolerant traffic moves to the
+/// overpacked fabric but `Exact`-class requests keep their bit-exactness
+/// guarantee: their served classes equal a fault-free exact-mode run.
+#[test]
+fn governed_exact_requests_bit_identical_while_degraded() {
+    let ds = data::synthetic(32, 3, 64, 0.12, 31);
+    let governor = Arc::new(RoutingGovernor::new(GovernorConfig::depth(8, 2)));
+    let specs = [StageSpec::conv3x3(4).with_pool(2, 2).unwrap(), StageSpec::conv3x3(6)];
+    let cnn = QuantCnn::deep(&ds, 1, &specs, 4, 4, 17).unwrap();
+    let exact_engine =
+        GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap();
+    let dense_engine =
+        GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore).unwrap();
+    let backend = AdaptiveBackend::new(
+        cnn,
+        ExecMode::Packed(exact_engine),
+        ExecMode::Packed(dense_engine),
+        BudgetChannelPolicy { threshold: 0.5 },
+        true,
+    )
+    .with_governor(governor.clone());
+    // Fault-free exact reference over the whole dataset.
+    let (reference, _) =
+        backend.exact_model().classify_images(&ds.images, &ExecMode::Exact).unwrap();
+    // Queue pressure: the governor degrades tolerant routing.
+    governor.signal().publish_depth(64);
+    let batch: Vec<Vec<f32>> = ds
+        .images
+        .iter()
+        .enumerate()
+        .map(|(i, img)| with_budget(img, if i % 2 == 0 { 0.0 } else { 1.0 }))
+        .collect();
+    let (preds, _) = backend.infer(&batch).unwrap();
+    assert!(governor.is_degraded(), "depth 64 engages at threshold 8");
+    assert_eq!(backend.dense_routed.load(Ordering::Relaxed), 16, "tolerant half degraded");
+    assert_eq!(governor.degraded_routed(), 16);
+    for (i, (p, r)) in preds.iter().zip(&reference).enumerate() {
+        if i % 2 == 0 {
+            assert_eq!(p, r, "Exact-class request {i} bit-identical while degraded");
+        }
+    }
+}
+
+/// The coordinator publishes its load signal into an attached governor
+/// and folds the governor's gauges into every metrics snapshot.
+#[test]
+fn governor_gauges_surface_in_coordinator_metrics() {
+    let ds = data::synthetic(16, 4, 64, 0.15, 7);
+    let (backend, _) = packed_backend(&ds);
+    let governor = Arc::new(RoutingGovernor::new(GovernorConfig::depth(4, 0)));
+    // Engage via a direct poll (the adaptive backend's job in a full
+    // deployment) so the gauge fill path is what's under test.
+    governor.signal().publish_depth(64);
+    assert_eq!(governor.poll(), GovernorState::Degraded);
+    governor.note_degraded_routed(3);
+    let coord = Coordinator::start(
+        backend,
+        ServerConfig { governor: Some(governor.clone()), ..ServerConfig::default() },
+    );
+    let handle = coord.handle();
+    for (i, img) in ds.images.iter().take(4).enumerate() {
+        assert!(handle.infer(Request::new(i as u64, img.clone())).unwrap().outcome.is_ok());
+    }
+    assert!(governor.signal().answered() >= 4, "answers published into the shared signal");
+    let m = coord.metrics();
+    assert_eq!(m.governor_degraded, 1);
+    assert_eq!(m.governor_engagements, 1);
+    assert_eq!(m.degraded_routed, 3);
+    let m = coord.shutdown();
+    assert_eq!(m.degraded_routed, 3, "shutdown snapshot carries the gauges too");
 }
 
 // --- seeded chaos soak --------------------------------------------------
