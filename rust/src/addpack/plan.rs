@@ -33,6 +33,7 @@
 use super::{AdderLane, AdditionPacking};
 use crate::bits::{mask, wrap_unsigned};
 use crate::dsp48::{Dsp48E2, DspInputs, Opmode, SimdMode};
+use crate::gemm::abft;
 use crate::{Error, Result};
 use std::sync::Arc;
 
@@ -58,6 +59,12 @@ pub struct AccumPlan {
     /// Per-bank input templates (ALU-only accumulate; execution patches
     /// the A:B operand only).
     templates: Vec<DspInputs>,
+    /// Integrity digest over the layout tables, stamped at build time so
+    /// the resident plan can be scrubbed while cached (see
+    /// [`crate::gemm::abft`]).
+    digest: u64,
+    /// Which digest function stamped [`AccumPlan::digest`].
+    digest_kind: abft::DigestKind,
 }
 
 impl AccumPlan {
@@ -80,7 +87,77 @@ impl AccumPlan {
             })
             .collect();
         let templates = vec![DspInputs::default(); n_banks];
-        Ok(Arc::new(AccumPlan { packing, n_lanes, n_banks, offsets, widths, spans, templates }))
+        let mut plan = AccumPlan {
+            packing,
+            n_lanes,
+            n_banks,
+            offsets,
+            widths,
+            spans,
+            templates,
+            digest: 0,
+            digest_kind: abft::policy().digest,
+        };
+        plan.digest = plan.compute_digest(plan.digest_kind);
+        Ok(Arc::new(plan))
+    }
+
+    /// The integrity digest stamped at build time.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// Recompute the layout-table digest and compare it to the build-time
+    /// stamp. `false` means a resident bit flipped since planning.
+    pub fn verify_digest(&self) -> bool {
+        self.compute_digest(self.digest_kind) == self.digest
+    }
+
+    fn compute_digest(&self, kind: abft::DigestKind) -> u64 {
+        let mut d = abft::Digest::new(kind);
+        d.update(self.n_lanes as u64);
+        d.update(self.n_banks as u64);
+        d.update_all(self.offsets.iter().map(|&v| u64::from(v)));
+        d.update_all(self.widths.iter().map(|&v| u64::from(v)));
+        d.update_all(self.spans.iter().map(|&v| u64::from(v)));
+        d.finish()
+    }
+
+    /// A copy of this plan with bits flipped in its layout tables (the
+    /// SEU injection hook for integrity tests): `f` maps each `u32` word
+    /// index — sequential across `offsets`, then `widths`, then `spans` —
+    /// to a bit to flip (`bit % 32`), or `None` to leave the word alone.
+    /// The digest stamp is copied **stale**, so
+    /// [`AccumPlan::verify_digest`] on the copy reports the corruption.
+    /// Returns the copy and the number of flips applied.
+    pub fn with_flipped_bits(
+        &self,
+        mut f: impl FnMut(u64) -> Option<u32>,
+    ) -> (Arc<AccumPlan>, usize) {
+        let mut offsets = self.offsets.clone();
+        let mut widths = self.widths.clone();
+        let mut spans = self.spans.clone();
+        let mut flips = 0usize;
+        let mut idx = 0u64;
+        for word in offsets.iter_mut().chain(widths.iter_mut()).chain(spans.iter_mut()) {
+            if let Some(bit) = f(idx) {
+                *word ^= 1u32 << (bit % 32);
+                flips += 1;
+            }
+            idx += 1;
+        }
+        let plan = AccumPlan {
+            packing: self.packing.clone(),
+            n_lanes: self.n_lanes,
+            n_banks: self.n_banks,
+            offsets,
+            widths,
+            spans,
+            templates: self.templates.clone(),
+            digest: self.digest,
+            digest_kind: self.digest_kind,
+        };
+        (Arc::new(plan), flips)
     }
 
     /// The validated lane layout.
@@ -455,6 +532,21 @@ mod tests {
         let vn = narrow.lane_values(&plan, &sn);
         assert_eq!(vn, wide.lane_values(&plan, &sw));
         assert_eq!(vn[1], 7, "reloaded lane reads the reload value");
+    }
+
+    #[test]
+    fn digest_detects_layout_flips() {
+        let plan = AccumPlan::new(AdditionPacking::table3(), 5).unwrap();
+        assert!(plan.verify_digest());
+        // No flip requested → clean copy still verifies.
+        let (clean, flips) = plan.with_flipped_bits(|_| None);
+        assert_eq!(flips, 0);
+        assert!(clean.verify_digest());
+        // One bit anywhere in the layout tables breaks the stale stamp.
+        let (bad, flips) = plan.with_flipped_bits(|idx| (idx == 3).then_some(40));
+        assert_eq!(flips, 1);
+        assert!(!bad.verify_digest());
+        assert_eq!(bad.digest(), plan.digest(), "stamp is copied stale");
     }
 
     #[test]

@@ -3,6 +3,7 @@
 use super::parse::{parse, Sections};
 use crate::coordinator::{BatcherConfig, GovernorConfig, ServerConfig};
 use crate::correct::Correction;
+use crate::gemm::abft::{DigestKind, IntegrityPolicy};
 use crate::packing::PackingConfig;
 use crate::{Error, Result};
 use std::time::Duration;
@@ -107,6 +108,11 @@ pub struct AppConfig {
     /// between the server config and the adaptive backend. `None` (no
     /// section) means no load-aware precision scaling.
     pub governor: Option<GovernorConfig>,
+    /// Silent-data-corruption defense knobs, when an `[integrity]`
+    /// section is present: the caller installs them via
+    /// [`crate::gemm::abft::set_policy`]. `None` (no section) keeps the
+    /// built-in [`IntegrityPolicy::default`].
+    pub integrity: Option<IntegrityPolicy>,
     /// Dataset: number of classes.
     pub classes: usize,
     /// Dataset: flattened image dimension.
@@ -122,6 +128,7 @@ impl Default for AppConfig {
             correction: Correction::FullRoundHalfUp,
             server: ServerConfig::default(),
             governor: None,
+            integrity: None,
             classes: 4,
             dim: 64,
             seed: 7,
@@ -208,6 +215,27 @@ impl AppConfig {
                 gc.p99_ttl = Duration::from_millis(v as u64);
             }
             cfg.governor = Some(gc);
+        }
+        if let Some(i) = sections.get("integrity") {
+            let mut ip = IntegrityPolicy::default();
+            if let Some(v) = i.get("abft").and_then(|v| v.as_bool()) {
+                ip.abft = v;
+            }
+            // Negative strides clamp to 0; 0 disables the strided
+            // scrubber (explicit `scrub_pass` sweeps still verify).
+            if let Some(v) = i.get("scrub_stride").and_then(|v| v.as_int()) {
+                ip.scrub_stride = v.max(0) as u64;
+            }
+            if let Some(v) = i.get("digest").and_then(|v| v.as_str()) {
+                ip.digest = match v {
+                    "fnv64" => DigestKind::Fnv64,
+                    "crc32" => DigestKind::Crc32,
+                    other => {
+                        return Err(Error::Config(format!("unknown digest kind {other:?}")))
+                    }
+                };
+            }
+            cfg.integrity = Some(ip);
         }
         if let Some(d) = sections.get("data") {
             if let Some(v) = d.get("classes").and_then(|v| v.as_int()) {
@@ -309,6 +337,38 @@ seed = 3
         assert_eq!(c.governor.unwrap().resume_depth, 16, "resume clamped to engage");
     }
 
+    /// Mirrors `governor_section_defaults_and_clamps` for `[integrity]`:
+    /// no section → `None` (built-in policy), a bare section → defaults,
+    /// negative strides clamp to 0 (strided scrubbing disabled), and a
+    /// full document round-trips every knob.
+    #[test]
+    fn integrity_section_defaults_and_clamps() {
+        assert!(AppConfig::from_str("[server]\nworkers = 2").unwrap().integrity.is_none());
+        let ip = AppConfig::from_str("[integrity]\n").unwrap().integrity.unwrap();
+        assert_eq!(ip, IntegrityPolicy::default(), "bare section takes the defaults");
+        assert!(ip.abft);
+        let ip = AppConfig::from_str("[integrity]\nscrub_stride = -5")
+            .unwrap()
+            .integrity
+            .unwrap();
+        assert_eq!(ip.scrub_stride, 0, "negative stride clamps to disabled");
+        let doc = r#"
+[integrity]
+abft = false
+scrub_stride = 64
+digest = "crc32"
+"#;
+        let ip = AppConfig::from_str(doc).unwrap().integrity.unwrap();
+        assert!(!ip.abft);
+        assert_eq!(ip.scrub_stride, 64);
+        assert_eq!(ip.digest, DigestKind::Crc32);
+        let ip = AppConfig::from_str("[integrity]\ndigest = \"fnv64\"")
+            .unwrap()
+            .integrity
+            .unwrap();
+        assert_eq!(ip.digest, DigestKind::Fnv64);
+    }
+
     #[test]
     fn parses_intn() {
         let doc = r#"
@@ -331,6 +391,7 @@ delta = 0
     fn rejects_unknown_names() {
         assert!(AppConfig::from_str("[packing]\nkind = \"int3\"").is_err());
         assert!(AppConfig::from_str("[packing]\ncorrection = \"magic\"").is_err());
+        assert!(AppConfig::from_str("[integrity]\ndigest = \"md5\"").is_err());
     }
 
     #[test]

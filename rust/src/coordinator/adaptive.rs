@@ -111,7 +111,13 @@ impl<P: PrecisionPolicy, M: NnModel + Clone> AdaptiveBackend<P, M> {
         strip_last_feature: bool,
     ) -> Self {
         let label = model.label("adaptive");
-        let dense_model = model.clone();
+        let mut dense_model = model.clone();
+        // Fabric replicas see identical inputs, so their im2col patch
+        // unrolls are identical too: alias one patch buffer per conv
+        // stage across the replicas instead of unrolling per fabric
+        // (reused patches are bit-identical to rebuilt ones; a no-op for
+        // models without patch state).
+        dense_model.share_patch_buffers(&model);
         let exact_err = model.prepare(&exact_mode).err();
         let dense_err = dense_model.prepare(&dense_mode).err();
         AdaptiveBackend {
@@ -390,6 +396,48 @@ mod tests {
             .is_err(),
             "try_new surfaces the same failure eagerly"
         );
+    }
+
+    /// The two fabric replicas of a conv model alias one im2col patch
+    /// buffer per stage: warming the exact fabric leaves the dense
+    /// replica's patches already resident, and both fabrics still
+    /// classify bit-identically to unshared oracle replicas (patch reuse
+    /// == rebuild).
+    #[test]
+    fn fabric_replicas_share_patch_buffers() {
+        use crate::nn::QuantCnn;
+        let ds = data::synthetic(16, 4, 64, 0.15, 7);
+        let cnn = QuantCnn::new(&ds, 4, 4, 4, 17).unwrap();
+        let (exact_mode, dense_mode) = fabric_modes();
+        let backend = AdaptiveBackend::new(
+            cnn,
+            exact_mode.clone(),
+            dense_mode.clone(),
+            BudgetChannelPolicy { threshold: 0.5 },
+            true,
+        );
+        // Warm only the exact fabric (every request budget-0).
+        let exact_batch: Vec<Vec<f32>> =
+            ds.images.iter().map(|img| with_budget(img, 0.0)).collect();
+        let (exact_preds, _) = backend.infer(&exact_batch).unwrap();
+        // The dense replica never ran, but a scrub of it finds: its conv
+        // plan + head plan (pre-planned at construction) AND the patch
+        // slot — resident because it aliases the exact replica's buffer.
+        assert_eq!(
+            backend.dense_model().scrub_pass(),
+            3,
+            "shared patch slot resident without a dense forward"
+        );
+        // Both fabrics classify bit-identically to fresh, unshared
+        // replicas (same seed → same weights).
+        let oracle = QuantCnn::new(&ds, 4, 4, 4, 17).unwrap();
+        let (want_exact, _) = oracle.classify_images(&ds.images, &exact_mode).unwrap();
+        assert_eq!(exact_preds, want_exact, "exact fabric unaffected by sharing");
+        let dense_batch: Vec<Vec<f32>> =
+            ds.images.iter().map(|img| with_budget(img, 1.0)).collect();
+        let (dense_preds, _) = backend.infer(&dense_batch).unwrap();
+        let (want_dense, _) = oracle.classify_images(&ds.images, &dense_mode).unwrap();
+        assert_eq!(dense_preds, want_dense, "dense fabric reuses patches bit-identically");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! batch formation — expired entries are returned separately, exactly
 //! once, instead of wasting execution cycles inside a batch.
 
+use crate::util::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -123,7 +124,7 @@ impl<T> DynamicBatcher<T> {
         item: T,
         deadline: Option<Instant>,
     ) -> Result<(), (PushError, T)> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         if inner.closed {
             return Err((PushError::Closed, item));
         }
@@ -140,7 +141,7 @@ impl<T> DynamicBatcher<T> {
 
     /// Current queue depth.
     pub fn depth(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
+        lock_unpoisoned(&self.inner).queue.len()
     }
 
     /// Pop the next batch: blocks until at least one request is queued,
@@ -152,7 +153,7 @@ impl<T> DynamicBatcher<T> {
     /// [`PoppedBatch::expired`]; they do not count toward `max_batch`, so
     /// a burst of expired entries never starves live ones of batch slots.
     pub fn pop_batch(&self) -> Option<PoppedBatch<T>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_unpoisoned(&self.inner);
         loop {
             if !inner.queue.is_empty() {
                 break;
@@ -160,7 +161,7 @@ impl<T> DynamicBatcher<T> {
             if inner.closed {
                 return None;
             }
-            inner = self.cv.wait(inner).unwrap();
+            inner = wait_unpoisoned(&self.cv, inner);
         }
         // Wait for the batch to fill or the oldest request to expire.
         let oldest = inner.queue.front().expect("nonempty").enqueued_at;
@@ -171,7 +172,7 @@ impl<T> DynamicBatcher<T> {
                 break;
             }
             let (guard, timeout) =
-                self.cv.wait_timeout(inner, wait_deadline - now).unwrap();
+                wait_timeout_unpoisoned(&self.cv, inner, wait_deadline - now);
             inner = guard;
             if timeout.timed_out() {
                 break;
@@ -208,7 +209,7 @@ impl<T> DynamicBatcher<T> {
 
     /// Close the batcher: pending items still drain, new pushes fail.
     pub fn close(&self) {
-        self.inner.lock().unwrap().closed = true;
+        lock_unpoisoned(&self.inner).closed = true;
         self.cv.notify_all();
     }
 }
@@ -399,6 +400,33 @@ mod tests {
         accepted.sort_unstable();
         assert_eq!(accepted, drained, "no accepted item lost, no shed item surfaced");
         assert!(shed > 0, "tiny queue under a hot producer must shed");
+    }
+
+    /// A panic while holding the queue mutex poisons it; the batcher must
+    /// keep serving (the queue state itself is consistent — the panic
+    /// merely unwound through the guard). Serving threads already survive
+    /// worker panics via the coordinator's shield; this pins the lower
+    /// layer: push, depth, pop and close all recover the poisoned lock.
+    #[test]
+    fn poisoned_queue_mutex_keeps_serving() {
+        let b = Arc::new(DynamicBatcher::new(quick_cfg(4, 64)));
+        b.push(1u32).unwrap();
+        let poisoner = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                let _guard = b.inner.lock().unwrap();
+                panic!("poison the queue mutex");
+            })
+        };
+        assert!(poisoner.join().is_err(), "the poisoning thread must have panicked");
+        assert!(b.inner.lock().is_err(), "mutex is actually poisoned");
+
+        assert!(b.push(2).is_ok(), "push recovers the poisoned lock");
+        assert_eq!(b.depth(), 2);
+        assert_eq!(items(b.pop_batch().unwrap()), vec![1, 2]);
+        b.close();
+        assert_eq!(b.push(3), Err((PushError::Closed, 3)));
+        assert!(b.pop_batch().is_none());
     }
 
     #[test]

@@ -15,11 +15,87 @@
 
 use super::server::InferenceBackend;
 use crate::gemm::DspOpStats;
-use crate::util::Rng;
+use crate::util::{lock_unpoisoned, Rng};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
+
+/// Environment variable that pins the [`BitFlipInjector`] seed for a
+/// replay (`DSP_PACKING_SEU_SEED=0x…` or decimal).
+pub const SEU_SEED_ENV: &str = "DSP_PACKING_SEU_SEED";
+
+/// Seeded single-event-upset injector: decides, as a pure function of
+/// `(seed, slot id, word index)`, whether a given resident word takes a
+/// bit flip and which bit. Feeding its [`BitFlipInjector::flip_for`] into
+/// the corruption hooks (`DenseLayer::corrupt_cached_plan`,
+/// `Conv2dLayer::corrupt_patches`, `SpikingDense::corrupt_plan`,
+/// `PackedWeights::with_flipped_bits`) simulates radiation-style upsets
+/// in resident state; the integrity machinery ([`crate::gemm::abft`])
+/// must then detect and correct every value-affecting flip.
+///
+/// Determinism contract: same `(seed, rate)` → same flip set, regardless
+/// of call order, thread timing, or how many other injectors exist. A
+/// failing chaos soak therefore replays exactly by exporting its seed via
+/// [`SEU_SEED_ENV`] (the same protocol the differential fuzzer uses).
+#[derive(Debug, Clone, Copy)]
+pub struct BitFlipInjector {
+    seed: u64,
+    rate: f64,
+}
+
+impl BitFlipInjector {
+    /// An injector flipping bits at `rate` (probability per word) under
+    /// `seed`.
+    pub fn new(seed: u64, rate: f64) -> Self {
+        BitFlipInjector { seed, rate }
+    }
+
+    /// An injector seeded from [`SEU_SEED_ENV`] when set (hex with `0x`
+    /// prefix or decimal), else from `fallback` — the replay hook for
+    /// soak failures.
+    pub fn from_env(fallback: u64, rate: f64) -> Self {
+        let seed = std::env::var(SEU_SEED_ENV)
+            .ok()
+            .and_then(|v| {
+                let v = v.trim();
+                match v.strip_prefix("0x").or_else(|| v.strip_prefix("0X")) {
+                    Some(hex) => u64::from_str_radix(hex, 16).ok(),
+                    None => v.parse().ok(),
+                }
+            })
+            .unwrap_or(fallback);
+        BitFlipInjector::new(seed, rate)
+    }
+
+    /// The seed in effect (print this on failure for replay).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The per-word flip probability.
+    pub fn rate(&self) -> f64 {
+        self.rate
+    }
+
+    /// The flip assigned to word `word` of slot `slot`, if any: `Some(bit)`
+    /// flips that bit (callers reduce it mod their word width). Pure in
+    /// `(seed, slot, word)` — same FNV-1a-then-draw construction as
+    /// [`FaultInjectingBackend::fault_for`].
+    pub fn flip_for(&self, slot: u64, word: u64) -> Option<u32> {
+        let mut h = 0xcbf2_9ce4_8422_2325u64 ^ self.seed;
+        for b in slot.to_le_bytes().into_iter().chain(word.to_le_bytes()) {
+            h ^= u64::from(b);
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        let mut r = Rng::new(h);
+        if r.f64() < self.rate {
+            Some(r.range_i64(0, 63) as u32)
+        } else {
+            None
+        }
+    }
+}
 
 /// What the injector does to a request it poisons.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -141,7 +217,7 @@ impl<B: InferenceBackend> InferenceBackend for FaultInjectingBackend<B> {
         // Latency spike first (drawn per batch, lock released before any
         // injected panic can unwind through it).
         let spike = {
-            let mut rng = self.delay_rng.lock().unwrap();
+            let mut rng = lock_unpoisoned(&self.delay_rng);
             self.spec.delay_rate > 0.0 && rng.chance(self.spec.delay_rate)
         };
         if spike {
@@ -269,5 +345,37 @@ mod tests {
         let s = spec(1).scaled(10.0);
         assert!(s.error_rate <= 0.45 && s.panic_rate <= 0.45);
         assert!(s.error_rate + s.panic_rate < 1.0, "healthy requests must remain");
+    }
+
+    #[test]
+    fn bit_flips_are_pure_in_seed_slot_and_word() {
+        let a = BitFlipInjector::new(0x5EED, 0.05);
+        let b = BitFlipInjector::new(0x5EED, 0.05);
+        let flips: Vec<_> =
+            (0..2048).map(|w| a.flip_for(3, w)).collect();
+        // Same (seed, slot, word) → same decision, on any injector copy,
+        // in any order.
+        for (w, &expect) in flips.iter().enumerate().rev() {
+            assert_eq!(b.flip_for(3, w as u64), expect);
+        }
+        let hits = flips.iter().flatten().count();
+        assert!(hits > 40 && hits < 210, "≈5% of 2048 words flip: {hits}");
+        assert!(flips.iter().flatten().all(|&bit| bit < 64), "bit index fits a wide word");
+        // Different seed or slot moves the flip set.
+        let c = BitFlipInjector::new(0x5EEE, 0.05);
+        assert_ne!(
+            (0..2048).map(|w| c.flip_for(3, w)).collect::<Vec<_>>(),
+            flips
+        );
+        assert_ne!(
+            (0..2048).map(|w| a.flip_for(4, w)).collect::<Vec<_>>(),
+            flips
+        );
+    }
+
+    #[test]
+    fn zero_rate_injector_never_flips() {
+        let inj = BitFlipInjector::new(99, 0.0);
+        assert!((0..4096).all(|w| inj.flip_for(0, w).is_none()));
     }
 }

@@ -26,6 +26,7 @@
 //!   frozen at its last loaded value (no answers → no new samples)
 //!   must not pin the governor in the degraded state forever.
 
+use crate::util::lock_unpoisoned;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -237,7 +238,7 @@ impl RoutingGovernor {
             self.signal.p99_us()
         };
         let now = Instant::now();
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock_unpoisoned(&self.state);
 
         // Service-rate gauge: answers per second between polls, sampled
         // at most every 10 ms so a per-batch poll stays noise-free.

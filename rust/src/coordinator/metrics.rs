@@ -144,6 +144,19 @@ pub struct MetricsSnapshot {
     /// Times the routing governor engaged degraded routing (filled by
     /// the coordinator; 0 from a bare [`Metrics`]).
     pub governor_engagements: u64,
+    /// Silent-data-corruption events detected (ABFT mismatch or digest
+    /// scrub failure; filled by the coordinator from
+    /// [`crate::gemm::abft::counters`]; 0 from a bare [`Metrics`]).
+    pub sdc_detected: u64,
+    /// Detected corruptions corrected by evict-and-replan (filled by the
+    /// coordinator; 0 from a bare [`Metrics`]).
+    pub sdc_corrected: u64,
+    /// Explicit model-wide scrub passes performed (filled by the
+    /// coordinator; 0 from a bare [`Metrics`]).
+    pub scrub_passes: u64,
+    /// Resident slots digest-verified, strided + explicit (filled by the
+    /// coordinator; 0 from a bare [`Metrics`]).
+    pub slots_scrubbed: u64,
     /// Batches executed.
     pub batches: u64,
     /// Mean batch size.
@@ -191,6 +204,10 @@ impl Metrics {
             degraded_routed: 0,
             governor_degraded: 0,
             governor_engagements: 0,
+            sdc_detected: 0,
+            sdc_corrected: 0,
+            scrub_passes: 0,
+            slots_scrubbed: 0,
             batches,
             mean_batch: if batches == 0 { 0.0 } else { batched as f64 / batches as f64 },
             mean_latency_us: self.latency.mean_us(),
@@ -231,6 +248,10 @@ impl MetricsSnapshot {
             ("degraded_routed", self.degraded_routed.into()),
             ("governor_degraded", self.governor_degraded.into()),
             ("governor_engagements", self.governor_engagements.into()),
+            ("sdc_detected", self.sdc_detected.into()),
+            ("sdc_corrected", self.sdc_corrected.into()),
+            ("scrub_passes", self.scrub_passes.into()),
+            ("slots_scrubbed", self.slots_scrubbed.into()),
             ("batches", self.batches.into()),
             ("mean_batch", self.mean_batch.into()),
             ("mean_latency_us", self.mean_latency_us.into()),
@@ -298,6 +319,20 @@ mod tests {
         assert!(j.contains("\"degraded_routed\":0"), "{j}");
         assert!(j.contains("\"governor_degraded\":0"), "{j}");
         assert!(j.contains("\"governor_engagements\":0"), "{j}");
+    }
+
+    #[test]
+    fn integrity_counters_zero_in_bare_snapshot() {
+        let s = Metrics::default().snapshot();
+        assert_eq!(s.sdc_detected, 0);
+        assert_eq!(s.sdc_corrected, 0);
+        assert_eq!(s.scrub_passes, 0);
+        assert_eq!(s.slots_scrubbed, 0);
+        let j = s.to_json().to_string();
+        assert!(j.contains("\"sdc_detected\":0"), "{j}");
+        assert!(j.contains("\"sdc_corrected\":0"), "{j}");
+        assert!(j.contains("\"scrub_passes\":0"), "{j}");
+        assert!(j.contains("\"slots_scrubbed\":0"), "{j}");
     }
 
     #[test]

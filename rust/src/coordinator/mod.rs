@@ -26,6 +26,15 @@
 //! the seeded chaos substrate the soak tests drive all of this with. See
 //! `ARCHITECTURE.md` § "Failure domains & the request lifecycle".
 //!
+//! Silent-data-corruption defense: resident state (packed weight planes,
+//! im2col patch snapshots, accumulate plans) is digest-stamped at build
+//! and scrubbed on cache hits, and every guarded GEMM is checked by an
+//! ABFT checksum identity ([`crate::gemm::abft`]). [`BitFlipInjector`] is
+//! the seeded SEU substrate the integrity soak drives that machinery
+//! with; the detection/correction counters surface in
+//! [`MetricsSnapshot`]. See `ARCHITECTURE.md` § "Silent-data-corruption
+//! defense".
+//!
 //! Load-aware precision scaling: the coordinator publishes a
 //! [`LoadSignal`] (queue depth, rolling p99, service rate) that a
 //! [`RoutingGovernor`] turns — with engage/resume hysteresis — into a
@@ -43,7 +52,7 @@ mod spiking;
 
 pub use adaptive::{AdaptiveBackend, BudgetChannelPolicy, PrecisionClass, PrecisionPolicy};
 pub use batcher::{BatcherConfig, DynamicBatcher, Entry, PoppedBatch, PushError};
-pub use fault::{FaultInjectingBackend, FaultSpec, InjectedFault};
+pub use fault::{BitFlipInjector, FaultInjectingBackend, FaultSpec, InjectedFault, SEU_SEED_ENV};
 pub use load::{GovernorConfig, GovernorState, LoadSignal, RoutingGovernor};
 pub use metrics::{LatencyHistogram, Metrics, MetricsSnapshot};
 pub use server::{

@@ -17,7 +17,7 @@ use super::load::RoutingGovernor;
 use super::metrics::{Metrics, MetricsSnapshot};
 use crate::gemm::DspOpStats;
 use crate::nn::{ExecMode, NnModel, QuantMlp};
-use crate::util::Rng;
+use crate::util::{lock_unpoisoned, Rng};
 use crate::{Error, Result};
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -371,7 +371,7 @@ impl RollingLatency {
     }
 
     fn record(&self, us: u64) {
-        let mut w = self.window.lock().unwrap();
+        let mut w = lock_unpoisoned(&self.window);
         if w.samples.len() == self.cap {
             w.samples.pop_front();
         }
@@ -380,7 +380,7 @@ impl RollingLatency {
     }
 
     fn p99_us(&self) -> u64 {
-        let mut w = self.window.lock().unwrap();
+        let mut w = lock_unpoisoned(&self.window);
         let cutoff = Instant::now().checked_sub(self.ttl);
         if let Some(cutoff) = cutoff {
             while w.samples.front().is_some_and(|(at, _)| *at < cutoff) {
@@ -559,6 +559,7 @@ impl Coordinator {
         let mut s = self.shared.metrics.snapshot();
         s.queue_depth = self.shared.queue.depth() as u64;
         fill_governor_gauges(&mut s, self.shared.governor.as_deref());
+        fill_integrity_counters(&mut s);
         s
     }
 
@@ -576,6 +577,7 @@ impl Coordinator {
         self.stop();
         let mut s = self.shared.metrics.snapshot();
         fill_governor_gauges(&mut s, self.shared.governor.as_deref());
+        fill_integrity_counters(&mut s);
         s
     }
 }
@@ -588,6 +590,18 @@ fn fill_governor_gauges(s: &mut MetricsSnapshot, governor: Option<&RoutingGovern
         s.governor_degraded = u64::from(g.is_degraded());
         s.governor_engagements = g.engagements();
     }
+}
+
+/// Copy the process-wide silent-data-corruption counters into a snapshot
+/// (the defense runs below the coordinator, in the GEMM/cache layers —
+/// see [`crate::gemm::abft`] — so the coordinator surfaces, rather than
+/// owns, these).
+fn fill_integrity_counters(s: &mut MetricsSnapshot) {
+    let c = crate::gemm::abft::counters();
+    s.sdc_detected = c.sdc_detected;
+    s.sdc_corrected = c.sdc_corrected;
+    s.scrub_passes = c.scrub_passes;
+    s.slots_scrubbed = c.slots_scrubbed;
 }
 
 impl Drop for Coordinator {

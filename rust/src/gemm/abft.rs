@@ -1,0 +1,538 @@
+//! Silent-data-corruption (SDC) defense: ABFT checksums, resident-state
+//! digests, and the process-wide integrity policy/counters.
+//!
+//! The whole point of the plan/execute split is keeping packed weight
+//! planes *resident* across batches — exactly the state a single-event
+//! upset silently corrupts. A flipped bit in a resident
+//! [`PackedWeights`] plane produces a wrong answer that still reports
+//! `Ok`: the one failure mode the serving layer's typed outcomes cannot
+//! see. Two complementary guards close it:
+//!
+//! * **ABFT checksums** (algorithm-based fault tolerance, Huang & Abraham
+//!   style): at plan time every weight tile is extended with a checksum
+//!   row `s[ct][k] = Σ_{j ∈ tile ct} W[k][j]` (held alongside the planes,
+//!   never packed into them). After `execute` assembles `C = A·W`, the
+//!   identity `Σ_j C[i][j] = Σ_k A[i][k] · Σ_ct s[ct][k]` must hold for
+//!   every row `i` when the datapath computes exact products — an O(M·N)
+//!   check on an O(M·K·N) product. A mismatch localizes to the first
+//!   failing column tile and surfaces as [`Error::Integrity`], which the
+//!   layer above corrects by evicting and bit-identically re-planning
+//!   the pinned slot. Arming is gated on exact datapaths only
+//!   (`FullRoundHalfUp`, δ ≥ 0): approximate corrections violate the
+//!   identity by design and are guarded by digests alone.
+//! * **Digest scrubbing**: every resident artifact (weight planes here;
+//!   im2col patch buffers and §VII accumulate plans in their own
+//!   modules) is stamped with a digest of its stored words at creation.
+//!   Cache hit paths re-verify the digest every `scrub_stride`-th use —
+//!   an amortized scrubber over exactly the state that stays resident —
+//!   and models expose an explicit `scrub_pass()` that sweeps every slot
+//!   at once. A mismatch evicts the slot; the rebuild is bit-identical
+//!   by the plan determinism the conformance suite pins.
+//!
+//! Detections and corrections are counted in process-wide
+//! [`counters`] (`sdc_detected` / `sdc_corrected` / `scrub_passes` /
+//! `slots_scrubbed`), folded into every coordinator metrics snapshot.
+//! The seeded SEU injector driving the chaos soak lives in
+//! [`crate::coordinator::BitFlipInjector`].
+
+use super::matrix::MatI32;
+use super::plan::{PackedWeights, PlaneStore};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
+
+/// Digest algorithm stamped on resident state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DigestKind {
+    /// FNV-1a, 64-bit: two ops per byte, the default.
+    Fnv64,
+    /// CRC-32 (reflected, polynomial `0xEDB88320`), bitwise: stronger
+    /// burst-error guarantees at a higher per-word cost.
+    Crc32,
+}
+
+impl DigestKind {
+    fn to_u8(self) -> u8 {
+        match self {
+            DigestKind::Fnv64 => 0,
+            DigestKind::Crc32 => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> DigestKind {
+        match v {
+            1 => DigestKind::Crc32,
+            _ => DigestKind::Fnv64,
+        }
+    }
+}
+
+/// Streaming digest over `u64` words (the canonical unit resident state
+/// is fed in as: `i64`s cast, `i128`s split into two halves, `i32`s
+/// widened). Shared by every resident-artifact kind, including
+/// [`crate::addpack::AccumPlan`] outside this module.
+#[derive(Debug, Clone)]
+pub struct Digest {
+    kind: DigestKind,
+    state: u64,
+}
+
+impl Digest {
+    /// FNV-1a 64-bit offset basis.
+    const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    /// FNV-1a 64-bit prime.
+    const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    /// Fresh digest state for `kind`.
+    pub fn new(kind: DigestKind) -> Digest {
+        let state = match kind {
+            DigestKind::Fnv64 => Self::FNV_OFFSET,
+            DigestKind::Crc32 => 0xFFFF_FFFF,
+        };
+        Digest { kind, state }
+    }
+
+    /// Absorb one word.
+    pub fn update(&mut self, word: u64) {
+        match self.kind {
+            DigestKind::Fnv64 => {
+                for b in word.to_le_bytes() {
+                    self.state ^= u64::from(b);
+                    self.state = self.state.wrapping_mul(Self::FNV_PRIME);
+                }
+            }
+            DigestKind::Crc32 => {
+                let mut crc = self.state as u32;
+                for b in word.to_le_bytes() {
+                    crc ^= u32::from(b);
+                    for _ in 0..8 {
+                        crc = (crc >> 1) ^ (0xEDB8_8320 & 0u32.wrapping_sub(crc & 1));
+                    }
+                }
+                self.state = u64::from(crc);
+            }
+        }
+    }
+
+    /// Absorb a sequence of words.
+    pub fn update_all(&mut self, words: impl IntoIterator<Item = u64>) {
+        for w in words {
+            self.update(w);
+        }
+    }
+
+    /// The digest value.
+    pub fn finish(&self) -> u64 {
+        match self.kind {
+            DigestKind::Fnv64 => self.state,
+            DigestKind::Crc32 => u64::from(!(self.state as u32)),
+        }
+    }
+}
+
+/// The process-wide integrity policy: what the SDC defense does by
+/// default. Set from the `[integrity]` config section via [`set_policy`]
+/// (or left at the defaults: ABFT armed, scrub every 16th use, FNV-64).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct IntegrityPolicy {
+    /// Verify the ABFT checksum identity after every exact-datapath
+    /// `execute`. Off → detection falls back to digest scrubbing alone.
+    pub abft: bool,
+    /// Verify a resident slot's digest every `scrub_stride`-th cache
+    /// hit. `0` disables the amortized scrubber (explicit `scrub_pass()`
+    /// calls still verify).
+    pub scrub_stride: u64,
+    /// Digest algorithm stamped on newly created resident state.
+    pub digest: DigestKind,
+}
+
+impl Default for IntegrityPolicy {
+    fn default() -> Self {
+        IntegrityPolicy { abft: true, scrub_stride: 16, digest: DigestKind::Fnv64 }
+    }
+}
+
+static ABFT_ON: AtomicBool = AtomicBool::new(true);
+static SCRUB_STRIDE: AtomicU64 = AtomicU64::new(16);
+static DIGEST_KIND: AtomicU8 = AtomicU8::new(0);
+
+/// Install a new process-wide [`IntegrityPolicy`]. Affects when
+/// corruption is *detected*, never what correct executions compute —
+/// outputs are bit-identical under every policy.
+pub fn set_policy(p: IntegrityPolicy) {
+    ABFT_ON.store(p.abft, Ordering::Relaxed);
+    SCRUB_STRIDE.store(p.scrub_stride, Ordering::Relaxed);
+    DIGEST_KIND.store(p.digest.to_u8(), Ordering::Relaxed);
+}
+
+/// The process-wide [`IntegrityPolicy`] currently in effect.
+pub fn policy() -> IntegrityPolicy {
+    IntegrityPolicy {
+        abft: ABFT_ON.load(Ordering::Relaxed),
+        scrub_stride: SCRUB_STRIDE.load(Ordering::Relaxed),
+        digest: DigestKind::from_u8(DIGEST_KIND.load(Ordering::Relaxed)),
+    }
+}
+
+static SDC_DETECTED: AtomicU64 = AtomicU64::new(0);
+static SDC_CORRECTED: AtomicU64 = AtomicU64::new(0);
+static SCRUB_PASSES: AtomicU64 = AtomicU64::new(0);
+static SLOTS_SCRUBBED: AtomicU64 = AtomicU64::new(0);
+
+/// Point-in-time copy of the process-wide integrity counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct IntegrityCounters {
+    /// Corruption detections (ABFT mismatch or digest mismatch).
+    pub sdc_detected: u64,
+    /// Detections neutralized by evict-and-replan (the slot's next use
+    /// rebuilds bit-identically) or a successful ABFT re-execute.
+    pub sdc_corrected: u64,
+    /// Explicit `scrub_pass()` sweeps completed.
+    pub scrub_passes: u64,
+    /// Resident slots whose digest was verified (strided or explicit).
+    pub slots_scrubbed: u64,
+}
+
+/// Snapshot the process-wide integrity counters.
+pub fn counters() -> IntegrityCounters {
+    IntegrityCounters {
+        sdc_detected: SDC_DETECTED.load(Ordering::Relaxed),
+        sdc_corrected: SDC_CORRECTED.load(Ordering::Relaxed),
+        scrub_passes: SCRUB_PASSES.load(Ordering::Relaxed),
+        slots_scrubbed: SLOTS_SCRUBBED.load(Ordering::Relaxed),
+    }
+}
+
+/// Count one corruption detection.
+pub fn note_sdc_detected() {
+    SDC_DETECTED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one neutralized corruption (see [`IntegrityCounters`]).
+pub fn note_sdc_corrected() {
+    SDC_CORRECTED.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count one completed explicit scrub sweep.
+pub fn note_scrub_pass() {
+    SCRUB_PASSES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Count `n` digest verifications of resident slots.
+pub fn note_slots_scrubbed(n: u64) {
+    SLOTS_SCRUBBED.fetch_add(n, Ordering::Relaxed);
+}
+
+/// Should a cache hit path verify its slot's digest on this use? One
+/// shared stride decision: `uses` is the slot's monotonically increasing
+/// hit count.
+pub fn scrub_due(uses: u64) -> bool {
+    let stride = SCRUB_STRIDE.load(Ordering::Relaxed);
+    stride > 0 && uses % stride == 0
+}
+
+impl PackedWeights {
+    /// The digest stamped on the planes at plan time.
+    pub fn digest(&self) -> u64 {
+        self.digest
+    }
+
+    /// The digest algorithm the stamp was computed with.
+    pub fn digest_kind(&self) -> DigestKind {
+        self.digest_kind
+    }
+
+    /// Compute the digest of the resident state (plane words, raw
+    /// operands, C words, ABFT checksums) under `kind`.
+    pub(super) fn compute_digest(&self, kind: DigestKind) -> u64 {
+        let mut d = Digest::new(kind);
+        match &self.planes {
+            PlaneStore::Wide { words, raw, c_words } => {
+                for v in words.iter().chain(raw).chain(c_words) {
+                    d.update(*v as u64);
+                    d.update((*v >> 64) as u64);
+                }
+            }
+            PlaneStore::Narrow { words, raw, c_words } => {
+                d.update_all(words.iter().chain(raw).chain(c_words).map(|&v| v as u64));
+            }
+        }
+        d.update_all(self.checksums.iter().map(|&v| v as u64));
+        d.finish()
+    }
+
+    /// Re-digest the resident planes and compare against the stamp:
+    /// `false` means the resident state no longer matches what `plan`
+    /// built — evict and re-plan.
+    pub fn verify_digest(&self) -> bool {
+        self.compute_digest(self.digest_kind) == self.digest
+    }
+
+    /// A copy of this plan with bits flipped in its resident words —
+    /// the SEU injection hook for the chaos soak and the integrity
+    /// bench. `f` maps each resident word index to `Some(bit)` to flip
+    /// (taken modulo the word width) or `None` to leave it alone; the
+    /// digest stamp is deliberately left stale so scrubbing can detect
+    /// the damage. Returns the corrupted copy and the number of flips.
+    pub fn with_flipped_bits(
+        &self,
+        mut f: impl FnMut(u64) -> Option<u32>,
+    ) -> (PackedWeights, usize) {
+        let mut out = self.clone();
+        let mut flips = 0usize;
+        let mut idx = 0u64;
+        match &mut out.planes {
+            PlaneStore::Wide { words, raw, c_words } => {
+                for v in words.iter_mut().chain(raw).chain(c_words) {
+                    if let Some(bit) = f(idx) {
+                        *v ^= 1i128 << (bit % 128);
+                        flips += 1;
+                    }
+                    idx += 1;
+                }
+            }
+            PlaneStore::Narrow { words, raw, c_words } => {
+                for v in words.iter_mut().chain(raw).chain(c_words) {
+                    if let Some(bit) = f(idx) {
+                        *v ^= 1i64 << (bit % 64);
+                        flips += 1;
+                    }
+                    idx += 1;
+                }
+            }
+        }
+        (out, flips)
+    }
+}
+
+/// Compute the ABFT checksum rows for a planned weight matrix: for every
+/// (column tile, reduction step), the sum of the logical weights the
+/// tile's plane word encodes (zero-padded edge columns contribute 0).
+/// Called by `plan` inside its encode loop's value scratch.
+pub(super) fn checksum_of_tile_row(w_vals: &[i128]) -> i64 {
+    let s: i128 = w_vals.iter().sum();
+    s as i64
+}
+
+/// Is the ABFT identity check armed for this engine/plan pair? Exact
+/// datapaths only: `FullRoundHalfUp` with δ ≥ 0 computes every product
+/// exactly (pinned against the exact oracle by the conformance and fuzz
+/// suites), so the checksum identity holds and any violation is
+/// corruption. Approximate corrections (C-port, MR restore) violate it
+/// by design and rely on digest scrubbing instead.
+pub(super) fn abft_armed(weights: &PackedWeights) -> bool {
+    ABFT_ON.load(Ordering::Relaxed)
+        && matches!(weights.correction(), crate::correct::Correction::FullRoundHalfUp)
+        && weights.config().delta >= 0
+        && !weights.checksums.is_empty()
+}
+
+/// Verify the ABFT identity `Σ_j C[i][j] = Σ_k A[i][k] · Σ_ct s[ct][k]`
+/// for every output row, in `i128` (overflow-proof for every feasible
+/// operand range). On a mismatch the failing row is re-checked per
+/// column tile so the error pins the corrupt tile, one detection is
+/// counted, and [`Error::Integrity`] is returned — the caller corrects
+/// by evicting and re-planning the pinned slot.
+pub(super) fn verify_abft(weights: &PackedWeights, a: &MatI32, out: &MatI32) -> Result<()> {
+    let k_dim = weights.plan.k_dim;
+    let col_tiles = weights.plan.col_tiles;
+    debug_assert_eq!(weights.checksums.len(), col_tiles * k_dim);
+    // Fold the per-tile checksums into full-row sums of W once per call:
+    // O(col_tiles · K), dwarfed by the O(M·N + M·K) row checks below.
+    let mut s_total = vec![0i128; k_dim];
+    for ct in 0..col_tiles {
+        for (k, s) in s_total.iter_mut().enumerate() {
+            *s += i128::from(weights.checksums[ct * k_dim + k]);
+        }
+    }
+    for i in 0..out.rows {
+        let a_row = a.row(i);
+        let lhs: i128 = out.row(i).iter().map(|&v| i128::from(v)).sum();
+        let rhs: i128 =
+            a_row.iter().zip(&s_total).map(|(&av, &s)| i128::from(av) * s).sum();
+        if lhs == rhs {
+            continue;
+        }
+        note_sdc_detected();
+        // Localize: re-check the failing row tile by tile.
+        for ct in 0..col_tiles {
+            let c0 = ct * weights.n_w;
+            let c1 = (c0 + weights.n_w).min(weights.cols);
+            let lhs_t: i128 = out.row(i)[c0..c1].iter().map(|&v| i128::from(v)).sum();
+            let rhs_t: i128 = a_row
+                .iter()
+                .enumerate()
+                .map(|(k, &av)| i128::from(av) * i128::from(weights.checksums[ct * k_dim + k]))
+                .sum();
+            if lhs_t != rhs_t {
+                return Err(Error::Integrity(format!(
+                    "ABFT checksum mismatch in column tile {ct} (cols {c0}..{c1}) at output \
+                     row {i}: tile rowsum {lhs_t} != checksum dot {rhs_t}"
+                )));
+            }
+        }
+        return Err(Error::Integrity(format!(
+            "ABFT checksum mismatch at output row {i}: rowsum {lhs} != checksum dot {rhs}"
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::correct::Correction;
+    use crate::gemm::GemmEngine;
+    use crate::packing::PackingConfig;
+    use crate::util::Rng;
+
+    fn int4_engine() -> GemmEngine {
+        GemmEngine::new(PackingConfig::int4(), Correction::FullRoundHalfUp).unwrap()
+    }
+
+    fn mats(m: usize, k: usize, n: usize, seed: u64) -> (MatI32, MatI32) {
+        let mut rng = Rng::new(seed);
+        let a = MatI32::from_fn(m, k, |_, _| rng.range_i64(0, 15) as i32);
+        let w = MatI32::from_fn(k, n, |_, _| rng.range_i64(-8, 7) as i32);
+        (a, w)
+    }
+
+    #[test]
+    fn digest_kinds_deterministic_and_distinct() {
+        for kind in [DigestKind::Fnv64, DigestKind::Crc32] {
+            let mut d1 = Digest::new(kind);
+            let mut d2 = Digest::new(kind);
+            d1.update_all([1u64, 2, 3]);
+            d2.update_all([1u64, 2, 3]);
+            assert_eq!(d1.finish(), d2.finish(), "{kind:?} deterministic");
+            let mut d3 = Digest::new(kind);
+            d3.update_all([1u64, 2, 4]);
+            assert_ne!(d1.finish(), d3.finish(), "{kind:?} sensitive to one word");
+            let mut flip = Digest::new(kind);
+            d3 = Digest::new(kind);
+            flip.update_all([1u64, 2, 3 ^ (1 << 63)]);
+            d3.update_all([1u64, 2, 3]);
+            assert_ne!(flip.finish(), d3.finish(), "{kind:?} sensitive to one bit");
+        }
+    }
+
+    #[test]
+    fn crc32_matches_table_driven_reference() {
+        // Differential known-answer: the classic 256-entry table-driven
+        // CRC-32 against the bitwise form in `Digest`, plus the standard
+        // single-byte vector crc32(b"\0") = 0xD202EF8D pinning the table.
+        let mut table = [0u32; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = (c >> 1) ^ (0xEDB8_8320 & 0u32.wrapping_sub(c & 1));
+            }
+            *slot = c;
+        }
+        let crc_ref = |bytes: &[u8]| {
+            let mut c = 0xFFFF_FFFFu32;
+            for &b in bytes {
+                c = (c >> 8) ^ table[((c ^ u32::from(b)) & 0xFF) as usize];
+            }
+            !c
+        };
+        assert_eq!(crc_ref(&[0u8]), 0xD202_EF8D);
+        for word in [0u64, 1, 0xdead_beef_0123_4567, u64::MAX] {
+            let mut d = Digest::new(DigestKind::Crc32);
+            d.update(word);
+            assert_eq!(d.finish(), u64::from(crc_ref(&word.to_le_bytes())), "{word:#x}");
+        }
+    }
+
+    #[test]
+    fn plan_stamps_verifiable_digest_and_checksums() {
+        let engine = int4_engine();
+        let (_, w) = mats(8, 12, 10, 3);
+        let pw = engine.plan(&w).unwrap();
+        assert!(pw.verify_digest(), "fresh plan verifies");
+        assert_eq!(pw.checksums.len(), pw.plan().col_tiles * pw.plan().k_dim);
+        // Checksum row ct/k is the sum of W's row k restricted to tile ct.
+        let n_w = pw.n_w;
+        for ct in 0..pw.plan().col_tiles {
+            for k in 0..pw.plan().k_dim {
+                let want: i64 = (ct * n_w..((ct + 1) * n_w).min(w.cols))
+                    .map(|c| i64::from(w.get(k, c)))
+                    .sum();
+                assert_eq!(pw.checksums[ct * pw.plan().k_dim + k], want, "ct={ct} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn flipped_bit_breaks_digest() {
+        let engine = int4_engine();
+        let (_, w) = mats(8, 12, 10, 5);
+        let pw = engine.plan(&w).unwrap();
+        let (bad, flips) = pw.with_flipped_bits(|idx| (idx == 2).then_some(7));
+        assert_eq!(flips, 1);
+        assert!(!bad.verify_digest(), "stale stamp detects the flip");
+        let (same, zero) = pw.with_flipped_bits(|_| None);
+        assert_eq!(zero, 0);
+        assert!(same.verify_digest());
+    }
+
+    #[test]
+    fn abft_accepts_clean_and_pins_corrupt_tile() {
+        let engine = int4_engine();
+        let (a, w) = mats(6, 12, 10, 9);
+        let pw = engine.plan(&w).unwrap();
+        let (out, _) = engine.execute(&pw, &a).unwrap();
+        assert!(verify_abft(&pw, &a, &out).is_ok(), "clean execute verifies");
+        // Corrupt one output word: the check must fail and pin a tile.
+        let mut bad = out.clone();
+        bad.set(2, 3, bad.get(2, 3) ^ 1);
+        let err = verify_abft(&pw, &a, &bad).unwrap_err();
+        match err {
+            Error::Integrity(m) => {
+                assert!(m.contains("column tile"), "tile pinned: {m}");
+                assert!(m.contains("row 2"), "row pinned: {m}");
+            }
+            other => panic!("expected Integrity, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn abft_arming_predicate() {
+        let engine = int4_engine();
+        let (_, w) = mats(4, 8, 8, 1);
+        let pw = engine.plan(&w).unwrap();
+        assert!(abft_armed(&pw), "exact RHU int4 arms");
+        let approx = GemmEngine::logical(PackingConfig::overpack6_int4(), Correction::MrRestore)
+            .unwrap();
+        let (_, w6) = mats(4, 8, 8, 2);
+        let pw6 = approx.plan(&w6).unwrap();
+        assert!(!abft_armed(&pw6), "approximate overpacking never arms");
+    }
+
+    #[test]
+    fn scrub_due_stride_semantics() {
+        let saved = policy();
+        // Exercise the stride decision through temporary policies; both
+        // settings are restored before the test ends and neither affects
+        // outputs of concurrently running tests (scrubbing only verifies).
+        set_policy(IntegrityPolicy { scrub_stride: 4, ..saved });
+        assert!(scrub_due(0) && scrub_due(4) && scrub_due(8));
+        assert!(!scrub_due(1) && !scrub_due(3) && !scrub_due(7));
+        set_policy(IntegrityPolicy { scrub_stride: 0, ..saved });
+        assert!(!scrub_due(0), "stride 0 disables the amortized scrubber");
+        set_policy(saved);
+    }
+
+    #[test]
+    fn counters_monotone() {
+        let before = counters();
+        note_sdc_detected();
+        note_sdc_corrected();
+        note_scrub_pass();
+        note_slots_scrubbed(3);
+        let after = counters();
+        assert!(after.sdc_detected > before.sdc_detected);
+        assert!(after.sdc_corrected > before.sdc_corrected);
+        assert!(after.scrub_passes > before.scrub_passes);
+        assert!(after.slots_scrubbed >= before.slots_scrubbed + 3);
+    }
+}

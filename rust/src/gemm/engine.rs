@@ -318,6 +318,7 @@ impl GemmEngine {
         let mut words = Vec::with_capacity(col_tiles * k_dim);
         let mut raw = Vec::with_capacity(raw_cap);
         let mut c_words = Vec::with_capacity(c_cap);
+        let mut checksums = Vec::with_capacity(col_tiles * k_dim);
         let mut w_vals = vec![0i128; self.n_w];
         for ct in 0..col_tiles {
             let c0 = ct * self.n_w;
@@ -327,6 +328,7 @@ impl GemmEngine {
                     *wv = if c < w.cols { w.get(k, c) as i128 } else { 0 };
                 }
                 words.push(packer.pack_w_value_unchecked(&w_vals));
+                checksums.push(super::abft::checksum_of_tile_row(&w_vals));
                 if per_product {
                     raw.extend_from_slice(&w_vals);
                 }
@@ -359,7 +361,7 @@ impl GemmEngine {
         let words_per_step = 1 + if per_product { self.n_w } else { 0 } + usize::from(uses_c);
         let stripe_bytes = k_dim * word_size * words_per_step;
         let col_block = GemmPlan::col_block_for(stripe_bytes, self.stripe_budget, col_tiles);
-        Ok(PackedWeights {
+        let mut pw = PackedWeights {
             config: self.mul.config().clone(),
             correction: self.mul.correction(),
             rows: w.rows,
@@ -367,7 +369,14 @@ impl GemmEngine {
             n_w: self.n_w,
             plan: GemmPlan::new(k_dim, col_tiles, self.drain_period, col_block),
             planes,
-        })
+            checksums,
+            digest: 0,
+            digest_kind: super::abft::policy().digest,
+        };
+        // Stamp the resident-state digest last, over the finished planes
+        // and checksums (see `gemm::abft` for the scrub lifecycle).
+        pw.digest = pw.compute_digest(pw.digest_kind);
+        Ok(pw)
     }
 
     /// **Execute phase**: `C = A · W` against a prebuilt plan. `A` is M×K
@@ -443,6 +452,14 @@ impl GemmEngine {
                     );
                 }
             }
+        }
+        // ABFT guard (exact datapaths only, see `abft::abft_armed`): an
+        // O(M·N + M·K) checksum identity over the finished product.
+        // Never touches `out` or `stats` — guarded and unguarded runs
+        // are bit-identical; a violation returns `Error::Integrity` with
+        // the corrupt column tile pinned.
+        if super::abft::abft_armed(weights) {
+            super::abft::verify_abft(weights, a, &out)?;
         }
         Ok((out, stats))
     }

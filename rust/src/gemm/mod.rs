@@ -71,6 +71,7 @@
 //! planned once like any weight matrix and every image batch is one
 //! `execute` call — see [`crate::nn`]'s `Conv2dLayer`.
 
+pub mod abft;
 mod engine;
 mod kernel;
 mod matrix;

@@ -29,6 +29,7 @@
 //! amortizing the per-call encode/range-check work the one-shot
 //! `matmul` repeats on every invocation.
 
+use super::abft::DigestKind;
 use super::engine::WordBackend;
 use super::matrix::MatI32;
 use crate::correct::Correction;
@@ -170,6 +171,18 @@ pub struct PackedWeights {
     pub(super) plan: GemmPlan,
     /// The flat operand planes, in the execution backend's word width.
     pub(super) planes: PlaneStore,
+    /// ABFT checksum rows: for (column tile `ct`, reduction step `k`) at
+    /// index `ct · k_dim + k`, the sum of the logical weights encoded in
+    /// that tile's plane word (zero-padded edge columns contribute 0).
+    /// Held beside the planes — never packed into them — and excluded
+    /// from [`PackedWeights::plane_bytes`], which reports operand-plane
+    /// residency only. See [`super::abft`].
+    pub(super) checksums: Vec<i64>,
+    /// Digest of the resident state (planes + checksums) stamped at plan
+    /// time; [`PackedWeights::verify_digest`] re-checks it on scrubs.
+    pub(super) digest: u64,
+    /// Algorithm [`PackedWeights::digest`] was computed with.
+    pub(super) digest_kind: DigestKind,
 }
 
 impl PackedWeights {

@@ -102,6 +102,11 @@ pub enum Error {
     Coordinator(String),
     /// Configuration file / CLI error.
     Config(String),
+    /// Silent-data-corruption defense tripped: an ABFT checksum or a
+    /// resident-state digest no longer matches the data it guards (see
+    /// [`gemm::abft`]). Recoverable by evicting and re-planning the
+    /// pinned slot.
+    Integrity(String),
 }
 
 impl std::fmt::Display for Error {
@@ -114,6 +119,7 @@ impl std::fmt::Display for Error {
             Error::Runtime(m) => write!(f, "runtime error: {m}"),
             Error::Coordinator(m) => write!(f, "coordinator error: {m}"),
             Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Integrity(m) => write!(f, "integrity violation: {m}"),
         }
     }
 }

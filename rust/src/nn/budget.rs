@@ -27,6 +27,7 @@
 //! transiently over-counted until its next use); accounting self-heals on
 //! the next access because every use re-records the slot's current bytes.
 
+use crate::util::lock_unpoisoned;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, Weak};
@@ -125,12 +126,12 @@ impl PlanBudget {
     /// Exact bytes of resident plan planes currently accounted
     /// (`Σ plane_bytes` over the attached caches' resident plans).
     pub fn resident_bytes(&self) -> usize {
-        self.inner.lock().expect("plan budget poisoned").total_bytes()
+        lock_unpoisoned(&self.inner).total_bytes()
     }
 
     /// Number of resident plans currently accounted.
     pub fn resident_plans(&self) -> usize {
-        self.inner.lock().expect("plan budget poisoned").entries.len()
+        lock_unpoisoned(&self.inner).entries.len()
     }
 
     /// How many plans have been evicted to enforce the limit.
@@ -146,7 +147,7 @@ impl PlanBudget {
     pub(super) fn note_use(&self, id: u64, bytes: usize, slot: Weak<dyn EvictableSlot>) {
         // Phase 1 (budget lock only): account, pick victims.
         let victims: Vec<Arc<dyn EvictableSlot>> = {
-            let mut inner = self.inner.lock().expect("plan budget poisoned");
+            let mut inner = lock_unpoisoned(&self.inner);
             inner.clock += 1;
             let stamp = inner.clock;
             inner.entries.insert(id, BudgetEntry { bytes, last_use: stamp, slot });
@@ -180,7 +181,7 @@ impl PlanBudget {
     /// Drop cache `id` from the accounting (its plan was replaced or its
     /// layer dropped); no eviction is triggered by shrinking.
     pub(super) fn release(&self, id: u64) {
-        self.inner.lock().expect("plan budget poisoned").entries.remove(&id);
+        lock_unpoisoned(&self.inner).entries.remove(&id);
     }
 }
 

@@ -35,8 +35,10 @@ use super::data::Dataset;
 use super::mlp::{DenseLayer, ExecMode};
 use super::quantize;
 use super::NnModel;
-use crate::gemm::{DspOpStats, GemmEngine, Im2col, MatI32};
+use crate::gemm::{abft, DspOpStats, GemmEngine, Im2col, MatI32};
+use crate::util::lock_unpoisoned;
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Spatial geometry of a convolution layer: input channels, square kernel,
@@ -92,6 +94,30 @@ struct PatchEntry {
     spec: Im2col,
     /// The resident patch matrix.
     patches: Arc<MatI32>,
+    /// Digest of the resident words (input snapshot + patch matrix),
+    /// stamped at unroll time; the scrubber re-checks it (see
+    /// [`crate::gemm::abft`]). Patch corruption is invisible to the ABFT
+    /// guard (the checksum identity holds over whatever activations the
+    /// GEMM was fed), so digests are the *only* defense on this slot.
+    digest: u64,
+    /// Algorithm `digest` was computed with.
+    digest_kind: abft::DigestKind,
+}
+
+impl PatchEntry {
+    /// Digest the resident words under `kind`.
+    fn compute_digest(&self, kind: abft::DigestKind) -> u64 {
+        let mut d = abft::Digest::new(kind);
+        d.update_all(self.input.data().iter().map(|&v| v as u32 as u64));
+        d.update_all(self.patches.data().iter().map(|&v| v as u32 as u64));
+        d.finish()
+    }
+
+    /// Re-digest and compare against the stamp; `false` means a resident
+    /// word changed since the unroll.
+    fn verify_digest(&self) -> bool {
+        self.compute_digest(self.digest_kind) == self.digest
+    }
 }
 
 /// The shared storage cell of one patch buffer (the budget holds a weak
@@ -122,6 +148,9 @@ struct PatchBuffer {
     /// Process-unique id this buffer is accounted under in a budget.
     id: u64,
     budget: Mutex<Option<Arc<PlanBudget>>>,
+    /// Monotone hit counter driving the amortized digest scrubber (every
+    /// `scrub_stride`-th hit re-verifies; see [`crate::gemm::abft`]).
+    scrub_clock: AtomicU64,
 }
 
 impl Default for PatchBuffer {
@@ -130,6 +159,7 @@ impl Default for PatchBuffer {
             slot: Arc::new(Mutex::new(None)),
             id: next_cache_id(),
             budget: Mutex::new(None),
+            scrub_clock: AtomicU64::new(0),
         }
     }
 }
@@ -145,14 +175,17 @@ impl Clone for PatchBuffer {
         PatchBuffer {
             slot: Arc::new(Mutex::new(None)),
             id: next_cache_id(),
-            budget: Mutex::new(self.budget.lock().expect("patch buffer poisoned").clone()),
+            budget: Mutex::new(lock_unpoisoned(&self.budget).clone()),
+            scrub_clock: AtomicU64::new(0),
         }
     }
 }
 
 impl Drop for PatchBuffer {
     fn drop(&mut self) {
-        if let Some(budget) = self.budget.lock().expect("patch buffer poisoned").as_ref() {
+        // A buffer aliased by `share_from` drops under the shared id;
+        // `release` is idempotent, so the second drop is a no-op.
+        if let Some(budget) = lock_unpoisoned(&self.budget).as_ref() {
             budget.release(self.id);
         }
     }
@@ -163,7 +196,7 @@ impl PatchBuffer {
     /// evictable) from the next use on. Re-attaching releases the entry
     /// from the previous budget.
     fn attach(&self, budget: Arc<PlanBudget>) {
-        let mut slot = self.budget.lock().expect("patch buffer poisoned");
+        let mut slot = lock_unpoisoned(&self.budget);
         if let Some(old) = slot.as_ref() {
             if !Arc::ptr_eq(old, &budget) {
                 old.release(self.id);
@@ -172,10 +205,28 @@ impl PatchBuffer {
         *slot = Some(budget);
     }
 
+    /// Alias `donor`'s resident-unroll storage: both buffers then share
+    /// one slot (and one budget ledger entry), so a batch unrolled
+    /// through either layer is resident for both — the cross-fabric
+    /// sharing [`crate::coordinator::AdaptiveBackend`] uses, since the
+    /// im2col unroll is fabric-independent (reuse == rebuild,
+    /// bit-identically). This buffer's own ledger entry is released
+    /// first; after aliasing its bytes are accounted under the donor's
+    /// id.
+    fn share_from(&mut self, donor: &PatchBuffer) {
+        if let Some(budget) = lock_unpoisoned(&self.budget).as_ref() {
+            budget.release(self.id);
+        }
+        let donor_budget = lock_unpoisoned(&donor.budget).clone();
+        self.slot = Arc::clone(&donor.slot);
+        self.id = donor.id;
+        *lock_unpoisoned(&self.budget) = donor_budget;
+    }
+
     /// Report a hit/store to the attached budget, if any. Called without
     /// the slot lock held (the budget locking contract).
     fn note_use(&self, bytes: usize) {
-        let budget = self.budget.lock().expect("patch buffer poisoned").clone();
+        let budget = lock_unpoisoned(&self.budget).clone();
         if let Some(budget) = budget {
             let slot: Arc<dyn EvictableSlot> = Arc::clone(&self.slot);
             budget.note_use(self.id, bytes, Arc::downgrade(&slot));
@@ -191,11 +242,29 @@ impl PatchBuffer {
     /// that keys it.
     fn patches_for(&self, x: &MatI32, spec: &Im2col) -> Result<Arc<MatI32>> {
         let hit = {
-            let slot = self.slot.lock().expect("patch buffer poisoned");
-            match slot.as_ref() {
+            let mut slot = lock_unpoisoned(&self.slot);
+            let hit = match slot.as_ref() {
                 Some(e) if e.spec == *spec && e.input.as_ref() == x => Some(e.patches.clone()),
                 _ => None,
-            }
+            };
+            // Amortized scrubber: every `scrub_stride`-th hit re-verifies
+            // the resident entry's digest. A mismatch evicts (counted
+            // detected + corrected — the rebuild below from this call's
+            // live input is bit-identical) and falls through to the
+            // unroll path.
+            hit.filter(|_| {
+                if !abft::scrub_due(self.scrub_clock.fetch_add(1, Ordering::Relaxed)) {
+                    return true;
+                }
+                abft::note_slots_scrubbed(1);
+                if slot.as_ref().is_some_and(PatchEntry::verify_digest) {
+                    return true;
+                }
+                abft::note_sdc_detected();
+                abft::note_sdc_corrected();
+                *slot = None;
+                false
+            })
         };
         let patches = match hit {
             Some(p) => p,
@@ -203,11 +272,16 @@ impl PatchBuffer {
                 // Unroll outside the slot lock (im2col is the expensive
                 // part; the slot only guards the pointer swap).
                 let built = Arc::new(x.im2col(spec)?);
-                *self.slot.lock().expect("patch buffer poisoned") = Some(PatchEntry {
+                let kind = abft::policy().digest;
+                let mut entry = PatchEntry {
                     input: Arc::new(x.clone()),
                     spec: *spec,
                     patches: built.clone(),
-                });
+                    digest: 0,
+                    digest_kind: kind,
+                };
+                entry.digest = entry.compute_digest(kind);
+                *lock_unpoisoned(&self.slot) = Some(entry);
                 built
             }
         };
@@ -217,19 +291,51 @@ impl PatchBuffer {
 
     /// Drop the resident patches and release their budget accounting.
     fn clear(&self) {
-        *self.slot.lock().expect("patch buffer poisoned") = None;
-        if let Some(budget) = self.budget.lock().expect("patch buffer poisoned").as_ref() {
+        *lock_unpoisoned(&self.slot) = None;
+        if let Some(budget) = lock_unpoisoned(&self.budget).as_ref() {
             budget.release(self.id);
         }
+    }
+
+    /// Verify the resident entry's digest right now, evicting on
+    /// mismatch (counted detected + corrected). Returns the number of
+    /// slots verified (0 when nothing is resident).
+    fn scrub(&self) -> usize {
+        let mut slot = lock_unpoisoned(&self.slot);
+        let Some(e) = slot.as_ref() else { return 0 };
+        abft::note_slots_scrubbed(1);
+        if !e.verify_digest() {
+            abft::note_sdc_detected();
+            abft::note_sdc_corrected();
+            *slot = None;
+        }
+        1
+    }
+
+    /// Flip bits in the resident patch matrix (the SEU injection hook;
+    /// digest stamp deliberately left stale). `f` maps each patch word
+    /// index to `Some(bit)` (taken modulo 32) or `None`. Returns the
+    /// flips applied (0 when nothing is resident).
+    fn corrupt(&self, mut f: impl FnMut(u64) -> Option<u32>) -> usize {
+        let mut slot = lock_unpoisoned(&self.slot);
+        let Some(e) = slot.as_mut() else { return 0 };
+        let mut patches = (*e.patches).clone();
+        let mut flips = 0usize;
+        for (i, v) in patches.data_mut().iter_mut().enumerate() {
+            if let Some(bit) = f(i as u64) {
+                *v ^= 1i32 << (bit % 32);
+                flips += 1;
+            }
+        }
+        e.patches = Arc::new(patches);
+        flips
     }
 
     /// Bytes the resident entry keeps alive — the patch matrix plus the
     /// input snapshot keying it (0 when empty). Matches what `note_use`
     /// charges the budget.
     fn resident_bytes(&self) -> usize {
-        self.slot
-            .lock()
-            .expect("patch buffer poisoned")
+        lock_unpoisoned(&self.slot)
             .as_ref()
             .map_or(0, |e| e.input.byte_len() + e.patches.byte_len())
     }
@@ -347,6 +453,32 @@ impl Conv2dLayer {
     /// `PackedWeights::plane_bytes`.
     pub fn patch_bytes(&self) -> usize {
         self.patches.resident_bytes()
+    }
+
+    /// Share `donor`'s resident im2col unroll storage with this layer
+    /// (both layers then hit one buffer; see
+    /// [`crate::coordinator::AdaptiveBackend`]'s per-fabric replicas —
+    /// the unroll is fabric-independent, so reuse == rebuild
+    /// bit-identically).
+    pub fn share_patches_from(&mut self, donor: &Conv2dLayer) {
+        self.patches.share_from(&donor.patches);
+    }
+
+    /// Verify this layer's resident artifacts now — the im2col patch
+    /// digest and the filter bank's plan digest — evicting mismatches
+    /// (they rebuild bit-identically on the next forward). Returns the
+    /// number of slots verified.
+    pub fn scrub_resident(&self) -> usize {
+        self.patches.scrub() + self.dense.scrub_plan()
+    }
+
+    /// Flip bits in the resident im2col patch matrix — the SEU injection
+    /// hook (see [`crate::gemm::abft`]; the digest stamp is left stale
+    /// so scrubbing can detect the damage, which is the **only** guard
+    /// on this slot: corrupt activations satisfy the ABFT identity).
+    /// Returns the flips applied (0 when nothing is resident).
+    pub fn corrupt_patches(&self, f: impl FnMut(u64) -> Option<u32>) -> usize {
+        self.patches.corrupt(f)
     }
 
     /// Forward a batch: `x` is one image per row (channel-major pixels,
@@ -838,6 +970,22 @@ impl NnModel for QuantCnn {
 
     fn forward(&self, x: &MatI32, mode: &ExecMode) -> Result<(MatI32, DspOpStats)> {
         QuantCnn::forward(self, x, mode)
+    }
+
+    fn scrub_pass(&self) -> usize {
+        let mut n = 0;
+        for stage in &self.stages {
+            n += stage.conv.scrub_resident();
+        }
+        n += self.head.scrub_plan();
+        abft::note_scrub_pass();
+        n
+    }
+
+    fn share_patch_buffers(&mut self, donor: &Self) {
+        for (stage, d) in self.stages.iter_mut().zip(&donor.stages) {
+            stage.conv.share_patches_from(&d.conv);
+        }
     }
 }
 

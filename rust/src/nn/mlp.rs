@@ -10,8 +10,10 @@
 use super::budget::{next_cache_id, EvictableSlot, PlanBudget};
 use super::data::Dataset;
 use super::quantize;
-use crate::gemm::{DspOpStats, GemmEngine, MatI32, PackedWeights};
+use crate::gemm::{abft, DspOpStats, GemmEngine, MatI32, PackedWeights};
+use crate::util::lock_unpoisoned;
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// The shared storage cell of one plan cache: the weight snapshot the
@@ -49,6 +51,10 @@ pub struct PlanCache {
     /// Process-unique id this cache is accounted under in a budget.
     id: u64,
     budget: Mutex<Option<Arc<PlanBudget>>>,
+    /// Monotone hit counter driving the amortized digest scrubber: every
+    /// `scrub_stride`-th hit re-verifies the resident plan's digest (see
+    /// [`crate::gemm::abft`]).
+    scrub_clock: AtomicU64,
 }
 
 impl Default for PlanCache {
@@ -57,6 +63,7 @@ impl Default for PlanCache {
             slot: Arc::new(Mutex::new(None)),
             id: next_cache_id(),
             budget: Mutex::new(None),
+            scrub_clock: AtomicU64::new(0),
         }
     }
 }
@@ -70,18 +77,17 @@ impl Clone for PlanCache {
         // caches counts the plan once per cache: conservative (it
         // over-counts, never under-counts) until a rebuild un-shares it.
         PlanCache {
-            slot: Arc::new(Mutex::new(
-                self.slot.lock().expect("plan cache poisoned").clone(),
-            )),
+            slot: Arc::new(Mutex::new(lock_unpoisoned(&self.slot).clone())),
             id: next_cache_id(),
-            budget: Mutex::new(self.budget.lock().expect("plan cache poisoned").clone()),
+            budget: Mutex::new(lock_unpoisoned(&self.budget).clone()),
+            scrub_clock: AtomicU64::new(0),
         }
     }
 }
 
 impl Drop for PlanCache {
     fn drop(&mut self) {
-        if let Some(budget) = self.budget.lock().expect("plan cache poisoned").as_ref() {
+        if let Some(budget) = lock_unpoisoned(&self.budget).as_ref() {
             budget.release(self.id);
         }
     }
@@ -93,7 +99,7 @@ impl PlanCache {
     /// budget releases this cache's entry from the previous one, so no
     /// phantom bytes linger there.
     pub(super) fn attach(&self, budget: Arc<PlanBudget>) {
-        let mut slot = self.budget.lock().expect("plan cache poisoned");
+        let mut slot = lock_unpoisoned(&self.budget);
         if let Some(old) = slot.as_ref() {
             if !Arc::ptr_eq(old, &budget) {
                 old.release(self.id);
@@ -105,14 +111,14 @@ impl PlanCache {
     /// The budget this cache is attached to, if any (used to carry the
     /// attachment across layer rebuilds, e.g. a head refit).
     pub(super) fn attached_budget(&self) -> Option<Arc<PlanBudget>> {
-        self.budget.lock().expect("plan cache poisoned").clone()
+        lock_unpoisoned(&self.budget).clone()
     }
 
     /// Report a hit/store to the attached budget, if any. Must be called
     /// **without** the slot lock held (see the locking contract in
     /// [`super::budget`]).
     fn note_use(&self, bytes: usize) {
-        let budget = self.budget.lock().expect("plan cache poisoned").clone();
+        let budget = lock_unpoisoned(&self.budget).clone();
         if let Some(budget) = budget {
             let slot: Arc<dyn EvictableSlot> = Arc::clone(&self.slot);
             budget.note_use(self.id, bytes, Arc::downgrade(&slot));
@@ -126,7 +132,7 @@ impl PlanCache {
     /// the GEMM it guards, and collision-free (unlike a hash key).
     fn plan_for(&self, engine: &GemmEngine, weights: &MatI32) -> Result<Arc<PackedWeights>> {
         let plan = {
-            let mut slot = self.slot.lock().expect("plan cache poisoned");
+            let mut slot = lock_unpoisoned(&self.slot);
             let hit = match slot.as_ref() {
                 Some((snapshot, plan))
                     if snapshot.as_ref() == weights && plan.compatible_with(engine) =>
@@ -135,6 +141,25 @@ impl PlanCache {
                 }
                 _ => None,
             };
+            // Amortized scrubber: every `scrub_stride`-th hit re-verifies
+            // the resident plan's digest. A mismatch means a resident
+            // plane word changed under us — count it detected and
+            // corrected (the eviction below neutralizes it: the rebuild
+            // from the live weights is bit-identical to the original
+            // plan), then fall through to the miss path.
+            let hit = hit.filter(|plan| {
+                if !abft::scrub_due(self.scrub_clock.fetch_add(1, Ordering::Relaxed)) {
+                    return true;
+                }
+                abft::note_slots_scrubbed(1);
+                if plan.verify_digest() {
+                    return true;
+                }
+                abft::note_sdc_detected();
+                abft::note_sdc_corrected();
+                *slot = None;
+                false
+            });
             match hit {
                 Some(plan) => plan,
                 None => {
@@ -146,6 +171,37 @@ impl PlanCache {
         };
         self.note_use(plan.plane_bytes());
         Ok(plan)
+    }
+
+    /// Drop the resident plan (the next use re-plans bit-identically).
+    pub(super) fn invalidate(&self) {
+        *lock_unpoisoned(&self.slot) = None;
+    }
+
+    /// Verify the resident plan's digest right now, evicting on mismatch
+    /// (counted detected + corrected). Returns the number of slots
+    /// verified (0 when nothing is resident).
+    pub(super) fn scrub(&self) -> usize {
+        let mut slot = lock_unpoisoned(&self.slot);
+        let Some((_, plan)) = slot.as_ref() else { return 0 };
+        abft::note_slots_scrubbed(1);
+        if !plan.verify_digest() {
+            abft::note_sdc_detected();
+            abft::note_sdc_corrected();
+            *slot = None;
+        }
+        1
+    }
+
+    /// Flip bits in the resident plan's operand planes (the SEU injection
+    /// hook; digest stamp deliberately left stale). Returns flips applied
+    /// (0 when nothing is resident).
+    pub(super) fn corrupt(&self, f: impl FnMut(u64) -> Option<u32>) -> usize {
+        let mut slot = lock_unpoisoned(&self.slot);
+        let Some((_, plan)) = slot.as_mut() else { return 0 };
+        let (bad, flips) = plan.with_flipped_bits(f);
+        *plan = Arc::new(bad);
+        flips
     }
 }
 
@@ -220,6 +276,23 @@ impl DenseLayer {
         self.plan_cache.attached_budget()
     }
 
+    /// Verify this layer's resident plan digest now, evicting on mismatch
+    /// (the next packed forward re-plans bit-identically). Returns the
+    /// number of resident slots verified (0 or 1).
+    pub fn scrub_plan(&self) -> usize {
+        self.plan_cache.scrub()
+    }
+
+    /// Flip bits in this layer's **resident** packed planes — the SEU
+    /// injection hook for the chaos soak and the integrity bench (see
+    /// [`crate::gemm::abft`]). `f` maps each resident word index to
+    /// `Some(bit)` to flip or `None`; the digest stamp is left stale so
+    /// scrubbing can detect the damage. Returns the flips applied (0
+    /// when no plan is resident).
+    pub fn corrupt_cached_plan(&self, f: impl FnMut(u64) -> Option<u32>) -> usize {
+        self.plan_cache.corrupt(f)
+    }
+
     /// Forward one batch through this layer.
     pub fn forward(
         &self,
@@ -234,7 +307,23 @@ impl DenseLayer {
                 // Weights-resident path: plan once (cached), execute per
                 // batch. Bit-identical to `engine.matmul` on every call.
                 let plan = self.plan_cache.plan_for(engine, &self.weights)?;
-                let (out, s) = engine.execute(&plan, x)?;
+                let (out, s) = match engine.execute(&plan, x) {
+                    Ok(r) => r,
+                    Err(Error::Integrity(_)) => {
+                        // The ABFT guard tripped: a resident plane no
+                        // longer matches the live weights. Evict, re-plan
+                        // bit-identically, re-execute once — bounded
+                        // recompute, counted as corrected. A second
+                        // violation is not a resident-state fault and
+                        // propagates.
+                        self.plan_cache.invalidate();
+                        let plan = self.plan_cache.plan_for(engine, &self.weights)?;
+                        let r = engine.execute(&plan, x)?;
+                        abft::note_sdc_corrected();
+                        r
+                    }
+                    Err(e) => return Err(e),
+                };
                 stats.merge(&s);
                 out
             }
@@ -392,6 +481,12 @@ impl super::NnModel for QuantMlp {
     // keep them stable for the original serving fleet.
     fn label(&self, fabric: &str) -> String {
         fabric.to_string()
+    }
+
+    fn scrub_pass(&self) -> usize {
+        let n = self.layers.iter().map(DenseLayer::scrub_plan).sum();
+        abft::note_scrub_pass();
+        n
     }
 }
 

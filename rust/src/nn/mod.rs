@@ -76,6 +76,30 @@ pub trait NnModel: Send + Sync + 'static {
         format!("{}:{fabric}", self.kind())
     }
 
+    /// Explicitly verify the digest of every resident artifact this
+    /// model holds (packed weight planes, im2col patch snapshots),
+    /// evicting any slot whose digest no longer matches — the sweep half
+    /// of the silent-data-corruption defense (see [`crate::gemm::abft`];
+    /// the amortized strided scrubber covers the same slots on cache hit
+    /// paths). Returns the number of slots verified. The default covers
+    /// models with no resident state; [`QuantMlp`] and [`QuantCnn`]
+    /// override it and count one `scrub_passes` tick per call.
+    fn scrub_pass(&self) -> usize {
+        0
+    }
+
+    /// Share resident im2col patch buffers with `donor` where the stages
+    /// line up — fabric replicas of one model unroll identical patches,
+    /// so [`crate::coordinator::AdaptiveBackend`] aliases one buffer per
+    /// conv stage across its replicas instead of unrolling per fabric.
+    /// Reused patches are bit-identical to rebuilt ones (the unroll is
+    /// input-only). Default: no shareable state, do nothing.
+    fn share_patch_buffers(&mut self, _donor: &Self)
+    where
+        Self: Sized,
+    {
+    }
+
     /// Quantize a float image batch into the unsigned activation range.
     /// Ragged batches (images of differing lengths) are rejected with a
     /// shape error — serving workers must see an `Err`, not an

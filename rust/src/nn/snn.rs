@@ -45,9 +45,10 @@
 use super::budget::{next_cache_id, EvictableSlot, PlanBudget};
 use super::data::{self, Dataset};
 use crate::addpack::{AccumEngine, AccumPlan, AccumState, AdditionPacking, BankStateMut};
-use crate::gemm::DspOpStats;
-use crate::util::parallel_map_mut;
+use crate::gemm::{abft, DspOpStats};
+use crate::util::{lock_unpoisoned, parallel_map_mut};
 use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Headroom (in membrane units) the rebias schedule leaves unused at the
@@ -101,6 +102,9 @@ struct AccumPlanCache {
     /// Process-unique id this cache is accounted under in a budget.
     id: u64,
     budget: Mutex<Option<Arc<PlanBudget>>>,
+    /// Monotone hit counter driving the amortized digest scrubber (every
+    /// `scrub_stride`-th hit re-verifies; see [`crate::gemm::abft`]).
+    scrub_clock: AtomicU64,
 }
 
 impl Default for AccumPlanCache {
@@ -109,13 +113,14 @@ impl Default for AccumPlanCache {
             slot: Arc::new(Mutex::new(None)),
             id: next_cache_id(),
             budget: Mutex::new(None),
+            scrub_clock: AtomicU64::new(0),
         }
     }
 }
 
 impl Drop for AccumPlanCache {
     fn drop(&mut self) {
-        if let Some(budget) = self.budget.lock().expect("plan cache poisoned").as_ref() {
+        if let Some(budget) = lock_unpoisoned(&self.budget).as_ref() {
             budget.release(self.id);
         }
     }
@@ -125,7 +130,7 @@ impl AccumPlanCache {
     /// Attach a shared budget; re-attaching releases the entry from the
     /// previous budget so no phantom bytes linger there.
     fn attach(&self, budget: Arc<PlanBudget>) {
-        let mut slot = self.budget.lock().expect("plan cache poisoned");
+        let mut slot = lock_unpoisoned(&self.budget);
         if let Some(old) = slot.as_ref() {
             if !Arc::ptr_eq(old, &budget) {
                 old.release(self.id);
@@ -138,7 +143,7 @@ impl AccumPlanCache {
     /// **without** the slot lock held (the locking contract of
     /// [`super::budget`]).
     fn note_use(&self, bytes: usize) {
-        let budget = self.budget.lock().expect("plan cache poisoned").clone();
+        let budget = lock_unpoisoned(&self.budget).clone();
         if let Some(budget) = budget {
             let slot: Arc<dyn EvictableSlot> = Arc::clone(&self.slot);
             budget.note_use(self.id, bytes, Arc::downgrade(&slot));
@@ -147,16 +152,31 @@ impl AccumPlanCache {
 
     /// The plan for `packing` × `n_lanes`: served from the cache when
     /// resident, (re)built — deterministically, so bit-identically —
-    /// otherwise.
+    /// otherwise. Every `scrub_stride`-th hit re-verifies the resident
+    /// plan's digest first (a corrupted plan is evicted *before* any
+    /// bank ever executes from it, counted detected + corrected).
     fn plan_for(&self, packing: &AdditionPacking, n_lanes: usize) -> Result<Arc<AccumPlan>> {
         let plan = {
-            let mut slot = self.slot.lock().expect("plan cache poisoned");
+            let mut slot = lock_unpoisoned(&self.slot);
             let hit = match slot.as_ref() {
                 Some(plan) if plan.packing() == packing && plan.lanes() == n_lanes => {
                     Some(Arc::clone(plan))
                 }
                 _ => None,
             };
+            let hit = hit.filter(|plan| {
+                if !abft::scrub_due(self.scrub_clock.fetch_add(1, Ordering::Relaxed)) {
+                    return true;
+                }
+                abft::note_slots_scrubbed(1);
+                if plan.verify_digest() {
+                    return true;
+                }
+                abft::note_sdc_detected();
+                abft::note_sdc_corrected();
+                *slot = None;
+                false
+            });
             match hit {
                 Some(plan) => plan,
                 None => {
@@ -168,6 +188,30 @@ impl AccumPlanCache {
         };
         self.note_use(plan.bytes());
         Ok(plan)
+    }
+
+    /// Verify the resident plan's digest right now, evicting on mismatch
+    /// (counted detected + corrected). Returns slots verified (0 or 1).
+    fn scrub(&self) -> usize {
+        let mut slot = lock_unpoisoned(&self.slot);
+        let Some(plan) = slot.as_ref() else { return 0 };
+        abft::note_slots_scrubbed(1);
+        if !plan.verify_digest() {
+            abft::note_sdc_detected();
+            abft::note_sdc_corrected();
+            *slot = None;
+        }
+        1
+    }
+
+    /// Replace the resident plan with a bit-flipped copy (the SEU
+    /// injection hook; digest stamp left stale). Returns flips applied.
+    fn corrupt(&self, f: impl FnMut(u64) -> Option<u32>) -> usize {
+        let mut slot = lock_unpoisoned(&self.slot);
+        let Some(plan) = slot.as_mut() else { return 0 };
+        let (bad, flips) = plan.with_flipped_bits(f);
+        *plan = bad;
+        flips
     }
 }
 
@@ -530,6 +574,22 @@ impl SpikingDense {
     /// LRU-evicted; the next run re-plans bit-identically.
     pub fn attach_plan_budget(&self, budget: &Arc<PlanBudget>) {
         self.plan_cache.attach(Arc::clone(budget));
+    }
+
+    /// Verify the resident [`AccumPlan`]'s digest now, evicting it on
+    /// mismatch (the next run re-plans bit-identically). Returns slots
+    /// verified (0 when nothing is resident). See [`crate::gemm::abft`].
+    pub fn scrub_plan(&self) -> usize {
+        self.plan_cache.scrub()
+    }
+
+    /// Flip bits in the resident plan's layout tables (the SEU injection
+    /// hook for integrity tests): `f` maps each word index to a bit to
+    /// flip, or `None`. The digest stamp is left stale, so the strided
+    /// scrubber or [`SpikingDense::scrub_plan`] detects the corruption.
+    /// Returns the number of flips applied (0 when nothing is resident).
+    pub fn corrupt_plan(&self, f: impl FnMut(u64) -> Option<u32>) -> usize {
+        self.plan_cache.corrupt(f)
     }
 
     /// Number of neurons.

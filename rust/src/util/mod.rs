@@ -1,14 +1,16 @@
 //! Zero-dependency utilities: deterministic RNG, a persistent worker
-//! pool, and a small JSON writer. The build environment is offline, so
-//! the usual crates (rand, rayon, serde_json) are replaced by these
-//! focused implementations.
+//! pool, poison-recovering lock helpers, and a small JSON writer. The
+//! build environment is offline, so the usual crates (rand, rayon,
+//! serde_json) are replaced by these focused implementations.
 
 mod json;
 mod rng;
+mod sync;
 mod threads;
 
 pub use json::Json;
 pub use rng::Rng;
+pub use sync::{lock_unpoisoned, wait_timeout_unpoisoned, wait_unpoisoned};
 pub use threads::{
     parallel_jobs, parallel_map, parallel_map_cost, parallel_map_mut, parallel_map_with,
     parallel_map_with_aligned, parallel_reduce, workers, PARALLEL_COST_THRESHOLD,

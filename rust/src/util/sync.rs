@@ -1,0 +1,71 @@
+//! Poison-recovering lock helpers.
+//!
+//! A panicking thread that holds a `Mutex` poisons it; every later
+//! `lock().unwrap()` on the same mutex then panics too, cascading one
+//! backend fault into every subsequent `submit`/`pop` on shared serving
+//! state. All of the data guarded by locks in this crate is
+//! panic-consistent — plan-cache and patch-buffer slots hold whole
+//! `Arc`ed values that are swapped atomically, the batcher queue is a
+//! `VecDeque` of owned entries, metrics windows are append-only — so the
+//! right recovery is always to take the guard and keep serving. These
+//! helpers centralize that decision (the worker pool in
+//! [`super::threads`] has used the same idiom since it was built).
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock_unpoisoned<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait`], recovering the guard if the mutex was poisoned
+/// while this thread slept.
+pub fn wait_unpoisoned<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// [`Condvar::wait_timeout`], recovering the guard (and the timeout
+/// result) if the mutex was poisoned while this thread slept.
+pub fn wait_timeout_unpoisoned<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+    cv.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::{Condvar, Mutex};
+
+    #[test]
+    fn lock_recovers_after_poison() {
+        let m = Mutex::new(7u32);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the mutex");
+        }));
+        assert!(m.is_poisoned(), "panic while holding the guard poisons");
+        assert_eq!(*lock_unpoisoned(&m), 7, "guard recovered, data intact");
+        *lock_unpoisoned(&m) = 8;
+        assert_eq!(*lock_unpoisoned(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_recovers_after_poison() {
+        let m = Mutex::new(0u32);
+        let cv = Condvar::new();
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = m.lock().unwrap();
+            panic!("poison the mutex");
+        }));
+        let guard = lock_unpoisoned(&m);
+        let (guard, timeout) =
+            wait_timeout_unpoisoned(&cv, guard, Duration::from_millis(1));
+        assert!(timeout.timed_out());
+        assert_eq!(*guard, 0);
+    }
+}
